@@ -1,0 +1,62 @@
+//! CCPG scalability sweep (paper §IV-B): how system power scales with the
+//! number of deployed chiplets, with and without chiplet clustering and
+//! power gating — the O(n) vs O(log n)-ish scaling claim.
+//!
+//! Run: `cargo run --release --example ccpg_sweep`
+
+use picnic::chiplet::Ccpg;
+use picnic::config::{CcpgConfig, MacroPower, PicnicConfig, SystemConfig};
+use picnic::models::{LlamaConfig, Workload};
+use picnic::photonic::OpticalTopology;
+use picnic::sim::AnalyticSim;
+
+fn main() -> picnic::Result<()> {
+    println!("== static power vs deployed tiles ==");
+    println!("{:>8} {:>14} {:>14} {:>9}", "tiles", "no-CCPG (W)", "CCPG (W)", "saving");
+    let sys = SystemConfig::default();
+    let p = MacroPower::default();
+    for n_tiles in [4usize, 16, 64, 128, 160, 256] {
+        let topo = OpticalTopology::new(n_tiles);
+        let mut on = Ccpg::new(
+            n_tiles,
+            &sys,
+            CcpgConfig {
+                enabled: true,
+                ..CcpgConfig::default()
+            },
+            &topo,
+        );
+        on.activate_for_tile(0);
+        let off = Ccpg::new(n_tiles, &sys, CcpgConfig::default(), &topo);
+        let (pw_on, pw_off) = (on.system_power_w(&p), off.system_power_w(&p));
+        println!(
+            "{:>8} {:>14.3} {:>14.3} {:>8.1}%",
+            n_tiles,
+            pw_off,
+            pw_on,
+            100.0 * (1.0 - pw_on / pw_off)
+        );
+    }
+
+    println!("\n== end-to-end: Fig 8 reproduction across models ==");
+    let wl = Workload::new(1024, 1024);
+    for model in [
+        LlamaConfig::llama32_1b(),
+        LlamaConfig::llama3_8b(),
+        LlamaConfig::llama2_13b(),
+    ] {
+        let off = AnalyticSim::new(PicnicConfig::default()).run(&model, &wl)?;
+        let on = AnalyticSim::new(PicnicConfig::default().with_ccpg(true)).run(&model, &wl)?;
+        println!(
+            "{:<16} power {:>8.3} → {:>7.3} W  ({:>4.1}% saved)   efficiency {:>7.2} → {:>7.2} tokens/J",
+            model.name,
+            off.stats.avg_power_w,
+            on.stats.avg_power_w,
+            100.0 * (1.0 - on.stats.avg_power_w / off.stats.avg_power_w),
+            off.stats.tokens_per_j,
+            on.stats.tokens_per_j,
+        );
+    }
+    println!("ccpg_sweep OK");
+    Ok(())
+}

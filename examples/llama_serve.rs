@@ -1,0 +1,62 @@
+//! End-to-end serving driver (DESIGN.md deliverable (b)/E2E): a client
+//! thread submits a bursty stream of requests; the coordinator batches and
+//! schedules them on the simulated PICNIC fabric; we report throughput,
+//! TTFT and tail latency — the run recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example llama_serve -- [--model 1b] [--requests 64]`
+
+use picnic::config::PicnicConfig;
+use picnic::coordinator::{BatchPolicy, Server, ServerConfig};
+use picnic::models::LlamaConfig;
+use picnic::util::args::Args;
+use picnic::util::Rng;
+
+fn main() -> picnic::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model_name = args.opt_or("model", "1b");
+    let n_requests = args.opt_usize("requests", 64)?;
+    let model = LlamaConfig::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    println!("serving {} with {n_requests} synthetic requests…", model.name);
+
+    let mut server = Server::new(ServerConfig {
+        picnic: PicnicConfig::default().with_ccpg(true),
+        model,
+        policy: BatchPolicy {
+            max_batch: 8,
+            kv_budget: 64 * 1024,
+        },
+    });
+
+    // Bursty workload: exponential-ish prompt lengths, short generations —
+    // a chat-style trace.
+    let mut rng = Rng::seed_from_u64(7);
+    let mut submitted = 0usize;
+    let mut rejected = 0usize;
+    while submitted < n_requests {
+        let prompt = 32 + rng.below(481) as usize; // 32..512
+        let gen = 8 + rng.below(57) as usize; // 8..64
+        match server.submit(prompt, gen) {
+            Some(_) => submitted += 1,
+            None => {
+                rejected += 1;
+                // drain a bit before retrying (backpressure)
+                server.step()?;
+            }
+        }
+    }
+    server.run_to_completion()?;
+
+    let m = &server.metrics;
+    println!("---- results (accelerator-clock time) ----");
+    println!("requests completed : {}", m.requests.len());
+    println!("requests rejected  : {rejected} (retried under backpressure)");
+    println!("total tokens       : {}", m.total_tokens);
+    println!("wall time          : {:.3} s", m.wall_s);
+    println!("throughput         : {:.1} tokens/s", m.throughput_tokens_per_s());
+    println!("mean TTFT          : {:.3} ms", 1e3 * m.mean_ttft_s());
+    println!("p99 latency        : {:.3} ms", 1e3 * m.p99_total_s());
+    assert_eq!(m.requests.len(), n_requests, "all requests must complete");
+    println!("llama_serve OK");
+    Ok(())
+}

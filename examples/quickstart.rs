@@ -1,0 +1,57 @@
+//! Quickstart: the 60-second tour of the PICNIC stack.
+//!
+//! 1. Load the AOT-compiled JAX/Pallas oracle (attention, PWL softmax) via
+//!    the PJRT runtime and run it — proving the python→rust AOT bridge.
+//! 2. Run the same softmax through the rust SCU model and compare — the
+//!    functional-fidelity claim in one screenful.
+//! 3. Simulate Llama 3.2-1B inference end-to-end and print Table II-style
+//!    stats.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use picnic::config::PicnicConfig;
+use picnic::models::{LlamaConfig, Workload};
+use picnic::runtime::{ArtifactManifest, RuntimeClient};
+use picnic::scu::Scu;
+use picnic::sim::AnalyticSim;
+use picnic::util::Rng;
+
+fn main() -> picnic::Result<()> {
+    // ---- 1. AOT oracle through PJRT --------------------------------------
+    let dir = ArtifactManifest::default_dir();
+    let manifest = ArtifactManifest::load(&dir)?;
+    let client = RuntimeClient::cpu()?;
+    println!("[1] PJRT platform: {}", client.platform());
+
+    let softmax = client.compile_hlo_text(&manifest.path_of("softmax_pwl")?)?;
+    let mut rng = Rng::seed_from_u64(0);
+    let rows = 32usize;
+    let cols = 64usize;
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.sym_f32(3.0)).collect();
+    let oracle = softmax.run_f32(&[(&x, &[rows, cols])])?;
+    println!("    softmax_pwl oracle: {} outputs", oracle.len());
+
+    // ---- 2. rust SCU vs oracle -------------------------------------------
+    let mut scu = Scu::new();
+    let mut max_err = 0.0f32;
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let got = scu.softmax_row(row);
+        for (g, o) in got.iter().zip(&oracle[r * cols..(r + 1) * cols]) {
+            max_err = max_err.max((g - o).abs());
+        }
+    }
+    println!("[2] rust SCU vs JAX/Pallas oracle: max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-5, "SCU must match the oracle");
+
+    // ---- 3. end-to-end inference simulation ------------------------------
+    let sim = AnalyticSim::new(PicnicConfig::default());
+    let r = sim.run(&LlamaConfig::llama32_1b(), &Workload::new(512, 512))?;
+    println!("[3] Llama 3.2-1B 512/512 on PICNIC:");
+    println!("    tiles      : {}", r.tiles_deployed);
+    println!("    throughput : {:.1} tokens/s", r.stats.tokens_per_s);
+    println!("    avg power  : {:.3} W", r.stats.avg_power_w);
+    println!("    efficiency : {:.1} tokens/J", r.stats.tokens_per_j);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""PICNIC build-time compile path (L1 kernels + L2 model + AOT)."""

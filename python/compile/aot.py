@@ -1,0 +1,98 @@
+"""AOT lowering: JAX (L2, calling L1 pallas kernels) → HLO text artifacts.
+
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids, so text
+round-trips cleanly. Lowered with return_tuple=True; the rust side unwraps
+with `to_tuple1()`.
+
+Run once via `make artifacts`; python is never on the request path.
+
+Artifacts (all f32):
+  decoder_tiny.hlo.txt   — decoder block fwd, float path, TINY config
+  attention_tiny.hlo.txt — raw flash-MHA [H,S,D] (the simulator's attention
+                           oracle: the rust functional sim reproduces this)
+  softmax_pwl.hlo.txt    — the SCU transfer function on a [32, 64] tile
+  decoder_quant.hlo.txt  — decoder through the SMAC/PWL quantized path
+  manifest.json          — shapes + param order for the rust loader
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> dict:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    shapes = [list(a.shape) for a in example_args]
+    print(f"  wrote {path} ({len(text)} chars), args={shapes}")
+    return {"path": os.path.basename(path), "arg_shapes": shapes}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = model.TINY
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    params = model.init_params(cfg)
+    param_specs = tuple(
+        jax.ShapeDtypeStruct(params[k].shape, jnp.float32) for k in model.PARAM_ORDER
+    )
+    x_spec = spec(cfg.seq, cfg.d_model)
+    qkv_spec = spec(cfg.n_heads, cfg.seq, cfg.d_head)
+
+    manifest = {
+        "config": {
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq": cfg.seq,
+        },
+        "param_order": model.PARAM_ORDER,
+        "artifacts": {},
+    }
+
+    print("AOT-lowering PICNIC oracle artifacts:")
+    manifest["artifacts"]["decoder_tiny"] = lower_to_file(
+        model.decoder_float_flat, (x_spec, *param_specs),
+        os.path.join(args.out_dir, "decoder_tiny.hlo.txt"))
+    manifest["artifacts"]["attention_tiny"] = lower_to_file(
+        model.attention_float_flat, (qkv_spec, qkv_spec, qkv_spec),
+        os.path.join(args.out_dir, "attention_tiny.hlo.txt"))
+    manifest["artifacts"]["softmax_pwl"] = lower_to_file(
+        model.softmax_pwl_flat, (spec(32, 64),),
+        os.path.join(args.out_dir, "softmax_pwl.hlo.txt"))
+    manifest["artifacts"]["decoder_quant"] = lower_to_file(
+        model.decoder_quant_flat, (x_spec, *param_specs),
+        os.path.join(args.out_dir, "decoder_quant.hlo.txt"))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("  wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

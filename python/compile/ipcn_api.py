@@ -1,0 +1,160 @@
+"""IPCN firmware API + compiler (paper §II-B.5): "A toolchain consists of
+an application programming interface (API) and a program compiler is
+developed in Python to facilitate the hardware utilization… The compiler
+converts the user program into a hex file to be loaded into the NPM."
+
+The hex format is identical to the rust assembler's (`rust/src/isa/
+program.rs::Program::to_hex`); `python/tests/test_ipcn_api.py` pins the two
+against each other on golden vectors.
+
+30-bit instruction layout (Fig 3(g)):
+    [29:23] rd_en  [22:19] mode_sel  [18:12] out_en  [11:10] intxfer_en
+    [9:0]   SP_addr
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Sequence, Tuple
+
+
+class Port(enum.IntEnum):
+    NORTH = 0
+    EAST = 1
+    SOUTH = 2
+    WEST = 3
+    PE = 4
+    UP = 5
+    DOWN = 6
+
+
+class Mode(enum.IntEnum):
+    IDLE = 0
+    ROUTE = 1
+    PARTIAL_SUM = 2
+    LINEAR_ACT = 3
+    DMAC = 4
+    SP_READ = 5
+    SP_WRITE = 6
+    PE_TRIGGER = 7
+    DMAC_DRAIN = 8
+    SCU_STREAM = 9
+
+
+class IntXfer(enum.IntEnum):
+    NONE = 0
+    FIFO_TO_SP = 1
+    SP_TO_FIFO = 2
+    SWAP = 3
+
+
+def port_mask(ports: Sequence[Port]) -> int:
+    m = 0
+    for p in ports:
+        m |= 1 << int(p)
+    return m
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One 30-bit IPCN instruction."""
+
+    rd_en: int = 0
+    mode: Mode = Mode.IDLE
+    out_en: int = 0
+    intxfer: IntXfer = IntXfer.NONE
+    sp_addr: int = 0
+
+    def encode(self) -> int:
+        if not 0 <= self.sp_addr < 1024:
+            raise ValueError(f"SP_addr overflows 10 bits: {self.sp_addr}")
+        if not 0 <= self.rd_en < 128 or not 0 <= self.out_en < 128:
+            raise ValueError("port mask overflows 7 bits")
+        return (
+            (self.rd_en << 23)
+            | (int(self.mode) << 19)
+            | (self.out_en << 12)
+            | (int(self.intxfer) << 10)
+            | self.sp_addr
+        )
+
+
+IDLE = Instr()
+
+# CFR command-select encoding
+SEL_IDLE, SEL_CMD1, SEL_CMD2 = 0, 1, 2
+
+
+@dataclasses.dataclass
+class Row:
+    """One NPM row: CMD1 + CMD2 (CMR) and per-router select + repeat (CFR)."""
+
+    cmd1: Instr
+    cmd2: Instr
+    sel: List[int]  # one of SEL_* per router
+    repeat: int = 1
+
+
+class ProgramBuilder:
+    """Firmware author API over a dim×dim mesh, mirroring the rust
+    `isa::Assembler` semantics (≤2 distinct commands per row)."""
+
+    def __init__(self, dim: int):
+        self.dim = dim
+        self.rows: List[Row] = []
+
+    def n_routers(self) -> int:
+        return self.dim * self.dim
+
+    def row(self, ops: Sequence[Tuple[Tuple[int, int, int, int], Instr]],
+            repeat: int = 1) -> None:
+        """Add one row. `ops` = [((r0, c0, r1, c1), instr), ...] — regions
+        with at most two distinct instructions; regions must not overlap."""
+        distinct: List[Instr] = []
+        for _, instr in ops:
+            if instr not in distinct:
+                distinct.append(instr)
+        if len(distinct) > 2:
+            raise ValueError("an NPM row holds at most 2 distinct commands")
+        cmd1 = distinct[0] if distinct else IDLE
+        cmd2 = distinct[1] if len(distinct) > 1 else IDLE
+        sel = [SEL_IDLE] * self.n_routers()
+        for (r0, c0, r1, c1), instr in ops:
+            if r1 >= self.dim or c1 >= self.dim:
+                raise ValueError("region out of mesh bounds")
+            s = SEL_CMD1 if instr == cmd1 else SEL_CMD2
+            for r in range(r0, r1 + 1):
+                for c in range(c0, c1 + 1):
+                    idx = r * self.dim + c
+                    if sel[idx] != SEL_IDLE:
+                        raise ValueError("overlapping regions in one row")
+                    sel[idx] = s
+        self.rows.append(Row(cmd1, cmd2, sel, repeat))
+
+    def pipeline_east(self, row: int, length: int) -> None:
+        instr = Instr(rd_en=port_mask([Port.WEST]), mode=Mode.ROUTE,
+                      out_en=port_mask([Port.EAST]))
+        self.row([((row, 0, row, self.dim - 1), instr)], repeat=length)
+
+    def compile_hex(self) -> str:
+        """Emit the NPM hex file — byte-identical to rust `Program::to_hex`:
+        per line `CMD1;CMD2;REPEAT;SEL` with 8-hex-digit words and SEL
+        packed 2 bits per router, 4 routers per hex byte pair."""
+        out = []
+        for row in self.rows:
+            sel_bytes = []
+            cur = 0
+            for i, s in enumerate(row.sel):
+                cur |= (s & 0b11) << ((i % 4) * 2)
+                if i % 4 == 3:
+                    sel_bytes.append(cur)
+                    cur = 0
+            if self.n_routers() % 4 != 0:
+                sel_bytes.append(cur)
+            sel_hex = "".join(f"{b:02x}" for b in sel_bytes)
+            out.append(
+                f"{row.cmd1.encode():08x};{row.cmd2.encode():08x};"
+                f"{row.repeat:08x};{sel_hex}"
+            )
+        return "\n".join(out) + ("\n" if out else "")

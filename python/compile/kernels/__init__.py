@@ -1,0 +1,3 @@
+"""PICNIC L1 kernels (Pallas, interpret=True) and their pure-jnp oracles."""
+
+from . import attention, ref, smac, softmax_pwl  # noqa: F401

@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: FlashAttention-style tiled attention.
+
+PICNIC schedules attention as a two-level nested loop (paper §III.3): the
+outer loop walks Q row-tiles held in the scratchpads near the W_Q region;
+the inner loop streams K/V column-tiles through the IPCN DMAC macros with an
+online-softmax accumulator (the SCU recurrence). On TPU-shaped hardware the
+same insight maps to VMEM tiles: each grid step owns one (block_q × d) Q tile
+in VMEM and scans K/V in (block_k × d) tiles — BlockSpec expresses the
+HBM↔VMEM schedule that the paper expresses as DRAM↔scratchpad traffic.
+
+interpret=True throughout: the CPU PJRT client cannot run Mosaic
+custom-calls; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                            causal: bool, sm_scale: float):
+    """One grid step: one Q row-tile against all K/V column-tiles.
+
+    Online softmax: carry (m, l, acc) across K tiles — m is the running row
+    max, l the running denominator, acc the running weighted V sum. This is
+    exactly the SCU streaming recurrence with the partial-sum adder folded
+    into the scan.
+    """
+    q_tile_idx = pl.program_id(0)
+    block_q = q_ref.shape[0]
+    seq_k = k_ref.shape[0]
+    d = q_ref.shape[1]
+
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    num_k_blocks = seq_k // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_tile = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k_tile.astype(jnp.float32).T  # [block_q, block_k]
+        if causal:
+            q_pos = q_tile_idx * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0
+            )
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_cur = acc_prev * alpha[:, None] + p @ v_tile.astype(jnp.float32)
+        return m_cur, l_cur, acc_cur
+
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m0, l0, acc0))
+    l = jnp.maximum(l, 1e-30)  # fully-masked rows (cannot happen when causal+square)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    block_q: int = 32, block_k: int = 32,
+                    causal: bool = True) -> jax.Array:
+    """Tiled attention for a single head. q: [S_q, D], k/v: [S_k, D].
+
+    Grid = S_q/block_q steps; each owns a Q tile in VMEM and scans K/V.
+    Requires S_q % block_q == 0 and S_k % block_k == 0 (the mapper pads).
+    """
+    seq_q, d = q.shape
+    seq_k = k.shape[0]
+    if seq_q % block_q or seq_k % block_k:
+        raise ValueError(f"shape ({seq_q},{seq_k}) not divisible by blocks "
+                         f"({block_q},{block_k})")
+    sm_scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _flash_attention_kernel, block_k=block_k, causal=causal, sm_scale=sm_scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(seq_q // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((seq_k, d), lambda i: (0, 0)),
+            pl.BlockSpec((seq_k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq_q, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              block_q: int = 32, block_k: int = 32,
+              causal: bool = True) -> jax.Array:
+    """Multi-head wrapper: [H, S, D]."""
+    f = functools.partial(flash_attention, block_q=block_q, block_k=block_k,
+                          causal=causal)
+    return jax.vmap(f)(q, k, v)

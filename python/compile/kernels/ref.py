@@ -1,0 +1,157 @@
+"""Pure-jnp reference oracles for the PICNIC L1 kernels.
+
+Every Pallas kernel in this package has an exact (or bounded-error) reference
+here, written with plain jax.numpy only — no pallas, no custom calls. The
+pytest suite asserts kernel-vs-ref allclose; these functions are therefore
+the ground truth for the whole stack (the rust simulator is in turn checked
+against the AOT-lowered L2 model, which calls the kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Standard softmax attention. q,k,v: [S, D] (single head).
+
+    Matches the PICNIC dataflow: S = QK^T / sqrt(D), row-softmax, SV.
+    """
+    s, d = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[0]), dtype=bool), k=k.shape[0] - s)
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, q.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def mha(q, k, v, *, causal: bool = True):
+    """Multi-head attention over [H, S, D] tensors."""
+    return jax.vmap(lambda qh, kh, vh: attention(qh, kh, vh, causal=causal))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Quantized crossbar SMAC (static-weight MAC on the RRAM-CIM PE)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights(w: jax.Array, levels: int = 256):
+    """Symmetric per-column quantization of a weight matrix to RRAM
+    conductance levels. Returns (codes int32 in [-(L/2-1), L/2-1], scale)."""
+    qmax = levels // 2 - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(w / scale[None, :]), -qmax, qmax).astype(jnp.int32)
+    return codes, scale
+
+
+def quantize_inputs(x: jax.Array, bits: int = 8):
+    """DAC quantization of the input activations (per-row symmetric)."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-8) / qmax
+    codes = jnp.clip(jnp.round(x / scale[..., None]), -qmax, qmax).astype(jnp.int32)
+    return codes, scale
+
+
+def smac(x: jax.Array, w: jax.Array, *, w_levels: int = 256, x_bits: int = 8,
+         adc_bits: int = 12) -> jax.Array:
+    """Reference for the crossbar SMAC: quantize inputs and weights, integer
+    MAC down the bitlines, ADC re-quantization of the analog column sum, then
+    dequantize. x: [M, K], w: [K, N] -> [M, N].
+
+    The ADC clips/quantizes the *column sum* to `adc_bits` — this is the
+    dominant non-ideality the paper's feedback-loop calibration targets: the
+    calibration picks the per-column full-scale so the ADC swing is fully
+    used, minimizing discretization error.
+    """
+    wq, ws = quantize_weights(w, w_levels)
+    xq, xs = quantize_inputs(x, x_bits)
+    acc = xq.astype(jnp.float32) @ wq.astype(jnp.float32)  # exact int MAC
+    # Feedback-loop calibration: per-column full-scale = observed max |sum|.
+    full_scale = jnp.maximum(jnp.max(jnp.abs(acc), axis=0), 1.0)
+    adc_max = 2 ** (adc_bits - 1) - 1
+    lsb = full_scale / adc_max
+    acc_adc = jnp.clip(jnp.round(acc / lsb[None, :]), -adc_max, adc_max) * lsb[None, :]
+    return acc_adc * xs[..., None] * ws[None, :]
+
+
+def smac_float(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Ideal float matmul — the asymptote smac() must approach as bits grow."""
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Piecewise-linear softmax (SCU)
+# ---------------------------------------------------------------------------
+
+# 8-segment PWL approximation of exp(t) on t in [-8, 0] (softmax operates on
+# max-shifted scores, so the domain is non-positive). Segment i covers
+# [-8 + i, -7 + i). Slopes/intercepts from the chord between segment ends —
+# matches an 8-entry hardware LUT; max abs error ~2e-2 near t=0.
+PWL_SEGMENTS = 8
+PWL_LO = -8.0
+PWL_HI = 0.0
+
+
+def _pwl_tables():
+    import numpy as np
+
+    edges = np.linspace(PWL_LO, PWL_HI, PWL_SEGMENTS + 1)
+    x0, x1 = edges[:-1], edges[1:]
+    y0, y1 = np.exp(x0), np.exp(x1)
+    slope = (y1 - y0) / (x1 - x0)
+    intercept = y0 - slope * x0
+    return (
+        jnp.asarray(slope, jnp.float32),
+        jnp.asarray(intercept, jnp.float32),
+        jnp.asarray(edges, jnp.float32),
+    )
+
+
+PWL_SLOPE, PWL_INTERCEPT, PWL_EDGES = _pwl_tables()
+
+
+def pwl_exp(t: jax.Array) -> jax.Array:
+    """8-segment PWL exp for t <= 0; values below -8 clamp to the last chord."""
+    tc = jnp.clip(t, PWL_LO, PWL_HI)
+    seg = jnp.clip(
+        jnp.floor((tc - PWL_LO) / ((PWL_HI - PWL_LO) / PWL_SEGMENTS)).astype(jnp.int32),
+        0,
+        PWL_SEGMENTS - 1,
+    )
+    return PWL_SLOPE[seg] * tc + PWL_INTERCEPT[seg]
+
+
+def softmax_pwl(x: jax.Array, axis: int = -1) -> jax.Array:
+    """SCU reference: max-shift, PWL exp, sum, reciprocal, scale.
+
+    Mirrors the 3-state SCU FSM: state 1 streams exp(x_i - max) into the
+    indexed cache and partial-sum adder; state 2 computes the reciprocal of
+    the partial sum; state 3 multiplies cache entries by it.
+    """
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = pwl_exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks (used by the L2 model and its tests)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """Llama-style SwiGLU feed-forward."""
+    return (silu(x @ w_gate) * (x @ w_up)) @ w_down

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: quantized crossbar SMAC (static-weight MAC).
+
+Emulates the RRAM-CIM PE (paper §II-A): weights live as conductance levels
+in a 256×256 crossbar; inputs are DAC-quantized, the analog bitline sum is
+ADC-quantized with a calibrated per-column full-scale, then dequantized.
+
+Hardware adaptation (DESIGN.md §5): the 256×256 analog crossbar is expressed
+as an MXU-shaped tile matmul with the ADC transfer function fused into the
+epilogue — one grid step per (tile_m × tile_n) output tile, scanning K in
+crossbar-row-sized chunks, which is exactly how the mapper splits a weight
+matrix across PEs along the reduction dimension.
+
+The kernel takes *pre-quantized* integer codes (as f32, exact up to 2^24) and
+the calibration scales — quantization itself is a programming-time step
+performed once per model, matching the paper's one-shot RRAM programming.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _smac_kernel(xq_ref, wq_ref, fs_ref, o_ref, *, adc_bits: int, k_chunk: int):
+    """One output tile: integer MAC over K chunks, then per-chunk ADC.
+
+    The ADC is applied per K-chunk of size `k_chunk` (one physical crossbar's
+    worth of rows): each crossbar column converts its own analog sum before
+    the digital partial-sum reduction in the IPCN routers — this ordering is
+    what makes the PE/IPCN split visible in the numerics.
+    """
+    k_total = xq_ref.shape[1]
+    num_chunks = k_total // k_chunk
+    adc_max = float(2 ** (adc_bits - 1) - 1)
+
+    acc0 = jnp.zeros((xq_ref.shape[0], o_ref.shape[1]), jnp.float32)
+
+    def body(c, acc):
+        x_chunk = pl.load(xq_ref, (slice(None), pl.dslice(c * k_chunk, k_chunk)))
+        w_chunk = pl.load(wq_ref, (pl.dslice(c * k_chunk, k_chunk), slice(None)))
+        analog = x_chunk @ w_chunk  # bitline accumulation (exact int in f32)
+        # ADC: per-column full-scale from calibration, round + clip to swing.
+        fs = pl.load(fs_ref, (pl.dslice(c, 1), slice(None)))[0]
+        lsb = fs / adc_max
+        digital = jnp.clip(jnp.round(analog / lsb[None, :]), -adc_max, adc_max)
+        return acc + digital * lsb[None, :]
+
+    o_ref[...] = jax.lax.fori_loop(0, num_chunks, body, acc0).astype(o_ref.dtype)
+
+
+def smac_xbar(xq: jax.Array, wq: jax.Array, full_scale: jax.Array, *,
+              adc_bits: int = 12, k_chunk: int = 256,
+              tile_m: int = 32, tile_n: int = 128) -> jax.Array:
+    """Crossbar matmul on integer codes. xq: [M, K] f32 int codes,
+    wq: [K, N] f32 conductance codes, full_scale: [K/k_chunk, N] per-chunk
+    per-column ADC full-scale. Returns dequantized-in-code-space [M, N]
+    (caller multiplies by DAC/weight scales).
+    """
+    m, k = xq.shape
+    _, n = wq.shape
+    if k % k_chunk or m % tile_m or n % tile_n:
+        raise ValueError(f"({m},{k},{n}) not divisible by tiles "
+                         f"({tile_m},{k_chunk},{tile_n})")
+    kernel = functools.partial(_smac_kernel, adc_bits=adc_bits, k_chunk=k_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tile_m, n // tile_n),
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+            pl.BlockSpec((k // k_chunk, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(xq, wq, full_scale)
+
+
+def calibrate_full_scale(xq: jax.Array, wq: jax.Array, *, k_chunk: int = 256) -> jax.Array:
+    """Feedback-loop calibration (paper §II-A): run the calibration set
+    through each crossbar chunk and record the max |column sum| as the ADC
+    full-scale, so the input swing is fully utilized."""
+    k = xq.shape[1]
+    chunks = []
+    for c in range(k // k_chunk):
+        x_c = xq[:, c * k_chunk:(c + 1) * k_chunk]
+        w_c = wq[c * k_chunk:(c + 1) * k_chunk, :]
+        chunks.append(jnp.maximum(jnp.max(jnp.abs(x_c @ w_c), axis=0), 1.0))
+    return jnp.stack(chunks, axis=0)
+
+
+def smac_full(x: jax.Array, w: jax.Array, *, w_levels: int = 256, x_bits: int = 8,
+              adc_bits: int = 12, k_chunk: int = 256,
+              tile_m: int = 32, tile_n: int = 128) -> jax.Array:
+    """End-to-end SMAC: quantize → crossbar kernel → dequantize.
+
+    Matches kernels.ref.smac when k_chunk >= K (single crossbar) and the
+    calibration set equals the eval set; otherwise it is the *more faithful*
+    model (per-crossbar ADC before digital reduction).
+    """
+    from . import ref
+
+    wq, ws = ref.quantize_weights(w, w_levels)
+    xq, xs = ref.quantize_inputs(x, x_bits)
+    xq = xq.astype(jnp.float32)
+    wq = wq.astype(jnp.float32)
+    fs = calibrate_full_scale(xq, wq, k_chunk=k_chunk)
+    acc = smac_xbar(xq, wq, fs, adc_bits=adc_bits, k_chunk=k_chunk,
+                    tile_m=tile_m, tile_n=tile_n)
+    return acc * xs[..., None] * ws[None, :]

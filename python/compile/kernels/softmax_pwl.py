@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: SCU softmax with 8-segment piecewise-linear exp.
+
+The Softmax Compute Unit (paper §II-C, Fig 4) is a 3-state FSM:
+  state 1 — stream inputs, compute PWL exp of (x - max), accumulate the
+            partial sum and fill the indexed cache;
+  state 2 — reciprocal of the partial sum;
+  state 3 — multiply cache entries by the reciprocal, stream out.
+
+As a Pallas kernel the "indexed cache" is the VMEM row tile and the FSM
+collapses into a row-wise reduce + scale; the PWL LUT (8 slope/intercept
+pairs) is passed in as tiny operands so the same tables drive the rust SCU
+model (rust/src/scu/) — single source of truth for the approximation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PWL_HI, PWL_LO, PWL_SEGMENTS
+
+
+def _softmax_pwl_kernel(x_ref, slope_ref, icept_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    slope = slope_ref[...]
+    icept = icept_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    t = jnp.clip(x - m, PWL_LO, PWL_HI)
+    width = (PWL_HI - PWL_LO) / PWL_SEGMENTS
+    seg = jnp.clip(jnp.floor((t - PWL_LO) / width).astype(jnp.int32),
+                   0, PWL_SEGMENTS - 1)
+    e = slope[seg] * t + icept[seg]
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / denom).astype(o_ref.dtype)
+
+
+def softmax_pwl(x: jax.Array, *, block_rows: int = 32) -> jax.Array:
+    """Row-wise PWL softmax over the last axis of a 2-D array [R, C]."""
+    from .ref import PWL_INTERCEPT, PWL_SLOPE
+
+    r, c = x.shape
+    if r % block_rows:
+        raise ValueError(f"rows {r} not divisible by block_rows {block_rows}")
+    return pl.pallas_call(
+        _softmax_pwl_kernel,
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((PWL_SEGMENTS,), lambda i: (0,)),
+            pl.BlockSpec((PWL_SEGMENTS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=True,
+    )(x, PWL_SLOPE, PWL_INTERCEPT)

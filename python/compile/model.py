@@ -1,0 +1,160 @@
+"""L2 JAX model: llama-style decoder block forward, calling the L1 kernels.
+
+This is the functional golden model of what the PICNIC chiplet executes:
+one decoder = attention layer (QKV/O projections on RRAM SMAC, attention on
+the IPCN DMACs + SCU) + SwiGLU feed-forward (three more SMAC matmuls). The
+rust simulator computes the same math through its cycle-level PE/router
+models; integration tests compare its outputs against this module, executed
+via the AOT HLO on the PJRT runtime.
+
+Two fidelity variants per entry point:
+  * `*_float`  — exact float math through the pallas flash-attention kernel
+                 (bit-comparable oracle for the mapper's dataflow);
+  * `*_quant`  — SMAC-quantized projections + PWL softmax (the accelerator's
+                 actual transfer function, for accuracy-bound tests).
+
+Everything here is build-time only; `aot.py` lowers it once to HLO text.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import flash_mha
+from .kernels.smac import smac_full
+from .kernels.softmax_pwl import softmax_pwl
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of one decoder. Defaults = the tiny test config; real Llama
+    configs live in rust/src/models/ (the simulator side) — the oracle only
+    needs a representative block, not 8B parameters."""
+
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 128
+    seq: int = 64
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TINY = ModelConfig()
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Seeded synthetic weights at true block dimensions (DESIGN.md §4:
+    timing/energy depend on dims, numerics are validated on this config)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    s = 0.02
+    return {
+        "wq": s * jax.random.normal(ks[0], (cfg.d_model, cfg.d_model), jnp.float32),
+        "wk": s * jax.random.normal(ks[1], (cfg.d_model, cfg.d_model), jnp.float32),
+        "wv": s * jax.random.normal(ks[2], (cfg.d_model, cfg.d_model), jnp.float32),
+        "wo": s * jax.random.normal(ks[3], (cfg.d_model, cfg.d_model), jnp.float32),
+        "w_gate": s * jax.random.normal(ks[4], (cfg.d_model, cfg.d_ff), jnp.float32),
+        "w_up": s * jax.random.normal(ks[5], (cfg.d_model, cfg.d_ff), jnp.float32),
+        "w_down": s * jax.random.normal(ks[6], (cfg.d_ff, cfg.d_model), jnp.float32),
+        "g_attn": jnp.ones((cfg.d_model,), jnp.float32),
+        "g_ffn": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    s, d = x.shape
+    return x.reshape(s, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    h, s, d = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * d)
+
+
+def attention_block_float(x: jax.Array, p: Dict[str, jax.Array],
+                          cfg: ModelConfig) -> jax.Array:
+    """Attention sub-layer, float path, flash-attention pallas kernel."""
+    h = ref.rmsnorm(x, p["g_attn"])
+    q = _split_heads(h @ p["wq"], cfg.n_heads)
+    k = _split_heads(h @ p["wk"], cfg.n_heads)
+    v = _split_heads(h @ p["wv"], cfg.n_heads)
+    o = _merge_heads(flash_mha(q, k, v, block_q=32, block_k=32, causal=True))
+    return x + o @ p["wo"]
+
+
+def attention_block_quant(x: jax.Array, p: Dict[str, jax.Array],
+                          cfg: ModelConfig, *, adc_bits: int = 12) -> jax.Array:
+    """Attention sub-layer through the accelerator's transfer function:
+    SMAC-quantized projections, exact QK^T/SV on the DMACs (digital), PWL
+    softmax on the SCU."""
+    h = ref.rmsnorm(x, p["g_attn"])
+    kc = min(256, cfg.d_model)
+    mm = lambda a, w: smac_full(a, w, adc_bits=adc_bits, k_chunk=kc,
+                                tile_m=32, tile_n=min(128, w.shape[1]))
+    q = _split_heads(mm(h, p["wq"]), cfg.n_heads)
+    k = _split_heads(mm(h, p["wk"]), cfg.n_heads)
+    v = _split_heads(mm(h, p["wv"]), cfg.n_heads)
+
+    def head(qh, kh, vh):
+        s = qh @ kh.T / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+        mask = jnp.tril(jnp.ones((cfg.seq, cfg.seq), dtype=bool))
+        s = jnp.where(mask, s, -1e30)
+        pmat = softmax_pwl(s, block_rows=32)
+        return pmat @ vh
+
+    o = _merge_heads(jax.vmap(head)(q, k, v))
+    return x + mm(o, p["wo"])
+
+
+def ffn_block(x: jax.Array, p: Dict[str, jax.Array]) -> jax.Array:
+    h = ref.rmsnorm(x, p["g_ffn"])
+    return x + ref.ffn(h, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def decoder_block_float(x: jax.Array, p: Dict[str, jax.Array],
+                        cfg: ModelConfig) -> jax.Array:
+    """Full decoder: attention + FFN, float path. The primary AOT artifact."""
+    return ffn_block(attention_block_float(x, p, cfg), p)
+
+
+def decoder_block_quant(x: jax.Array, p: Dict[str, jax.Array],
+                        cfg: ModelConfig) -> jax.Array:
+    return ffn_block(attention_block_quant(x, p, cfg), p)
+
+
+# --- flat-argument wrappers for AOT lowering (stable positional signature) --
+
+PARAM_ORDER = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+               "g_attn", "g_ffn"]
+
+
+def _pack(p: Dict[str, jax.Array]):
+    return tuple(p[k] for k in PARAM_ORDER)
+
+
+def _unpack(args) -> Dict[str, jax.Array]:
+    return dict(zip(PARAM_ORDER, args))
+
+
+def decoder_float_flat(x, *params):
+    return (decoder_block_float(x, _unpack(params), TINY),)
+
+
+def decoder_quant_flat(x, *params):
+    return (decoder_block_quant(x, _unpack(params), TINY),)
+
+
+def attention_float_flat(q, k, v):
+    """Raw MHA for the oracle of the simulator's attention dataflow:
+    q,k,v already projected, [H, S, D]."""
+    return (flash_mha(q, k, v, block_q=32, block_k=32, causal=True),)
+
+
+def softmax_pwl_flat(x):
+    return (softmax_pwl(x, block_rows=32),)

@@ -1,0 +1,102 @@
+"""IPCN Python toolchain tests + golden vectors shared with the rust
+assembler (rust/tests/test_toolchain_crosscheck.rs loads the same program
+and asserts an identical hex encoding)."""
+
+import pytest
+
+from compile.ipcn_api import (
+    IDLE,
+    Instr,
+    IntXfer,
+    Mode,
+    Port,
+    ProgramBuilder,
+    port_mask,
+)
+
+# The shared golden program: dim=4, three rows. Any change here must be
+# mirrored in rust/tests/test_toolchain_crosscheck.rs.
+def golden_program() -> ProgramBuilder:
+    b = ProgramBuilder(4)
+    b.pipeline_east(0, 16)
+    dmac = Instr(rd_en=port_mask([Port.NORTH, Port.WEST]), mode=Mode.DMAC)
+    psum = Instr(
+        rd_en=port_mask([Port.NORTH, Port.SOUTH]),
+        mode=Mode.PARTIAL_SUM,
+        out_en=port_mask([Port.PE]),
+    )
+    b.row([((1, 0, 1, 3), dmac), ((2, 0, 2, 3), psum)], repeat=8)
+    spw = Instr(
+        rd_en=port_mask([Port.WEST]),
+        mode=Mode.SP_WRITE,
+        intxfer=IntXfer.FIFO_TO_SP,
+        sp_addr=0x2A,
+    )
+    b.row([((3, 1, 3, 2), spw)], repeat=2)
+    return b
+
+
+GOLDEN_HEX_PATH = "tests/golden_ipcn_program.hex"
+
+
+class TestEncoding:
+    def test_idle_is_zero(self):
+        assert IDLE.encode() == 0
+
+    def test_field_packing(self):
+        i = Instr(rd_en=0b1000, mode=Mode.ROUTE, out_en=0b0010,
+                  intxfer=IntXfer.NONE, sp_addr=0)
+        # rd_en=West(3)<<23 | mode=1<<19 | out_en=East(1)<<12
+        assert i.encode() == (0b1000 << 23) | (1 << 19) | (0b0010 << 12)
+
+    def test_sp_addr_bounds(self):
+        with pytest.raises(ValueError):
+            Instr(sp_addr=1024).encode()
+
+    def test_port_mask(self):
+        assert port_mask([Port.NORTH, Port.DOWN]) == 0b1000001
+
+
+class TestBuilder:
+    def test_max_two_commands_per_row(self):
+        b = ProgramBuilder(4)
+        i1 = Instr(mode=Mode.ROUTE, rd_en=1, out_en=2)
+        i2 = Instr(mode=Mode.DMAC, rd_en=3)
+        i3 = Instr(mode=Mode.SP_READ, sp_addr=1)
+        with pytest.raises(ValueError):
+            b.row([((0, 0, 0, 0), i1), ((1, 0, 1, 0), i2), ((2, 0, 2, 0), i3)])
+
+    def test_overlap_rejected(self):
+        b = ProgramBuilder(4)
+        i1 = Instr(mode=Mode.ROUTE, rd_en=1, out_en=2)
+        with pytest.raises(ValueError):
+            b.row([((0, 0, 1, 1), i1), ((1, 1, 2, 2), i1)])
+
+    def test_out_of_bounds_rejected(self):
+        b = ProgramBuilder(4)
+        with pytest.raises(ValueError):
+            b.row([((0, 0, 4, 0), Instr(mode=Mode.ROUTE))])
+
+    def test_hex_shape(self):
+        hexfile = golden_program().compile_hex()
+        lines = hexfile.strip().splitlines()
+        assert len(lines) == 3
+        for line in lines:
+            cmd1, cmd2, repeat, sel = line.split(";")
+            assert len(cmd1) == len(cmd2) == len(repeat) == 8
+            assert len(sel) == 8  # 16 routers × 2 bits = 4 bytes = 8 hex
+            int(cmd1, 16), int(cmd2, 16), int(repeat, 16), int(sel, 16)
+
+    def test_golden_file_up_to_date(self):
+        """The checked-in golden hex must match what the API emits — the
+        rust cross-check test reads the same file."""
+        import os
+
+        hexfile = golden_program().compile_hex()
+        if not os.path.exists(GOLDEN_HEX_PATH):
+            with open(GOLDEN_HEX_PATH, "w") as f:
+                f.write(hexfile)
+        with open(GOLDEN_HEX_PATH) as f:
+            assert f.read() == hexfile, (
+                "golden_ipcn_program.hex is stale — regenerate by deleting it"
+            )

@@ -1,0 +1,203 @@
+"""L1 kernel correctness: pallas vs pure-jnp ref — the core numeric signal.
+
+hypothesis sweeps shapes/dtypes per the rust_pallas hw-codesign guide; every
+kernel is asserted allclose against kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention, flash_mha
+from compile.kernels.smac import calibrate_full_scale, smac_full, smac_xbar
+from compile.kernels.softmax_pwl import softmax_pwl
+
+
+def rand(key, *shape, dtype=jnp.float32, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,d", [(32, 16), (64, 32), (128, 64), (96, 48)])
+    def test_matches_ref_causal(self, s, d):
+        q, k, v = rand(0, s, d), rand(1, s, d), rand(2, s, d)
+        out = flash_attention(q, k, v, block_q=32, block_k=32, causal=True)
+        want = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("s,d", [(64, 32), (32, 64)])
+    def test_matches_ref_non_causal(self, s, d):
+        q, k, v = rand(3, s, d), rand(4, s, d), rand(5, s, d)
+        out = flash_attention(q, k, v, block_q=32, block_k=32, causal=False)
+        want = ref.attention(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    def test_cross_attention_longer_kv(self):
+        # decode-phase shape: few queries, long KV (KV cache)
+        q, k, v = rand(6, 32, 16), rand(7, 128, 16), rand(8, 128, 16)
+        out = flash_attention(q, k, v, block_q=32, block_k=32, causal=False)
+        want = ref.attention(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    def test_mha_matches_ref(self):
+        h, s, d = 4, 64, 16
+        q, k, v = rand(9, h, s, d), rand(10, h, s, d), rand(11, h, s, d)
+        out = flash_mha(q, k, v)
+        want = ref.mha(q, k, v)
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+    def test_rejects_misaligned_shapes(self):
+        q = rand(12, 33, 16)
+        with pytest.raises(ValueError):
+            flash_attention(q, q, q, block_q=32, block_k=32)
+
+    def test_rows_sum_preserved(self):
+        # attention output of constant V must be constant
+        q, k = rand(13, 64, 32), rand(14, 64, 32)
+        v = jnp.ones((64, 32), jnp.float32) * 3.0
+        out = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, 3.0 * jnp.ones_like(out), rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s_blocks=st.integers(1, 4),
+        d=st.sampled_from([16, 32, 64]),
+        seed=st.integers(0, 2**16),
+        causal=st.booleans(),
+    )
+    def test_hypothesis_shape_sweep(self, s_blocks, d, seed, causal):
+        s = 32 * s_blocks
+        q, k, v = rand(seed, s, d), rand(seed + 1, s, d), rand(seed + 2, s, d)
+        out = flash_attention(q, k, v, causal=causal)
+        want = ref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+    def test_numerically_extreme_scores(self):
+        # large-magnitude Q/K stress the online-softmax max tracking
+        q, k, v = rand(20, 64, 32, scale=30.0), rand(21, 64, 32, scale=30.0), rand(22, 64, 32)
+        out = flash_attention(q, k, v, causal=True)
+        want = ref.attention(q, k, v, causal=True)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SMAC crossbar
+# ---------------------------------------------------------------------------
+
+class TestSmac:
+    def test_single_crossbar_matches_ref(self):
+        # k_chunk >= K and calibration set == eval set → identical to ref.smac
+        x, w = rand(30, 32, 64, scale=0.5), rand(31, 64, 128, scale=0.02)
+        out = smac_full(x, w, k_chunk=64, tile_m=32, tile_n=128)
+        want = ref.smac(x, w)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("adc_bits,tol", [(8, 0.05), (10, 0.02), (12, 0.01)])
+    def test_approaches_float_with_adc_bits(self, adc_bits, tol):
+        x, w = rand(32, 32, 128, scale=0.5), rand(33, 128, 128, scale=0.02)
+        out = smac_full(x, w, adc_bits=adc_bits, k_chunk=128, tile_m=32, tile_n=128)
+        want = ref.smac_float(x, w)
+        rel = np.linalg.norm(out - want) / np.linalg.norm(want)
+        assert rel < tol, f"rel err {rel} at {adc_bits} ADC bits"
+
+    def test_multi_crossbar_split(self):
+        # K split across two 256-row crossbars, ADC per chunk then digital sum
+        x, w = rand(34, 32, 512, scale=0.5), rand(35, 512, 128, scale=0.02)
+        out = smac_full(x, w, k_chunk=256, tile_m=32, tile_n=128)
+        want = ref.smac_float(x, w)
+        rel = np.linalg.norm(out - want) / np.linalg.norm(want)
+        assert rel < 0.02
+
+    def test_calibration_full_scale_positive(self):
+        xq = jnp.round(rand(36, 16, 256, scale=20.0))
+        wq = jnp.round(rand(37, 256, 64, scale=20.0))
+        fs = calibrate_full_scale(xq, wq, k_chunk=256)
+        assert fs.shape == (1, 64)
+        assert (np.asarray(fs) >= 1.0).all()
+
+    def test_xbar_kernel_zero_input(self):
+        xq = jnp.zeros((32, 256), jnp.float32)
+        wq = jnp.round(rand(38, 256, 128, scale=20.0))
+        fs = jnp.ones((1, 128), jnp.float32)
+        out = smac_xbar(xq, wq, fs, k_chunk=256, tile_m=32, tile_n=128)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_rejects_bad_tiling(self):
+        xq = jnp.zeros((30, 256), jnp.float32)  # 30 % 32 != 0
+        wq = jnp.zeros((256, 128), jnp.float32)
+        fs = jnp.ones((1, 128), jnp.float32)
+        with pytest.raises(ValueError):
+            smac_xbar(xq, wq, fs)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m_blocks=st.integers(1, 3),
+        kc=st.sampled_from([64, 128, 256]),
+        chunks=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m_blocks, kc, chunks, seed):
+        m, k, n = 32 * m_blocks, kc * chunks, 128
+        x, w = rand(seed, m, k, scale=0.5), rand(seed + 1, k, n, scale=0.05)
+        out = smac_full(x, w, k_chunk=kc, tile_m=32, tile_n=128)
+        want = ref.smac_float(x, w)
+        rel = np.linalg.norm(out - want) / max(np.linalg.norm(want), 1e-9)
+        assert rel < 0.03
+
+
+# ---------------------------------------------------------------------------
+# PWL softmax (SCU)
+# ---------------------------------------------------------------------------
+
+class TestSoftmaxPwl:
+    def test_matches_ref_exactly(self):
+        x = rand(40, 32, 64, scale=3.0)
+        out = softmax_pwl(x)
+        want = ref.softmax_pwl(x)
+        np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-7)
+
+    def test_close_to_true_softmax(self):
+        # 8-segment chord PWL of exp has max deviation ~0.077 (midpoint of
+        # the [-1,0] segment); after row normalization the softmax outputs
+        # deviate by at most ~the same amount in the worst case.
+        x = rand(41, 32, 64, scale=2.0)
+        out = softmax_pwl(x)
+        want = jax.nn.softmax(x, axis=-1)
+        assert np.max(np.abs(np.asarray(out) - np.asarray(want))) < 0.08
+
+    def test_rows_sum_to_one(self):
+        x = rand(42, 64, 128, scale=5.0)
+        out = softmax_pwl(x)
+        np.testing.assert_allclose(np.asarray(out).sum(-1), 1.0, rtol=1e-5)
+
+    def test_non_negative(self):
+        x = rand(43, 32, 64, scale=10.0)
+        assert (np.asarray(softmax_pwl(x)) >= 0).all()
+
+    def test_pwl_exp_monotone_and_bounded(self):
+        t = jnp.linspace(-10, 0, 257)
+        y = np.asarray(ref.pwl_exp(t))
+        assert (np.diff(y) >= -1e-7).all(), "PWL exp must be monotone"
+        assert abs(y[-1] - 1.0) < 1e-6, "exp(0) segment endpoint is exact"
+        true = np.exp(np.clip(np.asarray(t), -8, 0))
+        # chord over [-1, 0] deviates from exp by ~0.077 at the midpoint —
+        # that is the 8-segment LUT's intrinsic approximation error
+        assert np.max(np.abs(y - true)) < 0.08
+
+    @settings(max_examples=20, deadline=None)
+    @given(rows=st.sampled_from([32, 64]), cols=st.sampled_from([32, 64, 128]),
+           seed=st.integers(0, 2**16), scale=st.floats(0.1, 8.0))
+    def test_hypothesis_sweep(self, rows, cols, seed, scale):
+        x = rand(seed, rows, cols, scale=scale)
+        out = softmax_pwl(x)
+        want = ref.softmax_pwl(x)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(out).sum(-1), 1.0, rtol=1e-5)

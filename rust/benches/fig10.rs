@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 10 (C2C transfer distribution over time,
+//! Llama 3.2-1B). Run: `cargo bench --bench fig10`
+
+mod harness;
+
+use picnic::config::PicnicConfig;
+use picnic::report;
+
+fn main() {
+    let cfg = PicnicConfig::default();
+    harness::section("Fig 10 — C2C transfer distribution over time");
+    let mut f = None;
+    harness::bench("fig10/trace", 1, 3, || {
+        f = Some(report::fig10(&cfg, 80).expect("fig10"));
+    });
+    println!("\n{}", report::figures::render_fig10(&f.unwrap()));
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 8 (system power & efficiency with vs without
+//! CCPG per model). Run: `cargo bench --bench fig8`
+
+mod harness;
+
+use picnic::config::PicnicConfig;
+use picnic::report;
+
+fn main() {
+    let cfg = PicnicConfig::default();
+    harness::section("Fig 8 — CCPG power & efficiency comparison");
+    let mut rows = None;
+    harness::bench("fig8/ccpg_sweep", 1, 3, || {
+        rows = Some(report::fig8(&cfg).expect("fig8"));
+    });
+    println!("\n{}", report::figures::render_fig8(&rows.unwrap()));
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig 9 (average C2C transfer power, electrical vs
+//! optical, per model × context). Run: `cargo bench --bench fig9`
+
+mod harness;
+
+use picnic::config::PicnicConfig;
+use picnic::report;
+
+fn main() {
+    let cfg = PicnicConfig::default();
+    harness::section("Fig 9 — C2C power, electrical vs optical");
+    let mut rows = None;
+    harness::bench("fig9/link_sweep", 1, 2, || {
+        rows = Some(report::fig9(&cfg).expect("fig9"));
+    });
+    println!("\n{}", report::figures::render_fig9(&rows.unwrap()));
+}

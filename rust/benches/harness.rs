@@ -1,0 +1,35 @@
+//! Shared micro-bench harness (replaces criterion in this offline build):
+//! warm-up, N timed iterations, mean/min/max report. Each bench binary
+//! (`harness = false`) regenerates one paper table/figure and times the
+//! underlying simulation so regressions in the hot path are visible.
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` untimed ones; prints a
+/// criterion-style line and returns the mean seconds per iteration.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "bench {name:<40} mean {:>10.3} ms   min {:>10.3} ms   max {:>10.3} ms   ({iters} iters)",
+        mean * 1e3,
+        min * 1e3,
+        max * 1e3
+    );
+    mean
+}
+
+/// Pretty separator for bench output sections.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,93 @@
+//! Bench: the L3 hot paths in isolation — detailed mesh cycle stepping,
+//! crossbar SMAC, SCU rows, plan building, and the analytic phase walker.
+//! This is the profile target for the EXPERIMENTS.md §Perf iteration log.
+//! Run: `cargo bench --bench hotpath`
+
+mod harness;
+
+use picnic::config::{PicnicConfig, SystemConfig};
+use picnic::isa::Assembler;
+use picnic::mapper::ScheduleBuilder;
+use picnic::models::LlamaConfig;
+use picnic::pe::{Crossbar, QuantSpec};
+use picnic::scu::Scu;
+use picnic::sim::{AnalyticSim, TileEngine};
+use picnic::util::Rng;
+
+fn main() {
+    harness::section("L3 hot paths");
+
+    // 1. Detailed mesh cycle stepping: 16×16 mesh, pipeline program.
+    {
+        let cfg = SystemConfig::tiny(16);
+        let mut eng = TileEngine::new(cfg, 128);
+        let mut asm = Assembler::new(16);
+        for r in 0..16 {
+            asm.pipeline_east(r, 1024);
+        }
+        let prog = asm.finish();
+        eng.load_program(&prog);
+        for r in 0..16 {
+            eng.mesh.inject(r * 16, picnic::isa::Port::West, 1.0);
+        }
+        let mut cycles_done = 0u64;
+        harness::bench("engine/mesh16_step_1k_cycles", 1, 10, || {
+            // re-load so every iteration does identical work
+            eng.load_program(&prog);
+            cycles_done += eng.run(1024);
+        });
+        let total_router_cycles = 10 * 1024u64 * 256;
+        println!("  (≈{total_router_cycles} router-cycles exercised)");
+    }
+
+    // 2. Crossbar SMAC 256×256.
+    {
+        let mut rng = Rng::seed_from_u64(1);
+        let w: Vec<f32> = (0..256 * 256).map(|_| rng.sym_f32(0.05)).collect();
+        let mut xb = Crossbar::program(&w, 256, 256, QuantSpec::default());
+        let cal: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..256).map(|_| rng.sym_f32(1.0)).collect())
+            .collect();
+        xb.calibrate(&cal);
+        let x: Vec<f32> = (0..256).map(|_| rng.sym_f32(1.0)).collect();
+        harness::bench("pe/smac_256x256", 10, 200, || {
+            let y = xb.smac(&x);
+            assert_eq!(y.len(), 256);
+        });
+    }
+
+    // 3. SCU softmax row of 2048.
+    {
+        let mut rng = Rng::seed_from_u64(2);
+        let row: Vec<f32> = (0..2048).map(|_| rng.sym_f32(4.0)).collect();
+        let mut scu = Scu::new();
+        harness::bench("scu/softmax_row_2048", 10, 200, || {
+            let out = scu.softmax_row(&row);
+            assert_eq!(out.len(), 2048);
+        });
+    }
+
+    // 4. Plan building (mapper) for one 8B attention layer.
+    {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::llama3_8b();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let layers = model.layers();
+        harness::bench("mapper/plan_8b_attention", 5, 50, || {
+            let p = b.plan_layer(&layers[0], 1, 2048).expect("plan");
+            assert!(!p.phases.is_empty());
+        });
+    }
+
+    // 5. Full analytic run, 8B 512/512.
+    {
+        let sim = AnalyticSim::new(PicnicConfig::default());
+        let model = LlamaConfig::llama3_8b();
+        harness::bench("analytic/run_8b_512", 1, 5, || {
+            let r = sim
+                .run(&model, &picnic::models::Workload::new(512, 512))
+                .expect("run");
+            assert!(r.stats.tokens_per_s > 0.0);
+        });
+    }
+}

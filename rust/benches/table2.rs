@@ -1,0 +1,18 @@
+//! Bench: regenerate Table II (PICNIC throughput/power/efficiency for
+//! 3 models × 3 context lengths, no CCPG) and time the simulation.
+//! Run: `cargo bench --bench table2`
+
+mod harness;
+
+use picnic::config::PicnicConfig;
+use picnic::report;
+
+fn main() {
+    let cfg = PicnicConfig::default();
+    harness::section("Table II — LLM inference benchmark (no CCPG)");
+    let mut rows = None;
+    harness::bench("table2/full_sweep", 1, 3, || {
+        rows = Some(report::table2(&cfg).expect("table2"));
+    });
+    println!("\n{}", report::tables::render_table2(&rows.unwrap()));
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Table III (cross-platform comparison, Llama-8B
+//! 1024/1024, H100 baseline, PICNIC with CCPG).
+//! Run: `cargo bench --bench table3`
+
+mod harness;
+
+use picnic::config::PicnicConfig;
+use picnic::report;
+
+fn main() {
+    let cfg = PicnicConfig::default();
+    harness::section("Table III — comparison with other platforms");
+    let mut rows = None;
+    harness::bench("table3/picnic_8b_ccpg", 1, 3, || {
+        rows = Some(report::table3(&cfg).expect("table3"));
+    });
+    println!("\n{}", report::tables::render_table3(&rows.unwrap()));
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate Table IV (power & area breakdown per unit router-PE
+//! macro). Run: `cargo bench --bench table4`
+
+mod harness;
+
+use picnic::config::PicnicConfig;
+use picnic::report;
+
+fn main() {
+    let cfg = PicnicConfig::default();
+    harness::section("Table IV — power & area breakdown");
+    let mut b = None;
+    harness::bench("table4/breakdown", 10, 100, || {
+        b = Some(report::table4(&cfg));
+    });
+    println!("\n{}", report::tables::render_table4(&b.unwrap()));
+}

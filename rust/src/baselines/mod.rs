@@ -1,0 +1,9 @@
+//! Baseline platform models for Table III: published Llama-8B (1024/1024,
+//! batch 1) throughput/power for each comparison platform, plus a simple
+//! roofline model used for sanity checks and the A100/H100 speedup math.
+
+mod platforms;
+mod roofline;
+
+pub use platforms::{platform, Platform, PlatformKind, TABLE3_PLATFORMS};
+pub use roofline::GpuRoofline;

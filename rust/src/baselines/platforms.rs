@@ -1,0 +1,129 @@
+//! Published baseline numbers (paper Table III): Llama-8B, context
+//! 1024/1024, batch size 1, Nvidia H100 as the normalization baseline.
+//!
+//! These are *inputs* — the paper itself compares against vendor-published
+//! or prior-work numbers; PICNIC's own row is computed by our simulator.
+
+
+/// Baseline architecture category (Table III "Architecture" row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlatformKind {
+    HybridPimNmc,
+    NandFlashPim,
+    MultiCoreGpu,
+    SocNpu,
+    WaferScale,
+}
+
+/// One comparison platform.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: &'static str,
+    pub kind: PlatformKind,
+    /// Llama-8B decode throughput, tokens/s.
+    pub tokens_per_s: f64,
+    /// Average power, W.
+    pub power_w: f64,
+}
+
+impl Platform {
+    pub fn tokens_per_j(&self) -> f64 {
+        self.tokens_per_s / self.power_w
+    }
+
+    /// Speedup vs a baseline platform (Table III's "Speedup^" row).
+    pub fn speedup_vs(&self, base: &Platform) -> f64 {
+        self.tokens_per_s / base.tokens_per_s
+    }
+
+    /// Efficiency improvement vs a baseline (Table III's last row).
+    pub fn efficiency_vs(&self, base: &Platform) -> f64 {
+        self.tokens_per_j() / base.tokens_per_j()
+    }
+}
+
+/// The six non-PICNIC columns of Table III.
+pub const TABLE3_PLATFORMS: &[Platform] = &[
+    Platform {
+        name: "TransPIM",
+        kind: PlatformKind::HybridPimNmc,
+        tokens_per_s: 270.0,
+        power_w: 40.0,
+    },
+    Platform {
+        name: "Cambricon-LLM",
+        kind: PlatformKind::NandFlashPim,
+        tokens_per_s: 36.34,
+        power_w: 36.3,
+    },
+    Platform {
+        name: "NV A100",
+        kind: PlatformKind::MultiCoreGpu,
+        tokens_per_s: 78.36,
+        power_w: 200.0,
+    },
+    Platform {
+        name: "NV H100",
+        kind: PlatformKind::MultiCoreGpu,
+        tokens_per_s: 274.26,
+        power_w: 280.0,
+    },
+    Platform {
+        name: "Apple M4-Max",
+        kind: PlatformKind::SocNpu,
+        tokens_per_s: 69.77,
+        power_w: 80.0,
+    },
+    Platform {
+        name: "Cerebras-2",
+        kind: PlatformKind::WaferScale,
+        tokens_per_s: 1800.0,
+        power_w: 15000.0,
+    },
+];
+
+/// Look up a baseline by (case-insensitive) name.
+pub fn platform(name: &str) -> Option<&'static Platform> {
+    TABLE3_PLATFORMS
+        .iter()
+        .find(|p| p.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn by(name: &str) -> &'static Platform {
+        platform(name).unwrap()
+    }
+
+    #[test]
+    fn table3_ratios_reproduce() {
+        let h100 = by("NV H100");
+        // Table III row "Speedup" (H100 = 1×)
+        assert!((by("TransPIM").speedup_vs(h100) - 0.98).abs() < 0.01);
+        assert!((by("Cambricon-LLM").speedup_vs(h100) - 0.13).abs() < 0.01);
+        assert!((by("NV A100").speedup_vs(h100) - 0.29).abs() < 0.01);
+        assert!((by("Apple M4-Max").speedup_vs(h100) - 0.25).abs() < 0.01);
+        assert!((by("Cerebras-2").speedup_vs(h100) - 6.57).abs() < 0.01);
+        // Table III row "Efficiency improvement"
+        assert!((by("TransPIM").efficiency_vs(h100) - 6.94).abs() < 0.1);
+        assert!((by("NV A100").efficiency_vs(h100) - 0.4).abs() < 0.01);
+        assert!((by("Apple M4-Max").efficiency_vs(h100) - 0.89).abs() < 0.01);
+        assert!((by("Cerebras-2").efficiency_vs(h100) - 0.13).abs() < 0.01);
+    }
+
+    #[test]
+    fn tokens_per_j_column() {
+        assert!((by("NV H100").tokens_per_j() - 0.98).abs() < 0.01);
+        assert!((by("NV A100").tokens_per_j() - 0.39).abs() < 0.01);
+        assert!((by("TransPIM").tokens_per_j() - 6.8).abs() < 0.1);
+        assert!((by("Cerebras-2").tokens_per_j() - 0.12).abs() < 0.01);
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(platform("nv h100").is_some());
+        assert!(platform("unknown").is_none());
+    }
+}

@@ -1,0 +1,120 @@
+//! Chiplet clusters (paper §II-E, Fig 5): four adjacent compute-tile
+//! chiplets grouped as a cluster; CCPG activates exactly one cluster at a
+//! time, keeping only scratchpad retention alive elsewhere.
+
+use super::tile::{ComputeTile, TileState};
+use crate::config::MacroPower;
+
+/// Aggregate state of a cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterState {
+    Active,
+    Sleep,
+}
+
+/// A cluster of (up to) `tiles_per_cluster` adjacent tiles.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub id: u32,
+    pub tiles: Vec<ComputeTile>,
+    pub state: ClusterState,
+}
+
+impl Cluster {
+    pub fn new(id: u32, tiles: Vec<ComputeTile>) -> Cluster {
+        assert!(!tiles.is_empty(), "cluster needs tiles");
+        let mut c = Cluster {
+            id,
+            tiles,
+            state: ClusterState::Sleep,
+        };
+        c.apply_state();
+        c
+    }
+
+    /// Propagate the cluster state to member tiles.
+    fn apply_state(&mut self) {
+        let tile_state = match self.state {
+            ClusterState::Active => TileState::Active,
+            ClusterState::Sleep => TileState::Sleep,
+        };
+        for t in &mut self.tiles {
+            if t.state != TileState::Off {
+                t.state = tile_state;
+            }
+        }
+    }
+
+    pub fn wake(&mut self) {
+        self.state = ClusterState::Active;
+        self.apply_state();
+    }
+
+    pub fn sleep(&mut self) {
+        self.state = ClusterState::Sleep;
+        self.apply_state();
+    }
+
+    pub fn power_w(&self, p: &MacroPower) -> f64 {
+        self.tiles.iter().map(|t| t.power_w(p)).sum()
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn cluster(n: usize) -> Cluster {
+        let cfg = SystemConfig::default();
+        Cluster::new(
+            0,
+            (0..n as u32).map(|i| ComputeTile::new(i, &cfg)).collect(),
+        )
+    }
+
+    #[test]
+    fn new_cluster_starts_asleep() {
+        let c = cluster(4);
+        assert_eq!(c.state, ClusterState::Sleep);
+        assert!(c.tiles.iter().all(|t| t.state == TileState::Sleep));
+    }
+
+    #[test]
+    fn wake_sleep_propagates() {
+        let mut c = cluster(4);
+        c.wake();
+        assert!(c.tiles.iter().all(|t| t.state == TileState::Active));
+        c.sleep();
+        assert!(c.tiles.iter().all(|t| t.state == TileState::Sleep));
+    }
+
+    #[test]
+    fn off_tiles_stay_off() {
+        let mut c = cluster(4);
+        c.tiles[3].state = TileState::Off;
+        c.wake();
+        assert_eq!(c.tiles[3].state, TileState::Off);
+        assert_eq!(c.tiles[0].state, TileState::Active);
+    }
+
+    #[test]
+    fn sleep_power_much_lower() {
+        let mut c = cluster(4);
+        c.wake();
+        let p_active = c.power_w(&MacroPower::default());
+        c.sleep();
+        let p_sleep = c.power_w(&MacroPower::default());
+        assert!(p_sleep < 0.2 * p_active, "{p_sleep} vs {p_active}");
+    }
+
+    #[test]
+    #[should_panic(expected = "cluster needs tiles")]
+    fn empty_cluster_panics() {
+        Cluster::new(0, vec![]);
+    }
+}

@@ -1,0 +1,12 @@
+//! 3D-stacked compute tiles, TSV allocation, chiplet clusters, and the
+//! Chiplet Clustering + Power Gating scheme (paper §II-D, §II-E, Fig 5).
+
+mod ccpg;
+mod cluster;
+mod tile;
+mod tsv;
+
+pub use ccpg::{Ccpg, CcpgStats};
+pub use cluster::{Cluster, ClusterState};
+pub use tile::{ComputeTile, Die, TileState};
+pub use tsv::TsvPlan;

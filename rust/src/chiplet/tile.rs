@@ -1,0 +1,140 @@
+//! One 3D-SIC compute tile (paper §II-D, Fig 3(b)): three heterogeneous
+//! dies stacked with TSVs — activation functions (top), IPCN 2D-mesh + PEs
+//! (middle), optical engine (bottom).
+
+use crate::config::{MacroArea, MacroPower, SystemConfig};
+
+/// The three dies of a compute tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Die {
+    /// Top: activation-function macros (the SCUs).
+    Activation,
+    /// Middle: IPCN 2D mesh + RRAM-CIM PEs.
+    IpcnPe,
+    /// Bottom: optical engine (laser, MRM, switches, photodetectors).
+    Optical,
+}
+
+/// Power state of a tile (CCPG drives transitions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileState {
+    /// Fully active: all macros powered.
+    Active,
+    /// Sleep: everything gated except scratchpad retention (KV cache).
+    Sleep,
+    /// Unused: no model layer mapped here (fully off).
+    Off,
+}
+
+/// A compute-tile chiplet, as the power/area model sees it.
+#[derive(Debug, Clone)]
+pub struct ComputeTile {
+    pub id: u32,
+    pub state: TileState,
+    /// Number of router-PE pairs actually carrying mapped weights.
+    pub pairs_used: usize,
+    /// Total router-PE pairs on the die (ipcn_dim²).
+    pub pairs_total: usize,
+    /// SCUs on the activation die.
+    pub scu_count: usize,
+}
+
+impl ComputeTile {
+    pub fn new(id: u32, cfg: &SystemConfig) -> ComputeTile {
+        ComputeTile {
+            id,
+            state: TileState::Active,
+            pairs_used: cfg.routers_per_tile(),
+            pairs_total: cfg.routers_per_tile(),
+            scu_count: cfg.scu_per_tile,
+        }
+    }
+
+    /// Tile power under the given state (paper's CCPG power model):
+    /// * Active — every used pair at full 259 µW + SCUs;
+    /// * Sleep  — scratchpads of used pairs stay on (KV-cache retention),
+    ///            all other macros leak at the gated fraction;
+    /// * Off    — zero (rail off; RRAM keeps weights, it is non-volatile).
+    pub fn power_w(&self, p: &MacroPower) -> f64 {
+        match self.state {
+            TileState::Active => {
+                self.pairs_used as f64 * p.unit_pair_w()
+                    + self.scu_count as f64 * p.softmax_w
+            }
+            TileState::Sleep => {
+                let retained = self.pairs_used as f64 * p.scratchpad_w;
+                let gated = self.pairs_used as f64 * (p.pe_w + p.router_w) * p.sleep_leak_frac
+                    + self.scu_count as f64 * p.softmax_w * p.sleep_leak_frac;
+                retained + gated
+            }
+            TileState::Off => 0.0,
+        }
+    }
+
+    /// Silicon area of the IPCN+PE die (the dominant die; paper Table IV:
+    /// 189.6 mm² per compute-tile chiplet).
+    pub fn area_mm2(&self, a: &MacroArea) -> f64 {
+        self.pairs_total as f64 * a.unit_pair_mm2() + self.scu_count as f64 * a.softmax_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tile() -> ComputeTile {
+        ComputeTile::new(0, &SystemConfig::default())
+    }
+
+    #[test]
+    fn active_tile_power_matches_table_iv_aggregate() {
+        let t = tile();
+        let p = t.power_w(&MacroPower::default());
+        // 1024 pairs × 259 µW + 1024 SCUs × 5.31 µW ≈ 0.2652 + 0.0054 W
+        assert!((p - (1024.0 * 259e-6 + 1024.0 * 5.31e-6)).abs() < 1e-9);
+        assert!(p > 0.27 && p < 0.272, "tile power ≈ 0.2706 W, got {p}");
+    }
+
+    #[test]
+    fn sleep_keeps_scratchpads_only() {
+        let mut t = tile();
+        t.state = TileState::Sleep;
+        let mp = MacroPower::default();
+        let p = t.power_w(&mp);
+        let retained = 1024.0 * 42e-6;
+        assert!(p >= retained, "retention floor");
+        assert!(p < retained * 1.2, "gated macros nearly off: {p}");
+        // sleep is a large saving vs active
+        let mut active = tile();
+        active.state = TileState::Active;
+        assert!(p < 0.2 * active.power_w(&mp), "≥80% saved per sleeping tile");
+    }
+
+    #[test]
+    fn off_tile_draws_nothing() {
+        let mut t = tile();
+        t.state = TileState::Off;
+        assert_eq!(t.power_w(&MacroPower::default()), 0.0);
+    }
+
+    #[test]
+    fn partial_mapping_scales_power() {
+        let mut t = tile();
+        t.pairs_used = 512;
+        let p = t.power_w(&MacroPower::default());
+        let full = tile().power_w(&MacroPower::default());
+        assert!(p < full);
+    }
+
+    #[test]
+    fn tile_area_near_paper_value() {
+        let t = tile();
+        let area = t.area_mm2(&MacroArea::default());
+        // 1024 × 0.1842 + 1024 × 0.041 ≈ 188.6 + 42 = 230.6 mm² for all
+        // macros; the paper quotes 189.6 mm² per chiplet (the SCU die is
+        // stacked, not adjacent — planar footprint is the IPCN+PE die).
+        let planar = 1024.0 * MacroArea::default().unit_pair_mm2();
+        assert!((planar - 188.6).abs() < 0.5, "IPCN+PE die ≈ paper's 189.6 mm²");
+        assert!(area > planar, "3D total exceeds planar footprint");
+    }
+}

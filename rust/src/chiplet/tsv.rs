@@ -1,0 +1,100 @@
+//! TSV allocation (paper §II-D): "The TSVs are allocated in an alternating
+//! column-wise pattern within the IPCN, i.e., TSVs in odd-numbered columns
+//! connect to the top die, whereas those in even-numbered columns connect
+//! to the bottom die" — halving TSV density per die pair to mitigate
+//! crosstalk and improve inter-die signal integrity.
+
+use crate::chiplet::tile::Die;
+
+/// The per-tile TSV allocation plan.
+#[derive(Debug, Clone)]
+pub struct TsvPlan {
+    dim: usize,
+    /// TSV bundle dimension per router site (Table I: 32×2).
+    bundle: (usize, usize),
+}
+
+impl TsvPlan {
+    pub fn new(dim: usize, bundle: (usize, usize)) -> TsvPlan {
+        TsvPlan { dim, bundle }
+    }
+
+    /// Which die the vertical port of router column `col` connects to.
+    /// Even columns (0-indexed) → bottom/optical; odd columns → top/
+    /// activation. ("odd-numbered" in the paper counts from 1.)
+    pub fn die_for_column(&self, col: usize) -> Die {
+        assert!(col < self.dim, "column out of range");
+        if col % 2 == 0 {
+            Die::Optical
+        } else {
+            Die::Activation
+        }
+    }
+
+    /// A router reaches the *other* die through its even/odd neighbour —
+    /// one extra planar hop. Returns the column to detour through.
+    pub fn detour_column(&self, col: usize, want: Die) -> usize {
+        if self.die_for_column(col) == want {
+            col
+        } else if col + 1 < self.dim {
+            col + 1
+        } else {
+            col - 1
+        }
+    }
+
+    /// TSVs per router site.
+    pub fn tsvs_per_site(&self) -> usize {
+        self.bundle.0 * self.bundle.1
+    }
+
+    /// Total TSVs on the tile; the alternating pattern halves the *per-die*
+    /// density relative to every-column-to-both-dies.
+    pub fn total_tsvs(&self) -> usize {
+        self.dim * self.dim * self.tsvs_per_site()
+    }
+
+    /// Density relief factor vs. a both-dies-everywhere allocation.
+    pub fn density_relief(&self) -> f64 {
+        0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alternating_column_pattern() {
+        let p = TsvPlan::new(32, (32, 2));
+        assert_eq!(p.die_for_column(0), Die::Optical);
+        assert_eq!(p.die_for_column(1), Die::Activation);
+        assert_eq!(p.die_for_column(30), Die::Optical);
+        assert_eq!(p.die_for_column(31), Die::Activation);
+    }
+
+    #[test]
+    fn detour_reaches_other_die_in_one_hop() {
+        let p = TsvPlan::new(32, (32, 2));
+        // column 0 (optical) wants the activation die → detour via col 1
+        assert_eq!(p.detour_column(0, Die::Activation), 1);
+        // column 1 already reaches activation
+        assert_eq!(p.detour_column(1, Die::Activation), 1);
+        // last column edge case
+        assert_eq!(p.detour_column(31, Die::Optical), 30);
+    }
+
+    #[test]
+    fn counts_match_table1() {
+        let p = TsvPlan::new(32, (32, 2));
+        assert_eq!(p.tsvs_per_site(), 64);
+        assert_eq!(p.total_tsvs(), 32 * 32 * 64);
+        assert_eq!(p.density_relief(), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "column out of range")]
+    fn oob_column_panics() {
+        TsvPlan::new(4, (32, 2)).die_for_column(4);
+    }
+}

@@ -1,0 +1,453 @@
+//! System configuration: the paper's Table I parameters, Table IV unit
+//! power/area constants, and interconnect energy constants.
+//!
+//! Everything that the simulator treats as a *given* of the PICNIC design
+//! (as opposed to something it computes) lives here, with the paper source
+//! cited on each field. Unit tests pin the published values so an
+//! accidental edit of a constant fails loudly.
+
+
+/// Table I — "PICNIC System Parameter".
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    // -- System level ------------------------------------------------------
+    /// Data-path bit width (bits). Table I: 64.
+    pub bit_width: u32,
+    /// Core clock (Hz). Table I: 1 GHz.
+    pub frequency_hz: f64,
+
+    // -- Tile level --------------------------------------------------------
+    /// IPCN mesh dimension per compute tile (N×N routers). Table I: 32×32.
+    pub ipcn_dim: usize,
+    /// Softmax compute units per tile. Table I: 1024 (one per router-PE).
+    pub scu_per_tile: usize,
+
+    // -- Macro level (per unit router-PE pair) -----------------------------
+    /// RRAM crossbar array size (rows = cols). Table I: 256×256.
+    pub pe_array_dim: usize,
+    /// Non-weighted (dynamic-data) MAC units per router. Table I: 16.
+    pub dmac_per_router: usize,
+    /// Scratchpad bytes per router-PE pair. Table I: 32 KB.
+    pub scratchpad_bytes: usize,
+    /// FIFO bytes per port. Table I: 256 B.
+    pub fifo_bytes: usize,
+    /// I/O ports per router (4 planar + AXI pair + ... = 7). Table I.
+    pub io_ports: usize,
+    /// TSV array dimension per router site. Table I: 32×2.
+    pub tsv_dim: (usize, usize),
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            bit_width: 64,
+            frequency_hz: 1.0e9,
+            ipcn_dim: 32,
+            scu_per_tile: 1024,
+            pe_array_dim: 256,
+            dmac_per_router: 16,
+            scratchpad_bytes: 32 * 1024,
+            fifo_bytes: 256,
+            io_ports: 7,
+            tsv_dim: (32, 2),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Routers (= router-PE pairs) per compute tile.
+    pub fn routers_per_tile(&self) -> usize {
+        self.ipcn_dim * self.ipcn_dim
+    }
+
+    /// RRAM cells (weight slots) per PE crossbar.
+    pub fn cells_per_pe(&self) -> usize {
+        self.pe_array_dim * self.pe_array_dim
+    }
+
+    /// Weight-storage capacity of one compute tile, in parameters
+    /// (one RRAM cell stores one weight — paper §II-A).
+    pub fn weights_per_tile(&self) -> usize {
+        self.routers_per_tile() * self.cells_per_pe()
+    }
+
+    /// Total DMAC throughput of one tile (MAC/cycle).
+    pub fn tile_dmac_per_cycle(&self) -> usize {
+        self.routers_per_tile() * self.dmac_per_router
+    }
+
+    /// FIFO depth in 64-bit words.
+    pub fn fifo_words(&self) -> usize {
+        self.fifo_bytes * 8 / self.bit_width as usize
+    }
+
+    /// Scratchpad capacity in 64-bit words.
+    pub fn scratchpad_words(&self) -> usize {
+        self.scratchpad_bytes * 8 / self.bit_width as usize
+    }
+
+    /// Seconds per clock cycle.
+    pub fn cycle_time_s(&self) -> f64 {
+        1.0 / self.frequency_hz
+    }
+
+    /// A scaled-down config for cycle-level tests (the detailed engine on a
+    /// full 32×32 tile is used in benches; tests use 4×4 or 8×8).
+    pub fn tiny(dim: usize) -> Self {
+        Self {
+            ipcn_dim: dim,
+            scu_per_tile: dim * dim,
+            ..Self::default()
+        }
+    }
+}
+
+/// Table IV — "Power & Area Breakdown of PICNIC Macros (Unit)". 7 nm node.
+///
+/// These are *inputs* to the system power model (the paper derives them
+/// from synthesis / CACTI / the Nature'22 RRAM macro); the system-level
+/// numbers in Tables II/III and Figs 8-10 are computed from them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MacroPower {
+    /// IMC PE (RRAM-CIM, 256×256) active power, W. Table IV: 120 µW.
+    pub pe_w: f64,
+    /// Scratchpad (32 KB) active power, W. Table IV: 42 µW.
+    pub scratchpad_w: f64,
+    /// Unit router active power, W. Table IV: 97 µW.
+    pub router_w: f64,
+    /// Softmax CU power, W. Table IV: 5.31 µW.
+    pub softmax_w: f64,
+    /// Power-gated (sleep) leakage fraction of active power for gated
+    /// macros under CCPG. The paper gates everything but the scratchpads;
+    /// we model residual leakage of gated logic at 2% (rail clamp).
+    pub sleep_leak_frac: f64,
+}
+
+impl Default for MacroPower {
+    fn default() -> Self {
+        Self {
+            pe_w: 120e-6,
+            scratchpad_w: 42e-6,
+            router_w: 97e-6,
+            softmax_w: 5.31e-6,
+            sleep_leak_frac: 0.02,
+        }
+    }
+}
+
+impl MacroPower {
+    /// Active power of one router-PE pair (PE + scratchpad + router).
+    /// Table IV total: 259 µW.
+    pub fn unit_pair_w(&self) -> f64 {
+        self.pe_w + self.scratchpad_w + self.router_w
+    }
+}
+
+/// Table IV — unit areas, mm² (7 nm).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MacroArea {
+    pub pe_mm2: f64,
+    pub scratchpad_mm2: f64,
+    pub router_mm2: f64,
+    pub tsv_mm2: f64,
+    pub softmax_mm2: f64,
+}
+
+impl Default for MacroArea {
+    fn default() -> Self {
+        Self {
+            pe_mm2: 0.1442,
+            scratchpad_mm2: 0.013,
+            router_mm2: 0.025,
+            tsv_mm2: 0.002,
+            softmax_mm2: 0.041,
+        }
+    }
+}
+
+impl MacroArea {
+    /// Area of one IPCN router-PE unit (PE + spad + router + TSV).
+    /// Table IV total: 0.1842 mm².
+    pub fn unit_pair_mm2(&self) -> f64 {
+        self.pe_mm2 + self.scratchpad_mm2 + self.router_mm2 + self.tsv_mm2
+    }
+}
+
+/// Interconnect energy constants (paper §I and §II-D; Pasricha & Nikdast
+/// survey for the optical numbers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterconnectConfig {
+    /// Electrical chip-to-chip energy, J/bit. Paper §I: 3 pJ/bit.
+    pub electrical_c2c_j_per_bit: f64,
+    /// Off-chip DRAM access energy, J/bit. Paper §I: 30 pJ/bit.
+    pub dram_j_per_bit: f64,
+    /// Silicon-photonic link energy, J/bit (MRM drive + PD + SerDes),
+    /// ~0.5 pJ/bit for integrated MRM links in the cited survey.
+    pub optical_c2c_j_per_bit: f64,
+    /// Static laser + thermal-tuning power per optical port, W.
+    pub laser_static_w_per_port: f64,
+    /// Optical ports per compute tile (one per mesh edge direction).
+    pub optical_ports_per_tile: usize,
+    /// Per-link optical bandwidth, bits/s: 4-λ WDM at 32 Gb/s per ring
+    /// (microring modulators multiplex wavelengths on one waveguide —
+    /// the bandwidth-density advantage the paper's optical engine banks on).
+    pub optical_link_bps: f64,
+    /// Per-link electrical C2C bandwidth, bits/s (SerDes lane).
+    pub electrical_link_bps: f64,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        Self {
+            electrical_c2c_j_per_bit: 3.0e-12,
+            dram_j_per_bit: 30.0e-12,
+            optical_c2c_j_per_bit: 0.5e-12,
+            laser_static_w_per_port: 1.0e-3,
+            optical_ports_per_tile: 4,
+            optical_link_bps: 128.0e9,
+            electrical_link_bps: 32.0e9,
+        }
+    }
+}
+
+/// CCPG — chiplet clustering and power gating (paper §II-E).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CcpgConfig {
+    /// Whether CCPG is enabled.
+    pub enabled: bool,
+    /// Compute tiles per cluster. Paper: 4 adjacent chiplets.
+    pub tiles_per_cluster: usize,
+    /// Cycles to wake a sleeping cluster (power-gate settle + NPM refill).
+    pub wake_latency_cycles: u64,
+}
+
+impl Default for CcpgConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            tiles_per_cluster: 4,
+            wake_latency_cycles: 1000,
+        }
+    }
+}
+
+/// Calibrated per-operation cycle costs for the analytic model. These are
+/// *derived* constants: `sim::calibrate` measures them on the detailed
+/// cycle engine; the defaults are the values so obtained on the default
+/// `SystemConfig` (re-derived by `cargo test calibration`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingConfig {
+    /// Crossbar SMAC latency (DAC ramp + analog settle + column-serial
+    /// ADC), cycles for one 256-row × 256-col analog MAC. Calibrated so
+    /// full-model throughput lands on the paper's Table II scale
+    /// (EXPERIMENTS.md §calibration).
+    pub xbar_cycles: u64,
+    /// Router hop latency, cycles (FIFO in → decode → FIFO out).
+    pub hop_cycles: u64,
+    /// Words a router forwards per cycle per port.
+    pub words_per_cycle: u64,
+    /// SCU pipeline: cycles per element streamed + fixed drain.
+    pub scu_cycles_per_elem: u64,
+    pub scu_drain_cycles: u64,
+    /// NPM bank-flip overhead per program phase, cycles.
+    pub npm_flip_cycles: u64,
+    /// DRAM hub round-trip for one cache-line-sized transfer, cycles.
+    pub dram_latency_cycles: u64,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        Self {
+            xbar_cycles: 256,
+            hop_cycles: 1,
+            words_per_cycle: 1,
+            scu_cycles_per_elem: 1,
+            scu_drain_cycles: 16,
+            npm_flip_cycles: 8,
+            dram_latency_cycles: 100,
+        }
+    }
+}
+
+/// Top-level configuration bundle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PicnicConfig {
+    pub system: SystemConfig,
+    pub power: MacroPower,
+    pub area: MacroArea,
+    pub interconnect: InterconnectConfig,
+    pub ccpg: CcpgConfig,
+    pub timing: TimingConfig,
+}
+
+impl PicnicConfig {
+    pub fn with_ccpg(mut self, enabled: bool) -> Self {
+        self.ccpg.enabled = enabled;
+        self
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    /// Parse a (possibly partial) JSON config: absent fields keep their
+    /// defaults, so config files only need to name what they change.
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        use crate::util::Json;
+        let j = Json::parse(text)?;
+        let mut c = PicnicConfig::default();
+        let num = |o: &Json, k: &str, d: f64| o.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let int = |o: &Json, k: &str, d: usize| o.get(k).and_then(Json::as_usize).unwrap_or(d);
+        if let Some(s) = j.get("system") {
+            c.system.bit_width = int(s, "bit_width", c.system.bit_width as usize) as u32;
+            c.system.frequency_hz = num(s, "frequency_hz", c.system.frequency_hz);
+            c.system.ipcn_dim = int(s, "ipcn_dim", c.system.ipcn_dim);
+            c.system.scu_per_tile = int(s, "scu_per_tile", c.system.scu_per_tile);
+            c.system.pe_array_dim = int(s, "pe_array_dim", c.system.pe_array_dim);
+            c.system.dmac_per_router = int(s, "dmac_per_router", c.system.dmac_per_router);
+            c.system.scratchpad_bytes = int(s, "scratchpad_bytes", c.system.scratchpad_bytes);
+            c.system.fifo_bytes = int(s, "fifo_bytes", c.system.fifo_bytes);
+        }
+        if let Some(p) = j.get("power") {
+            c.power.pe_w = num(p, "pe_w", c.power.pe_w);
+            c.power.scratchpad_w = num(p, "scratchpad_w", c.power.scratchpad_w);
+            c.power.router_w = num(p, "router_w", c.power.router_w);
+            c.power.softmax_w = num(p, "softmax_w", c.power.softmax_w);
+            c.power.sleep_leak_frac = num(p, "sleep_leak_frac", c.power.sleep_leak_frac);
+        }
+        if let Some(i) = j.get("interconnect") {
+            c.interconnect.electrical_c2c_j_per_bit =
+                num(i, "electrical_c2c_j_per_bit", c.interconnect.electrical_c2c_j_per_bit);
+            c.interconnect.optical_c2c_j_per_bit =
+                num(i, "optical_c2c_j_per_bit", c.interconnect.optical_c2c_j_per_bit);
+            c.interconnect.dram_j_per_bit = num(i, "dram_j_per_bit", c.interconnect.dram_j_per_bit);
+            c.interconnect.laser_static_w_per_port =
+                num(i, "laser_static_w_per_port", c.interconnect.laser_static_w_per_port);
+            c.interconnect.optical_link_bps =
+                num(i, "optical_link_bps", c.interconnect.optical_link_bps);
+            c.interconnect.electrical_link_bps =
+                num(i, "electrical_link_bps", c.interconnect.electrical_link_bps);
+        }
+        if let Some(g) = j.get("ccpg") {
+            c.ccpg.enabled = g.get("enabled").and_then(Json::as_bool).unwrap_or(c.ccpg.enabled);
+            c.ccpg.tiles_per_cluster = int(g, "tiles_per_cluster", c.ccpg.tiles_per_cluster);
+            c.ccpg.wake_latency_cycles =
+                int(g, "wake_latency_cycles", c.ccpg.wake_latency_cycles as usize) as u64;
+        }
+        if let Some(t) = j.get("timing") {
+            c.timing.xbar_cycles = int(t, "xbar_cycles", c.timing.xbar_cycles as usize) as u64;
+            c.timing.hop_cycles = int(t, "hop_cycles", c.timing.hop_cycles as usize) as u64;
+            c.timing.words_per_cycle =
+                int(t, "words_per_cycle", c.timing.words_per_cycle as usize) as u64;
+            c.timing.scu_cycles_per_elem =
+                int(t, "scu_cycles_per_elem", c.timing.scu_cycles_per_elem as usize) as u64;
+            c.timing.scu_drain_cycles =
+                int(t, "scu_drain_cycles", c.timing.scu_drain_cycles as usize) as u64;
+            c.timing.npm_flip_cycles =
+                int(t, "npm_flip_cycles", c.timing.npm_flip_cycles as usize) as u64;
+            c.timing.dram_latency_cycles =
+                int(t, "dram_latency_cycles", c.timing.dram_latency_cycles as usize) as u64;
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}}\n}}\n",
+            self.system.bit_width,
+            self.system.frequency_hz,
+            self.system.ipcn_dim,
+            self.system.scu_per_tile,
+            self.system.pe_array_dim,
+            self.system.dmac_per_router,
+            self.system.scratchpad_bytes,
+            self.system.fifo_bytes,
+            self.power.pe_w,
+            self.power.scratchpad_w,
+            self.power.router_w,
+            self.power.softmax_w,
+            self.power.sleep_leak_frac,
+            self.interconnect.electrical_c2c_j_per_bit,
+            self.interconnect.optical_c2c_j_per_bit,
+            self.interconnect.dram_j_per_bit,
+            self.interconnect.laser_static_w_per_port,
+            self.interconnect.optical_link_bps,
+            self.interconnect.electrical_link_bps,
+            self.ccpg.enabled,
+            self.ccpg.tiles_per_cluster,
+            self.ccpg.wake_latency_cycles,
+            self.timing.xbar_cycles,
+            self.timing.hop_cycles,
+            self.timing.words_per_cycle,
+            self.timing.scu_cycles_per_elem,
+            self.timing.scu_drain_cycles,
+            self.timing.npm_flip_cycles,
+            self.timing.dram_latency_cycles,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values_pinned() {
+        let c = SystemConfig::default();
+        assert_eq!(c.bit_width, 64);
+        assert_eq!(c.frequency_hz, 1.0e9);
+        assert_eq!(c.ipcn_dim, 32);
+        assert_eq!(c.scu_per_tile, 1024);
+        assert_eq!(c.pe_array_dim, 256);
+        assert_eq!(c.dmac_per_router, 16);
+        assert_eq!(c.scratchpad_bytes, 32 * 1024);
+        assert_eq!(c.fifo_bytes, 256);
+        assert_eq!(c.io_ports, 7);
+        assert_eq!(c.tsv_dim, (32, 2));
+    }
+
+    #[test]
+    fn derived_capacities() {
+        let c = SystemConfig::default();
+        assert_eq!(c.routers_per_tile(), 1024);
+        assert_eq!(c.cells_per_pe(), 65536);
+        assert_eq!(c.weights_per_tile(), 67_108_864); // 64 Mi params/tile
+        assert_eq!(c.tile_dmac_per_cycle(), 16384);
+        assert_eq!(c.fifo_words(), 32);
+        assert_eq!(c.scratchpad_words(), 4096);
+    }
+
+    #[test]
+    fn table4_power_pinned() {
+        let p = MacroPower::default();
+        assert!((p.unit_pair_w() - 259e-6).abs() < 1e-12);
+        // breakdown percentages from Table IV
+        assert!((p.pe_w / p.unit_pair_w() - 0.463).abs() < 0.01);
+        assert!((p.scratchpad_w / p.unit_pair_w() - 0.162).abs() < 0.01);
+        assert!((p.router_w / p.unit_pair_w() - 0.375).abs() < 0.01);
+    }
+
+    #[test]
+    fn table4_area_pinned() {
+        let a = MacroArea::default();
+        assert!((a.unit_pair_mm2() - 0.1842).abs() < 1e-9);
+        assert!((a.pe_mm2 / a.unit_pair_mm2() - 0.783).abs() < 0.01);
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let c = PicnicConfig::default().with_ccpg(true);
+        let j = c.to_json();
+        let back = PicnicConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+        assert!(back.ccpg.enabled);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let back = PicnicConfig::from_json(r#"{"timing": {"xbar_cycles": 200}}"#).unwrap();
+        assert_eq!(back.timing.xbar_cycles, 200);
+        assert_eq!(back.system.ipcn_dim, 32, "untouched fields keep defaults");
+    }
+}

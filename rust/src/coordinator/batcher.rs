@@ -1,0 +1,236 @@
+//! Batch formation: FCFS admission with a decode-priority policy.
+//!
+//! Invariants (proptest-checked in rust/tests/test_coordinator_prop.rs):
+//! * no request is ever dropped or duplicated;
+//! * the batch never exceeds `max_batch`;
+//! * aggregate KV length in a batch never exceeds `kv_budget` tokens
+//!   (the distributed-scratchpad capacity of the K/V channel regions);
+//! * decode-phase requests are scheduled before new prefills.
+
+use super::request::{Request, RequestId, RequestState};
+use std::collections::VecDeque;
+
+/// Batching policy parameters.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    /// Total KV tokens admissible concurrently.
+    pub kv_budget: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            kv_budget: 16384,
+        }
+    }
+}
+
+/// The batcher: owns queued + in-flight requests.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+    inflight: Vec<Request>,
+    /// Requests completed and drained.
+    done: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher {
+            policy,
+            queue: VecDeque::new(),
+            inflight: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Enqueue a request; false = queue full (backpressure to the client).
+    pub fn submit(&mut self, r: Request) -> bool {
+        if self.queue.len() >= self.policy.max_batch * 16 {
+            return false;
+        }
+        self.queue.push_back(r);
+        true
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn inflight(&self) -> &[Request] {
+        &self.inflight
+    }
+
+    pub fn inflight_mut(&mut self) -> &mut [Request] {
+        &mut self.inflight
+    }
+
+    pub fn done(&self) -> &[Request] {
+        &self.done
+    }
+
+    /// KV tokens *reserved* by in-flight requests: worst-case growth
+    /// (prompt + max_new_tokens), not current occupancy — admission must
+    /// reserve the ceiling or decode growth overflows the scratchpads
+    /// later (found by prop_budgets_never_exceeded).
+    fn inflight_kv_reserved(&self) -> usize {
+        self.inflight
+            .iter()
+            .map(|r| r.prompt_len + r.max_new_tokens)
+            .sum()
+    }
+
+    /// Admit queued requests while batch and KV budgets allow.
+    /// Returns ids admitted this call.
+    pub fn admit(&mut self) -> Vec<RequestId> {
+        let mut admitted = Vec::new();
+        while self.inflight.len() < self.policy.max_batch {
+            let Some(front) = self.queue.front() else { break };
+            let kv_needed = front.prompt_len + front.max_new_tokens;
+            if !self.inflight.is_empty()
+                && self.inflight_kv_reserved() + kv_needed > self.policy.kv_budget
+            {
+                break; // head-of-line blocks: keeps FCFS fairness
+            }
+            let mut r = self.queue.pop_front().unwrap();
+            r.state = RequestState::Prefilling;
+            admitted.push(r.id);
+            self.inflight.push(r);
+        }
+        admitted
+    }
+
+    /// The next work item under decode-priority: all decoding requests
+    /// step together (one fused decode batch); otherwise the oldest
+    /// prefilling request runs.
+    pub fn next_work(&mut self) -> Work<'_> {
+        let any_decoding = self
+            .inflight
+            .iter()
+            .any(|r| r.state == RequestState::Decoding);
+        if any_decoding {
+            let batch: Vec<&mut Request> = self
+                .inflight
+                .iter_mut()
+                .filter(|r| r.state == RequestState::Decoding)
+                .collect();
+            return Work::DecodeBatch(batch);
+        }
+        if let Some(r) = self
+            .inflight
+            .iter_mut()
+            .filter(|r| r.state == RequestState::Prefilling)
+            .min_by_key(|r| r.arrived_cycle)
+        {
+            return Work::Prefill(r);
+        }
+        Work::Idle
+    }
+
+    /// Remove finished requests from the in-flight set.
+    pub fn reap(&mut self) -> usize {
+        let before = self.inflight.len();
+        let (done, still): (Vec<Request>, Vec<Request>) = self
+            .inflight
+            .drain(..)
+            .partition(|r| r.state == RequestState::Done);
+        self.done.extend(done);
+        self.inflight = still;
+        before - self.inflight.len()
+    }
+}
+
+/// What the server should execute next.
+pub enum Work<'a> {
+    Prefill(&'a mut Request),
+    DecodeBatch(Vec<&'a mut Request>),
+    Idle,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, new: usize) -> Request {
+        Request::new(id, prompt, new, 0)
+    }
+
+    #[test]
+    fn admit_respects_batch_limit() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            kv_budget: 1_000_000,
+        });
+        for i in 0..5 {
+            assert!(b.submit(req(i, 16, 4)));
+        }
+        let admitted = b.admit();
+        assert_eq!(admitted, vec![0, 1]);
+        assert_eq!(b.queued(), 3);
+    }
+
+    #[test]
+    fn admit_respects_kv_budget() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            kv_budget: 100,
+        });
+        b.submit(req(0, 50, 10)); // needs 60
+        b.submit(req(1, 50, 10)); // would exceed 100
+        let admitted = b.admit();
+        assert_eq!(admitted, vec![0]);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn decode_priority_over_prefill() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.submit(req(0, 16, 4));
+        b.submit(req(1, 16, 4));
+        b.admit();
+        // request 0 finished prefill and is decoding
+        b.inflight[0].state = RequestState::Decoding;
+        match b.next_work() {
+            Work::DecodeBatch(batch) => {
+                assert_eq!(batch.len(), 1);
+                assert_eq!(batch[0].id, 0);
+            }
+            _ => panic!("decode must preempt prefill"),
+        }
+    }
+
+    #[test]
+    fn prefill_when_no_decoders() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.submit(req(7, 16, 4));
+        b.admit();
+        match b.next_work() {
+            Work::Prefill(r) => assert_eq!(r.id, 7),
+            _ => panic!("expected prefill"),
+        }
+    }
+
+    #[test]
+    fn reap_moves_done_requests() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.submit(req(0, 16, 1));
+        b.admit();
+        b.inflight[0].state = RequestState::Done;
+        assert_eq!(b.reap(), 1);
+        assert_eq!(b.inflight().len(), 0);
+        assert_eq!(b.done().len(), 1);
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(matches!(b.next_work(), Work::Idle));
+    }
+}

@@ -1,0 +1,97 @@
+//! Serving metrics: per-request latency components and run aggregates.
+
+use super::request::Request;
+
+/// Per-request latency metrics (all in seconds).
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub queue_s: f64,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub tokens: usize,
+}
+
+/// Run-level aggregates.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: Vec<RequestMetrics>,
+    pub total_tokens: u64,
+    pub wall_s: f64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, r: &Request, prefill_started_cycle: u64, freq_hz: f64) {
+        let s = |c: u64| c as f64 / freq_hz;
+        let done = r.done_cycle.expect("recorded after completion");
+        self.requests.push(RequestMetrics {
+            id: r.id,
+            queue_s: s(prefill_started_cycle.saturating_sub(r.arrived_cycle)),
+            ttft_s: s(r.first_token_cycle.unwrap_or(done).saturating_sub(r.arrived_cycle)),
+            total_s: s(done.saturating_sub(r.arrived_cycle)),
+            tokens: r.generated,
+        });
+        self.total_tokens += r.generated as u64;
+    }
+
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / self.wall_s
+        }
+    }
+
+    pub fn mean_ttft_s(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.ttft_s).sum::<f64>() / self.requests.len() as f64
+    }
+
+    pub fn p99_total_s(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = self.requests.iter().map(|r| r.total_s).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[((v.len() as f64 * 0.99).ceil() as usize - 1).min(v.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestState;
+
+    fn done_request(id: u64, arrived: u64, first: u64, done: u64, gen: usize) -> Request {
+        let mut r = Request::new(id, 8, gen, arrived);
+        r.state = RequestState::Done;
+        r.generated = gen;
+        r.first_token_cycle = Some(first);
+        r.done_cycle = Some(done);
+        r
+    }
+
+    #[test]
+    fn metrics_computed_in_seconds() {
+        let mut m = Metrics::default();
+        let r = done_request(1, 1_000_000, 3_000_000, 10_000_000, 16);
+        m.record(&r, 2_000_000, 1e9);
+        m.wall_s = 0.01;
+        let rm = &m.requests[0];
+        assert!((rm.queue_s - 1e-3).abs() < 1e-12);
+        assert!((rm.ttft_s - 2e-3).abs() < 1e-12);
+        assert!((rm.total_s - 9e-3).abs() < 1e-12);
+        assert_eq!(m.total_tokens, 16);
+        assert!((m.throughput_tokens_per_s() - 1600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p99_of_single_request() {
+        let mut m = Metrics::default();
+        m.record(&done_request(1, 0, 10, 100, 4), 0, 1e9);
+        assert!(m.p99_total_s() > 0.0);
+        assert!((m.mean_ttft_s() - 1e-8).abs() < 1e-15);
+    }
+}

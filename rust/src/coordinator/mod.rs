@@ -1,0 +1,19 @@
+//! The serving coordinator: the L3 front-end that accepts inference
+//! requests, batches them, schedules prefill/decode phases onto the
+//! simulated PICNIC fabric, and reports latency/throughput metrics.
+//!
+//! The paper's contribution is the accelerator itself, so this layer is a
+//! realistic-but-thin serving loop (vLLM-router-like): a bounded request
+//! queue with backpressure, FCFS batching with a decode-priority policy
+//! (decode steps of in-flight sequences preempt new prefills to protect
+//! inter-token latency), and per-request metrics.
+
+mod batcher;
+mod metrics;
+mod request;
+mod server;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use metrics::{Metrics, RequestMetrics};
+pub use request::{Request, RequestId, RequestState};
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,91 @@
+//! Inference request lifecycle.
+
+
+pub type RequestId = u64;
+
+/// Request state machine: Queued → Prefilling → Decoding → Done.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Done,
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub state: RequestState,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Cycle the request arrived.
+    pub arrived_cycle: u64,
+    /// Cycle the first output token completed (TTFT marker).
+    pub first_token_cycle: Option<u64>,
+    /// Cycle the request finished.
+    pub done_cycle: Option<u64>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt_len: usize, max_new_tokens: usize, now: u64) -> Request {
+        assert!(prompt_len > 0 && max_new_tokens > 0);
+        Request {
+            id,
+            prompt_len,
+            max_new_tokens,
+            state: RequestState::Queued,
+            generated: 0,
+            arrived_cycle: now,
+            first_token_cycle: None,
+            done_cycle: None,
+        }
+    }
+
+    /// Current KV length (prompt + generated).
+    pub fn kv_len(&self) -> usize {
+        self.prompt_len + self.generated
+    }
+
+    /// Advance one decode token at `now`; returns true when finished.
+    pub fn advance_decode(&mut self, now: u64) -> bool {
+        assert_eq!(self.state, RequestState::Decoding);
+        self.generated += 1;
+        if self.first_token_cycle.is_none() {
+            self.first_token_cycle = Some(now);
+        }
+        if self.generated >= self.max_new_tokens {
+            self.state = RequestState::Done;
+            self.done_cycle = Some(now);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut r = Request::new(1, 16, 2, 100);
+        assert_eq!(r.state, RequestState::Queued);
+        r.state = RequestState::Decoding;
+        assert!(!r.advance_decode(200));
+        assert_eq!(r.first_token_cycle, Some(200));
+        assert!(r.advance_decode(300));
+        assert_eq!(r.state, RequestState::Done);
+        assert_eq!(r.done_cycle, Some(300));
+        assert_eq!(r.kv_len(), 18);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_prompt_rejected() {
+        Request::new(1, 0, 1, 0);
+    }
+}

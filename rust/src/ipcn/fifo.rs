@@ -1,0 +1,175 @@
+//! Per-port FIFO buffers (paper §II-B.4(i): "Each port is integrated with
+//! First-In, First-Out buffer (FIFO) for temporary data storage").
+//!
+//! Table I: 256 B per FIFO = 32 × 64-bit words. The FIFO tracks occupancy
+//! statistics so the mesh simulator can report congestion and so power
+//! accounting can charge per push/pop.
+
+use super::Word;
+use std::collections::VecDeque;
+
+/// A bounded FIFO of 64-bit words with occupancy accounting.
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    buf: VecDeque<Word>,
+    capacity: usize,
+    // -- statistics --------------------------------------------------------
+    pushes: u64,
+    pops: u64,
+    /// Cycles × occupancy accumulator (for mean-occupancy reporting).
+    occupancy_acc: u64,
+    sampled_cycles: u64,
+    peak: usize,
+    /// Push attempts rejected because the FIFO was full (backpressure).
+    rejects: u64,
+}
+
+impl Fifo {
+    pub fn new(capacity: usize) -> Fifo {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Fifo {
+            buf: VecDeque::with_capacity(capacity),
+            capacity,
+            pushes: 0,
+            pops: 0,
+            occupancy_acc: 0,
+            sampled_cycles: 0,
+            peak: 0,
+            rejects: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() >= self.capacity
+    }
+
+    /// Try to enqueue; `false` means backpressure (caller must retry next
+    /// cycle — the mesh's two-phase update relies on this being visible).
+    pub fn push(&mut self, w: Word) -> bool {
+        if self.is_full() {
+            self.rejects += 1;
+            return false;
+        }
+        self.buf.push_back(w);
+        self.pushes += 1;
+        self.peak = self.peak.max(self.buf.len());
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<Word> {
+        let w = self.buf.pop_front();
+        if w.is_some() {
+            self.pops += 1;
+        }
+        w
+    }
+
+    pub fn peek(&self) -> Option<Word> {
+        self.buf.front().copied()
+    }
+
+    /// Called once per simulated cycle by the router to accumulate
+    /// occupancy statistics.
+    pub fn sample(&mut self) {
+        self.occupancy_acc += self.buf.len() as u64;
+        self.sampled_cycles += 1;
+    }
+
+    pub fn pushes(&self) -> u64 {
+        self.pushes
+    }
+
+    pub fn pops(&self) -> u64 {
+        self.pops
+    }
+
+    pub fn rejects(&self) -> u64 {
+        self.rejects
+    }
+
+    pub fn peak_occupancy(&self) -> usize {
+        self.peak
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.sampled_cycles == 0 {
+            0.0
+        } else {
+            self.occupancy_acc as f64 / self.sampled_cycles as f64
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            assert!(f.push(i as Word));
+        }
+        for i in 0..4 {
+            assert_eq!(f.pop(), Some(i as Word));
+        }
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_on_full() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1.0));
+        assert!(f.push(2.0));
+        assert!(!f.push(3.0), "third push must be rejected");
+        assert_eq!(f.rejects(), 1);
+        assert_eq!(f.len(), 2);
+        f.pop();
+        assert!(f.push(3.0), "push succeeds after a pop");
+    }
+
+    #[test]
+    fn stats_accounting() {
+        let mut f = Fifo::new(8);
+        f.push(1.0);
+        f.push(2.0);
+        f.sample(); // occ 2
+        f.pop();
+        f.sample(); // occ 1
+        assert_eq!(f.pushes(), 2);
+        assert_eq!(f.pops(), 1);
+        assert_eq!(f.peak_occupancy(), 2);
+        assert!((f.mean_occupancy() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut f = Fifo::new(2);
+        f.push(7.0);
+        assert_eq!(f.peek(), Some(7.0));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.pop(), Some(7.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn zero_capacity_panics() {
+        let _ = Fifo::new(0);
+    }
+}

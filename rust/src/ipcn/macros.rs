@@ -1,0 +1,137 @@
+//! The unit router's computational macros (paper §II-B.4(iii)): "digital
+//! in-network computing on data stored in the router, optimized for AI
+//! workload. The macros include partial summation, linear activation and
+//! DMAC."
+//!
+//! Table I gives 16 non-weighted MAC units per router; the DMAC macro
+//! therefore retires up to 16 multiply-accumulates per cycle.
+
+use super::Word;
+
+/// Partial summation: reduce the inputs read this cycle into one word.
+/// Used by the output-reduction stage of partitioned SMAC (paper §III.1:
+/// "partial output reduction along the embedding dimensions").
+pub fn partial_sum(inputs: &[Word]) -> Word {
+    inputs.iter().sum()
+}
+
+/// Linear activation: y = a·x + b. The (a, b) pair is fetched from the
+/// scratchpad line addressed by the instruction's SP_addr. This implements
+/// per-segment PWL activations in-network (the SCU on the top die handles
+/// full softmax; simple linear/ReLU-ish pieces run here).
+pub fn linear_act(x: Word, a: Word, b: Word) -> Word {
+    a * x + b
+}
+
+/// The DMAC unit bank: 16 multiply-accumulate lanes over *dynamic* data
+/// (both operands are runtime values, unlike the PE's static-weight SMAC).
+/// Runs QKᵀ and S·V in the attention layers.
+#[derive(Debug, Clone)]
+pub struct DmacBank {
+    lanes: usize,
+    acc: Vec<Word>,
+    /// MAC operations retired (for power accounting).
+    macs_retired: u64,
+    /// Cycles the bank was busy (≥1 lane active).
+    busy_cycles: u64,
+}
+
+impl DmacBank {
+    pub fn new(lanes: usize) -> DmacBank {
+        assert!(lanes > 0);
+        DmacBank {
+            lanes,
+            acc: vec![0.0; lanes],
+            macs_retired: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Issue up to `lanes` MAC pairs this cycle; returns how many were
+    /// accepted (the rest must be re-issued next cycle — the scheduler's
+    /// inner-loop unroll factor is chosen to keep this saturated).
+    pub fn issue(&mut self, pairs: &[(Word, Word)]) -> usize {
+        let n = pairs.len().min(self.lanes);
+        for (lane, (x, y)) in pairs[..n].iter().enumerate() {
+            self.acc[lane] += x * y;
+        }
+        if n > 0 {
+            self.macs_retired += n as u64;
+            self.busy_cycles += 1;
+        }
+        n
+    }
+
+    /// Lane-accumulator tree-sum, drained and cleared (DmacDrain mode).
+    pub fn drain(&mut self) -> Word {
+        let s = self.acc.iter().sum();
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        s
+    }
+
+    pub fn macs_retired(&self) -> u64 {
+        self.macs_retired
+    }
+
+    pub fn busy_cycles(&self) -> u64 {
+        self.busy_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_sum_reduces() {
+        assert_eq!(partial_sum(&[1.0, 2.0, 3.5]), 6.5);
+        assert_eq!(partial_sum(&[]), 0.0);
+    }
+
+    #[test]
+    fn linear_act_affine() {
+        assert_eq!(linear_act(2.0, 3.0, 1.0), 7.0);
+        // identity segment
+        assert_eq!(linear_act(5.0, 1.0, 0.0), 5.0);
+    }
+
+    #[test]
+    fn dmac_dot_product() {
+        let mut d = DmacBank::new(16);
+        // dot([1..4], [1..4]) = 30, issued in one cycle across 4 lanes
+        let pairs: Vec<(Word, Word)> = (1..=4).map(|i| (i as f64, i as f64)).collect();
+        assert_eq!(d.issue(&pairs), 4);
+        assert_eq!(d.drain(), 30.0);
+        assert_eq!(d.macs_retired(), 4);
+        assert_eq!(d.busy_cycles(), 1);
+    }
+
+    #[test]
+    fn dmac_saturates_at_lane_count() {
+        let mut d = DmacBank::new(2);
+        let pairs = vec![(1.0, 1.0); 5];
+        assert_eq!(d.issue(&pairs), 2, "only `lanes` pairs accepted");
+        assert_eq!(d.drain(), 2.0);
+    }
+
+    #[test]
+    fn dmac_accumulates_across_cycles() {
+        let mut d = DmacBank::new(4);
+        d.issue(&[(2.0, 3.0)]);
+        d.issue(&[(4.0, 5.0)]);
+        assert_eq!(d.drain(), 26.0);
+        assert_eq!(d.drain(), 0.0, "drain clears");
+        assert_eq!(d.busy_cycles(), 2);
+    }
+
+    #[test]
+    fn idle_issue_counts_nothing() {
+        let mut d = DmacBank::new(4);
+        assert_eq!(d.issue(&[]), 0);
+        assert_eq!(d.busy_cycles(), 0);
+    }
+}

@@ -1,0 +1,294 @@
+//! The IPCN 2D mesh (paper §II-B, Fig 3(d)): `dim × dim` router-PE pairs.
+//!
+//! Cycle stepping is two-phase to keep the simulation deterministic and
+//! borrow-checker friendly:
+//!   phase 1 — every router executes its NMC-issued instruction against its
+//!             *current* input FIFOs, producing output intents;
+//!   phase 2 — intents are delivered: planar ports into the neighbour's
+//!             opposite FIFO (with backpressure), the PE port into the
+//!             router's PE outbox, Up into the SCU outbox (top die), Down
+//!             into the optical outbox (bottom die / C2C).
+//!
+//! The sim engine (sim::engine) drains the outboxes into the PE / SCU /
+//! photonic models and injects their responses back via `inject_pe` etc.
+
+use super::router::{OutputIntent, Router};
+use super::Word;
+use crate::config::SystemConfig;
+use crate::isa::{Instruction, Port};
+
+/// Words that crossed a die or chip boundary this cycle, tagged by router.
+#[derive(Debug, Default, Clone)]
+pub struct BoundaryTraffic {
+    /// Router index → words sent to its PE (AXI stream).
+    pub to_pe: Vec<(usize, Word)>,
+    /// Router index → words sent up to the activation die (SCU).
+    pub to_scu: Vec<(usize, Word)>,
+    /// Router index → words sent down to the optical engine (C2C).
+    pub to_optical: Vec<(usize, Word)>,
+}
+
+/// Aggregate mesh statistics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MeshStats {
+    pub cycles: u64,
+    pub words_delivered: u64,
+    pub deliveries_blocked: u64,
+    pub active_router_cycles: u64,
+}
+
+/// The 2D mesh.
+pub struct Mesh {
+    dim: usize,
+    routers: Vec<Router>,
+    pub stats: MeshStats,
+}
+
+impl Mesh {
+    pub fn new(cfg: &SystemConfig) -> Mesh {
+        let n = cfg.ipcn_dim * cfg.ipcn_dim;
+        Mesh {
+            dim: cfg.ipcn_dim,
+            routers: (0..n)
+                .map(|_| {
+                    Router::new(
+                        cfg.fifo_words(),
+                        cfg.scratchpad_words(),
+                        cfg.dmac_per_router,
+                    )
+                })
+                .collect(),
+            stats: MeshStats::default(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_routers(&self) -> usize {
+        self.routers.len()
+    }
+
+    pub fn router(&self, idx: usize) -> &Router {
+        &self.routers[idx]
+    }
+
+    pub fn router_mut(&mut self, idx: usize) -> &mut Router {
+        &mut self.routers[idx]
+    }
+
+    pub fn idx(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.dim && col < self.dim);
+        row * self.dim + col
+    }
+
+    pub fn coords(&self, idx: usize) -> (usize, usize) {
+        (idx / self.dim, idx % self.dim)
+    }
+
+    /// Neighbour of `idx` through planar port `p` (None at the mesh edge).
+    pub fn neighbour(&self, idx: usize, p: Port) -> Option<usize> {
+        let (r, c) = self.coords(idx);
+        match p {
+            Port::North if r > 0 => Some(self.idx(r - 1, c)),
+            Port::South if r + 1 < self.dim => Some(self.idx(r + 1, c)),
+            Port::West if c > 0 => Some(self.idx(r, c - 1)),
+            Port::East if c + 1 < self.dim => Some(self.idx(r, c + 1)),
+            _ => None,
+        }
+    }
+
+    /// Manhattan distance between two routers (hop count on the mesh).
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ar, ac) = self.coords(a);
+        let (br, bc) = self.coords(b);
+        ar.abs_diff(br) + ac.abs_diff(bc)
+    }
+
+    /// Inject a word into a router's input FIFO from outside the mesh
+    /// (PE response, SCU result, optical ingress, DRAM hub, tests).
+    pub fn inject(&mut self, idx: usize, port: Port, w: Word) -> bool {
+        self.routers[idx].inject(port, w)
+    }
+
+    /// Step one cycle with the per-router instruction slice from the NMC.
+    /// Returns the boundary traffic produced this cycle.
+    pub fn step(&mut self, instrs: &[Instruction]) -> BoundaryTraffic {
+        assert_eq!(instrs.len(), self.routers.len(), "instruction slice width");
+        // Phase 1: compute.
+        let mut all_intents: Vec<Vec<OutputIntent>> = Vec::with_capacity(self.routers.len());
+        for (i, r) in self.routers.iter_mut().enumerate() {
+            if r.compute(instrs[i]) {
+                self.stats.active_router_cycles += 1;
+            }
+            all_intents.push(r.take_intents());
+        }
+        // Phase 2: deliver.
+        let mut boundary = BoundaryTraffic::default();
+        for (src, intents) in all_intents.into_iter().enumerate() {
+            for intent in intents {
+                for p in intent.ports.iter() {
+                    match p {
+                        Port::North | Port::South | Port::East | Port::West => {
+                            match self.neighbour(src, p) {
+                                Some(dst) => {
+                                    let in_port =
+                                        p.opposite().expect("planar port has opposite");
+                                    if self.routers[dst].inject(in_port, intent.word) {
+                                        self.stats.words_delivered += 1;
+                                    } else {
+                                        self.stats.deliveries_blocked += 1;
+                                    }
+                                }
+                                // Mesh edge: the word leaves the tile — route
+                                // to the optical engine (C2C egress).
+                                None => boundary.to_optical.push((src, intent.word)),
+                            }
+                        }
+                        Port::Pe => boundary.to_pe.push((src, intent.word)),
+                        Port::Up => boundary.to_scu.push((src, intent.word)),
+                        Port::Down => boundary.to_optical.push((src, intent.word)),
+                    }
+                }
+            }
+        }
+        self.stats.cycles += 1;
+        boundary
+    }
+
+    /// Sum of router-level statistics, for power accounting.
+    pub fn total_router_stats(&self) -> crate::ipcn::router::RouterStats {
+        let mut acc = crate::ipcn::router::RouterStats::default();
+        for r in &self.routers {
+            acc.active_cycles += r.stats.active_cycles;
+            acc.idle_cycles += r.stats.idle_cycles;
+            acc.words_routed += r.stats.words_routed;
+            acc.broadcasts += r.stats.broadcasts;
+            acc.psum_ops += r.stats.psum_ops;
+            acc.linact_ops += r.stats.linact_ops;
+            acc.sp_reads += r.stats.sp_reads;
+            acc.sp_writes += r.stats.sp_writes;
+            acc.pe_triggers += r.stats.pe_triggers;
+            acc.stalls += r.stats.stalls;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Mode, PortSet};
+
+    fn mesh4() -> Mesh {
+        Mesh::new(&SystemConfig::tiny(4))
+    }
+
+    fn route(from: Port, to: Port) -> Instruction {
+        Instruction::new(PortSet::single(from), Mode::Route, PortSet::single(to))
+    }
+
+    fn idle_slice(n: usize) -> Vec<Instruction> {
+        vec![Instruction::IDLE; n]
+    }
+
+    #[test]
+    fn word_crosses_mesh_west_to_east() {
+        let mut m = mesh4();
+        // Inject at router (0,0) West FIFO; program row 0 to pipe east.
+        m.inject(0, Port::West, 42.0);
+        let mut slice = idle_slice(16);
+        for c in 0..4 {
+            slice[c] = route(Port::West, Port::East);
+        }
+        // 4 cycles to traverse 4 routers; the last hop exits the tile east.
+        let mut exited = Vec::new();
+        for _ in 0..4 {
+            let b = m.step(&slice);
+            exited.extend(b.to_optical);
+        }
+        assert_eq!(exited, vec![(3usize, 42.0)], "word egressed at (0,3)");
+        assert_eq!(m.stats.words_delivered, 3, "three in-mesh hops");
+    }
+
+    #[test]
+    fn neighbour_topology() {
+        let m = mesh4();
+        assert_eq!(m.neighbour(m.idx(1, 1), Port::North), Some(m.idx(0, 1)));
+        assert_eq!(m.neighbour(m.idx(1, 1), Port::South), Some(m.idx(2, 1)));
+        assert_eq!(m.neighbour(m.idx(1, 1), Port::West), Some(m.idx(1, 0)));
+        assert_eq!(m.neighbour(m.idx(1, 1), Port::East), Some(m.idx(1, 2)));
+        assert_eq!(m.neighbour(m.idx(0, 0), Port::North), None);
+        assert_eq!(m.neighbour(m.idx(3, 3), Port::East), None);
+    }
+
+    #[test]
+    fn hops_manhattan() {
+        let m = mesh4();
+        assert_eq!(m.hops(m.idx(0, 0), m.idx(3, 3)), 6);
+        assert_eq!(m.hops(m.idx(2, 1), m.idx(2, 1)), 0);
+    }
+
+    #[test]
+    fn broadcast_fans_out_to_neighbours_and_boundaries() {
+        let mut m = mesh4();
+        let centre = m.idx(1, 1);
+        m.inject(centre, Port::Pe, 7.0);
+        let mut slice = idle_slice(16);
+        slice[centre] = Instruction::new(PortSet::single(Port::Pe), Mode::Route, PortSet::ALL);
+        let b = m.step(&slice);
+        // 4 planar neighbours received the word…
+        assert_eq!(m.stats.words_delivered, 4);
+        // …plus PE, SCU (up), optical (down) boundary crossings.
+        assert_eq!(b.to_pe.len(), 1);
+        assert_eq!(b.to_scu.len(), 1);
+        assert_eq!(b.to_optical.len(), 1);
+        for p in [Port::South, Port::North, Port::East, Port::West] {
+            let n = m.neighbour(centre, p).unwrap();
+            let in_port = p.opposite().unwrap();
+            assert_eq!(m.router(n).fifo(in_port).len(), 1, "neighbour via {p}");
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_delivery() {
+        let mut m = mesh4();
+        // Fill (0,1)'s West FIFO completely.
+        let dst = m.idx(0, 1);
+        let cap = m.router(dst).fifo(Port::West).capacity();
+        for i in 0..cap {
+            assert!(m.inject(dst, Port::West, i as f64));
+        }
+        // (0,0) tries to send east.
+        m.inject(0, Port::West, 99.0);
+        let mut slice = idle_slice(16);
+        slice[0] = route(Port::West, Port::East);
+        m.step(&slice);
+        assert_eq!(m.stats.deliveries_blocked, 1);
+        assert_eq!(m.stats.words_delivered, 0);
+    }
+
+    #[test]
+    fn pe_trigger_reaches_pe_outbox() {
+        let mut m = mesh4();
+        m.inject(5, Port::West, 1.5);
+        let mut slice = idle_slice(16);
+        slice[5] = Instruction::new(PortSet::single(Port::West), Mode::PeTrigger, PortSet::EMPTY);
+        let b = m.step(&slice);
+        assert_eq!(b.to_pe, vec![(5, 1.5)]);
+    }
+
+    #[test]
+    fn aggregated_stats_roll_up() {
+        let mut m = mesh4();
+        m.inject(0, Port::West, 1.0);
+        let mut slice = idle_slice(16);
+        slice[0] = route(Port::West, Port::East);
+        m.step(&slice);
+        let s = m.total_router_stats();
+        assert_eq!(s.words_routed, 1);
+        assert_eq!(s.active_cycles, 1);
+        assert_eq!(s.idle_cycles, 15, "other routers idled");
+    }
+}

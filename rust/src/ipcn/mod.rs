@@ -1,0 +1,34 @@
+//! The Inter-PE Computational Network (paper §II-B): a 2D mesh of unit
+//! routers, each paired with an RRAM-CIM PE, that both *routes* data and
+//! *computes* on it (partial summation, linear activation, DMAC), driven by
+//! a Network Main Controller reading a double-buffered Network Program
+//! Memory.
+//!
+//! Module map (one file per paper sub-section):
+//! * [`fifo`]       — per-port FIFOs (Fig 3(e) data I/O ports)
+//! * [`scratchpad`] — per-pair 32 KB scratchpad (KV cache home)
+//! * [`macros`]     — the router's computational macros (§II-B.4(iii))
+//! * [`router`]     — the unit router FSM (§II-B.4)
+//! * [`npm`]        — Network Program Memory, B1/B2 + CSR (§II-B.1/.2)
+//! * [`nmc`]        — Network Main Controller (§II-B.3)
+//! * [`mesh`]       — the 2D mesh: wiring, two-phase cycle stepping
+
+pub mod fifo;
+pub mod macros;
+pub mod mesh;
+pub mod nmc;
+pub mod npm;
+pub mod router;
+pub mod scratchpad;
+
+pub use fifo::Fifo;
+pub use mesh::{Mesh, MeshStats};
+pub use nmc::Nmc;
+pub use npm::{Bank, Npm};
+pub use router::{Router, RouterStats};
+pub use scratchpad::Scratchpad;
+
+/// A 64-bit data word moving through the network. The payload is an f64
+/// bit-pattern (the paper's 64-bit data path carries fixed/float values;
+/// we use f64 so the functional simulation is exact against the oracle).
+pub type Word = f64;

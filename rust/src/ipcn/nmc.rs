@@ -1,0 +1,170 @@
+//! Network Main Controller (paper §II-B.3): reads and decodes NPM rows to
+//! drive every router in the mesh. Sub-modules per the paper:
+//! (i) instruction decoder — splits a row into routing command, command
+//! selection, repeat count; (ii) command crossbar — a 3-input-N-output
+//! crossbar fanning {CMD1, CMD2, IDLE} out to each router by its selection
+//! signal; (iii) command repeat counter.
+
+use super::npm::Npm;
+use crate::isa::{Instruction, ProgramRow};
+
+/// The NMC's per-cycle output: one instruction per router.
+#[derive(Debug, Clone)]
+pub struct IssueSlice {
+    pub instrs: Vec<Instruction>,
+    /// Label of the originating program row (for traces).
+    pub label: String,
+}
+
+/// Execution state of the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NmcState {
+    /// Fetching the next row from the NPM.
+    Fetch,
+    /// Re-issuing the current row (repeat counter > 0).
+    Repeat,
+    /// Active bank exhausted; waiting for a flip.
+    Drained,
+}
+
+/// The Network Main Controller.
+#[derive(Debug)]
+pub struct Nmc {
+    n_routers: usize,
+    current: Option<ProgramRow>,
+    /// Command repeat counter (decrements per issued cycle).
+    repeat_left: u32,
+    pub state: NmcState,
+    pub cycles_issued: u64,
+}
+
+impl Nmc {
+    pub fn new(n_routers: usize) -> Nmc {
+        Nmc {
+            n_routers,
+            current: None,
+            repeat_left: 0,
+            state: NmcState::Fetch,
+            cycles_issued: 0,
+        }
+    }
+
+    /// Advance one cycle: fetch/decode from the NPM as needed and produce
+    /// the per-router instruction slice via the command crossbar. Returns
+    /// `None` when the NPM is drained (caller decides whether to flip).
+    pub fn issue(&mut self, npm: &mut Npm) -> Option<IssueSlice> {
+        if self.repeat_left == 0 {
+            match npm.next_row() {
+                Some(row) => {
+                    self.repeat_left = row.repeat.max(1);
+                    self.current = Some(row.clone());
+                    self.state = NmcState::Fetch;
+                }
+                None => {
+                    self.current = None;
+                    self.state = NmcState::Drained;
+                    return None;
+                }
+            }
+        } else {
+            self.state = NmcState::Repeat;
+        }
+
+        let row = self.current.as_ref().expect("row present when issuing");
+        // Command crossbar: 3 inputs (CMD1, CMD2, IDLE) × N outputs.
+        let instrs: Vec<Instruction> = (0..self.n_routers)
+            .map(|r| row.instruction_for(r))
+            .collect();
+        self.repeat_left -= 1;
+        self.cycles_issued += 1;
+        Some(IssueSlice {
+            instrs,
+            label: row.label.clone(),
+        })
+    }
+
+    /// True when the current row still has repeats pending.
+    pub fn mid_row(&self) -> bool {
+        self.repeat_left > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Mode, Port, PortSet, Program, ProgramRow};
+
+    fn one_row_program(repeat: u32) -> Program {
+        let mut p = Program::new(4);
+        let instr = Instruction::new(
+            PortSet::single(Port::West),
+            Mode::Route,
+            PortSet::single(Port::East),
+        );
+        p.push(ProgramRow::uniform(instr, 4, repeat).with_label("row0"));
+        p
+    }
+
+    #[test]
+    fn issues_row_repeat_times() {
+        let mut npm = Npm::new();
+        npm.bootstrap(&one_row_program(3));
+        let mut nmc = Nmc::new(4);
+        for i in 0..3 {
+            let slice = nmc.issue(&mut npm).unwrap_or_else(|| panic!("cycle {i}"));
+            assert_eq!(slice.instrs.len(), 4);
+            assert_eq!(slice.label, "row0");
+        }
+        assert!(nmc.issue(&mut npm).is_none(), "drained after 3 issues");
+        assert_eq!(nmc.state, NmcState::Drained);
+        assert_eq!(nmc.cycles_issued, 3);
+    }
+
+    #[test]
+    fn repeat_zero_treated_as_one() {
+        let mut npm = Npm::new();
+        npm.bootstrap(&one_row_program(0));
+        let mut nmc = Nmc::new(4);
+        assert!(nmc.issue(&mut npm).is_some());
+        assert!(nmc.issue(&mut npm).is_none());
+    }
+
+    #[test]
+    fn crossbar_fans_out_selection() {
+        let mut p = Program::new(3);
+        let c1 = Instruction::new(
+            PortSet::single(Port::West),
+            Mode::Route,
+            PortSet::single(Port::East),
+        );
+        let c2 = Instruction::new(PortSet::single(Port::North), Mode::Dmac, PortSet::EMPTY);
+        let mut row = ProgramRow::uniform(c1, 3, 1);
+        row.cmd2 = c2;
+        row.router_cfg[1].sel = crate::isa::CommandSel::Cmd2;
+        row.router_cfg[2].sel = crate::isa::CommandSel::Idle;
+        p.push(row);
+        let mut npm = Npm::new();
+        npm.bootstrap(&p);
+        let mut nmc = Nmc::new(3);
+        let slice = nmc.issue(&mut npm).unwrap();
+        assert_eq!(slice.instrs[0].mode, Mode::Route);
+        assert_eq!(slice.instrs[1].mode, Mode::Dmac);
+        assert_eq!(slice.instrs[2].mode, Mode::Idle);
+    }
+
+    #[test]
+    fn resumes_after_bank_flip() {
+        let mut npm = Npm::new();
+        npm.bootstrap(&one_row_program(1));
+        let mut nmc = Nmc::new(4);
+        assert!(nmc.issue(&mut npm).is_some());
+        assert!(nmc.issue(&mut npm).is_none());
+        // co-processor refills and flips
+        npm.configure_inactive(one_row_program(2).rows);
+        assert!(npm.flip());
+        assert!(nmc.issue(&mut npm).is_some());
+        assert!(nmc.mid_row());
+        assert!(nmc.issue(&mut npm).is_some());
+        assert!(nmc.issue(&mut npm).is_none());
+    }
+}

@@ -1,0 +1,238 @@
+//! Network Program Memory (paper §II-B.1/.2): three banks — B1, B2 and the
+//! Control/Status Register bank. B1/B2 each hold program rows (CMR + CFR);
+//! a configuration co-processor refills one bank while the NMC drains the
+//! other, flipping when both sides are ready ("interleaved configuration
+//! and access mechanism minimizes IPCN idle cycles during runtime").
+
+use crate::isa::{Program, ProgramRow};
+
+/// Which of the two program banks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bank {
+    B1,
+    B2,
+}
+
+impl Bank {
+    pub fn other(self) -> Bank {
+        match self {
+            Bank::B1 => Bank::B2,
+            Bank::B2 => Bank::B1,
+        }
+    }
+}
+
+/// Control/status registers (CSR bank).
+#[derive(Debug, Clone, Default)]
+pub struct Csr {
+    /// Program phase counter (incremented per bank flip).
+    pub phase: u64,
+    /// Sticky error flag set on underflow (NMC read an empty bank).
+    pub underflow: bool,
+    /// Total rows executed.
+    pub rows_executed: u64,
+}
+
+/// The NPM: two row banks + CSR, plus the co-processor refill model.
+#[derive(Debug)]
+pub struct Npm {
+    banks: [Vec<ProgramRow>; 2],
+    /// Bank currently being drained by the NMC.
+    active: Bank,
+    /// Read cursor within the active bank.
+    cursor: usize,
+    /// Pending refill staged by the co-processor for the inactive bank.
+    staged: Option<Vec<ProgramRow>>,
+    pub csr: Csr,
+}
+
+impl Npm {
+    pub fn new() -> Npm {
+        Npm {
+            banks: [Vec::new(), Vec::new()],
+            active: Bank::B1,
+            cursor: 0,
+            staged: None,
+            csr: Csr::default(),
+        }
+    }
+
+    pub fn active_bank(&self) -> Bank {
+        self.active
+    }
+
+    fn bank_mut(&mut self, b: Bank) -> &mut Vec<ProgramRow> {
+        &mut self.banks[match b {
+            Bank::B1 => 0,
+            Bank::B2 => 1,
+        }]
+    }
+
+    fn bank(&self, b: Bank) -> &Vec<ProgramRow> {
+        &self.banks[match b {
+            Bank::B1 => 0,
+            Bank::B2 => 1,
+        }]
+    }
+
+    /// Co-processor API: load rows into the *inactive* bank. While the NMC
+    /// reads B2, the co-processor configures B1, and vice versa.
+    pub fn configure_inactive(&mut self, rows: Vec<ProgramRow>) {
+        let inactive = self.active.other();
+        *self.bank_mut(inactive) = rows;
+    }
+
+    /// Co-processor API: stage the *next* phase's rows; they are loaded into
+    /// whichever bank is inactive at flip time.
+    pub fn stage_next(&mut self, rows: Vec<ProgramRow>) {
+        self.staged = Some(rows);
+    }
+
+    /// Bootstrap: load the first phase into the active bank directly
+    /// (firmware cold-load before the NMC starts).
+    pub fn bootstrap(&mut self, program: &Program) {
+        *self.bank_mut(self.active) = program.rows.clone();
+        self.cursor = 0;
+    }
+
+    /// NMC-side sequential read. `None` when the active bank is exhausted —
+    /// the NMC must then `flip()`.
+    pub fn next_row(&mut self) -> Option<&ProgramRow> {
+        let active = self.active;
+        if self.cursor >= self.bank(active).len() {
+            return None;
+        }
+        let idx = self.cursor;
+        self.cursor += 1;
+        self.csr.rows_executed += 1;
+        Some(&self.banks[match active {
+            Bank::B1 => 0,
+            Bank::B2 => 1,
+        }][idx])
+    }
+
+    /// Rows remaining in the active bank.
+    pub fn remaining(&self) -> usize {
+        self.bank(self.active).len().saturating_sub(self.cursor)
+    }
+
+    /// Flip banks: the drained bank becomes the co-processor's target, the
+    /// refilled bank becomes active. Returns false (and sets the CSR
+    /// underflow flag) if the other bank is empty and nothing was staged —
+    /// the network would idle, which the double-buffering exists to avoid.
+    pub fn flip(&mut self) -> bool {
+        let incoming = self.active.other();
+        if let Some(rows) = self.staged.take() {
+            *self.bank_mut(incoming) = rows;
+        }
+        let ok = !self.bank(incoming).is_empty();
+        if !ok {
+            self.csr.underflow = true;
+            return false;
+        }
+        self.bank_mut(self.active).clear();
+        self.active = incoming;
+        self.cursor = 0;
+        self.csr.phase += 1;
+        true
+    }
+}
+
+impl Default for Npm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instruction, ProgramRow};
+
+    fn rows(n: usize, repeat: u32) -> Vec<ProgramRow> {
+        (0..n)
+            .map(|_| ProgramRow::uniform(Instruction::IDLE, 4, repeat))
+            .collect()
+    }
+
+    #[test]
+    fn bootstrap_then_drain() {
+        let mut npm = Npm::new();
+        let mut p = Program::new(4);
+        for r in rows(3, 1) {
+            p.push(r);
+        }
+        npm.bootstrap(&p);
+        assert_eq!(npm.remaining(), 3);
+        assert!(npm.next_row().is_some());
+        assert!(npm.next_row().is_some());
+        assert!(npm.next_row().is_some());
+        assert!(npm.next_row().is_none(), "bank exhausted");
+        assert_eq!(npm.csr.rows_executed, 3);
+    }
+
+    #[test]
+    fn double_buffer_flip() {
+        let mut npm = Npm::new();
+        let mut p = Program::new(4);
+        for r in rows(1, 1) {
+            p.push(r);
+        }
+        npm.bootstrap(&p);
+        assert_eq!(npm.active_bank(), Bank::B1);
+        // co-processor fills B2 while NMC drains B1
+        npm.configure_inactive(rows(2, 5));
+        let _ = npm.next_row();
+        assert!(npm.next_row().is_none());
+        assert!(npm.flip());
+        assert_eq!(npm.active_bank(), Bank::B2);
+        assert_eq!(npm.remaining(), 2);
+        assert_eq!(npm.csr.phase, 1);
+    }
+
+    #[test]
+    fn flip_without_refill_underflows() {
+        let mut npm = Npm::new();
+        let mut p = Program::new(4);
+        for r in rows(1, 1) {
+            p.push(r);
+        }
+        npm.bootstrap(&p);
+        let _ = npm.next_row();
+        assert!(!npm.flip(), "no refill → stall");
+        assert!(npm.csr.underflow);
+        assert_eq!(npm.active_bank(), Bank::B1, "active bank unchanged on failed flip");
+    }
+
+    #[test]
+    fn staged_rows_loaded_at_flip() {
+        let mut npm = Npm::new();
+        let mut p = Program::new(4);
+        for r in rows(1, 1) {
+            p.push(r);
+        }
+        npm.bootstrap(&p);
+        npm.stage_next(rows(4, 2));
+        let _ = npm.next_row();
+        assert!(npm.flip());
+        assert_eq!(npm.remaining(), 4);
+    }
+
+    #[test]
+    fn alternating_flips_alternate_banks() {
+        let mut npm = Npm::new();
+        let mut p = Program::new(4);
+        for r in rows(1, 1) {
+            p.push(r);
+        }
+        npm.bootstrap(&p);
+        for i in 0..6 {
+            npm.stage_next(rows(1, 1));
+            let _ = npm.next_row();
+            assert!(npm.flip());
+            let expect = if i % 2 == 0 { Bank::B2 } else { Bank::B1 };
+            assert_eq!(npm.active_bank(), expect);
+        }
+        assert_eq!(npm.csr.phase, 6);
+    }
+}

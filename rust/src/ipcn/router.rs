@@ -1,0 +1,427 @@
+//! The unit router (paper §II-B.4, Fig 3(e)): data-packet routing plus
+//! in-network computing. Seven I/O ports (4 planar, AXI pair to the PE,
+//! 2 vertical TSVs), per-port FIFOs, a decoder/controller driven by the
+//! NMC's command stream, the computational macros, and a scratchpad.
+//!
+//! The router executes exactly one [`Instruction`] per cycle in two phases
+//! (matching the mesh's two-phase update): `compute()` reads its input
+//! FIFOs and produces output intents; the mesh then `deliver()`s intents
+//! into neighbour FIFOs, honouring backpressure.
+
+use super::fifo::Fifo;
+use super::macros::{linear_act, partial_sum, DmacBank};
+use super::scratchpad::Scratchpad;
+use super::Word;
+use crate::isa::{Instruction, Mode, Port, PortSet};
+use crate::isa::instruction::IntXfer;
+
+/// An output intent: a word to be delivered to `ports` (broadcast when
+/// more than one bit set) at the *next* cycle boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutputIntent {
+    pub ports: PortSet,
+    pub word: Word,
+}
+
+/// Per-router counters for power/congestion accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterStats {
+    pub active_cycles: u64,
+    pub idle_cycles: u64,
+    pub words_routed: u64,
+    pub broadcasts: u64,
+    pub psum_ops: u64,
+    pub linact_ops: u64,
+    pub sp_reads: u64,
+    pub sp_writes: u64,
+    pub pe_triggers: u64,
+    pub stalls: u64,
+}
+
+/// The unit router.
+#[derive(Debug)]
+pub struct Router {
+    /// Input FIFO per port.
+    pub in_fifo: [Fifo; 7],
+    pub scratchpad: Scratchpad,
+    pub dmac: DmacBank,
+    pub stats: RouterStats,
+    /// Intent produced by `compute` this cycle, delivered by the mesh.
+    pending: Vec<OutputIntent>,
+}
+
+impl Router {
+    pub fn new(fifo_words: usize, scratchpad_words: usize, dmac_lanes: usize) -> Router {
+        Router {
+            in_fifo: std::array::from_fn(|_| Fifo::new(fifo_words)),
+            scratchpad: Scratchpad::new(scratchpad_words),
+            dmac: DmacBank::new(dmac_lanes),
+            stats: RouterStats::default(),
+            pending: Vec::with_capacity(2),
+        }
+    }
+
+    pub fn fifo(&self, p: Port) -> &Fifo {
+        &self.in_fifo[p as usize]
+    }
+
+    pub fn fifo_mut(&mut self, p: Port) -> &mut Fifo {
+        &mut self.in_fifo[p as usize]
+    }
+
+    /// Inject a word into an input FIFO (mesh edge / PE response / test).
+    pub fn inject(&mut self, p: Port, w: Word) -> bool {
+        self.in_fifo[p as usize].push(w)
+    }
+
+    fn read_enabled(&mut self, rd_en: PortSet) -> Vec<Word> {
+        let mut v = Vec::with_capacity(rd_en.len());
+        for p in rd_en.iter() {
+            if let Some(w) = self.in_fifo[p as usize].pop() {
+                v.push(w);
+            }
+        }
+        v
+    }
+
+    /// Phase 1: execute `instr`, consuming input FIFOs and producing output
+    /// intents. Returns true when the router did useful work this cycle.
+    pub fn compute(&mut self, instr: Instruction) -> bool {
+        self.pending.clear();
+        for f in &mut self.in_fifo {
+            f.sample();
+        }
+        let active = match instr.mode {
+            Mode::Idle => false,
+            Mode::Route => {
+                let words = self.read_enabled(instr.rd_en);
+                if words.is_empty() {
+                    self.stats.stalls += 1;
+                    false
+                } else {
+                    for w in words {
+                        self.queue_out(instr.out_en, w);
+                    }
+                    true
+                }
+            }
+            Mode::PartialSum => {
+                let words = self.read_enabled(instr.rd_en);
+                if words.is_empty() {
+                    self.stats.stalls += 1;
+                    false
+                } else {
+                    let s = partial_sum(&words);
+                    self.stats.psum_ops += 1;
+                    self.queue_out(instr.out_en, s);
+                    true
+                }
+            }
+            Mode::LinearAct => {
+                // (a, b) at SP_addr and SP_addr+1; x from the first rd port.
+                let x = self.read_enabled(instr.rd_en).first().copied();
+                match x {
+                    None => {
+                        self.stats.stalls += 1;
+                        false
+                    }
+                    Some(x) => {
+                        let a = self.scratchpad.read(instr.sp_addr as usize).unwrap_or(1.0);
+                        let b = self
+                            .scratchpad
+                            .read(instr.sp_addr as usize + 1)
+                            .unwrap_or(0.0);
+                        self.stats.linact_ops += 1;
+                        self.queue_out(instr.out_en, linear_act(x, a, b));
+                        true
+                    }
+                }
+            }
+            Mode::Dmac => {
+                // Operand pairing across enabled ports: one word is read
+                // from each enabled FIFO per cycle, and consecutive ports
+                // form (x, y) operand pairs — e.g. rd_en = {North, West}
+                // multiplies the stream arriving from the north by the
+                // stream arriving from the west (QKᵀ streams K down the
+                // column while q flows along the row).
+                let words = self.read_enabled(instr.rd_en);
+                let pairs: Vec<(Word, Word)> =
+                    words.chunks_exact(2).map(|c| (c[0], c[1])).collect();
+                if pairs.is_empty() {
+                    self.stats.stalls += 1;
+                    false
+                } else {
+                    self.dmac.issue(&pairs);
+                    true
+                }
+            }
+            Mode::DmacDrain => {
+                let s = self.dmac.drain();
+                self.queue_out(instr.out_en, s);
+                true
+            }
+            Mode::SpRead => {
+                match self.scratchpad.read(instr.sp_addr as usize) {
+                    Some(w) => {
+                        self.stats.sp_reads += 1;
+                        self.queue_out(instr.out_en, w);
+                        true
+                    }
+                    None => {
+                        self.stats.stalls += 1;
+                        false
+                    }
+                }
+            }
+            Mode::SpWrite => {
+                let words = self.read_enabled(instr.rd_en);
+                if words.is_empty() {
+                    self.stats.stalls += 1;
+                    false
+                } else {
+                    for (i, w) in words.iter().enumerate() {
+                        self.scratchpad.write(instr.sp_addr as usize + i, *w);
+                        self.stats.sp_writes += 1;
+                    }
+                    true
+                }
+            }
+            Mode::PeTrigger => {
+                // Forward input words to the PE port; the mesh moves them
+                // across the AXI adapter and triggers the crossbar.
+                let words = self.read_enabled(instr.rd_en);
+                if words.is_empty() {
+                    self.stats.stalls += 1;
+                    false
+                } else {
+                    self.stats.pe_triggers += 1;
+                    for w in words {
+                        self.queue_out(PortSet::single(Port::Pe), w);
+                    }
+                    true
+                }
+            }
+            Mode::ScuStream => {
+                // Stream to the activation die through the Up TSV.
+                let words = self.read_enabled(instr.rd_en);
+                if words.is_empty() {
+                    self.stats.stalls += 1;
+                    false
+                } else {
+                    for w in words {
+                        self.queue_out(PortSet::single(Port::Up), w);
+                    }
+                    true
+                }
+            }
+        };
+
+        // Internal transfer runs in parallel with the main op (§II-B.5(iv)).
+        match instr.intxfer {
+            IntXfer::None => {}
+            IntXfer::FifoToSp => {
+                if let Some(w) = self.in_fifo[Port::Pe as usize].pop() {
+                    self.scratchpad.write(instr.sp_addr as usize, w);
+                    self.stats.sp_writes += 1;
+                }
+            }
+            IntXfer::SpToFifo => {
+                if let Some(w) = self.scratchpad.read(instr.sp_addr as usize) {
+                    self.stats.sp_reads += 1;
+                    self.queue_out(PortSet::single(Port::Pe), w);
+                }
+            }
+            IntXfer::Swap => {
+                let addr = instr.sp_addr as usize;
+                if let (Some(inw), Some(old)) = (
+                    self.in_fifo[Port::Pe as usize].pop(),
+                    self.scratchpad.read(addr),
+                ) {
+                    self.scratchpad.write(addr, inw);
+                    self.stats.sp_reads += 1;
+                    self.stats.sp_writes += 1;
+                    self.queue_out(PortSet::single(Port::Pe), old);
+                }
+            }
+        }
+
+        if active {
+            self.stats.active_cycles += 1;
+        } else {
+            self.stats.idle_cycles += 1;
+        }
+        active
+    }
+
+    fn queue_out(&mut self, ports: PortSet, w: Word) {
+        if ports.is_empty() {
+            return;
+        }
+        self.stats.words_routed += ports.len() as u64;
+        if ports.is_broadcast() {
+            self.stats.broadcasts += 1;
+        }
+        self.pending.push(OutputIntent { ports, word: w });
+    }
+
+    /// Phase 2 accessor: intents produced by the last `compute` call.
+    pub fn take_intents(&mut self) -> Vec<OutputIntent> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(32, 4096, 16)
+    }
+
+    #[test]
+    fn route_unicast_moves_word() {
+        let mut r = router();
+        r.inject(Port::West, 3.25);
+        let instr = Instruction::new(
+            PortSet::single(Port::West),
+            Mode::Route,
+            PortSet::single(Port::East),
+        );
+        assert!(r.compute(instr));
+        let intents = r.take_intents();
+        assert_eq!(intents.len(), 1);
+        assert_eq!(intents[0].word, 3.25);
+        assert!(intents[0].ports.contains(Port::East));
+        assert_eq!(r.stats.words_routed, 1);
+    }
+
+    #[test]
+    fn route_broadcast_counts_once_per_word() {
+        let mut r = router();
+        r.inject(Port::Pe, 1.0);
+        let instr = Instruction::new(PortSet::single(Port::Pe), Mode::Route, PortSet::ALL);
+        assert!(r.compute(instr));
+        let intents = r.take_intents();
+        assert_eq!(intents.len(), 1);
+        assert_eq!(intents[0].ports.len(), 7);
+        assert_eq!(r.stats.broadcasts, 1);
+        assert_eq!(r.stats.words_routed, 7);
+    }
+
+    #[test]
+    fn empty_fifo_stalls() {
+        let mut r = router();
+        let instr = Instruction::new(
+            PortSet::single(Port::North),
+            Mode::Route,
+            PortSet::single(Port::South),
+        );
+        assert!(!r.compute(instr));
+        assert_eq!(r.stats.stalls, 1);
+        assert_eq!(r.stats.idle_cycles, 1);
+    }
+
+    #[test]
+    fn partial_sum_reduces_three_ports() {
+        let mut r = router();
+        r.inject(Port::North, 1.0);
+        r.inject(Port::South, 2.0);
+        r.inject(Port::West, 4.0);
+        let instr = Instruction::new(
+            PortSet::of(&[Port::North, Port::South, Port::West]),
+            Mode::PartialSum,
+            PortSet::single(Port::East),
+        );
+        assert!(r.compute(instr));
+        assert_eq!(r.take_intents()[0].word, 7.0);
+        assert_eq!(r.stats.psum_ops, 1);
+    }
+
+    #[test]
+    fn linear_act_reads_coeffs_from_scratchpad() {
+        let mut r = router();
+        r.scratchpad.write(10, 2.0); // a
+        r.scratchpad.write(11, -1.0); // b
+        r.inject(Port::West, 5.0);
+        let instr = Instruction::new(
+            PortSet::single(Port::West),
+            Mode::LinearAct,
+            PortSet::single(Port::East),
+        )
+        .with_sp(10);
+        assert!(r.compute(instr));
+        assert_eq!(r.take_intents()[0].word, 9.0);
+    }
+
+    #[test]
+    fn dmac_accumulate_then_drain() {
+        let mut r = router();
+        // x-stream on North, y-stream on West: (2,3) then (4,5)
+        r.inject(Port::North, 2.0);
+        r.inject(Port::North, 4.0);
+        r.inject(Port::West, 3.0);
+        r.inject(Port::West, 5.0);
+        let macd = Instruction::new(
+            PortSet::of(&[Port::North, Port::West]),
+            Mode::Dmac,
+            PortSet::EMPTY,
+        );
+        assert!(r.compute(macd)); // (2, 3)
+        assert!(r.compute(macd)); // (4, 5)
+        let drain = Instruction::new(PortSet::EMPTY, Mode::DmacDrain, PortSet::single(Port::Pe));
+        assert!(r.compute(drain));
+        assert_eq!(r.take_intents()[0].word, 2.0 * 3.0 + 4.0 * 5.0);
+    }
+
+    #[test]
+    fn dmac_single_port_stalls() {
+        // one enabled port cannot form an (x, y) pair
+        let mut r = router();
+        r.inject(Port::North, 1.0);
+        let macd = Instruction::new(PortSet::single(Port::North), Mode::Dmac, PortSet::EMPTY);
+        assert!(!r.compute(macd));
+        assert_eq!(r.stats.stalls, 1);
+    }
+
+    #[test]
+    fn sp_write_then_read() {
+        let mut r = router();
+        r.inject(Port::West, 8.5);
+        let wr = Instruction::new(PortSet::single(Port::West), Mode::SpWrite, PortSet::EMPTY)
+            .with_sp(100);
+        assert!(r.compute(wr));
+        let rd = Instruction::new(PortSet::EMPTY, Mode::SpRead, PortSet::single(Port::East))
+            .with_sp(100);
+        assert!(r.compute(rd));
+        assert_eq!(r.take_intents()[0].word, 8.5);
+        assert_eq!(r.stats.sp_writes, 1);
+        assert_eq!(r.stats.sp_reads, 1);
+    }
+
+    #[test]
+    fn intxfer_runs_alongside_route() {
+        let mut r = router();
+        r.inject(Port::West, 1.0); // for the Route op
+        r.inject(Port::Pe, 9.0); // for the FifoToSp transfer
+        let instr = Instruction::new(
+            PortSet::single(Port::West),
+            Mode::Route,
+            PortSet::single(Port::East),
+        )
+        .with_sp(5)
+        .with_xfer(IntXfer::FifoToSp);
+        assert!(r.compute(instr));
+        assert_eq!(r.scratchpad.read(5), Some(9.0));
+        assert_eq!(r.take_intents().len(), 1, "route still happened");
+    }
+
+    #[test]
+    fn scu_stream_goes_up() {
+        let mut r = router();
+        r.inject(Port::Pe, 2.5);
+        let instr = Instruction::new(PortSet::single(Port::Pe), Mode::ScuStream, PortSet::EMPTY);
+        assert!(r.compute(instr));
+        let intents = r.take_intents();
+        assert!(intents[0].ports.contains(Port::Up));
+    }
+}

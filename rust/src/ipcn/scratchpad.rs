@@ -1,0 +1,100 @@
+//! Per-router-PE scratchpad memory (paper Table I: 32 KB each; §III.2 maps
+//! the Q/K/V/S intermediates into "the distributed scratchpad"; under CCPG
+//! it is the only macro that stays powered in sleeping clusters, retaining
+//! the KV cache).
+
+use super::Word;
+
+/// A word-addressable scratchpad with access accounting.
+#[derive(Debug, Clone)]
+pub struct Scratchpad {
+    mem: Vec<Word>,
+    reads: u64,
+    writes: u64,
+}
+
+impl Scratchpad {
+    pub fn new(words: usize) -> Scratchpad {
+        assert!(words > 0);
+        Scratchpad {
+            mem: vec![0.0; words],
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    pub fn words(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn read(&mut self, addr: usize) -> Option<Word> {
+        let w = self.mem.get(addr).copied();
+        if w.is_some() {
+            self.reads += 1;
+        }
+        w
+    }
+
+    pub fn write(&mut self, addr: usize, w: Word) -> bool {
+        if let Some(slot) = self.mem.get_mut(addr) {
+            *slot = w;
+            self.writes += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Bulk read without access accounting (testing / checkpoint only).
+    pub fn snapshot(&self) -> &[Word] {
+        &self.mem
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Data survives power gating (the *logic* around it is gated, the
+    /// retention rail keeps the array) — modeled as a no-op marker so the
+    /// CCPG tests can assert retention.
+    pub fn retain_through_power_gate(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut s = Scratchpad::new(16);
+        assert!(s.write(3, 42.5));
+        assert_eq!(s.read(3), Some(42.5));
+        assert_eq!(s.reads(), 1);
+        assert_eq!(s.writes(), 1);
+    }
+
+    #[test]
+    fn out_of_bounds_is_error_not_panic() {
+        let mut s = Scratchpad::new(4);
+        assert!(!s.write(4, 1.0));
+        assert_eq!(s.read(100), None);
+        assert_eq!(s.reads(), 0);
+    }
+
+    #[test]
+    fn zero_initialized() {
+        let mut s = Scratchpad::new(8);
+        assert_eq!(s.read(7), Some(0.0));
+    }
+
+    #[test]
+    fn retention_flag() {
+        assert!(Scratchpad::new(1).retain_through_power_gate());
+    }
+}

@@ -1,0 +1,291 @@
+//! Firmware assembler: a small DSL over [`Program`] used by the mapper to
+//! emit IPCN programs (the rust equivalent of the paper's Python API +
+//! compiler toolchain, §II-B.5).
+//!
+//! The assembler works in *mesh coordinates*: firmware ops name routers by
+//! (row, col) and the assembler resolves port masks, emits per-router CFR
+//! selections, and packs consecutive compatible ops into shared rows (two
+//! distinct commands per row — the CMR width).
+
+use super::instruction::{Instruction, Mode, Port, PortSet};
+use super::program::{CommandSel, Program, ProgramRow, RouterConfig};
+
+/// One firmware-level operation on a rectangular region of routers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FirmwareOp {
+    /// Inclusive (row, col) region this op applies to.
+    pub region: ((usize, usize), (usize, usize)),
+    pub instr: Instruction,
+    /// How many cycles the op repeats.
+    pub repeat: u32,
+    pub label: String,
+}
+
+impl FirmwareOp {
+    pub fn at(r: usize, c: usize, instr: Instruction) -> FirmwareOp {
+        FirmwareOp {
+            region: ((r, c), (r, c)),
+            instr,
+            repeat: 1,
+            label: String::new(),
+        }
+    }
+
+    pub fn region(
+        top_left: (usize, usize),
+        bottom_right: (usize, usize),
+        instr: Instruction,
+    ) -> FirmwareOp {
+        FirmwareOp {
+            region: (top_left, bottom_right),
+            instr,
+            repeat: 1,
+            label: String::new(),
+        }
+    }
+
+    pub fn repeat(mut self, n: u32) -> FirmwareOp {
+        self.repeat = n;
+        self
+    }
+
+    pub fn label(mut self, l: impl Into<String>) -> FirmwareOp {
+        self.label = l.into();
+        self
+    }
+}
+
+/// Assembles firmware ops into NPM program rows for a `dim`×`dim` mesh.
+pub struct Assembler {
+    dim: usize,
+    rows: Vec<ProgramRow>,
+    /// Ops staged for the current row (at most 2 distinct instructions).
+    staged: Vec<FirmwareOp>,
+}
+
+impl Assembler {
+    pub fn new(dim: usize) -> Assembler {
+        Assembler {
+            dim,
+            rows: Vec::new(),
+            staged: Vec::new(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_routers(&self) -> usize {
+        self.dim * self.dim
+    }
+
+    /// Stage an op for the current row. Returns Err if it cannot share the
+    /// row (more than 2 distinct instructions, differing repeat counts, or
+    /// overlapping regions) — callers then `commit()` and retry.
+    pub fn stage(&mut self, op: FirmwareOp) -> std::result::Result<(), FirmwareOp> {
+        let distinct: Vec<&Instruction> = {
+            let mut v: Vec<&Instruction> = self.staged.iter().map(|o| &o.instr).collect();
+            v.dedup();
+            v
+        };
+        let is_new = !distinct.iter().any(|i| **i == op.instr);
+        if (distinct.len() == 2 && is_new)
+            || self
+                .staged
+                .first()
+                .is_some_and(|f| f.repeat != op.repeat)
+            || self.staged.iter().any(|o| regions_overlap(o.region, op.region))
+        {
+            return Err(op);
+        }
+        self.staged.push(op);
+        Ok(())
+    }
+
+    /// Emit an op, committing the current row first if it cannot share.
+    pub fn emit(&mut self, op: FirmwareOp) {
+        if let Err(op) = self.stage(op) {
+            self.commit();
+            self.staged.push(op);
+        }
+    }
+
+    /// Flush staged ops into one NPM row.
+    pub fn commit(&mut self) {
+        if self.staged.is_empty() {
+            return;
+        }
+        let n = self.n_routers();
+        let repeat = self.staged[0].repeat;
+        let mut cmds: Vec<Instruction> = Vec::new();
+        for op in &self.staged {
+            if !cmds.contains(&op.instr) {
+                cmds.push(op.instr);
+            }
+        }
+        assert!(cmds.len() <= 2, "assembler staged >2 distinct commands");
+        let cmd1 = cmds[0];
+        let cmd2 = cmds.get(1).copied().unwrap_or(Instruction::IDLE);
+        let mut cfg = vec![RouterConfig::default(); n];
+        let mut label = String::new();
+        for op in &self.staged {
+            let sel = if op.instr == cmd1 {
+                CommandSel::Cmd1
+            } else {
+                CommandSel::Cmd2
+            };
+            let ((r0, c0), (r1, c1)) = op.region;
+            assert!(r1 < self.dim && c1 < self.dim, "region out of mesh bounds");
+            for r in r0..=r1 {
+                for c in c0..=c1 {
+                    cfg[r * self.dim + c].sel = sel;
+                }
+            }
+            if !op.label.is_empty() {
+                if !label.is_empty() {
+                    label.push('+');
+                }
+                label.push_str(&op.label);
+            }
+        }
+        self.rows.push(ProgramRow {
+            cmd1,
+            cmd2,
+            router_cfg: cfg,
+            repeat,
+            label,
+        });
+        self.staged.clear();
+    }
+
+    /// Convenience: a horizontal pipeline moving data west→east along mesh
+    /// row `row`, for `len` cycles (used by input broadcast stages).
+    pub fn pipeline_east(&mut self, row: usize, len: u32) {
+        let instr = Instruction::new(
+            PortSet::single(Port::West),
+            Mode::Route,
+            PortSet::single(Port::East),
+        );
+        self.emit(
+            FirmwareOp::region((row, 0), (row, self.dim - 1), instr)
+                .repeat(len)
+                .label(format!("pipe-east r{row}")),
+        );
+    }
+
+    /// Broadcast from column 0 of `row` to every port (one cycle fanout).
+    pub fn broadcast_all(&mut self, row: usize, col: usize, repeat: u32) {
+        let instr = Instruction::new(PortSet::single(Port::Pe), Mode::Route, PortSet::ALL);
+        self.emit(
+            FirmwareOp::at(row, col, instr)
+                .repeat(repeat)
+                .label(format!("bcast ({row},{col})")),
+        );
+    }
+
+    pub fn finish(mut self) -> Program {
+        self.commit();
+        let mut p = Program::new(self.n_routers());
+        for r in self.rows {
+            p.push(r);
+        }
+        p
+    }
+}
+
+fn regions_overlap(
+    a: ((usize, usize), (usize, usize)),
+    b: ((usize, usize), (usize, usize)),
+) -> bool {
+    let ((ar0, ac0), (ar1, ac1)) = a;
+    let ((br0, bc0), (br1, bc1)) = b;
+    ar0 <= br1 && br0 <= ar1 && ac0 <= bc1 && bc0 <= ac1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn route_we() -> Instruction {
+        Instruction::new(
+            PortSet::single(Port::West),
+            Mode::Route,
+            PortSet::single(Port::East),
+        )
+    }
+
+    fn dmac() -> Instruction {
+        Instruction::new(PortSet::of(&[Port::North, Port::West]), Mode::Dmac, PortSet::EMPTY)
+    }
+
+    #[test]
+    fn two_ops_share_one_row() {
+        let mut asm = Assembler::new(4);
+        asm.emit(FirmwareOp::region((0, 0), (0, 3), route_we()).repeat(8));
+        asm.emit(FirmwareOp::region((1, 0), (1, 3), dmac()).repeat(8));
+        let p = asm.finish();
+        assert_eq!(p.rows.len(), 1, "compatible ops pack into one row");
+        assert_eq!(p.rows[0].instruction_for(1), route_we());
+        assert_eq!(p.rows[0].instruction_for(5), dmac());
+        assert_eq!(p.rows[0].instruction_for(9).mode, Mode::Idle);
+    }
+
+    #[test]
+    fn third_distinct_command_forces_new_row() {
+        let mut asm = Assembler::new(4);
+        asm.emit(FirmwareOp::at(0, 0, route_we()));
+        asm.emit(FirmwareOp::at(1, 0, dmac()));
+        let third = Instruction::new(PortSet::EMPTY, Mode::SpRead, PortSet::single(Port::East));
+        asm.emit(FirmwareOp::at(2, 0, third));
+        let p = asm.finish();
+        assert_eq!(p.rows.len(), 2);
+    }
+
+    #[test]
+    fn mismatched_repeat_forces_new_row() {
+        let mut asm = Assembler::new(4);
+        asm.emit(FirmwareOp::at(0, 0, route_we()).repeat(4));
+        asm.emit(FirmwareOp::at(1, 0, route_we()).repeat(9));
+        let p = asm.finish();
+        assert_eq!(p.rows.len(), 2);
+        assert_eq!(p.nominal_cycles(), 13);
+    }
+
+    #[test]
+    fn overlapping_regions_force_new_row() {
+        let mut asm = Assembler::new(4);
+        asm.emit(FirmwareOp::region((0, 0), (1, 1), route_we()));
+        asm.emit(FirmwareOp::region((1, 1), (2, 2), dmac()));
+        let p = asm.finish();
+        assert_eq!(p.rows.len(), 2, "overlap must not silently overwrite");
+    }
+
+    #[test]
+    fn same_instruction_merges_regions() {
+        let mut asm = Assembler::new(4);
+        asm.emit(FirmwareOp::region((0, 0), (0, 3), route_we()));
+        asm.emit(FirmwareOp::region((2, 0), (2, 3), route_we()));
+        let p = asm.finish();
+        assert_eq!(p.rows.len(), 1);
+        assert_eq!(p.rows[0].active_routers(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of mesh bounds")]
+    fn out_of_bounds_region_panics() {
+        let mut asm = Assembler::new(4);
+        asm.emit(FirmwareOp::at(4, 0, route_we()));
+        asm.finish();
+    }
+
+    #[test]
+    fn pipeline_and_broadcast_helpers() {
+        let mut asm = Assembler::new(4);
+        asm.pipeline_east(0, 16);
+        asm.broadcast_all(1, 1, 2);
+        let p = asm.finish();
+        assert_eq!(p.rows.len(), 2);
+        assert!(p.rows[1].cmd1.is_broadcast());
+    }
+}

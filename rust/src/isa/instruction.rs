@@ -1,0 +1,350 @@
+//! The 30-bit IPCN instruction word and its field types.
+
+use std::fmt;
+
+/// One of the seven router I/O ports (paper Table I: 7 I/O ports —
+/// 4 planar mesh links, the AXI-stream PE link, and 2 vertical TSV links).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Port {
+    North = 0,
+    East = 1,
+    South = 2,
+    West = 3,
+    /// AXI-stream adapter pair to the attached PE.
+    Pe = 4,
+    /// TSV to the top (activation-function) die.
+    Up = 5,
+    /// TSV to the bottom (optical-engine) die.
+    Down = 6,
+}
+
+impl Port {
+    pub const ALL: [Port; 7] = [
+        Port::North,
+        Port::East,
+        Port::South,
+        Port::West,
+        Port::Pe,
+        Port::Up,
+        Port::Down,
+    ];
+
+    pub fn from_index(i: u8) -> Option<Port> {
+        Port::ALL.get(i as usize).copied()
+    }
+
+    /// The planar port on the opposite side (for mesh link pairing).
+    pub fn opposite(self) -> Option<Port> {
+        match self {
+            Port::North => Some(Port::South),
+            Port::South => Some(Port::North),
+            Port::East => Some(Port::West),
+            Port::West => Some(Port::East),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Port {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Port::North => "N",
+            Port::East => "E",
+            Port::South => "S",
+            Port::West => "W",
+            Port::Pe => "PE",
+            Port::Up => "UP",
+            Port::Down => "DN",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A set of ports encoded as a 7-bit mask (used by `rd_en` and `out_en`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default, Hash)]
+pub struct PortSet(pub u8);
+
+impl PortSet {
+    pub const EMPTY: PortSet = PortSet(0);
+    pub const ALL: PortSet = PortSet(0x7f);
+
+    pub fn single(p: Port) -> PortSet {
+        PortSet(1 << p as u8)
+    }
+
+    pub fn of(ports: &[Port]) -> PortSet {
+        PortSet(ports.iter().fold(0, |m, p| m | (1 << *p as u8)))
+    }
+
+    pub fn contains(self, p: Port) -> bool {
+        self.0 & (1 << p as u8) != 0
+    }
+
+    pub fn insert(&mut self, p: Port) {
+        self.0 |= 1 << p as u8;
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn iter(self) -> impl Iterator<Item = Port> {
+        Port::ALL.into_iter().filter(move |p| self.contains(*p))
+    }
+
+    /// Broadcast = output to more than one port (paper §II-B.5).
+    pub fn is_broadcast(self) -> bool {
+        self.len() > 1
+    }
+}
+
+/// Router operation mode (`mode_sel`, 4 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Mode {
+    /// No operation this cycle.
+    Idle = 0,
+    /// Pure routing: move word(s) from `rd_en` FIFO(s) to `out_en` port(s).
+    Route = 1,
+    /// Partial summation macro: sum words from the `rd_en` FIFOs, emit one.
+    PartialSum = 2,
+    /// Linear activation macro: y = a*x + b with (a, b) from scratchpad.
+    LinearAct = 3,
+    /// Dynamic-data MAC: acc += x*y over the 16 DMAC lanes.
+    Dmac = 4,
+    /// Read scratchpad line at `SP_addr` to `out_en`.
+    SpRead = 5,
+    /// Write incoming word(s) to scratchpad at `SP_addr`.
+    SpWrite = 6,
+    /// Trigger the attached PE's crossbar SMAC with data from the AXI port.
+    PeTrigger = 7,
+    /// Read DMAC accumulator out and clear it.
+    DmacDrain = 8,
+    /// Send to the SCU on the top die (via Up TSV) / receive its result.
+    ScuStream = 9,
+}
+
+impl Mode {
+    pub fn from_bits(b: u8) -> Option<Mode> {
+        use Mode::*;
+        Some(match b {
+            0 => Idle,
+            1 => Route,
+            2 => PartialSum,
+            3 => LinearAct,
+            4 => Dmac,
+            5 => SpRead,
+            6 => SpWrite,
+            7 => PeTrigger,
+            8 => DmacDrain,
+            9 => ScuStream,
+            _ => return None,
+        })
+    }
+}
+
+/// Internal-transfer enable (`intxfer_en`, 2 bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(u8)]
+pub enum IntXfer {
+    #[default]
+    None = 0,
+    /// FIFO head → scratchpad\[SP_addr\].
+    FifoToSp = 1,
+    /// scratchpad\[SP_addr\] → output stage.
+    SpToFifo = 2,
+    /// Swap (used by the KV-cache cyclic writer).
+    Swap = 3,
+}
+
+impl IntXfer {
+    pub fn from_bits(b: u8) -> IntXfer {
+        match b & 0b11 {
+            1 => IntXfer::FifoToSp,
+            2 => IntXfer::SpToFifo,
+            3 => IntXfer::Swap,
+            _ => IntXfer::None,
+        }
+    }
+}
+
+/// A decoded 30-bit IPCN instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Instruction {
+    pub rd_en: PortSet,
+    pub mode: Mode,
+    pub out_en: PortSet,
+    pub intxfer: IntXfer,
+    pub sp_addr: u16,
+}
+
+pub const SP_ADDR_BITS: u32 = 10;
+pub const SP_ADDR_MAX: u16 = (1 << SP_ADDR_BITS) - 1;
+pub const INSTR_BITS: u32 = 30;
+pub const INSTR_MASK: u32 = (1 << INSTR_BITS) - 1;
+
+impl Instruction {
+    pub const IDLE: Instruction = Instruction {
+        rd_en: PortSet::EMPTY,
+        mode: Mode::Idle,
+        out_en: PortSet::EMPTY,
+        intxfer: IntXfer::None,
+        sp_addr: 0,
+    };
+
+    pub fn new(rd_en: PortSet, mode: Mode, out_en: PortSet) -> Instruction {
+        Instruction {
+            rd_en,
+            mode,
+            out_en,
+            intxfer: IntXfer::None,
+            sp_addr: 0,
+        }
+    }
+
+    pub fn with_sp(mut self, addr: u16) -> Instruction {
+        assert!(addr <= SP_ADDR_MAX, "SP_addr overflows 10 bits: {addr}");
+        self.sp_addr = addr;
+        self
+    }
+
+    pub fn with_xfer(mut self, x: IntXfer) -> Instruction {
+        self.intxfer = x;
+        self
+    }
+
+    /// Encode into the 30-bit wire format (Fig 3(g)).
+    pub fn encode(self) -> u32 {
+        assert!(self.sp_addr <= SP_ADDR_MAX);
+        ((self.rd_en.0 as u32) << 23)
+            | ((self.mode as u32) << 19)
+            | ((self.out_en.0 as u32) << 12)
+            | ((self.intxfer as u32) << 10)
+            | (self.sp_addr as u32)
+    }
+
+    /// Decode from the 30-bit wire format. `None` on an illegal mode.
+    pub fn decode(w: u32) -> Option<Instruction> {
+        if w & !INSTR_MASK != 0 {
+            return None; // bits above 30 set
+        }
+        Some(Instruction {
+            rd_en: PortSet(((w >> 23) & 0x7f) as u8),
+            mode: Mode::from_bits(((w >> 19) & 0xf) as u8)?,
+            out_en: PortSet(((w >> 12) & 0x7f) as u8),
+            intxfer: IntXfer::from_bits(((w >> 10) & 0b11) as u8),
+            sp_addr: (w & 0x3ff) as u16,
+        })
+    }
+
+    pub fn is_broadcast(self) -> bool {
+        self.out_en.is_broadcast()
+    }
+}
+
+impl fmt::Display for Instruction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.mode)?;
+        if !self.rd_en.is_empty() {
+            write!(f, " rd=[")?;
+            for p in self.rd_en.iter() {
+                write!(f, "{p},")?;
+            }
+            write!(f, "]")?;
+        }
+        if !self.out_en.is_empty() {
+            write!(f, " out=[")?;
+            for p in self.out_en.iter() {
+                write!(f, "{p},")?;
+            }
+            write!(f, "]")?;
+        }
+        if self.intxfer != IntXfer::None {
+            write!(f, " xfer={:?}", self.intxfer)?;
+        }
+        if self.sp_addr != 0 {
+            write!(f, " sp=0x{:x}", self.sp_addr)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip_exhaustive_fields() {
+        for mode_bits in 0..10u8 {
+            let mode = Mode::from_bits(mode_bits).unwrap();
+            for rd in [0u8, 1, 0x55, 0x7f] {
+                for out in [0u8, 2, 0x2a, 0x7f] {
+                    for sp in [0u16, 1, 511, SP_ADDR_MAX] {
+                        for x in [IntXfer::None, IntXfer::FifoToSp, IntXfer::SpToFifo] {
+                            let i = Instruction {
+                                rd_en: PortSet(rd),
+                                mode,
+                                out_en: PortSet(out),
+                                intxfer: x,
+                                sp_addr: sp,
+                            };
+                            let w = i.encode();
+                            assert!(w <= INSTR_MASK, "fits in 30 bits");
+                            assert_eq!(Instruction::decode(w), Some(i));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idle_encodes_to_zero() {
+        assert_eq!(Instruction::IDLE.encode(), 0);
+        assert_eq!(Instruction::decode(0), Some(Instruction::IDLE));
+    }
+
+    #[test]
+    fn illegal_mode_rejected() {
+        let w = 0xfu32 << 19; // mode=15 undefined
+        assert_eq!(Instruction::decode(w), None);
+    }
+
+    #[test]
+    fn out_of_range_word_rejected() {
+        assert_eq!(Instruction::decode(1 << 30), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "SP_addr overflows")]
+    fn sp_addr_overflow_panics() {
+        let _ = Instruction::IDLE.with_sp(1024);
+    }
+
+    #[test]
+    fn portset_ops() {
+        let s = PortSet::of(&[Port::North, Port::Pe]);
+        assert!(s.contains(Port::North));
+        assert!(s.contains(Port::Pe));
+        assert!(!s.contains(Port::South));
+        assert_eq!(s.len(), 2);
+        assert!(s.is_broadcast());
+        assert!(!PortSet::single(Port::East).is_broadcast());
+        assert_eq!(PortSet::ALL.len(), 7);
+        let collected: Vec<Port> = s.iter().collect();
+        assert_eq!(collected, vec![Port::North, Port::Pe]);
+    }
+
+    #[test]
+    fn port_opposites() {
+        assert_eq!(Port::North.opposite(), Some(Port::South));
+        assert_eq!(Port::East.opposite(), Some(Port::West));
+        assert_eq!(Port::Pe.opposite(), None);
+        assert_eq!(Port::Up.opposite(), None);
+    }
+}

@@ -1,0 +1,34 @@
+//! IPCN Instruction Set Architecture (paper §II-B.5, Fig 3(g)).
+//!
+//! The IPCN instruction is a 30-bit vector with five sub-fields that drive
+//! one unit router for one (possibly repeated) network cycle:
+//!
+//! ```text
+//!  29..23   22..19    18..12      11..10      9..0
+//!  rd_en    mode_sel  out_en      intxfer_en  SP_addr
+//!  (7b)     (4b)      (7b)        (2b)        (10b)
+//! ```
+//!
+//! * `rd_en`      — FIFO indices to read this cycle (one bit per I/O port);
+//! * `mode_sel`   — router operation mode ([`Mode`]);
+//! * `out_en`     — output port directions (unicast = one bit, broadcast =
+//!                  several, up to all 7 — paper: "broadcast moves data in
+//!                  multi-directions (up to all I/O ports)");
+//! * `intxfer_en` — internal transfer between FIFOs and the scratchpad;
+//! * `SP_addr`    — scratchpad word address (32 KB / 64-bit words → 4096
+//!                  words, addressed per 4-word line: 10 bits).
+//!
+//! The module also implements the NPM program row format (CMR: two commands
+//! per row; CFR: per-router command-select + repeat count — §II-B.1), the
+//! assembler that builds programs from a small firmware DSL, and the hex
+//! emitter matching the paper's Python toolchain (`python/compile/
+//! ipcn_api.py` emits the identical format; a golden-vector test pins the
+//! two against each other).
+
+mod assembler;
+pub mod instruction;
+mod program;
+
+pub use assembler::{Assembler, FirmwareOp};
+pub use instruction::{Instruction, Mode, Port, PortSet};
+pub use program::{CommandSel, Program, ProgramRow, RouterConfig};

@@ -1,0 +1,283 @@
+//! NPM program row format (paper §II-B.1).
+//!
+//! Each NPM row holds, in the command register sub-bank (CMR), two 30-bit
+//! commands (CMD1, CMD2), and in the configuration register sub-bank (CFR),
+//! a per-router 2-bit command-select plus a repeat count. Every cycle batch,
+//! each router combines its CFR select with the row's CMR to decide whether
+//! to IDLE or execute CMD1/CMD2, repeated `repeat` times.
+
+use super::instruction::Instruction;
+
+/// Per-router command selection (CFR, 2 bits per router).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum CommandSel {
+    #[default]
+    Idle = 0,
+    Cmd1 = 1,
+    Cmd2 = 2,
+}
+
+impl CommandSel {
+    pub fn from_bits(b: u8) -> CommandSel {
+        match b & 0b11 {
+            1 => CommandSel::Cmd1,
+            2 => CommandSel::Cmd2,
+            _ => CommandSel::Idle,
+        }
+    }
+}
+
+/// Per-router configuration within one program row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RouterConfig {
+    pub sel: CommandSel,
+    /// Per-router scratchpad address override: the shared CMD carries a
+    /// base SP_addr; routers may offset it (used by the KV-cache cyclic
+    /// writer so one broadcast command touches different lines per router).
+    pub sp_offset: u16,
+}
+
+/// One NPM row: two commands + per-router selection + repeat count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramRow {
+    pub cmd1: Instruction,
+    pub cmd2: Instruction,
+    /// Per-router config, row-major, length = number of routers.
+    pub router_cfg: Vec<RouterConfig>,
+    /// Command repeat count (CFR): the row executes `repeat` cycles.
+    pub repeat: u32,
+    /// Human label for traces.
+    pub label: String,
+}
+
+impl ProgramRow {
+    pub fn uniform(cmd: Instruction, n_routers: usize, repeat: u32) -> ProgramRow {
+        ProgramRow {
+            cmd1: cmd,
+            cmd2: Instruction::IDLE,
+            router_cfg: vec![
+                RouterConfig {
+                    sel: CommandSel::Cmd1,
+                    sp_offset: 0
+                };
+                n_routers
+            ],
+            repeat,
+            label: String::new(),
+        }
+    }
+
+    /// The instruction router `r` executes under this row.
+    pub fn instruction_for(&self, r: usize) -> Instruction {
+        match self.router_cfg.get(r).map(|c| c.sel).unwrap_or_default() {
+            CommandSel::Idle => Instruction::IDLE,
+            CommandSel::Cmd1 => self.cmd1,
+            CommandSel::Cmd2 => self.cmd2,
+        }
+    }
+
+    pub fn with_label(mut self, l: impl Into<String>) -> ProgramRow {
+        self.label = l.into();
+        self
+    }
+
+    /// Count of routers not idling under this row.
+    pub fn active_routers(&self) -> usize {
+        self.router_cfg
+            .iter()
+            .filter(|c| c.sel != CommandSel::Idle)
+            .count()
+    }
+}
+
+/// A complete IPCN program: an ordered list of rows, executed sequentially
+/// by the NMC with B1/B2 double-buffering handled by `ipcn::npm`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub rows: Vec<ProgramRow>,
+    pub n_routers: usize,
+}
+
+impl Program {
+    pub fn new(n_routers: usize) -> Program {
+        Program {
+            rows: Vec::new(),
+            n_routers,
+        }
+    }
+
+    pub fn push(&mut self, row: ProgramRow) {
+        assert_eq!(
+            row.router_cfg.len(),
+            self.n_routers,
+            "row config width must match router count"
+        );
+        self.rows.push(row);
+    }
+
+    /// Total network cycles the program occupies (sum of repeats), ignoring
+    /// stalls — the NMC issues one row-cycle per clock.
+    pub fn nominal_cycles(&self) -> u64 {
+        self.rows.iter().map(|r| r.repeat as u64).sum()
+    }
+
+    /// Serialize to the hex format the paper's Python toolchain loads into
+    /// the NPM: one row per line,
+    /// `CMD1;CMD2;REPEAT;SEL...` — commands as 8-hex-digit words, SEL as a
+    /// packed 2-bit-per-router hex string. Cross-checked against
+    /// `python/compile/ipcn_api.py` by a golden-vector test.
+    pub fn to_hex(&self) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            let mut sel_bits: Vec<u8> = Vec::with_capacity(self.n_routers.div_ceil(4));
+            let mut cur: u8 = 0;
+            for (i, cfg) in row.router_cfg.iter().enumerate() {
+                cur |= (cfg.sel as u8) << ((i % 4) * 2);
+                if i % 4 == 3 {
+                    sel_bits.push(cur);
+                    cur = 0;
+                }
+            }
+            if self.n_routers % 4 != 0 {
+                sel_bits.push(cur);
+            }
+            let sel_hex: String = sel_bits.iter().map(|b| format!("{b:02x}")).collect();
+            out.push_str(&format!(
+                "{:08x};{:08x};{:08x};{}\n",
+                row.cmd1.encode(),
+                row.cmd2.encode(),
+                row.repeat,
+                sel_hex
+            ));
+        }
+        out
+    }
+
+    /// Parse the hex format back (inverse of [`Program::to_hex`]).
+    pub fn from_hex(text: &str, n_routers: usize) -> crate::Result<Program> {
+        let mut prog = Program::new(n_routers);
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split(';').collect();
+            anyhow::ensure!(parts.len() == 4, "line {}: expected 4 fields", ln + 1);
+            let cmd1 = Instruction::decode(u32::from_str_radix(parts[0], 16)?)
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad CMD1", ln + 1))?;
+            let cmd2 = Instruction::decode(u32::from_str_radix(parts[1], 16)?)
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad CMD2", ln + 1))?;
+            let repeat = u32::from_str_radix(parts[2], 16)?;
+            let sel_hex = parts[3];
+            let mut router_cfg = Vec::with_capacity(n_routers);
+            for i in 0..n_routers {
+                let byte_idx = i / 4;
+                let b = u8::from_str_radix(
+                    sel_hex
+                        .get(byte_idx * 2..byte_idx * 2 + 2)
+                        .ok_or_else(|| anyhow::anyhow!("line {}: SEL too short", ln + 1))?,
+                    16,
+                )?;
+                router_cfg.push(RouterConfig {
+                    sel: CommandSel::from_bits(b >> ((i % 4) * 2)),
+                    sp_offset: 0,
+                });
+            }
+            prog.push(ProgramRow {
+                cmd1,
+                cmd2,
+                router_cfg,
+                repeat,
+                label: String::new(),
+            });
+        }
+        Ok(prog)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Mode, Port, PortSet};
+
+    fn sample_program() -> Program {
+        let mut p = Program::new(6);
+        let route = Instruction::new(
+            PortSet::single(Port::West),
+            Mode::Route,
+            PortSet::single(Port::East),
+        );
+        let psum = Instruction::new(
+            PortSet::of(&[Port::North, Port::South]),
+            Mode::PartialSum,
+            PortSet::single(Port::Pe),
+        );
+        let mut row = ProgramRow::uniform(route, 6, 4);
+        row.cmd2 = psum;
+        row.router_cfg[2].sel = CommandSel::Cmd2;
+        row.router_cfg[5].sel = CommandSel::Idle;
+        p.push(row.with_label("pipeline east + psum at r2"));
+        p.push(ProgramRow::uniform(Instruction::IDLE, 6, 1).with_label("bubble"));
+        p
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let p = sample_program();
+        let hex = p.to_hex();
+        let back = Program::from_hex(&hex, 6).unwrap();
+        assert_eq!(back.rows.len(), p.rows.len());
+        for (a, b) in p.rows.iter().zip(back.rows.iter()) {
+            assert_eq!(a.cmd1, b.cmd1);
+            assert_eq!(a.cmd2, b.cmd2);
+            assert_eq!(a.repeat, b.repeat);
+            let sa: Vec<_> = a.router_cfg.iter().map(|c| c.sel).collect();
+            let sb: Vec<_> = b.router_cfg.iter().map(|c| c.sel).collect();
+            assert_eq!(sa, sb);
+        }
+    }
+
+    #[test]
+    fn instruction_selection() {
+        let p = sample_program();
+        let row = &p.rows[0];
+        assert_eq!(row.instruction_for(0).mode, Mode::Route);
+        assert_eq!(row.instruction_for(2).mode, Mode::PartialSum);
+        assert_eq!(row.instruction_for(5).mode, Mode::Idle);
+        // out-of-range router defaults to idle
+        assert_eq!(row.instruction_for(99).mode, Mode::Idle);
+    }
+
+    #[test]
+    fn nominal_cycles_sums_repeats() {
+        assert_eq!(sample_program().nominal_cycles(), 5);
+    }
+
+    #[test]
+    fn active_router_count() {
+        let p = sample_program();
+        assert_eq!(p.rows[0].active_routers(), 5);
+        assert_eq!(p.rows[1].active_routers(), 6); // uniform row: all CMD1(idle-op)
+    }
+
+    #[test]
+    #[should_panic(expected = "row config width")]
+    fn mismatched_row_width_panics() {
+        let mut p = Program::new(4);
+        p.push(ProgramRow::uniform(Instruction::IDLE, 5, 1));
+    }
+
+    #[test]
+    fn from_hex_rejects_garbage() {
+        assert!(Program::from_hex("zz;00;01;00\n", 1).is_err());
+        assert!(Program::from_hex("00000000;00000000;01\n", 1).is_err());
+    }
+
+    #[test]
+    fn from_hex_skips_comments_and_blanks() {
+        let p = Program::from_hex("# comment\n\n00000000;00000000;00000003;00\n", 2).unwrap();
+        assert_eq!(p.rows.len(), 1);
+        assert_eq!(p.rows[0].repeat, 3);
+    }
+}

@@ -1,0 +1,47 @@
+//! # PICNIC — Silicon Photonic Interconnected Chiplets with Computational
+//! # Network and In-memory Computing for LLM Inference Acceleration
+//!
+//! Full-system reproduction of the PICNIC accelerator (Chong, Wang, Wu,
+//! Fong; cs.AR 2025). The crate contains:
+//!
+//! * the complete hardware substrate as a cycle-level simulator — the IPCN
+//!   2D-mesh of computing routers ([`ipcn`]), its 30-bit ISA ([`isa`]),
+//!   RRAM compute-in-memory processing elements ([`pe`]), the softmax
+//!   compute unit ([`scu`]), the photonic chip-to-chip fabric
+//!   ([`photonic`]), 3D-SIC compute tiles with chiplet clustering and
+//!   power gating ([`chiplet`]), and the power/area model ([`power`]);
+//! * the LLM inference orchestration — partitioning, spatial mapping,
+//!   FlashAttention-style temporal scheduling, cyclic KV caching and
+//!   spanning-tree collectives ([`mapper`]);
+//! * the two-level simulation engine (detailed cycle engine + calibrated
+//!   analytic model) that regenerates every table and figure in the
+//!   paper's evaluation ([`sim`], [`report`]);
+//! * model zoo and baseline platform models ([`models`], [`baselines`]);
+//! * the serving front-end: request batcher, prefill/decode scheduler,
+//!   metrics ([`coordinator`]);
+//! * the PJRT runtime bridge that loads the AOT-compiled JAX/Pallas golden
+//!   model and holds the functional simulator to its numerics
+//!   ([`runtime`]).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod chiplet;
+pub mod config;
+pub mod coordinator;
+pub mod ipcn;
+pub mod isa;
+pub mod mapper;
+pub mod models;
+pub mod pe;
+pub mod photonic;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod scu;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

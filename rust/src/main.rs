@@ -1,0 +1,239 @@
+//! PICNIC CLI: run inference simulations, regenerate every table/figure,
+//! verify the functional simulator against the JAX/Pallas oracle, and
+//! serve a synthetic request stream.
+//!
+//! ```text
+//! picnic run --model 8b --input 1024 --output 1024 [--ccpg] [--electrical] [--json]
+//! picnic report table2|table3|table4|fig8|fig9|fig10|all
+//! picnic verify [--artifacts DIR]
+//! picnic serve --model tiny --requests 32 --prompt-len 64 --gen-len 16
+//! picnic isa-demo
+//! picnic config-dump
+//! ```
+
+use picnic::config::PicnicConfig;
+use picnic::coordinator::{BatchPolicy, Server, ServerConfig};
+use picnic::models::{LlamaConfig, Workload};
+use picnic::report;
+use picnic::sim::AnalyticSim;
+use picnic::util::args::Args;
+use picnic::util::json;
+
+const USAGE: &str = "\
+picnic — PICNIC LLM inference accelerator, full-system simulator
+
+USAGE:
+  picnic run    [--model tiny|1b|8b|13b] [--input N] [--output N] [--ccpg] [--electrical] [--json]
+  picnic report <table2|table3|table4|fig8|fig9|fig10|all>
+  picnic verify [--artifacts DIR]
+  picnic serve  [--model NAME] [--requests N] [--prompt-len N] [--gen-len N]
+  picnic isa-demo
+  picnic config-dump
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> picnic::Result<()> {
+    let args = Args::from_env();
+    let cfg = match args.opt("config") {
+        Some(path) => PicnicConfig::from_json_file(std::path::Path::new(path))?,
+        None => PicnicConfig::default(),
+    };
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_run(&args, cfg),
+        Some("report") => cmd_report(&args, cfg),
+        Some("verify") => {
+            let dir = args
+                .opt("artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(picnic::runtime::ArtifactManifest::default_dir);
+            verify_against_oracle(&dir)
+        }
+        Some("serve") => cmd_serve(&args, cfg),
+        Some("isa-demo") => {
+            isa_demo();
+            Ok(())
+        }
+        Some("config-dump") => {
+            print!("{}", cfg.to_json());
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
+    let model = args.opt_or("model", "8b");
+    let m = LlamaConfig::by_name(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model} (tiny|1b|8b|13b)"))?;
+    let input = args.opt_usize("input", 1024)?;
+    let output = args.opt_usize("output", 1024)?;
+    let mut sim = AnalyticSim::new(cfg.with_ccpg(args.flag("ccpg")));
+    if args.flag("electrical") {
+        sim.link_kind = picnic::photonic::LinkKind::Electrical;
+    }
+    let r = sim.run(&m, &Workload::new(input, output))?;
+    if args.flag("json") {
+        let j = json::obj(vec![
+            ("model", json::s(&r.stats.model)),
+            ("workload", json::s(&r.stats.workload)),
+            ("tiles_deployed", json::num(r.tiles_deployed as f64)),
+            ("ccpg", picnic::util::Json::Bool(r.stats.ccpg_enabled)),
+            ("tokens_per_s", json::num(r.stats.tokens_per_s)),
+            ("avg_power_w", json::num(r.stats.avg_power_w)),
+            ("tokens_per_j", json::num(r.stats.tokens_per_j)),
+            ("c2c_avg_power_w", json::num(r.stats.c2c_avg_power_w)),
+            ("total_cycles", json::num(r.stats.total_cycles as f64)),
+        ]);
+        println!("{j}");
+    } else {
+        println!("model         : {}", r.stats.model);
+        println!("workload      : {}", r.stats.workload);
+        println!("tiles deployed: {}", r.tiles_deployed);
+        println!("ccpg          : {}", r.stats.ccpg_enabled);
+        println!("throughput    : {:.1} tokens/s", r.stats.tokens_per_s);
+        println!("avg power     : {:.4} W", r.stats.avg_power_w);
+        println!("efficiency    : {:.2} tokens/J", r.stats.tokens_per_j);
+        println!("c2c avg power : {:.4} W", r.stats.c2c_avg_power_w);
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let all = what == "all";
+    if all || what == "table2" {
+        println!("{}", report::tables::render_table2(&report::table2(&cfg)?));
+    }
+    if all || what == "table3" {
+        println!("{}", report::tables::render_table3(&report::table3(&cfg)?));
+    }
+    if all || what == "table4" {
+        println!("{}", report::tables::render_table4(&report::table4(&cfg)));
+    }
+    if all || what == "fig8" {
+        println!("{}", report::figures::render_fig8(&report::fig8(&cfg)?));
+    }
+    if all || what == "fig9" {
+        println!("{}", report::figures::render_fig9(&report::fig9(&cfg)?));
+    }
+    if all || what == "fig10" {
+        println!("{}", report::figures::render_fig10(&report::fig10(&cfg, 80)?));
+    }
+    if !all && !["table2", "table3", "table4", "fig8", "fig9", "fig10"].contains(&what.as_str()) {
+        anyhow::bail!("unknown report {what}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
+    let model = args.opt_or("model", "tiny");
+    let m =
+        LlamaConfig::by_name(&model).ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let requests = args.opt_usize("requests", 32)?;
+    let prompt_len = args.opt_usize("prompt-len", 64)?;
+    let gen_len = args.opt_usize("gen-len", 16)?;
+    let mut server = Server::new(ServerConfig {
+        picnic: cfg,
+        model: m,
+        policy: BatchPolicy::default(),
+    });
+    for _ in 0..requests {
+        server
+            .submit(prompt_len, gen_len)
+            .ok_or_else(|| anyhow::anyhow!("queue full"))?;
+    }
+    server.run_to_completion()?;
+    println!(
+        "served {} requests, {} tokens, {:.1} tokens/s (accelerator time), mean TTFT {:.3} ms, p99 latency {:.3} ms",
+        server.metrics.requests.len(),
+        server.metrics.total_tokens,
+        server.metrics.throughput_tokens_per_s(),
+        1e3 * server.metrics.mean_ttft_s(),
+        1e3 * server.metrics.p99_total_s(),
+    );
+    Ok(())
+}
+
+/// Load every artifact and check the PJRT round-trip executes with finite
+/// outputs (full numeric verification lives in rust/tests/test_oracle.rs;
+/// this is the user-facing smoke check).
+fn verify_against_oracle(dir: &std::path::Path) -> picnic::Result<()> {
+    use picnic::runtime::{ArtifactManifest, RuntimeClient};
+    let manifest = ArtifactManifest::load(dir)?;
+    let client = RuntimeClient::cpu()?;
+    println!("PJRT platform: {}", client.platform());
+    for (name, spec) in &manifest.artifacts {
+        let exe = client.compile_hlo_text(&manifest.path_of(name)?)?;
+        let args: Vec<(Vec<f32>, Vec<usize>)> = spec
+            .arg_shapes
+            .iter()
+            .map(|s| (vec![0.1f32; s.iter().product()], s.clone()))
+            .collect();
+        let arg_refs: Vec<(&[f32], &[usize])> = args
+            .iter()
+            .map(|(d, s)| (d.as_slice(), s.as_slice()))
+            .collect();
+        let out = exe.run_f32(&arg_refs)?;
+        anyhow::ensure!(out.iter().all(|v| v.is_finite()), "{name}: non-finite outputs");
+        println!("  {name}: OK ({} outputs)", out.len());
+    }
+    println!("all artifacts execute — run `cargo test --release` for numeric verification");
+    Ok(())
+}
+
+fn isa_demo() {
+    use picnic::isa::{Assembler, FirmwareOp, Instruction, Mode, Port, PortSet};
+    let mut asm = Assembler::new(8);
+    asm.pipeline_east(0, 16);
+    asm.emit(
+        FirmwareOp::region(
+            (1, 0),
+            (1, 7),
+            Instruction::new(
+                PortSet::of(&[Port::North, Port::West]),
+                Mode::Dmac,
+                PortSet::EMPTY,
+            ),
+        )
+        .repeat(32)
+        .label("dmac row 1"),
+    );
+    asm.emit(
+        FirmwareOp::at(
+            1,
+            7,
+            Instruction::new(PortSet::EMPTY, Mode::DmacDrain, PortSet::single(Port::East)),
+        )
+        .label("drain"),
+    );
+    let prog = asm.finish();
+    println!(
+        "IPCN demo program: {} rows, {} nominal cycles",
+        prog.rows.len(),
+        prog.nominal_cycles()
+    );
+    println!("--- hex (NPM load format) ---\n{}", prog.to_hex());
+    for (i, row) in prog.rows.iter().enumerate() {
+        println!(
+            "row {i}: '{}' repeat={} cmd1=[{}] cmd2=[{}] active={}",
+            row.label,
+            row.repeat,
+            row.cmd1,
+            row.cmd2,
+            row.active_routers()
+        );
+    }
+}

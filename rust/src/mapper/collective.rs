@@ -1,0 +1,155 @@
+//! Collective communication (paper §III.3): "The reduction and broadcast
+//! are determined by the spanning tree algorithm, where the data traffic is
+//! balanced and non-congestive due to the regular and aligned mapping."
+//!
+//! We build binary spanning trees over the participating routers of a mesh
+//! region and report depth (latency) and edge-hop counts (energy). The
+//! pipelined cost of moving a `words`-long vector through a depth-`d` tree
+//! is d + words − 1 cycles at one word/cycle/link.
+
+
+/// A spanning tree over a set of mesh routers.
+#[derive(Debug, Clone)]
+pub struct SpanningTree {
+    /// (parent, child) edges, in BFS order from the root.
+    pub edges: Vec<(usize, usize)>,
+    pub root: usize,
+    pub depth: usize,
+    /// Sum of Manhattan hop lengths over all edges.
+    pub total_hops: usize,
+}
+
+impl SpanningTree {
+    /// Build a balanced binary spanning tree over `members` (mesh router
+    /// indices on a `dim`-wide mesh), rooted at the member closest to the
+    /// centroid — the "regular and aligned" shape the paper relies on.
+    pub fn build(members: &[usize], dim: usize) -> SpanningTree {
+        assert!(!members.is_empty(), "spanning tree over empty set");
+        let coord = |r: usize| ((r / dim) as f64, (r % dim) as f64);
+        let (cy, cx) = members.iter().fold((0.0, 0.0), |(ay, ax), &m| {
+            let (y, x) = coord(m);
+            (ay + y / members.len() as f64, ax + x / members.len() as f64)
+        });
+        let root = *members
+            .iter()
+            .min_by(|&&a, &&b| {
+                let da = {
+                    let (y, x) = coord(a);
+                    (y - cy).abs() + (x - cx).abs()
+                };
+                let db = {
+                    let (y, x) = coord(b);
+                    (y - cy).abs() + (x - cx).abs()
+                };
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap();
+
+        // Sort members by distance from root → BFS layering into a binary
+        // tree gives near-minimal depth with aligned traffic.
+        let hop = |a: usize, b: usize| {
+            (a / dim).abs_diff(b / dim) + (a % dim).abs_diff(b % dim)
+        };
+        let mut rest: Vec<usize> = members.iter().copied().filter(|&m| m != root).collect();
+        rest.sort_by_key(|&m| (hop(root, m), m));
+
+        let ordered: Vec<usize> = std::iter::once(root).chain(rest).collect();
+        let mut edges = Vec::with_capacity(ordered.len().saturating_sub(1));
+        let mut depth_of = vec![0usize; ordered.len()];
+        let mut total_hops = 0usize;
+        for i in 1..ordered.len() {
+            let parent_idx = (i - 1) / 2; // binary heap shape
+            edges.push((ordered[parent_idx], ordered[i]));
+            depth_of[i] = depth_of[parent_idx] + 1;
+            total_hops += hop(ordered[parent_idx], ordered[i]);
+        }
+        SpanningTree {
+            edges,
+            root,
+            depth: depth_of.iter().copied().max().unwrap_or(0),
+            total_hops,
+        }
+    }
+
+    pub fn n_members(&self) -> usize {
+        self.edges.len() + 1
+    }
+
+    /// Cycles to broadcast a `words`-long vector root→leaves, pipelined.
+    pub fn broadcast_cycles(&self, words: u64, hop_cycles: u64) -> u64 {
+        self.depth as u64 * hop_cycles + words.saturating_sub(1)
+    }
+
+    /// Cycles to reduce `words` partial sums leaves→root, pipelined
+    /// (same shape as broadcast, opposite direction, plus one add per
+    /// level absorbed in the router's PartialSum op).
+    pub fn reduce_cycles(&self, words: u64, hop_cycles: u64) -> u64 {
+        self.broadcast_cycles(words, hop_cycles)
+    }
+
+    /// Words × hops moved during one broadcast (energy accounting).
+    pub fn broadcast_word_hops(&self, words: u64) -> u64 {
+        self.total_hops as u64 * words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_member_tree_is_trivial() {
+        let t = SpanningTree::build(&[5], 8);
+        assert_eq!(t.root, 5);
+        assert_eq!(t.depth, 0);
+        assert_eq!(t.edges.len(), 0);
+        assert_eq!(t.broadcast_cycles(100, 1), 99);
+    }
+
+    #[test]
+    fn binary_depth_is_logarithmic() {
+        let members: Vec<usize> = (0..64).collect();
+        let t = SpanningTree::build(&members, 8);
+        assert_eq!(t.n_members(), 64);
+        // binary tree over 64 nodes: depth 6 (ceil log2)
+        assert!(t.depth <= 6, "depth {}", t.depth);
+        assert!(t.depth >= 5);
+    }
+
+    #[test]
+    fn root_near_centroid() {
+        // 3×3 block in an 8-wide mesh, rows 0-2 cols 0-2
+        let members: Vec<usize> = vec![0, 1, 2, 8, 9, 10, 16, 17, 18];
+        let t = SpanningTree::build(&members, 8);
+        assert_eq!(t.root, 9, "centre of the block");
+    }
+
+    #[test]
+    fn all_members_connected() {
+        let members: Vec<usize> = (0..31).map(|i| i * 2).collect();
+        let t = SpanningTree::build(&members, 8);
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(t.root);
+        for (p, c) in &t.edges {
+            assert!(seen.contains(p), "edges in BFS order");
+            seen.insert(*c);
+        }
+        assert_eq!(seen.len(), members.len());
+    }
+
+    #[test]
+    fn pipelined_costs() {
+        let members: Vec<usize> = (0..16).collect();
+        let t = SpanningTree::build(&members, 4);
+        let bc = t.broadcast_cycles(256, 1);
+        assert_eq!(bc, t.depth as u64 + 255);
+        assert_eq!(t.reduce_cycles(256, 1), bc);
+        assert_eq!(t.broadcast_word_hops(10), t.total_hops as u64 * 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty set")]
+    fn empty_tree_panics() {
+        SpanningTree::build(&[], 4);
+    }
+}

@@ -1,0 +1,144 @@
+//! FlashAttention scheduling (paper §III.3): "A kernel-fused attention
+//! mechanism, FlashAttention, is adopted in this work. FlashAttention
+//! spawns a two-level nested loop computing flow. The inner loop is
+//! partially unrolled and executed in parallel to fully utilize the DMAC
+//! resources in IPCN."
+//!
+//! This module turns (seq lengths, head dims, DMAC capacity) into a tile
+//! schedule: which (q-tile, kv-tile) pairs run when, and with what unroll
+//! factor — consumed by `schedule` and by the analytic model's cycle
+//! counts. The numerics of the online-softmax recurrence live in the L1
+//! pallas kernel and the SCU model; this is the *temporal* plan.
+
+
+/// Parameters of one attention invocation on a chiplet.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnShape {
+    pub n_heads: usize,
+    pub d_head: usize,
+    /// Query tokens this pass (prefill: chunk; decode: 1).
+    pub seq_q: usize,
+    /// KV length visible.
+    pub seq_kv: usize,
+}
+
+/// The two-level loop schedule.
+#[derive(Debug, Clone)]
+pub struct FlashSchedule {
+    pub shape: AttnShape,
+    /// Q-tile rows per outer step.
+    pub block_q: usize,
+    /// KV-tile rows per inner step.
+    pub block_k: usize,
+    /// Inner-loop iterations executed in parallel on the DMAC banks.
+    pub unroll: usize,
+    /// Outer loop steps.
+    pub outer_steps: usize,
+    /// Inner loop steps per outer step (after unrolling).
+    pub inner_steps: usize,
+}
+
+impl FlashSchedule {
+    /// Plan the loop given DMAC resources: `dmac_routers` routers carrying
+    /// `lanes` MAC lanes each, scratchpad words per router available for
+    /// the S tile.
+    pub fn plan(shape: AttnShape, dmac_routers: usize, lanes: usize) -> FlashSchedule {
+        assert!(shape.seq_q > 0 && shape.seq_kv > 0);
+        // Q tile sized to keep the S tile (block_q × block_k) within the
+        // distributed scratchpads near the attention channels; 32 matches
+        // the L1 kernel's block and the mesh row granularity.
+        let block_q = shape.seq_q.min(32);
+        let block_k = shape.seq_kv.min(32);
+        let inner_total = shape.seq_kv.div_ceil(block_k);
+        // Unroll: one inner iteration consumes block_k·d_head MACs per
+        // head-row; the DMAC pool retires dmac_routers·lanes MACs/cycle.
+        // Unroll until the pool is saturated (≥1).
+        let macs_per_iter = (block_q * block_k * shape.d_head) as u64;
+        let pool_per_cycle = (dmac_routers * lanes) as u64;
+        let cycles_per_iter = macs_per_iter.div_ceil(pool_per_cycle).max(1);
+        let unroll = ((pool_per_cycle * cycles_per_iter) / macs_per_iter.max(1))
+            .clamp(1, inner_total as u64) as usize;
+        FlashSchedule {
+            shape,
+            block_q,
+            block_k,
+            unroll,
+            outer_steps: shape.seq_q.div_ceil(block_q),
+            inner_steps: inner_total.div_ceil(unroll),
+        }
+    }
+
+    /// Total MACs in QKᵀ + SV for this attention pass (both DMAC ops).
+    pub fn total_dmac_macs(&self) -> u64 {
+        let s = &self.shape;
+        2 * (s.n_heads * s.seq_q * s.seq_kv * s.d_head) as u64
+    }
+
+    /// DMAC-bound cycles given the pool throughput.
+    pub fn dmac_cycles(&self, dmac_routers: usize, lanes: usize) -> u64 {
+        let pool = (dmac_routers * lanes) as u64;
+        self.total_dmac_macs().div_ceil(pool.max(1))
+    }
+
+    /// Softmax rows processed by the SCUs (one per q position per head).
+    pub fn softmax_rows(&self) -> u64 {
+        (self.shape.n_heads * self.shape.seq_q) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(seq_q: usize, seq_kv: usize) -> AttnShape {
+        AttnShape {
+            n_heads: 32,
+            d_head: 128,
+            seq_q,
+            seq_kv,
+        }
+    }
+
+    #[test]
+    fn decode_step_single_q_row() {
+        let s = FlashSchedule::plan(shape(1, 1024), 256, 16);
+        assert_eq!(s.outer_steps, 1);
+        assert_eq!(s.block_q, 1);
+        assert!(s.inner_steps >= 1);
+    }
+
+    #[test]
+    fn prefill_tiles_cover_sequence() {
+        let s = FlashSchedule::plan(shape(1024, 1024), 256, 16);
+        assert_eq!(s.outer_steps, 32);
+        assert_eq!(s.block_q, 32);
+        assert_eq!(s.block_k, 32);
+        // coverage: outer·block_q ≥ seq_q, inner·unroll·block_k ≥ seq_kv
+        assert!(s.outer_steps * s.block_q >= 1024);
+        assert!(s.inner_steps * s.unroll * s.block_k >= 1024);
+    }
+
+    #[test]
+    fn unroll_saturates_dmac_pool() {
+        // few DMACs → no unroll; many DMACs → unroll > 1
+        let small = FlashSchedule::plan(shape(32, 2048), 16, 16);
+        let big = FlashSchedule::plan(shape(32, 2048), 1024, 16);
+        assert_eq!(small.unroll, 1);
+        assert!(big.unroll >= small.unroll);
+    }
+
+    #[test]
+    fn mac_count_exact() {
+        let s = FlashSchedule::plan(shape(64, 512), 256, 16);
+        // 2 (QK^T + SV) × H×Sq×Skv×dh
+        assert_eq!(s.total_dmac_macs(), 2 * 32 * 64 * 512 * 128);
+        let c = s.dmac_cycles(1024, 16);
+        assert_eq!(c, s.total_dmac_macs().div_ceil(16384));
+    }
+
+    #[test]
+    fn softmax_row_count() {
+        let s = FlashSchedule::plan(shape(64, 512), 256, 16);
+        assert_eq!(s.softmax_rows(), 32 * 64);
+    }
+}

@@ -1,0 +1,162 @@
+//! KV-cache management (paper §III.3): "The K/V vectors corresponding to
+//! the tokens generated in the decode phase are appended to the scratchpads
+//! pre-allocated to K/V. The K/V vectors are cyclically stored in the
+//! different pre-allocated scratchpads, which enables a balanced
+//! utilization of the distributed scratchpads regardless of the length of
+//! the sequence being processed."
+
+
+/// Where one token's K (or V) vector slice lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvSlot {
+    /// Router whose scratchpad holds this slice.
+    pub router: usize,
+    /// Word offset within that scratchpad.
+    pub offset: usize,
+}
+
+/// Cyclic allocator over the scratchpads of one K or V channel region.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// Scratchpad-owning routers of the channel (from `Placement`).
+    routers: Vec<usize>,
+    /// Words one token's K/V slice occupies in one scratchpad.
+    words_per_token: usize,
+    /// Scratchpad capacity in words reserved for KV (per router).
+    capacity_words: usize,
+    /// Tokens currently cached.
+    len: usize,
+    /// Next router index in the cycle.
+    cursor: usize,
+    /// Per-router write offsets.
+    offsets: Vec<usize>,
+    /// Allocation record per token (index = token position).
+    slots: Vec<KvSlot>,
+}
+
+impl KvCache {
+    pub fn new(routers: Vec<usize>, words_per_token: usize, capacity_words: usize) -> KvCache {
+        assert!(!routers.is_empty(), "KV cache needs home scratchpads");
+        assert!(words_per_token > 0 && capacity_words >= words_per_token);
+        let n = routers.len();
+        KvCache {
+            routers,
+            words_per_token,
+            capacity_words,
+            len: 0,
+            cursor: 0,
+            offsets: vec![0; n],
+            slots: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Max tokens the region can hold.
+    pub fn capacity_tokens(&self) -> usize {
+        (self.capacity_words / self.words_per_token) * self.routers.len()
+    }
+
+    /// Append one token's K/V slice; returns its slot, or None when full.
+    pub fn append(&mut self) -> Option<KvSlot> {
+        if self.len >= self.capacity_tokens() {
+            return None;
+        }
+        let r_idx = self.cursor;
+        let slot = KvSlot {
+            router: self.routers[r_idx],
+            offset: self.offsets[r_idx],
+        };
+        self.offsets[r_idx] += self.words_per_token;
+        self.cursor = (self.cursor + 1) % self.routers.len();
+        self.len += 1;
+        self.slots.push(slot);
+        Some(slot)
+    }
+
+    /// Slot of token `t`.
+    pub fn slot(&self, t: usize) -> Option<KvSlot> {
+        self.slots.get(t).copied()
+    }
+
+    /// Tokens resident in each router's scratchpad — the balance metric.
+    pub fn per_router_tokens(&self) -> Vec<usize> {
+        let mut v = vec![0usize; self.routers.len()];
+        for s in &self.slots {
+            let idx = self.routers.iter().position(|r| *r == s.router).unwrap();
+            v[idx] += 1;
+        }
+        v
+    }
+
+    /// Max imbalance across scratchpads (0 or 1 for cyclic allocation).
+    pub fn imbalance(&self) -> usize {
+        let v = self.per_router_tokens();
+        v.iter().max().unwrap_or(&0) - v.iter().min().unwrap_or(&0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> KvCache {
+        KvCache::new(vec![10, 11, 12, 13], 16, 4096)
+    }
+
+    #[test]
+    fn cyclic_round_robin() {
+        let mut kv = cache();
+        let slots: Vec<KvSlot> = (0..8).map(|_| kv.append().unwrap()).collect();
+        assert_eq!(slots[0].router, 10);
+        assert_eq!(slots[1].router, 11);
+        assert_eq!(slots[3].router, 13);
+        assert_eq!(slots[4].router, 10, "wraps to first scratchpad");
+        assert_eq!(slots[4].offset, 16, "second slice in same scratchpad");
+    }
+
+    #[test]
+    fn balanced_regardless_of_length() {
+        // paper's claim: balanced utilization at any sequence length
+        for n in [1usize, 7, 64, 1000] {
+            let mut kv = cache();
+            for _ in 0..n {
+                kv.append().unwrap();
+            }
+            assert!(kv.imbalance() <= 1, "len {n}: imbalance {}", kv.imbalance());
+        }
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut kv = KvCache::new(vec![0, 1], 8, 16); // 2 tokens/router
+        assert_eq!(kv.capacity_tokens(), 4);
+        for _ in 0..4 {
+            assert!(kv.append().is_some());
+        }
+        assert!(kv.append().is_none(), "full cache rejects appends");
+        assert_eq!(kv.len(), 4);
+    }
+
+    #[test]
+    fn slots_are_recorded_in_order() {
+        let mut kv = cache();
+        kv.append();
+        kv.append();
+        assert_eq!(kv.slot(0).unwrap().router, 10);
+        assert_eq!(kv.slot(1).unwrap().router, 11);
+        assert!(kv.slot(2).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "needs home scratchpads")]
+    fn empty_router_list_panics() {
+        KvCache::new(vec![], 8, 64);
+    }
+}

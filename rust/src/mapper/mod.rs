@@ -1,0 +1,26 @@
+//! LLM inference orchestration (paper §III): end-to-end partitioning,
+//! spatial mapping, and temporal scheduling of decoder layers onto
+//! chiplets, ensuring balanced network traffic and PE utilization.
+//!
+//! * [`partition`]   — split weight/intermediate matrices to PE-crossbar
+//!                     and scratchpad capacity (§III.1)
+//! * [`placement`]   — spatial mapping of W_Q/W_K/W_V/W_O into column-wise
+//!                     rectangular regions (Fig 6) and the co-located
+//!                     scratchpad homes of Q/K/V/S (§III.2)
+//! * [`flashattn`]   — the FlashAttention two-level loop schedule (§III.3)
+//! * [`kvcache`]     — cyclic KV-cache scratchpad allocation (§III.3)
+//! * [`collective`]  — spanning-tree broadcast/reduce cycle costs (§III.3)
+//! * [`schedule`]    — assembling everything into per-layer phase plans the
+//!                     simulators execute
+
+pub mod collective;
+pub mod flashattn;
+pub mod kvcache;
+pub mod partition;
+pub mod placement;
+pub mod schedule;
+
+pub use kvcache::KvCache;
+pub use partition::{MatrixPartition, TileAssignment};
+pub use placement::{ChannelRegion, Placement};
+pub use schedule::{LayerPlan, PhaseOp, ScheduleBuilder};

@@ -1,0 +1,154 @@
+//! Partitioning (paper §III.1): static weights and dynamic intermediates
+//! are split along rows and columns to fit the 256×256 PE crossbars and
+//! 32 KB scratchpads. Partitioning weights adds collective communication:
+//! input broadcast across row-partitions, partial-output reduction across
+//! column-partitions of the embedding dimension D.
+
+
+/// A row/column blocking of an R×C matrix into r×c tiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatrixPartition {
+    pub rows: usize,
+    pub cols: usize,
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+}
+
+impl MatrixPartition {
+    /// Partition an R×C matrix into tiles of at most `max_r`×`max_c`.
+    pub fn fit(rows: usize, cols: usize, max_r: usize, max_c: usize) -> MatrixPartition {
+        assert!(rows > 0 && cols > 0 && max_r > 0 && max_c > 0);
+        MatrixPartition {
+            rows,
+            cols,
+            tile_rows: rows.min(max_r),
+            tile_cols: cols.min(max_c),
+        }
+    }
+
+    /// Number of row blocks (reduction partners per output column).
+    pub fn row_blocks(&self) -> usize {
+        self.rows.div_ceil(self.tile_rows)
+    }
+
+    /// Number of column blocks (input broadcast fan-out).
+    pub fn col_blocks(&self) -> usize {
+        self.cols.div_ceil(self.tile_cols)
+    }
+
+    /// Total PE tiles needed.
+    pub fn n_tiles(&self) -> usize {
+        self.row_blocks() * self.col_blocks()
+    }
+
+    /// The (row_block, col_block) of flat tile index `i`, column-major so
+    /// a matrix occupies a column-wise rectangular region (Fig 6 heuristic:
+    /// "each matrix is heuristically constrained to be mapped in a
+    /// column-wise rectangular region").
+    pub fn tile_coords(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.n_tiles(), "tile index out of range");
+        (i % self.row_blocks(), i / self.row_blocks())
+    }
+
+    /// Actual size of tile (rb, cb) — edge tiles may be smaller.
+    pub fn tile_shape(&self, rb: usize, cb: usize) -> (usize, usize) {
+        let r = if (rb + 1) * self.tile_rows <= self.rows {
+            self.tile_rows
+        } else {
+            self.rows - rb * self.tile_rows
+        };
+        let c = if (cb + 1) * self.tile_cols <= self.cols {
+            self.tile_cols
+        } else {
+            self.cols - cb * self.tile_cols
+        };
+        (r, c)
+    }
+}
+
+/// Assignment of one weight matrix to router-PE pairs on a tile.
+#[derive(Debug, Clone)]
+pub struct TileAssignment {
+    pub partition: MatrixPartition,
+    /// Router indices (into the 2D mesh, row-major) per matrix tile,
+    /// parallel to flat tile index.
+    pub routers: Vec<usize>,
+}
+
+impl TileAssignment {
+    /// Routers that hold row-block partners for column block `cb` — these
+    /// participate in the partial-output reduction.
+    pub fn reduction_group(&self, cb: usize) -> &[usize] {
+        let rb = self.partition.row_blocks();
+        &self.routers[cb * rb..(cb + 1) * rb]
+    }
+
+    /// All routers across column blocks for a given row block — the input
+    /// broadcast group for that slice of the input vector.
+    pub fn broadcast_group(&self, rb: usize) -> Vec<usize> {
+        (0..self.partition.col_blocks())
+            .map(|cb| self.routers[cb * self.partition.row_blocks() + rb])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit_no_padding() {
+        let p = MatrixPartition::fit(4096, 4096, 256, 256);
+        assert_eq!(p.row_blocks(), 16);
+        assert_eq!(p.col_blocks(), 16);
+        assert_eq!(p.n_tiles(), 256);
+        assert_eq!(p.tile_shape(0, 0), (256, 256));
+        assert_eq!(p.tile_shape(15, 15), (256, 256));
+    }
+
+    #[test]
+    fn ragged_edges() {
+        let p = MatrixPartition::fit(300, 500, 256, 256);
+        assert_eq!(p.row_blocks(), 2);
+        assert_eq!(p.col_blocks(), 2);
+        assert_eq!(p.tile_shape(1, 0), (44, 256));
+        assert_eq!(p.tile_shape(0, 1), (256, 244));
+    }
+
+    #[test]
+    fn small_matrix_single_tile() {
+        let p = MatrixPartition::fit(64, 64, 256, 256);
+        assert_eq!(p.n_tiles(), 1);
+        assert_eq!(p.tile_shape(0, 0), (64, 64));
+    }
+
+    #[test]
+    fn column_major_coords() {
+        let p = MatrixPartition::fit(512, 512, 256, 256);
+        // 2×2 blocks, column-major: 0→(0,0) 1→(1,0) 2→(0,1) 3→(1,1)
+        assert_eq!(p.tile_coords(0), (0, 0));
+        assert_eq!(p.tile_coords(1), (1, 0));
+        assert_eq!(p.tile_coords(2), (0, 1));
+        assert_eq!(p.tile_coords(3), (1, 1));
+    }
+
+    #[test]
+    fn reduction_and_broadcast_groups() {
+        let partition = MatrixPartition::fit(512, 768, 256, 256); // 2×3 blocks
+        let routers: Vec<usize> = (100..106).collect();
+        let a = TileAssignment {
+            partition,
+            routers,
+        };
+        assert_eq!(a.reduction_group(0), &[100, 101]);
+        assert_eq!(a.reduction_group(2), &[104, 105]);
+        assert_eq!(a.broadcast_group(0), vec![100, 102, 104]);
+        assert_eq!(a.broadcast_group(1), vec![101, 103, 105]);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile index out of range")]
+    fn oob_tile_panics() {
+        MatrixPartition::fit(256, 256, 256, 256).tile_coords(1);
+    }
+}

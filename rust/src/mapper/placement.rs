@@ -1,0 +1,304 @@
+//! Spatial mapping (paper §III.2, Fig 6): the partitioned W_Q/W_K/W_V/W_O
+//! are mapped to PE crossbars in column-wise rectangular regions — the
+//! K-Q-V-O *channels* — and the Q/K/V/S intermediates live in the
+//! scratchpads of the same regions ("Q is stored in the scratchpads of the
+//! router-PE pairs where W_Q has been pre-placed, which enables output
+//! reduction in the vicinity").
+//!
+//! The optimizer tweaks three factors (paper): intra-matrix shape,
+//! inter-matrix shape, and row-column order; the heuristic adopted is the
+//! column-channel layout of Fig 6, which we implement directly and expose
+//! a cost function for so the ablation bench can compare alternatives.
+
+use super::partition::{MatrixPartition, TileAssignment};
+use crate::models::{LayerKind, ModelLayer};
+
+/// One weight matrix's rectangular region on the mesh.
+#[derive(Debug, Clone)]
+pub struct ChannelRegion {
+    pub name: String,
+    /// Mesh columns [col0, col1) this channel occupies.
+    pub col0: usize,
+    pub col1: usize,
+    pub assignment: TileAssignment,
+}
+
+impl ChannelRegion {
+    pub fn width(&self) -> usize {
+        self.col1 - self.col0
+    }
+}
+
+/// Placement of one model layer onto a (possibly multi-tile) mesh strip.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub mesh_dim: usize,
+    /// Virtual grid width in router columns: `tiles_needed() × mesh_dim`.
+    /// Router ids in the channel assignments index a (mesh_dim × grid_w)
+    /// grid; columns ≥ mesh_dim live on subsequent chiplets.
+    pub grid_w: usize,
+    pub channels: Vec<ChannelRegion>,
+    /// Router-PE pairs actually used.
+    pub pairs_used: usize,
+}
+
+impl Placement {
+    /// Map an attention layer's four projections as K-Q-V-O column channels
+    /// (Fig 6 ordering), or a single FFN projection as one channel.
+    pub fn for_layer(
+        layer: &ModelLayer,
+        d_model: usize,
+        kv_width: usize,
+        mesh_dim: usize,
+        pe_dim: usize,
+    ) -> crate::Result<Placement> {
+        let mats: Vec<(String, usize, usize)> = match layer.kind {
+            LayerKind::Attention => vec![
+                // Fig 6 channel order: K, Q, V, O
+                ("W_K".into(), d_model, kv_width),
+                ("W_Q".into(), d_model, d_model),
+                ("W_V".into(), d_model, kv_width),
+                ("W_O".into(), d_model, d_model),
+            ],
+            LayerKind::FfnGate => vec![("W_gate".into(), layer.rows, layer.cols)],
+            LayerKind::FfnUp => vec![("W_up".into(), layer.rows, layer.cols)],
+            LayerKind::FfnDown => vec![("W_down".into(), layer.rows, layer.cols)],
+        };
+
+        // Each channel is a column-wise rectangle of height `mesh_dim`
+        // (the full mesh column), filled column-major in flat tile order —
+        // a serpentine fold of the (row_blocks × col_blocks) partition.
+        // The fold keeps each reduction group (one col_block's row chain)
+        // contiguous in the grid, so spanning trees stay local. When the
+        // total width exceeds one mesh, the layer spills onto additional
+        // chiplets: columns continue on the next tile's mesh and the
+        // cross-tile hop is carried by the optical fabric (the schedule's
+        // C2C phase covers it).
+        let widths: Vec<usize> = mats
+            .iter()
+            .map(|(_, rows, cols)| {
+                MatrixPartition::fit(*rows, *cols, pe_dim, pe_dim)
+                    .n_tiles()
+                    .div_ceil(mesh_dim)
+            })
+            .collect();
+        let total_cols: usize = widths.iter().sum::<usize>().max(1);
+        // virtual grid width: whole tiles
+        let grid_w = total_cols.div_ceil(mesh_dim) * mesh_dim;
+
+        let mut channels = Vec::with_capacity(mats.len());
+        let mut next_col = 0usize;
+        let mut pairs_used = 0usize;
+        for ((name, rows, cols), width) in mats.into_iter().zip(widths) {
+            let part = MatrixPartition::fit(rows, cols, pe_dim, pe_dim);
+            let mut routers = Vec::with_capacity(part.n_tiles());
+            for p in 0..part.n_tiles() {
+                let row = p % mesh_dim;
+                let col = next_col + p / mesh_dim;
+                routers.push(row * grid_w + col);
+            }
+            pairs_used += routers.len();
+            channels.push(ChannelRegion {
+                name,
+                col0: next_col,
+                col1: next_col + width,
+                assignment: TileAssignment {
+                    partition: part,
+                    routers,
+                },
+            });
+            next_col += width;
+        }
+        Ok(Placement {
+            mesh_dim,
+            grid_w,
+            channels,
+            pairs_used,
+        })
+    }
+
+    /// Compute tiles (chiplets) this layer occupies.
+    pub fn tiles_needed(&self) -> usize {
+        self.grid_w / self.mesh_dim
+    }
+
+    /// Ablation baseline: the naive *row-band* mapping — channels stacked
+    /// as horizontal bands, tiles filled row-major within each band. This
+    /// is what you get without the paper's column-channel heuristic; the
+    /// `ablation` bench shows its reduction trees are deeper and its
+    /// traffic less aligned (higher locality cost) than Fig 6's layout.
+    pub fn for_layer_rowmajor(
+        layer: &ModelLayer,
+        d_model: usize,
+        kv_width: usize,
+        mesh_dim: usize,
+        pe_dim: usize,
+    ) -> crate::Result<Placement> {
+        // Reuse the channel decomposition, then re-place row-major.
+        let mut p = Self::for_layer(layer, d_model, kv_width, mesh_dim, pe_dim)?;
+        let grid_w = p.grid_w;
+        let mut next_flat = 0usize; // flat fill across the whole grid
+        for ch in &mut p.channels {
+            for r in ch.assignment.routers.iter_mut() {
+                // row-major walk of the grid
+                let row = (next_flat / grid_w) % mesh_dim;
+                let col = next_flat % grid_w;
+                *r = row * grid_w + col;
+                next_flat += 1;
+            }
+        }
+        Ok(p)
+    }
+
+    pub fn channel(&self, name: &str) -> Option<&ChannelRegion> {
+        self.channels.iter().find(|c| c.name == name)
+    }
+
+    /// Placement cost — mean Manhattan distance between reduction partners
+    /// plus channel-to-channel transfer distance. Lower = better locality.
+    /// Used by the mapping-ablation bench to show why the Fig 6 layout wins.
+    pub fn locality_cost(&self) -> f64 {
+        let dim = self.grid_w;
+        let coord = |r: usize| (r / dim, r % dim);
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for ch in &self.channels {
+            let part = &ch.assignment.partition;
+            for cb in 0..part.col_blocks() {
+                let group = ch.assignment.reduction_group(cb);
+                // chain distance along the reduction tree
+                for w in group.windows(2) {
+                    let (ar, ac) = coord(w[0]);
+                    let (br, bc) = coord(w[1]);
+                    total += (ar.abs_diff(br) + ac.abs_diff(bc)) as f64;
+                    n += 1;
+                }
+            }
+        }
+        // inter-channel: Q→(K,V) score traffic, V→O output traffic
+        for w in self.channels.windows(2) {
+            total += (w[1].col0 - w[0].col0) as f64;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            total / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::LlamaConfig;
+
+    fn attn_layer(cfg: &LlamaConfig) -> ModelLayer {
+        cfg.layers()[0]
+    }
+
+    #[test]
+    fn tiny_attention_fits_one_column_each() {
+        let cfg = LlamaConfig::tiny();
+        let layer = attn_layer(&cfg);
+        let p = Placement::for_layer(&layer, cfg.d_model, cfg.kv_width(), 32, 256).unwrap();
+        assert_eq!(p.channels.len(), 4);
+        assert_eq!(p.channels[0].name, "W_K");
+        assert_eq!(p.channels[1].name, "W_Q");
+        assert_eq!(p.channels[2].name, "W_V");
+        assert_eq!(p.channels[3].name, "W_O");
+        // 64×64 matrices → one PE each
+        assert_eq!(p.pairs_used, 4);
+    }
+
+    #[test]
+    fn llama1b_attention_fits_mesh() {
+        let cfg = LlamaConfig::llama32_1b();
+        let layer = attn_layer(&cfg);
+        let p = Placement::for_layer(&layer, cfg.d_model, cfg.kv_width(), 32, 256).unwrap();
+        // D=2048: W_Q is 8×8 blocks = 64 PEs folded into a 32-tall column
+        // pair (serpentine): width 2
+        let q = p.channel("W_Q").unwrap();
+        assert_eq!(q.assignment.partition.row_blocks(), 8);
+        assert_eq!(q.assignment.partition.n_tiles(), 64);
+        assert_eq!(q.width(), 2);
+        // K: 2048×512 → 8×2 blocks = 16 PEs → width 1
+        let k = p.channel("W_K").unwrap();
+        assert_eq!(k.assignment.partition.n_tiles(), 16);
+        assert_eq!(k.width(), 1);
+        assert!(p.pairs_used <= 32 * 32);
+        assert_eq!(p.tiles_needed(), 1, "1B attention fits one chiplet");
+        // channels must not overlap
+        for w in p.channels.windows(2) {
+            assert!(w[0].col1 <= w[1].col0);
+        }
+        // all router ids unique and on the grid
+        let mut ids: Vec<usize> = p
+            .channels
+            .iter()
+            .flat_map(|c| c.assignment.routers.iter().copied())
+            .collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "no two matrix tiles share a PE");
+        assert!(ids.iter().all(|&r| r < 32 * p.grid_w));
+    }
+
+    #[test]
+    fn llama8b_attention_fits_one_tile() {
+        let cfg = LlamaConfig::llama3_8b();
+        let layer = attn_layer(&cfg);
+        let p = Placement::for_layer(&layer, cfg.d_model, cfg.kv_width(), 32, 256).unwrap();
+        // D=4096 → 16 row blocks; Q/O 256 PEs (width 8), K/V 64 PEs (width 2)
+        assert_eq!(p.pairs_used, 16 * 16 * 2 + 16 * 4 * 2);
+        assert_eq!(
+            p.channels.iter().map(|c| c.width()).sum::<usize>(),
+            2 + 8 + 2 + 8
+        );
+        assert_eq!(p.tiles_needed(), 1);
+    }
+
+    #[test]
+    fn llama13b_attention_spills_to_second_tile() {
+        let cfg = LlamaConfig::llama2_13b();
+        let layer = attn_layer(&cfg);
+        let p = Placement::for_layer(&layer, cfg.d_model, cfg.kv_width(), 32, 256).unwrap();
+        // MHA D=5120: 4 × (20×20) = 1600 PEs > 1024 per tile → 2 chiplets
+        assert_eq!(p.pairs_used, 1600);
+        assert_eq!(p.tiles_needed(), 2);
+        assert!(p.grid_w == 64);
+    }
+
+    #[test]
+    fn ffn_single_channel() {
+        let cfg = LlamaConfig::llama32_1b();
+        let layer = cfg.layers()[1]; // gate: 2048×8192
+        let p = Placement::for_layer(&layer, cfg.d_model, cfg.kv_width(), 32, 256).unwrap();
+        assert_eq!(p.channels.len(), 1);
+        assert_eq!(p.channels[0].assignment.partition.n_tiles(), 8 * 32);
+        assert_eq!(p.pairs_used, 256);
+        assert_eq!(p.channels[0].width(), 8);
+    }
+
+    #[test]
+    fn tall_ffn_down_serpentines() {
+        // 8B FFN down: 14336×4096 → 56 row blocks > 32 mesh rows; the
+        // serpentine fold must still fit one chiplet (896 PEs ≤ 1024).
+        let cfg = LlamaConfig::llama3_8b();
+        let layers = cfg.layers();
+        let down = layers.iter().find(|l| l.kind == LayerKind::FfnDown).unwrap();
+        let p = Placement::for_layer(down, cfg.d_model, cfg.kv_width(), 32, 256).unwrap();
+        assert_eq!(p.pairs_used, 56 * 16);
+        assert_eq!(p.tiles_needed(), 1);
+    }
+
+    #[test]
+    fn locality_cost_positive_and_finite() {
+        let cfg = LlamaConfig::llama32_1b();
+        let p =
+            Placement::for_layer(&attn_layer(&cfg), cfg.d_model, cfg.kv_width(), 32, 256).unwrap();
+        let c = p.locality_cost();
+        assert!(c.is_finite() && c > 0.0);
+    }
+}

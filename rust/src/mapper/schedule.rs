@@ -1,0 +1,350 @@
+//! Temporal scheduling (paper §III.3): assembles partitioning, placement,
+//! FlashAttention tiling, KV caching and collectives into a per-layer
+//! *phase plan* — the ordered communication/compute phases one layer
+//! executes for one token batch. The analytic simulator walks these plans
+//! to produce latency and energy; the detailed engine executes the same
+//! plans as IPCN programs on small configs (the calibration tests tie the
+//! two together).
+
+use super::collective::SpanningTree;
+use super::flashattn::{AttnShape, FlashSchedule};
+use super::placement::Placement;
+use crate::config::PicnicConfig;
+use crate::models::{LayerKind, LlamaConfig, ModelLayer};
+
+/// One phase of a layer's execution.
+#[derive(Debug, Clone)]
+pub enum PhaseOp {
+    /// Broadcast an input vector of `words` into a channel region.
+    Broadcast { channel: String, words: u64, tree_depth: u64, word_hops: u64 },
+    /// Analog SMAC across the channel's crossbars: `row_blocks` partial
+    /// passes per input vector, `vectors` input vectors.
+    Smac { channel: String, vectors: u64, row_blocks: u64, n_crossbars: u64 },
+    /// Reduce partial outputs down the channel's trees.
+    Reduce { channel: String, words: u64, tree_depth: u64, word_hops: u64 },
+    /// DMAC attention work (QKᵀ + SV) per the flash schedule.
+    Dmac { macs: u64, pool_routers: u64, scratch_words: u64 },
+    /// SCU softmax over `rows` rows of `row_len` elements.
+    Softmax { rows: u64, row_len: u64, scus: u64 },
+    /// Append `words` of K/V to the cyclic cache (scratchpad writes).
+    KvAppend { words: u64 },
+    /// Chip-to-chip transfer of `bits` to the next layer's chiplet.
+    C2c { bits: u64 },
+}
+
+/// The full plan of one layer for one step (prefill chunk or decode token).
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub layer: ModelLayer,
+    pub phases: Vec<PhaseOp>,
+    /// Router-PE pairs this layer's weights occupy (power accounting).
+    pub pairs_used: usize,
+    /// Chiplets this layer spans (1 unless the layer spills).
+    pub tiles_needed: usize,
+}
+
+/// Builds plans for each layer of a model.
+pub struct ScheduleBuilder<'a> {
+    pub cfg: &'a PicnicConfig,
+    pub model: &'a LlamaConfig,
+}
+
+impl<'a> ScheduleBuilder<'a> {
+    pub fn new(cfg: &'a PicnicConfig, model: &'a LlamaConfig) -> Self {
+        ScheduleBuilder { cfg, model }
+    }
+
+    /// Plan one layer for a pass of `seq_q` query tokens against `seq_kv`
+    /// total KV length (decode: seq_q=1).
+    pub fn plan_layer(
+        &self,
+        layer: &ModelLayer,
+        seq_q: usize,
+        seq_kv: usize,
+    ) -> crate::Result<LayerPlan> {
+        let sys = &self.cfg.system;
+        let placement = Placement::for_layer(
+            layer,
+            self.model.d_model,
+            self.model.kv_width(),
+            sys.ipcn_dim,
+            sys.pe_array_dim,
+        )?;
+        let mut phases = Vec::new();
+        let bits_per_word = sys.bit_width as u64;
+
+        match layer.kind {
+            LayerKind::Attention => {
+                // 1. multicast the (seq_q × D) input into the K/Q/V
+                //    channels (one tree over the union — the Fig 6
+                //    co-location exists exactly so this is a single
+                //    broadcast); 2. SMAC projections; 3. per-column partial
+                //    reductions (column groups reduce in parallel — cost is
+                //    the per-group slice, energy is the full word·hops);
+                //    4. KV append; 5. DMAC QKᵀ; 6. SCU softmax; 7. DMAC SV;
+                //    8. O broadcast + SMAC + reduce; 9. C2C out.
+                let kqv: Vec<usize> = placement.channels[..3]
+                    .iter()
+                    .flat_map(|c| c.assignment.routers.iter().copied())
+                    .collect();
+                let kqv_tree = SpanningTree::build(&kqv, placement.grid_w);
+                let in_words = (seq_q * self.model.d_model) as u64;
+                phases.push(PhaseOp::Broadcast {
+                    channel: "x→KQV".into(),
+                    words: in_words,
+                    tree_depth: kqv_tree.depth as u64,
+                    word_hops: kqv_tree.broadcast_word_hops(in_words),
+                });
+                for ch in &placement.channels[..3] {
+                    let tree =
+                        SpanningTree::build(&ch.assignment.routers, placement.grid_w);
+                    let part = &ch.assignment.partition;
+                    phases.push(PhaseOp::Smac {
+                        channel: ch.name.clone(),
+                        vectors: seq_q as u64,
+                        row_blocks: part.row_blocks() as u64,
+                        n_crossbars: part.n_tiles() as u64,
+                    });
+                    // parallel per-column reduction: latency = one column
+                    // group's slice through the tree; energy = all slices
+                    let slice_words = (seq_q * part.tile_cols) as u64;
+                    let all_words = (seq_q * part.cols) as u64;
+                    phases.push(PhaseOp::Reduce {
+                        channel: ch.name.clone(),
+                        words: slice_words,
+                        tree_depth: tree.depth as u64,
+                        word_hops: tree.broadcast_word_hops(all_words),
+                    });
+                }
+                // KV append: K and V slices for the new tokens.
+                let kv_words = (2 * seq_q * self.model.kv_width()) as u64;
+                phases.push(PhaseOp::KvAppend { words: kv_words });
+
+                // attention proper
+                let shape = AttnShape {
+                    n_heads: self.model.n_heads,
+                    d_head: self.model.d_head(),
+                    seq_q,
+                    seq_kv,
+                };
+                // DMAC pool: the FlashAttention inner loop streams K/V out
+                // of their home scratchpads, so only router-PE pairs in the
+                // K and V channel regions contribute MAC lanes (the Fig 6
+                // co-location argument, §III.2) — not the whole tile.
+                let pool = (placement.channels[0].assignment.routers.len()
+                    + placement.channels[2].assignment.routers.len())
+                .max(1);
+                let flash = FlashSchedule::plan(shape, pool, sys.dmac_per_router);
+                phases.push(PhaseOp::Dmac {
+                    macs: flash.total_dmac_macs(),
+                    pool_routers: pool as u64,
+                    scratch_words: (flash.block_q * flash.block_k) as u64,
+                });
+                phases.push(PhaseOp::Softmax {
+                    rows: flash.softmax_rows(),
+                    row_len: seq_kv as u64,
+                    scus: sys.scu_per_tile as u64,
+                });
+                // O projection: broadcast the attention output into the O
+                // channel, SMAC, reduce.
+                let o_ch = &placement.channels[3];
+                let o_tree =
+                    SpanningTree::build(&o_ch.assignment.routers, placement.grid_w);
+                let o_part = &o_ch.assignment.partition;
+                phases.push(PhaseOp::Broadcast {
+                    channel: o_ch.name.clone(),
+                    words: in_words,
+                    tree_depth: o_tree.depth as u64,
+                    word_hops: o_tree.broadcast_word_hops(in_words),
+                });
+                phases.push(PhaseOp::Smac {
+                    channel: o_ch.name.clone(),
+                    vectors: seq_q as u64,
+                    row_blocks: o_part.row_blocks() as u64,
+                    n_crossbars: o_part.n_tiles() as u64,
+                });
+                let o_all = (seq_q * o_part.cols) as u64;
+                phases.push(PhaseOp::Reduce {
+                    channel: o_ch.name.clone(),
+                    words: (seq_q * o_part.tile_cols) as u64,
+                    tree_depth: o_tree.depth as u64,
+                    word_hops: o_tree.broadcast_word_hops(o_all),
+                });
+                // output leaves the chiplet
+                phases.push(PhaseOp::C2c {
+                    bits: (seq_q * self.model.d_model) as u64 * bits_per_word,
+                });
+            }
+            LayerKind::FfnGate | LayerKind::FfnUp | LayerKind::FfnDown => {
+                let ch = &placement.channels[0];
+                let members = &ch.assignment.routers;
+                let tree = SpanningTree::build(members, placement.grid_w);
+                let in_words = (seq_q * layer.rows) as u64;
+                phases.push(PhaseOp::Broadcast {
+                    channel: ch.name.clone(),
+                    words: in_words,
+                    tree_depth: tree.depth as u64,
+                    word_hops: tree.broadcast_word_hops(in_words),
+                });
+                phases.push(PhaseOp::Smac {
+                    channel: ch.name.clone(),
+                    vectors: seq_q as u64,
+                    row_blocks: ch.assignment.partition.row_blocks() as u64,
+                    n_crossbars: ch.assignment.partition.n_tiles() as u64,
+                });
+                // per-column reduction groups run in parallel: latency is
+                // one group's output slice; energy covers all of them
+                let out_words = (seq_q * layer.cols) as u64;
+                phases.push(PhaseOp::Reduce {
+                    channel: ch.name.clone(),
+                    words: (seq_q * ch.assignment.partition.tile_cols) as u64,
+                    tree_depth: tree.depth as u64,
+                    word_hops: tree.broadcast_word_hops(out_words),
+                });
+                phases.push(PhaseOp::C2c {
+                    bits: out_words * bits_per_word,
+                });
+            }
+        }
+
+        Ok(LayerPlan {
+            layer: *layer,
+            phases,
+            pairs_used: placement.pairs_used,
+            tiles_needed: placement.tiles_needed(),
+        })
+    }
+
+    /// Plans for every layer of the model at the given step shape.
+    ///
+    /// Layers with identical (kind, rows, cols) produce identical plans at
+    /// a given step shape (the decoder index only labels them), so one plan
+    /// is built per distinct shape and cloned — for a 40-decoder model this
+    /// turns 160 placement constructions into 4.
+    pub fn plan_all(&self, seq_q: usize, seq_kv: usize) -> crate::Result<Vec<LayerPlan>> {
+        use std::collections::HashMap;
+        let mut cache: HashMap<(crate::models::LayerKind, usize, usize), LayerPlan> =
+            HashMap::new();
+        self.model
+            .layers()
+            .iter()
+            .map(|l| {
+                let key = (l.kind, l.rows, l.cols);
+                let plan = match cache.get(&key) {
+                    Some(p) => p.clone(),
+                    None => {
+                        let p = self.plan_layer(l, seq_q, seq_kv)?;
+                        cache.insert(key, p.clone());
+                        p
+                    }
+                };
+                Ok(LayerPlan {
+                    layer: *l,
+                    ..plan
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PicnicConfig;
+
+    fn cfg() -> PicnicConfig {
+        PicnicConfig::default()
+    }
+
+    #[test]
+    fn attention_plan_has_all_phases() {
+        let cfg = cfg();
+        let model = LlamaConfig::llama32_1b();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let layers = model.layers();
+        let plan = b.plan_layer(&layers[0], 1, 512).unwrap();
+        let kinds: Vec<&str> = plan
+            .phases
+            .iter()
+            .map(|p| match p {
+                PhaseOp::Broadcast { .. } => "bcast",
+                PhaseOp::Smac { .. } => "smac",
+                PhaseOp::Reduce { .. } => "reduce",
+                PhaseOp::Dmac { .. } => "dmac",
+                PhaseOp::Softmax { .. } => "softmax",
+                PhaseOp::KvAppend { .. } => "kv",
+                PhaseOp::C2c { .. } => "c2c",
+            })
+            .collect();
+        // one x→KQV multicast + one O broadcast; 4 smacs; 4 reduces
+        assert_eq!(kinds.iter().filter(|k| **k == "bcast").count(), 2);
+        assert_eq!(kinds.iter().filter(|k| **k == "smac").count(), 4);
+        assert_eq!(kinds.iter().filter(|k| **k == "reduce").count(), 4);
+        assert!(kinds.contains(&"dmac"));
+        assert!(kinds.contains(&"softmax"));
+        assert!(kinds.contains(&"kv"));
+        assert_eq!(*kinds.last().unwrap(), "c2c");
+    }
+
+    #[test]
+    fn ffn_plan_is_linear() {
+        let cfg = cfg();
+        let model = LlamaConfig::llama32_1b();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let layers = model.layers();
+        let plan = b.plan_layer(&layers[1], 1, 512).unwrap();
+        assert_eq!(plan.phases.len(), 4); // bcast, smac, reduce, c2c
+    }
+
+    #[test]
+    fn decode_dmac_scales_with_kv_len() {
+        let cfg = cfg();
+        let model = LlamaConfig::llama3_8b();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let layers = model.layers();
+        let short = b.plan_layer(&layers[0], 1, 512).unwrap();
+        let long = b.plan_layer(&layers[0], 1, 2048).unwrap();
+        let macs = |p: &LayerPlan| {
+            p.phases
+                .iter()
+                .filter_map(|ph| match ph {
+                    PhaseOp::Dmac { macs, .. } => Some(*macs),
+                    _ => None,
+                })
+                .sum::<u64>()
+        };
+        assert_eq!(macs(&long), 4 * macs(&short), "KV 4× → DMAC 4×");
+    }
+
+    #[test]
+    fn all_layers_plan_for_all_models() {
+        let cfg = cfg();
+        for model in [
+            LlamaConfig::llama32_1b(),
+            LlamaConfig::llama3_8b(),
+            LlamaConfig::llama2_13b(),
+        ] {
+            let b = ScheduleBuilder::new(&cfg, &model);
+            let plans = b.plan_all(1, 1024).unwrap();
+            assert_eq!(plans.len(), model.n_decoders * 4);
+            assert!(plans.iter().all(|p| !p.phases.is_empty()));
+            assert!(plans
+                .iter()
+                .all(|p| p.pairs_used <= p.tiles_needed * cfg.system.routers_per_tile()));
+        }
+    }
+
+    #[test]
+    fn c2c_bits_match_output_width() {
+        let cfg = cfg();
+        let model = LlamaConfig::llama32_1b();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let layers = model.layers();
+        let plan = b.plan_layer(&layers[0], 1, 512).unwrap();
+        if let PhaseOp::C2c { bits } = plan.phases.last().unwrap() {
+            assert_eq!(*bits, (model.d_model * 64) as u64);
+        } else {
+            panic!("last phase must be C2C");
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Llama-family model configurations at true dimensions.
+//!
+//! Paper §III: "each chiplet stores an attention layer or a feed-forward
+//! layer. For example, Llama 3.2-1B holds 16 decoders, where each decoder
+//! comprises an attention layer and three feed-forward layers."
+
+
+/// Kind of a mapped layer (the unit of chiplet allocation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Full attention layer: W_Q, W_K, W_V, W_O + attention dataflow.
+    Attention,
+    /// One of the three SwiGLU projections (gate / up / down).
+    FfnGate,
+    FfnUp,
+    FfnDown,
+}
+
+/// One layer as the mapper sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelLayer {
+    pub kind: LayerKind,
+    /// Decoder index this layer belongs to.
+    pub decoder: usize,
+    /// Weight matrix rows (input features).
+    pub rows: usize,
+    /// Weight matrix cols (output features); for Attention this is the sum
+    /// of the four projection output widths.
+    pub cols: usize,
+}
+
+impl ModelLayer {
+    pub fn params(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// A Llama-style decoder-only transformer configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LlamaConfig {
+    pub name: String,
+    pub n_decoders: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads (grouped-query attention; = n_heads for MHA).
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+}
+
+impl LlamaConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// KV projection width = n_kv_heads × d_head.
+    pub fn kv_width(&self) -> usize {
+        self.n_kv_heads * self.d_head()
+    }
+
+    /// Llama 3.2-1B: 16 decoders, d=2048, 32 heads / 8 KV heads, ffn 8192.
+    pub fn llama32_1b() -> LlamaConfig {
+        LlamaConfig {
+            name: "Llama 3.2-1B".into(),
+            n_decoders: 16,
+            d_model: 2048,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 8192,
+        }
+    }
+
+    /// Llama 3-8B: 32 decoders, d=4096, 32 heads / 8 KV heads, ffn 14336.
+    pub fn llama3_8b() -> LlamaConfig {
+        LlamaConfig {
+            name: "Llama 3-8B".into(),
+            n_decoders: 32,
+            d_model: 4096,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_ff: 14336,
+        }
+    }
+
+    /// Llama 2-13B: 40 decoders, d=5120, 40 heads MHA, ffn 13824.
+    pub fn llama2_13b() -> LlamaConfig {
+        LlamaConfig {
+            name: "Llama 2-13B".into(),
+            n_decoders: 40,
+            d_model: 5120,
+            n_heads: 40,
+            n_kv_heads: 40,
+            d_ff: 13824,
+        }
+    }
+
+    /// A tiny config used by cycle-level tests and the functional oracle —
+    /// matches python/compile/model.py::TINY.
+    pub fn tiny() -> LlamaConfig {
+        LlamaConfig {
+            name: "tiny".into(),
+            n_decoders: 1,
+            d_model: 64,
+            n_heads: 4,
+            n_kv_heads: 4,
+            d_ff: 128,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<LlamaConfig> {
+        match name.to_ascii_lowercase().as_str() {
+            "1b" | "llama1b" | "llama3.2-1b" => Some(Self::llama32_1b()),
+            "8b" | "llama8b" | "llama3-8b" => Some(Self::llama3_8b()),
+            "13b" | "llama13b" | "llama2-13b" => Some(Self::llama2_13b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// The layer-wise mapping units (paper §III): per decoder, one
+    /// attention layer and three FFN layers.
+    pub fn layers(&self) -> Vec<ModelLayer> {
+        let mut v = Vec::with_capacity(self.n_decoders * 4);
+        for d in 0..self.n_decoders {
+            // attention: Q [D×D], K [D×kv], V [D×kv], O [D×D] — one unit
+            v.push(ModelLayer {
+                kind: LayerKind::Attention,
+                decoder: d,
+                rows: self.d_model,
+                cols: 2 * self.d_model + 2 * self.kv_width(),
+            });
+            v.push(ModelLayer {
+                kind: LayerKind::FfnGate,
+                decoder: d,
+                rows: self.d_model,
+                cols: self.d_ff,
+            });
+            v.push(ModelLayer {
+                kind: LayerKind::FfnUp,
+                decoder: d,
+                rows: self.d_model,
+                cols: self.d_ff,
+            });
+            v.push(ModelLayer {
+                kind: LayerKind::FfnDown,
+                decoder: d,
+                rows: self.d_ff,
+                cols: self.d_model,
+            });
+        }
+        v
+    }
+
+    /// Total decoder-stack parameters (embeddings excluded — they stay in
+    /// DRAM; the paper maps decoder weights onto chiplets).
+    pub fn decoder_params(&self) -> usize {
+        self.layers().iter().map(|l| l.params()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_architectures() {
+        // decoder-stack params (no embeddings)
+        let p1 = LlamaConfig::llama32_1b().decoder_params();
+        assert!((0.9e9..1.3e9).contains(&(p1 as f64)), "1B: {p1}");
+        let p8 = LlamaConfig::llama3_8b().decoder_params();
+        assert!((6.5e9..7.5e9).contains(&(p8 as f64)), "8B: {p8}");
+        let p13 = LlamaConfig::llama2_13b().decoder_params();
+        assert!((12.0e9..13.5e9).contains(&(p13 as f64)), "13B: {p13}");
+    }
+
+    #[test]
+    fn four_layers_per_decoder() {
+        let cfg = LlamaConfig::llama32_1b();
+        let layers = cfg.layers();
+        assert_eq!(layers.len(), 16 * 4);
+        assert_eq!(layers[0].kind, LayerKind::Attention);
+        assert_eq!(layers[1].kind, LayerKind::FfnGate);
+        assert_eq!(layers[2].kind, LayerKind::FfnUp);
+        assert_eq!(layers[3].kind, LayerKind::FfnDown);
+        assert!(layers.iter().all(|l| l.params() > 0));
+    }
+
+    #[test]
+    fn gqa_kv_width() {
+        let cfg = LlamaConfig::llama3_8b();
+        assert_eq!(cfg.d_head(), 128);
+        assert_eq!(cfg.kv_width(), 1024);
+        let mha = LlamaConfig::llama2_13b();
+        assert_eq!(mha.kv_width(), mha.d_model);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(LlamaConfig::by_name("8b").unwrap().n_decoders, 32);
+        assert_eq!(LlamaConfig::by_name("LLAMA2-13B").unwrap().n_heads, 40);
+        assert!(LlamaConfig::by_name("70b").is_none());
+    }
+
+    #[test]
+    fn ffn_down_transposed_dims() {
+        let cfg = LlamaConfig::tiny();
+        let layers = cfg.layers();
+        let down = layers.iter().find(|l| l.kind == LayerKind::FfnDown).unwrap();
+        assert_eq!(down.rows, cfg.d_ff);
+        assert_eq!(down.cols, cfg.d_model);
+    }
+}

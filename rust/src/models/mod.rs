@@ -1,0 +1,7 @@
+//! LLM model zoo and workload definitions (paper §III, Table II).
+
+mod llama;
+mod workload;
+
+pub use llama::{LayerKind, LlamaConfig, ModelLayer};
+pub use workload::{Phase, Workload};

@@ -1,0 +1,81 @@
+//! Inference workloads: the (input, output) context-length pairs from
+//! Table II, plus prefill/decode phase bookkeeping.
+
+
+/// Inference phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Processing the whole prompt (context) at once.
+    Prefill,
+    /// Autoregressive generation, one token at a time.
+    Decode,
+}
+
+/// One benchmark workload: `input_len` prompt tokens, `output_len`
+/// generated tokens, batch size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Workload {
+    pub input_len: usize,
+    pub output_len: usize,
+    pub batch: usize,
+}
+
+impl Workload {
+    pub fn new(input_len: usize, output_len: usize) -> Workload {
+        assert!(input_len > 0 && output_len > 0);
+        Workload {
+            input_len,
+            output_len,
+            batch: 1,
+        }
+    }
+
+    /// The three Table II context settings.
+    pub fn table2_set() -> Vec<Workload> {
+        vec![
+            Workload::new(512, 512),
+            Workload::new(1024, 1024),
+            Workload::new(2048, 2048),
+        ]
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        (self.input_len + self.output_len) * self.batch
+    }
+
+    /// KV length seen by decode step `i` (0-based): prompt + generated so far.
+    pub fn kv_len_at_decode(&self, i: usize) -> usize {
+        self.input_len + i
+    }
+
+    /// Label like "1024/1024" as the paper prints.
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.input_len, self.output_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_set_matches_paper() {
+        let set = Workload::table2_set();
+        assert_eq!(set.len(), 3);
+        assert_eq!(set[1].label(), "1024/1024");
+        assert_eq!(set[2].total_tokens(), 4096);
+    }
+
+    #[test]
+    fn kv_growth() {
+        let w = Workload::new(512, 512);
+        assert_eq!(w.kv_len_at_decode(0), 512);
+        assert_eq!(w.kv_len_at_decode(511), 1023);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_length_rejected() {
+        Workload::new(0, 1);
+    }
+}

@@ -1,0 +1,141 @@
+//! ADC model with calibrated full-scale (paper §II-A: "it calibrates the
+//! macro to fully utilize the ADC input swing, thereby minimizing
+//! discretization errors. Offsets identified during calibration are stored
+//! for subsequent compensation during inference.").
+//!
+//! The transfer function matches `kernels/smac.py::_smac_kernel` exactly:
+//! round(x / lsb) clipped to ±(2^(bits-1)-1), then re-scaled by lsb, with a
+//! stored per-column offset subtracted before conversion.
+
+/// One ADC channel bank (one per crossbar column in the macro; modeled as a
+/// vectorized converter over all columns).
+#[derive(Debug, Clone)]
+pub struct Adc {
+    bits: u32,
+    /// Per-column full-scale (max |input|) from calibration.
+    full_scale: Vec<f32>,
+    /// Per-column offsets stored at calibration, compensated at inference.
+    offset: Vec<f32>,
+    conversions: u64,
+}
+
+impl Adc {
+    pub fn new(bits: u32, cols: usize) -> Adc {
+        assert!((4..=16).contains(&bits), "ADC resolution out of range");
+        Adc {
+            bits,
+            full_scale: vec![1.0; cols],
+            offset: vec![0.0; cols],
+            conversions: 0,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn cols(&self) -> usize {
+        self.full_scale.len()
+    }
+
+    pub fn conversions(&self) -> u64 {
+        self.conversions
+    }
+
+    pub fn max_code(&self) -> f32 {
+        (1i64 << (self.bits - 1)) as f32 - 1.0
+    }
+
+    /// Install calibration results.
+    pub fn calibrate(&mut self, full_scale: Vec<f32>, offset: Vec<f32>) {
+        assert_eq!(full_scale.len(), self.full_scale.len());
+        assert_eq!(offset.len(), self.offset.len());
+        assert!(
+            full_scale.iter().all(|f| *f > 0.0),
+            "full-scale must be positive"
+        );
+        self.full_scale = full_scale;
+        self.offset = offset;
+    }
+
+    pub fn full_scale(&self) -> &[f32] {
+        &self.full_scale
+    }
+
+    /// Convert analog column sums in place: offset-compensate, quantize to
+    /// the calibrated swing, reconstruct.
+    pub fn convert(&mut self, columns: &mut [f32]) {
+        assert_eq!(columns.len(), self.full_scale.len());
+        let qmax = self.max_code();
+        for ((x, &fs), &off) in columns
+            .iter_mut()
+            .zip(self.full_scale.iter())
+            .zip(self.offset.iter())
+        {
+            let lsb = fs / qmax;
+            let code = ((*x - off) / lsb).round().clamp(-qmax, qmax);
+            *x = code * lsb;
+        }
+        self.conversions += 1;
+    }
+
+    /// Worst-case quantization step for column `c` (for error-bound tests).
+    pub fn lsb(&self, c: usize) -> f32 {
+        self.full_scale[c] / self.max_code()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizes_to_lsb_grid() {
+        let mut adc = Adc::new(8, 2);
+        adc.calibrate(vec![127.0, 254.0], vec![0.0, 0.0]);
+        let mut cols = vec![33.3, 100.2];
+        adc.convert(&mut cols);
+        assert_eq!(cols[0], 33.0); // lsb = 1.0
+        assert_eq!(cols[1], 100.0); // lsb = 2.0
+        assert_eq!(adc.conversions(), 1);
+    }
+
+    #[test]
+    fn clips_beyond_full_scale() {
+        let mut adc = Adc::new(8, 1);
+        adc.calibrate(vec![100.0], vec![0.0]);
+        let mut cols = vec![250.0];
+        adc.convert(&mut cols);
+        assert!((cols[0] - 100.0).abs() < 1.0, "clipped to swing: {}", cols[0]);
+    }
+
+    #[test]
+    fn offset_compensation() {
+        let mut adc = Adc::new(12, 1);
+        adc.calibrate(vec![100.0], vec![10.0]);
+        let mut cols = vec![60.0]; // true signal 50 + offset 10
+        adc.convert(&mut cols);
+        assert!((cols[0] - 50.0).abs() < adc.lsb(0));
+    }
+
+    #[test]
+    fn error_bounded_by_half_lsb_inside_swing() {
+        let mut adc = Adc::new(10, 1);
+        adc.calibrate(vec![512.0], vec![0.0]);
+        for v in [-500.0f32, -77.7, 0.4, 123.456, 511.0] {
+            let mut cols = vec![v];
+            adc.convert(&mut cols);
+            assert!(
+                (cols[0] - v).abs() <= adc.lsb(0) / 2.0 + 1e-4,
+                "v={v} out={}",
+                cols[0]
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "full-scale must be positive")]
+    fn zero_full_scale_rejected() {
+        Adc::new(8, 1).calibrate(vec![0.0], vec![0.0]);
+    }
+}

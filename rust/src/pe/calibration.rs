@@ -1,0 +1,88 @@
+//! Feedback-loop calibration (paper §II-A): during initialization the macro
+//! runs a calibration set through the crossbar, measures the analog column
+//! sums, and sets the per-column ADC full-scale so the input swing is fully
+//! used; residual offsets are stored for inference-time compensation.
+//!
+//! Mirrors `kernels/smac.py::calibrate_full_scale`.
+
+use super::rram::RramArray;
+
+/// Result of one calibration pass.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub full_scale: Vec<f32>,
+    pub offset: Vec<f32>,
+}
+
+impl Calibration {
+    /// Run the calibration loop: for every input vector in `cal_set`
+    /// (DAC codes, each of length `array.rows()`), record the max |column
+    /// sum| as the full-scale, floored at 1.0 (an empty column must not
+    /// produce a zero swing).
+    ///
+    /// The offset term models the sense-amp systematic error: we measure it
+    /// as the column response to the all-zero vector (which an ideal array
+    /// answers with exactly 0).
+    pub fn run(array: &RramArray, cal_set: &[Vec<f32>]) -> Calibration {
+        let cols = array.cols();
+        let mut full_scale = vec![1.0f32; cols];
+        let mut buf = vec![0.0f32; cols];
+        for input in cal_set {
+            array.column_mac(input, &mut buf);
+            for (fs, &v) in full_scale.iter_mut().zip(buf.iter()) {
+                *fs = fs.max(v.abs());
+            }
+        }
+        // Offset probe: all-zero input.
+        let zero = vec![0.0f32; array.rows()];
+        array.column_mac(&zero, &mut buf);
+        Calibration {
+            full_scale,
+            offset: buf,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn array_2x3() -> RramArray {
+        let mut a = RramArray::new(2, 3, 256);
+        a.program(&[10, -20, 30, 5, 5, -5]);
+        a
+    }
+
+    #[test]
+    fn full_scale_tracks_max_abs_sum() {
+        let a = array_2x3();
+        let cal = Calibration::run(
+            &a,
+            &[vec![1.0, 1.0], vec![-2.0, 1.0]],
+        );
+        // col sums: [15, -15, 25] and [-15, 45, -65]
+        assert_eq!(cal.full_scale, vec![15.0, 45.0, 65.0]);
+    }
+
+    #[test]
+    fn full_scale_floored_at_one() {
+        let mut a = RramArray::new(2, 2, 256);
+        a.program(&[0, 0, 0, 0]);
+        let cal = Calibration::run(&a, &[vec![1.0, 1.0]]);
+        assert_eq!(cal.full_scale, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn ideal_array_has_zero_offset() {
+        let a = array_2x3();
+        let cal = Calibration::run(&a, &[vec![1.0, 0.0]]);
+        assert_eq!(cal.offset, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_cal_set_gives_unit_swing() {
+        let a = array_2x3();
+        let cal = Calibration::run(&a, &[]);
+        assert_eq!(cal.full_scale, vec![1.0; 3]);
+    }
+}

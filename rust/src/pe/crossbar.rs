@@ -1,0 +1,247 @@
+//! The complete PE crossbar: DAC-quantized inputs → RRAM column MAC →
+//! calibrated ADC → dequantized outputs. The end-to-end transfer function
+//! is held to `python/compile/kernels/ref.py::smac` by the integration
+//! tests (see rust/tests/test_oracle.rs).
+
+use super::adc::Adc;
+use super::calibration::Calibration;
+use super::rram::RramArray;
+
+/// Quantization parameters for one programmed crossbar.
+#[derive(Debug, Clone)]
+pub struct QuantSpec {
+    /// Conductance levels (256 → int8-like codes).
+    pub w_levels: u16,
+    /// DAC input bits.
+    pub x_bits: u32,
+    /// ADC output bits.
+    pub adc_bits: u32,
+}
+
+impl Default for QuantSpec {
+    fn default() -> Self {
+        QuantSpec {
+            w_levels: 256,
+            x_bits: 8,
+            adc_bits: 12,
+        }
+    }
+}
+
+/// A programmed, calibrated crossbar holding a weight tile W[rows×cols].
+#[derive(Debug, Clone)]
+pub struct Crossbar {
+    array: RramArray,
+    adc: Adc,
+    spec: QuantSpec,
+    /// Per-column weight scale from programming-time quantization.
+    w_scale: Vec<f32>,
+    /// SMAC operations performed (power accounting).
+    smacs: u64,
+    calibrated: bool,
+}
+
+impl Crossbar {
+    /// Program a float weight tile (row-major, rows×cols) into the array,
+    /// using per-column symmetric quantization (ref.py::quantize_weights).
+    pub fn program(weights: &[f32], rows: usize, cols: usize, spec: QuantSpec) -> Crossbar {
+        assert_eq!(weights.len(), rows * cols, "weight tile shape");
+        let qmax = (spec.w_levels / 2 - 1) as f32;
+        let mut w_scale = vec![1e-8f32; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                w_scale[c] = w_scale[c].max(weights[r * cols + c].abs());
+            }
+        }
+        for s in &mut w_scale {
+            *s /= qmax;
+        }
+        let codes: Vec<i32> = (0..rows * cols)
+            .map(|i| {
+                let c = i % cols;
+                (weights[i] / w_scale[c]).round().clamp(-qmax, qmax) as i32
+            })
+            .collect();
+        let mut array = RramArray::new(rows, cols, spec.w_levels);
+        array.program(&codes);
+        let adc = Adc::new(spec.adc_bits, cols);
+        Crossbar {
+            array,
+            adc,
+            spec,
+            w_scale,
+            smacs: 0,
+            calibrated: false,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.array.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.array.cols()
+    }
+
+    pub fn smacs(&self) -> u64 {
+        self.smacs
+    }
+
+    pub fn is_calibrated(&self) -> bool {
+        self.calibrated
+    }
+
+    pub fn array_mut(&mut self) -> &mut RramArray {
+        &mut self.array
+    }
+
+    /// DAC quantization of one float input vector → (codes, scale).
+    /// Per-vector symmetric, matching ref.py::quantize_inputs.
+    pub fn dac_quantize(&self, x: &[f32]) -> (Vec<f32>, f32) {
+        let qmax = (1i64 << (self.spec.x_bits - 1)) as f32 - 1.0;
+        let maxabs = x.iter().fold(1e-8f32, |m, v| m.max(v.abs()));
+        let scale = maxabs / qmax;
+        let codes = x
+            .iter()
+            .map(|v| (v / scale).round().clamp(-qmax, qmax))
+            .collect();
+        (codes, scale)
+    }
+
+    /// Feedback-loop calibration with a set of float calibration vectors.
+    pub fn calibrate(&mut self, cal_set: &[Vec<f32>]) {
+        let dac_set: Vec<Vec<f32>> = cal_set
+            .iter()
+            .map(|x| self.dac_quantize(x).0)
+            .collect();
+        let cal = Calibration::run(&self.array, &dac_set);
+        self.adc.calibrate(cal.full_scale, cal.offset);
+        self.calibrated = true;
+    }
+
+    /// One SMAC: y[cols] = ADC(x_codes · G) · x_scale · w_scale.
+    pub fn smac(&mut self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows(), "input length = crossbar rows");
+        let (codes, x_scale) = self.dac_quantize(x);
+        let mut cols = vec![0.0f32; self.cols()];
+        self.array.column_mac(&codes, &mut cols);
+        self.adc.convert(&mut cols);
+        for (c, v) in cols.iter_mut().enumerate() {
+            *v *= x_scale * self.w_scale[c];
+        }
+        self.smacs += 1;
+        cols
+    }
+
+    /// Float reference y = xᵀW for error-bound tests.
+    pub fn smac_float_ref(weights: &[f32], rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                y[c] += x[r] * weights[r * cols + c];
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_tile(rows: usize, cols: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..rows * cols).map(|_| rng.sym_f32(scale)).collect()
+    }
+
+    #[test]
+    fn smac_tracks_float_within_quant_error() {
+        let (rows, cols) = (64, 32);
+        let w = random_tile(rows, cols, 1, 0.05);
+        let mut xb = Crossbar::program(&w, rows, cols, QuantSpec::default());
+        let x = random_tile(rows, 1, 7, 1.0);
+        // feedback-loop calibration runs on representative inference data
+        // (paper §II-A initialization); include the eval distribution so
+        // the ADC swing covers it.
+        let mut cal: Vec<Vec<f32>> = (0..8)
+            .map(|i| random_tile(rows, 1, 100 + i, 1.0))
+            .collect();
+        cal.push(x.clone());
+        xb.calibrate(&cal);
+        let y = xb.smac(&x);
+        let want = Crossbar::smac_float_ref(&w, rows, cols, &x);
+        let (mut err2, mut ref2) = (0.0f64, 0.0f64);
+        for (a, b) in y.iter().zip(want.iter()) {
+            err2 += ((a - b) as f64).powi(2);
+            ref2 += (*b as f64).powi(2);
+        }
+        let rel = (err2 / ref2.max(1e-12)).sqrt();
+        assert!(rel < 0.05, "rel err {rel}");
+    }
+
+    #[test]
+    fn error_shrinks_with_adc_bits() {
+        let (rows, cols) = (64, 32);
+        let w = random_tile(rows, cols, 2, 0.05);
+        let x = random_tile(rows, 1, 3, 1.0);
+        let want = Crossbar::smac_float_ref(&w, rows, cols, &x);
+        let mut errs = Vec::new();
+        for bits in [6, 8, 12] {
+            let spec = QuantSpec {
+                adc_bits: bits,
+                ..QuantSpec::default()
+            };
+            let mut xb = Crossbar::program(&w, rows, cols, spec);
+            xb.calibrate(&[x.clone()]);
+            let y = xb.smac(&x);
+            let err: f64 = y
+                .iter()
+                .zip(want.iter())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            errs.push(err);
+        }
+        assert!(errs[0] >= errs[1] && errs[1] >= errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn uncalibrated_crossbar_still_functions() {
+        // default unit full-scale clips hard but must not crash
+        let w = random_tile(16, 8, 4, 0.1);
+        let mut xb = Crossbar::program(&w, 16, 8, QuantSpec::default());
+        assert!(!xb.is_calibrated());
+        let y = xb.smac(&vec![0.5; 16]);
+        assert_eq!(y.len(), 8);
+    }
+
+    #[test]
+    fn smac_counter_increments() {
+        let w = random_tile(8, 8, 5, 0.1);
+        let mut xb = Crossbar::program(&w, 8, 8, QuantSpec::default());
+        xb.calibrate(&[vec![1.0; 8]]);
+        xb.smac(&vec![1.0; 8]);
+        xb.smac(&vec![0.5; 8]);
+        assert_eq!(xb.smacs(), 2);
+    }
+
+    #[test]
+    fn nonvolatile_weights_survive_relaxation_within_bound() {
+        let (rows, cols) = (32, 32);
+        let w = random_tile(rows, cols, 6, 0.05);
+        let x = random_tile(rows, 1, 8, 1.0);
+        let mut xb = Crossbar::program(&w, rows, cols, QuantSpec::default());
+        xb.calibrate(&[x.clone()]);
+        let clean = xb.smac(&x);
+        xb.array_mut().relax(0.005, 9);
+        let noisy = xb.smac(&x);
+        let rel: f64 = clean
+            .iter()
+            .zip(noisy.iter())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            / clean.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt().max(1e-12);
+        assert!(rel < 0.1, "0.5% relaxation moves outputs <10%: {rel}");
+    }
+}

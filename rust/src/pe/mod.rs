@@ -1,0 +1,18 @@
+//! The processing element (paper §II-A): a 256×256 non-volatile RRAM
+//! compute-in-memory macro performing static-weight MAC (SMAC) in the
+//! analog domain, with DAC-quantized inputs, voltage-mode sensing, and an
+//! ADC whose full-scale is set by a feedback-loop calibration pass.
+//!
+//! The numerics here mirror `python/compile/kernels/smac.py` /
+//! `kernels/ref.py` exactly — the integration tests hold this module to the
+//! AOT-compiled oracle's outputs.
+
+mod adc;
+mod calibration;
+mod crossbar;
+mod rram;
+
+pub use adc::Adc;
+pub use calibration::Calibration;
+pub use crossbar::{Crossbar, QuantSpec};
+pub use rram::{RramArray, RramCell};

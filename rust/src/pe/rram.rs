@@ -1,0 +1,163 @@
+//! RRAM cell and array model.
+//!
+//! Each cell stores one weight as a conductance level (paper: "Each unit of
+//! RRAM cell stores a unit weight/parameter of the neural networks as the
+//! resistance state"). Programming is one-shot per model (non-volatile);
+//! an optional Gaussian conductance-relaxation term models the Nature'22
+//! macro's dominant non-ideality (the paper handles it with noise-resilient
+//! training + the calibration loop; we expose it so accuracy-vs-noise
+//! ablations can run).
+
+use crate::util::Rng;
+
+/// A programmed RRAM cell: signed conductance code in [-(L/2-1), L/2-1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RramCell {
+    pub code: i16,
+}
+
+/// A rows×cols array of programmed cells plus programming bookkeeping.
+#[derive(Debug, Clone)]
+pub struct RramArray {
+    rows: usize,
+    cols: usize,
+    /// Row-major conductance codes (f32 to allow relaxation noise).
+    g: Vec<f32>,
+    /// Write passes performed (the paper's point: programmed *once*).
+    program_count: u64,
+    levels: u16,
+}
+
+impl RramArray {
+    pub fn new(rows: usize, cols: usize, levels: u16) -> RramArray {
+        assert!(levels >= 4, "need at least 2 bits of conductance levels");
+        RramArray {
+            rows,
+            cols,
+            g: vec![0.0; rows * cols],
+            program_count: 0,
+            levels,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn levels(&self) -> u16 {
+        self.levels
+    }
+
+    pub fn program_count(&self) -> u64 {
+        self.program_count
+    }
+
+    /// Program the array with signed integer codes (row-major, rows×cols).
+    /// Codes outside the level range are clipped — matching the quantizer
+    /// in `kernels/ref.py::quantize_weights`.
+    pub fn program(&mut self, codes: &[i32]) {
+        assert_eq!(codes.len(), self.rows * self.cols, "code matrix shape");
+        let qmax = (self.levels / 2 - 1) as i32;
+        for (slot, &c) in self.g.iter_mut().zip(codes.iter()) {
+            *slot = c.clamp(-qmax, qmax) as f32;
+        }
+        self.program_count += 1;
+    }
+
+    /// Apply conductance-relaxation noise: g ← g + N(0, σ·qmax). One-shot,
+    /// like the physical relaxation after programming. Deterministic per
+    /// seed (util::Rng is a seeded SplitMix64).
+    pub fn relax(&mut self, sigma_frac: f64, seed: u64) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let qmax = (self.levels / 2 - 1) as f64;
+        for g in &mut self.g {
+            *g += (rng.gaussian() * sigma_frac * qmax) as f32;
+        }
+    }
+
+    /// Conductance code at (r, c).
+    pub fn g(&self, r: usize, c: usize) -> f32 {
+        self.g[r * self.cols + c]
+    }
+
+    /// Analog column sums for one input vector of DAC codes:
+    /// out[c] = Σ_r in[r] · g[r][c]  (bitline current accumulation).
+    pub fn column_mac(&self, input: &[f32], out: &mut [f32]) {
+        assert_eq!(input.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (r, &x) in input.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let row = &self.g[r * self.cols..(r + 1) * self.cols];
+            for (o, &g) in out.iter_mut().zip(row.iter()) {
+                *o += x * g;
+            }
+        }
+    }
+
+    /// Weights survive power cycling (non-volatility) — CCPG tests assert
+    /// this instead of re-programming after wake.
+    pub fn non_volatile(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_clips_to_levels() {
+        let mut a = RramArray::new(2, 2, 256);
+        a.program(&[300, -300, 5, 0]);
+        assert_eq!(a.g(0, 0), 127.0);
+        assert_eq!(a.g(0, 1), -127.0);
+        assert_eq!(a.g(1, 0), 5.0);
+        assert_eq!(a.program_count(), 1);
+    }
+
+    #[test]
+    fn column_mac_matches_manual() {
+        let mut a = RramArray::new(2, 3, 256);
+        a.program(&[1, 2, 3, 4, 5, 6]);
+        let mut out = vec![0.0; 3];
+        a.column_mac(&[2.0, 10.0], &mut out);
+        assert_eq!(out, vec![2.0 + 40.0, 4.0 + 50.0, 6.0 + 60.0]);
+    }
+
+    #[test]
+    fn relax_is_reproducible_and_small() {
+        let mut a = RramArray::new(8, 8, 256);
+        a.program(&vec![100; 64]);
+        let mut b = a.clone();
+        a.relax(0.01, 42);
+        b.relax(0.01, 42);
+        for r in 0..8 {
+            for c in 0..8 {
+                assert_eq!(a.g(r, c), b.g(r, c), "same seed, same noise");
+                assert!((a.g(r, c) - 100.0).abs() < 10.0, "noise is ~1% of qmax");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_input_skips_work() {
+        let mut a = RramArray::new(4, 4, 256);
+        a.program(&vec![7; 16]);
+        let mut out = vec![9.0; 4];
+        a.column_mac(&[0.0; 4], &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "code matrix shape")]
+    fn wrong_shape_panics() {
+        RramArray::new(2, 2, 256).program(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,224 @@
+//! Per-link energy/latency model and transfer accounting.
+
+use crate::config::InterconnectConfig;
+
+/// Which physical medium a transfer used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Silicon-photonic C2C (the PICNIC fabric).
+    Optical,
+    /// Electrical C2C (the comparison baseline in Fig 9).
+    Electrical,
+    /// DRAM-hub access (external data, weights upload at boot).
+    Dram,
+}
+
+/// One completed transfer, for the Fig 10 time-distribution trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferRecord {
+    /// Start time of the transfer, cycles.
+    pub start_cycle: u64,
+    /// Transfer duration, cycles.
+    pub duration_cycles: u64,
+    pub bits: u64,
+    pub kind: LinkKind,
+    /// Source and destination tile ids (u32::MAX = DRAM hub).
+    pub src: u32,
+    pub dst: u32,
+}
+
+/// Interconnect accounting: energy + time-binned trace.
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    cfg: InterconnectConfig,
+    kind: LinkKind,
+    pub records: Vec<TransferRecord>,
+    total_bits: u64,
+    total_energy_j: f64,
+}
+
+impl Interconnect {
+    pub fn new(cfg: InterconnectConfig, kind: LinkKind) -> Interconnect {
+        Interconnect {
+            cfg,
+            kind,
+            records: Vec::new(),
+            total_bits: 0,
+            total_energy_j: 0.0,
+        }
+    }
+
+    pub fn kind(&self) -> LinkKind {
+        self.kind
+    }
+
+    /// Energy per bit for this link kind.
+    pub fn j_per_bit(&self) -> f64 {
+        match self.kind {
+            LinkKind::Optical => self.cfg.optical_c2c_j_per_bit,
+            LinkKind::Electrical => self.cfg.electrical_c2c_j_per_bit,
+            LinkKind::Dram => self.cfg.dram_j_per_bit,
+        }
+    }
+
+    /// Link bandwidth, bits per second.
+    pub fn bandwidth_bps(&self) -> f64 {
+        match self.kind {
+            LinkKind::Optical => self.cfg.optical_link_bps,
+            LinkKind::Electrical => self.cfg.electrical_link_bps,
+            LinkKind::Dram => self.cfg.electrical_link_bps, // hub uses elec PHY
+        }
+    }
+
+    /// Transfer latency in core cycles at `freq_hz`.
+    pub fn transfer_cycles(&self, bits: u64, freq_hz: f64) -> u64 {
+        let seconds = bits as f64 / self.bandwidth_bps();
+        (seconds * freq_hz).ceil() as u64
+    }
+
+    /// Record one transfer starting at `start_cycle`; returns its duration.
+    pub fn transfer(
+        &mut self,
+        start_cycle: u64,
+        bits: u64,
+        src: u32,
+        dst: u32,
+        freq_hz: f64,
+    ) -> u64 {
+        let duration = self.transfer_cycles(bits, freq_hz).max(1);
+        self.records.push(TransferRecord {
+            start_cycle,
+            duration_cycles: duration,
+            bits,
+            kind: self.kind,
+            src,
+            dst,
+        });
+        self.total_bits += bits;
+        self.total_energy_j += bits as f64 * self.j_per_bit();
+        duration
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.total_bits
+    }
+
+    /// Dynamic (per-bit) transfer energy so far.
+    pub fn dynamic_energy_j(&self) -> f64 {
+        self.total_energy_j
+    }
+
+    /// Static optical power while `ports` laser ports are lit (zero for
+    /// electrical links — their cost is per-bit only in this model).
+    pub fn static_power_w(&self, ports: usize) -> f64 {
+        match self.kind {
+            LinkKind::Optical => ports as f64 * self.cfg.laser_static_w_per_port,
+            _ => 0.0,
+        }
+    }
+
+    /// Average C2C transfer power over a window of `window_cycles` at
+    /// `freq_hz` (Fig 9's y-axis): dynamic energy / wall time + static.
+    pub fn average_power_w(&self, window_cycles: u64, freq_hz: f64, lit_ports: usize) -> f64 {
+        if window_cycles == 0 {
+            return 0.0;
+        }
+        let seconds = window_cycles as f64 / freq_hz;
+        self.total_energy_j / seconds + self.static_power_w(lit_ports)
+    }
+
+    /// Histogram of transferred bits per time bin (Fig 10's series).
+    pub fn binned_traffic(&self, bin_cycles: u64, total_cycles: u64) -> Vec<u64> {
+        assert!(bin_cycles > 0);
+        let n_bins = total_cycles.div_ceil(bin_cycles) as usize;
+        let mut bins = vec![0u64; n_bins.max(1)];
+        for r in &self.records {
+            // attribute bits uniformly across the cycles the transfer spans
+            let end = r.start_cycle + r.duration_cycles;
+            let first_bin = (r.start_cycle / bin_cycles) as usize;
+            let last_bin = ((end.saturating_sub(1)) / bin_cycles) as usize;
+            let span = (last_bin - first_bin + 1) as u64;
+            for b in first_bin..=last_bin.min(bins.len() - 1) {
+                bins[b] += r.bits / span;
+            }
+        }
+        bins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> InterconnectConfig {
+        InterconnectConfig::default()
+    }
+
+    #[test]
+    fn optical_cheaper_than_electrical_per_bit() {
+        let o = Interconnect::new(cfg(), LinkKind::Optical);
+        let e = Interconnect::new(cfg(), LinkKind::Electrical);
+        let d = Interconnect::new(cfg(), LinkKind::Dram);
+        assert!(o.j_per_bit() < e.j_per_bit());
+        assert!(e.j_per_bit() < d.j_per_bit());
+        // paper §I: electrical C2C 3 pJ/bit, DRAM 30 pJ/bit
+        assert!((e.j_per_bit() - 3.0e-12).abs() < 1e-18);
+        assert!((d.j_per_bit() - 30.0e-12).abs() < 1e-18);
+    }
+
+    #[test]
+    fn transfer_energy_accumulates() {
+        let mut o = Interconnect::new(cfg(), LinkKind::Optical);
+        o.transfer(0, 1_000_000, 0, 1, 1e9);
+        o.transfer(500, 1_000_000, 1, 2, 1e9);
+        assert_eq!(o.total_bits(), 2_000_000);
+        let want = 2_000_000.0 * 0.5e-12;
+        assert!((o.dynamic_energy_j() - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn transfer_latency_respects_bandwidth() {
+        let o = Interconnect::new(cfg(), LinkKind::Optical);
+        // 128 Gb/s WDM link, 1 GHz core → 128 bits per cycle
+        assert_eq!(o.transfer_cycles(12800, 1e9), 100);
+        let e = Interconnect::new(cfg(), LinkKind::Electrical);
+        assert_eq!(e.transfer_cycles(12800, 1e9), 400, "electrical is slower");
+    }
+
+    #[test]
+    fn average_power_includes_laser_static() {
+        let mut o = Interconnect::new(cfg(), LinkKind::Optical);
+        o.transfer(0, 1_000_000_000, 0, 1, 1e9);
+        // 1 Gbit over 1 ms window at 1 GHz = 1e6 cycles
+        let p = o.average_power_w(1_000_000, 1e9, 4);
+        let dynamic = 1e9 * 0.5e-12 / 1e-3; // 0.5 W
+        let static_p = 4.0 * 1.0e-3;
+        assert!((p - (dynamic + static_p)).abs() < 1e-9, "p={p}");
+        // electrical link has no static term
+        let mut e = Interconnect::new(cfg(), LinkKind::Electrical);
+        e.transfer(0, 1_000_000_000, 0, 1, 1e9);
+        assert!(e.average_power_w(1_000_000, 1e9, 4) > p, "3pJ/b beats 0.5pJ/b + laser");
+    }
+
+    #[test]
+    fn binned_traffic_buckets_by_time() {
+        let mut o = Interconnect::new(cfg(), LinkKind::Optical);
+        o.transfer(0, 3200, 0, 1, 1e9); // 100 cycles, bin 0
+        o.transfer(1000, 3200, 0, 1, 1e9); // bin 10
+        let bins = o.binned_traffic(100, 1100);
+        assert_eq!(bins.len(), 11);
+        assert_eq!(bins[0], 3200);
+        assert_eq!(bins[10], 3200);
+        assert_eq!(bins[5], 0, "idle gap shows as zero traffic");
+    }
+
+    #[test]
+    fn long_transfer_spreads_across_bins() {
+        let mut o = Interconnect::new(cfg(), LinkKind::Optical);
+        o.transfer(0, 128_000, 0, 1, 1e9); // 1000 cycles at 128 b/cycle
+        let bins = o.binned_traffic(500, 1000);
+        assert_eq!(bins.len(), 2);
+        assert_eq!(bins[0], 64_000);
+        assert_eq!(bins[1], 64_000);
+    }
+}

@@ -1,0 +1,15 @@
+//! Silicon-photonic chip-to-chip interconnect (paper §II-D): the bottom die
+//! of each 3D-SIC compute tile is an optical engine — laser source,
+//! waveguides, microring modulators, switching elements, photodetectors —
+//! forming an optical network over all chiplets plus the DRAM hub.
+//!
+//! We model what the paper's evaluation needs (Figs 9, 10): per-bit
+//! transfer energy (optical vs the 3 pJ/bit electrical baseline and the
+//! 30 pJ/bit DRAM path), static laser/tuning power while links are lit,
+//! link bandwidth for latency, and a time-binned transfer trace.
+
+mod link;
+mod topology;
+
+pub use link::{Interconnect, LinkKind, TransferRecord};
+pub use topology::{OpticalTopology, TileId, DRAM_HUB};

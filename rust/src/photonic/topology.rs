@@ -1,0 +1,139 @@
+//! Optical network topology: the silicon waveguide embedded in the
+//! substrate connects every compute-tile chiplet and the DRAM hub
+//! (paper §II, Fig 3(a): "These CTs are interconnected with silicon
+//! photonics for inter-tile data transfer and memory access (DRAM). The
+//! DRAM acts as a hub for external data communication.").
+//!
+//! We model the physical arrangement as a 2D grid of tiles (the paper's
+//! Fig 5 shows a grid for clustering) with the waveguide giving all-to-all
+//! single-hop optical reach; distance only affects laser launch power
+//! margins, not latency, at these scales.
+
+
+/// Identifier of a compute tile on the optical network.
+pub type TileId = u32;
+
+/// Sentinel id for the DRAM hub.
+pub const DRAM_HUB: TileId = u32::MAX;
+
+/// The optical interconnect topology over `n_tiles` chiplets.
+#[derive(Debug, Clone)]
+pub struct OpticalTopology {
+    n_tiles: usize,
+    /// Grid width for physical adjacency (clustering groups 2×2 blocks).
+    grid_cols: usize,
+}
+
+impl OpticalTopology {
+    pub fn new(n_tiles: usize) -> OpticalTopology {
+        // near-square grid
+        let grid_cols = (n_tiles as f64).sqrt().ceil() as usize;
+        OpticalTopology {
+            n_tiles,
+            grid_cols: grid_cols.max(1),
+        }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.n_tiles
+    }
+
+    pub fn grid_cols(&self) -> usize {
+        self.grid_cols
+    }
+
+    /// Physical (row, col) of a tile on the interposer grid.
+    pub fn position(&self, t: TileId) -> (usize, usize) {
+        let t = t as usize;
+        assert!(t < self.n_tiles, "tile {t} out of range");
+        (t / self.grid_cols, t % self.grid_cols)
+    }
+
+    /// Whether two tiles are physically adjacent (share a grid edge) —
+    /// used by CCPG to form clusters of *adjacent* chiplets.
+    pub fn adjacent(&self, a: TileId, b: TileId) -> bool {
+        let (ar, ac) = self.position(a);
+        let (br, bc) = self.position(b);
+        ar.abs_diff(br) + ac.abs_diff(bc) == 1
+    }
+
+    /// All tiles reachable in one optical hop (all of them — the waveguide
+    /// bus is single-hop all-to-all; kept as a method so a switched-ring
+    /// variant can slot in for ablations).
+    pub fn optical_reach(&self, from: TileId) -> impl Iterator<Item = TileId> + '_ {
+        (0..self.n_tiles as TileId).filter(move |t| *t != from)
+    }
+
+    /// The 2×2 cluster block a tile belongs to (paper Fig 5: "four adjacent
+    /// compute-tile chiplets are grouped as a cluster").
+    pub fn cluster_of(&self, t: TileId) -> u32 {
+        let (r, c) = self.position(t);
+        let clusters_per_row = self.grid_cols.div_ceil(2);
+        ((r / 2) * clusters_per_row + c / 2) as u32
+    }
+
+    /// Number of clusters covering all tiles.
+    pub fn n_clusters(&self) -> usize {
+        (0..self.n_tiles as TileId)
+            .map(|t| self.cluster_of(t))
+            .max()
+            .map(|m| m as usize + 1)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_positions() {
+        let t = OpticalTopology::new(9); // 3×3
+        assert_eq!(t.grid_cols(), 3);
+        assert_eq!(t.position(0), (0, 0));
+        assert_eq!(t.position(4), (1, 1));
+        assert_eq!(t.position(8), (2, 2));
+    }
+
+    #[test]
+    fn adjacency() {
+        let t = OpticalTopology::new(9);
+        assert!(t.adjacent(0, 1));
+        assert!(t.adjacent(1, 4));
+        assert!(!t.adjacent(0, 4), "diagonal not adjacent");
+        assert!(!t.adjacent(0, 2));
+    }
+
+    #[test]
+    fn optical_reach_is_all_to_all() {
+        let t = OpticalTopology::new(5);
+        let reach: Vec<TileId> = t.optical_reach(2).collect();
+        assert_eq!(reach, vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn clusters_are_2x2_blocks() {
+        let t = OpticalTopology::new(16); // 4×4 grid
+        // tiles (0,0),(0,1),(1,0),(1,1) = ids 0,1,4,5 → cluster 0
+        assert_eq!(t.cluster_of(0), 0);
+        assert_eq!(t.cluster_of(1), 0);
+        assert_eq!(t.cluster_of(4), 0);
+        assert_eq!(t.cluster_of(5), 0);
+        // tiles (0,2),(0,3),(1,2),(1,3) → cluster 1
+        assert_eq!(t.cluster_of(2), 1);
+        assert_eq!(t.cluster_of(7), 1);
+        assert_eq!(t.n_clusters(), 4);
+    }
+
+    #[test]
+    fn cluster_count_non_square() {
+        let t = OpticalTopology::new(6); // 3 cols → 2 rows
+        assert!(t.n_clusters() >= 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn oob_tile_panics() {
+        OpticalTopology::new(4).position(4);
+    }
+}

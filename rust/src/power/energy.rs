@@ -1,0 +1,164 @@
+//! Dynamic energy ledger: the simulators charge per-event energies here;
+//! tokens/J efficiency numbers come out of it.
+//!
+//! Per-event energies are derived from the Table IV macro powers at 1 GHz
+//! (power × cycle time = energy/op at the unit's throughput) plus the §I
+//! interconnect constants. They are inputs of the model, documented per
+//! category.
+
+use std::collections::BTreeMap;
+
+/// Energy categories tracked separately (reported in EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EnergyCategory {
+    /// Analog SMAC on an RRAM crossbar (per 256×256 MAC op).
+    Smac,
+    /// Dynamic-data MAC in a router (per MAC).
+    Dmac,
+    /// Word moved one mesh hop.
+    Hop,
+    /// Scratchpad read/write (per 64-bit word).
+    Scratchpad,
+    /// SCU element processed.
+    Softmax,
+    /// Chip-to-chip bit (optical or electrical — the ledger is agnostic;
+    /// the interconnect model decides the per-bit rate).
+    C2c,
+    /// DRAM-hub bit.
+    Dram,
+    /// Static/leakage integrated over the run window.
+    Static,
+}
+
+/// Accumulates energy per category.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    joules: BTreeMap<EnergyCategory, f64>,
+    events: BTreeMap<EnergyCategory, u64>,
+}
+
+impl EnergyLedger {
+    pub fn new() -> EnergyLedger {
+        EnergyLedger::default()
+    }
+
+    pub fn charge(&mut self, cat: EnergyCategory, joules: f64) {
+        debug_assert!(joules >= 0.0, "negative energy charge");
+        *self.joules.entry(cat).or_insert(0.0) += joules;
+        *self.events.entry(cat).or_insert(0) += 1;
+    }
+
+    /// Charge `n` identical events at `j_each` in one call (hot path).
+    pub fn charge_n(&mut self, cat: EnergyCategory, n: u64, j_each: f64) {
+        if n == 0 {
+            return;
+        }
+        *self.joules.entry(cat).or_insert(0.0) += n as f64 * j_each;
+        *self.events.entry(cat).or_insert(0) += n;
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.joules.values().sum()
+    }
+
+    pub fn joules(&self, cat: EnergyCategory) -> f64 {
+        self.joules.get(&cat).copied().unwrap_or(0.0)
+    }
+
+    pub fn events(&self, cat: EnergyCategory) -> u64 {
+        self.events.get(&cat).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for (cat, j) in &other.joules {
+            *self.joules.entry(*cat).or_insert(0.0) += j;
+        }
+        for (cat, n) in &other.events {
+            *self.events.entry(*cat).or_insert(0) += n;
+        }
+    }
+
+    /// Category → joules map for reporting.
+    pub fn by_category(&self) -> &BTreeMap<EnergyCategory, f64> {
+        &self.joules
+    }
+}
+
+/// Per-event energy constants (J/event), derived from Table IV at 1 GHz.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyRates {
+    /// One full-crossbar SMAC: PE power × xbar latency.
+    /// 120 µW × 256 ns = 30.7 pJ per 65536-MAC op (≈0.47 fJ/MAC — in the
+    /// published range for analog RRAM CIM).
+    pub smac_op_j: f64,
+    /// One digital DMAC MAC: router power share per lane-cycle.
+    /// 97 µW / 16 lanes / 1 GHz ≈ 6 fJ/MAC.
+    pub dmac_mac_j: f64,
+    /// One word-hop: router power × 1 cycle / words-per-cycle.
+    pub hop_word_j: f64,
+    /// Scratchpad word access: 42 µW / 1 GHz.
+    pub scratchpad_word_j: f64,
+    /// SCU element: 5.31 µW × 2 cycles (stream + scale).
+    pub scu_elem_j: f64,
+}
+
+impl Default for EnergyRates {
+    fn default() -> Self {
+        EnergyRates {
+            smac_op_j: 120e-6 * 256e-9,
+            dmac_mac_j: 97e-6 / 16.0 * 1e-9,
+            hop_word_j: 97e-6 * 1e-9,
+            scratchpad_word_j: 42e-6 * 1e-9,
+            scu_elem_j: 5.31e-6 * 2e-9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate_per_category() {
+        let mut l = EnergyLedger::new();
+        l.charge(EnergyCategory::Smac, 1e-12);
+        l.charge(EnergyCategory::Smac, 2e-12);
+        l.charge(EnergyCategory::Hop, 5e-13);
+        assert!((l.joules(EnergyCategory::Smac) - 3e-12).abs() < 1e-20);
+        assert_eq!(l.events(EnergyCategory::Smac), 2);
+        assert!((l.total_j() - 3.5e-12).abs() < 1e-20);
+    }
+
+    #[test]
+    fn charge_n_equals_n_charges() {
+        let mut a = EnergyLedger::new();
+        let mut b = EnergyLedger::new();
+        for _ in 0..100 {
+            a.charge(EnergyCategory::Dmac, 7e-15);
+        }
+        b.charge_n(EnergyCategory::Dmac, 100, 7e-15);
+        assert!((a.total_j() - b.total_j()).abs() < 1e-25);
+        assert_eq!(a.events(EnergyCategory::Dmac), b.events(EnergyCategory::Dmac));
+    }
+
+    #[test]
+    fn merge_combines_ledgers() {
+        let mut a = EnergyLedger::new();
+        a.charge(EnergyCategory::C2c, 1e-12);
+        let mut b = EnergyLedger::new();
+        b.charge(EnergyCategory::C2c, 2e-12);
+        b.charge(EnergyCategory::Static, 1e-9);
+        a.merge(&b);
+        assert!((a.joules(EnergyCategory::C2c) - 3e-12).abs() < 1e-20);
+        assert_eq!(a.events(EnergyCategory::Static), 1);
+    }
+
+    #[test]
+    fn default_rates_sane() {
+        let r = EnergyRates::default();
+        // analog SMAC must be far cheaper per MAC than digital DMAC
+        let smac_per_mac = r.smac_op_j / 65536.0;
+        assert!(smac_per_mac < r.dmac_mac_j, "IMC wins per MAC");
+        assert!(r.scratchpad_word_j < r.hop_word_j, "local access beats hop");
+    }
+}

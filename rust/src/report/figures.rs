@@ -1,0 +1,191 @@
+//! Figures 8, 9, 10.
+
+use crate::config::PicnicConfig;
+use crate::models::{LlamaConfig, Workload};
+use crate::photonic::LinkKind;
+use crate::sim::AnalyticSim;
+
+/// Fig 8 — system power and efficiency, with vs without CCPG, per model.
+#[derive(Debug, Clone)]
+pub struct Fig8Result {
+    pub model: String,
+    pub power_no_ccpg_w: f64,
+    pub power_ccpg_w: f64,
+    pub eff_no_ccpg: f64,
+    pub eff_ccpg: f64,
+    pub power_saving_frac: f64,
+}
+
+pub fn fig8(cfg: &PicnicConfig) -> crate::Result<Vec<Fig8Result>> {
+    let wl = Workload::new(1024, 1024);
+    let mut out = Vec::new();
+    for model in [
+        LlamaConfig::llama32_1b(),
+        LlamaConfig::llama3_8b(),
+        LlamaConfig::llama2_13b(),
+    ] {
+        let off = AnalyticSim::new(cfg.clone().with_ccpg(false)).run(&model, &wl)?;
+        let on = AnalyticSim::new(cfg.clone().with_ccpg(true)).run(&model, &wl)?;
+        out.push(Fig8Result {
+            model: model.name.clone(),
+            power_no_ccpg_w: off.stats.avg_power_w,
+            power_ccpg_w: on.stats.avg_power_w,
+            eff_no_ccpg: off.stats.tokens_per_j,
+            eff_ccpg: on.stats.tokens_per_j,
+            power_saving_frac: 1.0 - on.stats.avg_power_w / off.stats.avg_power_w,
+        });
+    }
+    Ok(out)
+}
+
+pub fn render_fig8(rows: &[Fig8Result]) -> String {
+    let mut s = String::from(
+        "FIG 8 — SYSTEM POWER & EFFICIENCY, CCPG OFF vs ON (1024/1024)\n\
+         Model            P_off(W)  P_on(W)  Saving   tok/J_off  tok/J_on\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16} {:>8.3} {:>8.3} {:>6.1}% {:>10.2} {:>9.2}\n",
+            r.model,
+            r.power_no_ccpg_w,
+            r.power_ccpg_w,
+            100.0 * r.power_saving_frac,
+            r.eff_no_ccpg,
+            r.eff_ccpg
+        ));
+    }
+    s
+}
+
+/// Fig 9 — average C2C transfer power, electrical vs optical, per model ×
+/// context length.
+#[derive(Debug, Clone)]
+pub struct Fig9Result {
+    pub model: String,
+    pub context: String,
+    pub optical_c2c_w: f64,
+    pub electrical_c2c_w: f64,
+}
+
+pub fn fig9(cfg: &PicnicConfig) -> crate::Result<Vec<Fig9Result>> {
+    let mut out = Vec::new();
+    for model in [
+        LlamaConfig::llama32_1b(),
+        LlamaConfig::llama3_8b(),
+        LlamaConfig::llama2_13b(),
+    ] {
+        for wl in Workload::table2_set() {
+            let opt = AnalyticSim::new(cfg.clone())
+                .with_link(LinkKind::Optical)
+                .run(&model, &wl)?;
+            let ele = AnalyticSim::new(cfg.clone())
+                .with_link(LinkKind::Electrical)
+                .run(&model, &wl)?;
+            out.push(Fig9Result {
+                model: model.name.clone(),
+                context: wl.label(),
+                optical_c2c_w: opt.stats.c2c_avg_power_w,
+                electrical_c2c_w: ele.stats.c2c_avg_power_w,
+            });
+        }
+    }
+    Ok(out)
+}
+
+pub fn render_fig9(rows: &[Fig9Result]) -> String {
+    let mut s = String::from(
+        "FIG 9 — AVERAGE C2C TRANSFER POWER (electrical vs optical)\n\
+         Model            Context     Optical(W)   Electrical(W)\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16} {:<11} {:>10.4} {:>14.4}\n",
+            r.model, r.context, r.optical_c2c_w, r.electrical_c2c_w
+        ));
+    }
+    s
+}
+
+/// Fig 10 — C2C transfer distribution over time (Llama 3.2-1B).
+#[derive(Debug, Clone)]
+pub struct Fig10Result {
+    pub model: String,
+    pub n_bins: usize,
+    pub bits_per_bin: Vec<u64>,
+    pub idle_fraction: f64,
+}
+
+pub fn fig10(cfg: &PicnicConfig, n_bins: usize) -> crate::Result<Fig10Result> {
+    let model = LlamaConfig::llama32_1b();
+    // decode-heavy short run so the per-layer burst structure (transfer →
+    // long compute window → transfer) is visible in the bins
+    let r = AnalyticSim::new(cfg.clone()).run(&model, &Workload::new(64, 16))?;
+    Ok(Fig10Result {
+        model: model.name,
+        n_bins,
+        bits_per_bin: r.trace.binned(n_bins),
+        idle_fraction: r.trace.idle_fraction(n_bins),
+    })
+}
+
+pub fn render_fig10(f: &Fig10Result) -> String {
+    let peak = *f.bits_per_bin.iter().max().unwrap_or(&1) as f64;
+    let mut s = format!(
+        "FIG 10 — C2C TRANSFER DISTRIBUTION OVER TIME ({}, idle {:.0}%)\n",
+        f.model,
+        100.0 * f.idle_fraction
+    );
+    for (i, &bits) in f.bits_per_bin.iter().enumerate() {
+        let bar = "#".repeat(((bits as f64 / peak) * 50.0).round() as usize);
+        s.push_str(&format!("bin {i:>3} |{bar:<50}| {bits} b\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_saving_grows_with_model() {
+        let rows = fig8(&PicnicConfig::default()).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].power_saving_frac < rows[1].power_saving_frac);
+        assert!(rows[1].power_saving_frac <= rows[2].power_saving_frac + 0.02);
+        // the paper's headline: ~80% saved on 8B
+        assert!(rows[1].power_saving_frac > 0.6, "{}", rows[1].power_saving_frac);
+        // efficiency improves under CCPG
+        for r in &rows {
+            assert!(r.eff_ccpg > r.eff_no_ccpg);
+        }
+    }
+
+    #[test]
+    fn fig9_optical_below_electrical() {
+        let rows = fig9(&PicnicConfig::default()).unwrap();
+        assert_eq!(rows.len(), 9);
+        for r in &rows {
+            assert!(
+                r.optical_c2c_w < r.electrical_c2c_w,
+                "{} {}: {} !< {}",
+                r.model,
+                r.context,
+                r.optical_c2c_w,
+                r.electrical_c2c_w
+            );
+        }
+        // C2C power falls with longer context (paper §IV-C)
+        for m in 0..3 {
+            let r = &rows[m * 3..(m + 1) * 3];
+            assert!(r[0].electrical_c2c_w >= r[2].electrical_c2c_w);
+        }
+    }
+
+    #[test]
+    fn fig10_trace_is_bursty() {
+        // fine bins (below the per-layer period) expose the burst gaps
+        let f = fig10(&PicnicConfig::default(), 2000).unwrap();
+        assert!(f.idle_fraction > 0.2, "bursts separated by compute: {}", f.idle_fraction);
+        assert!(f.bits_per_bin.iter().sum::<u64>() > 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (§IV). Each function runs the simulator(s) and returns a structured
+//! result plus a formatted text rendering; the CLI (`picnic report <id>`)
+//! and the criterion benches both call through here so the numbers in
+//! EXPERIMENTS.md come from exactly one code path.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{fig10, fig8, fig9, Fig10Result, Fig8Result, Fig9Result};
+pub use tables::{table2, table3, table4, Table2Row, Table3Row};

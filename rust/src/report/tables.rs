@@ -1,0 +1,185 @@
+//! Tables II, III, IV.
+
+use crate::baselines::{Platform, TABLE3_PLATFORMS};
+use crate::config::PicnicConfig;
+use crate::models::{LlamaConfig, Workload};
+use crate::power::PowerBreakdown;
+use crate::sim::AnalyticSim;
+
+/// One row of Table II.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub model: String,
+    pub context: String,
+    pub tokens_per_s: f64,
+    pub avg_power_w: f64,
+    pub tokens_per_j: f64,
+}
+
+/// Table II — PICNIC benchmark over 3 models × 3 context lengths,
+/// without CCPG (the starred rows of the paper's table).
+pub fn table2(cfg: &PicnicConfig) -> crate::Result<Vec<Table2Row>> {
+    let sim = AnalyticSim::new(cfg.clone().with_ccpg(false));
+    let mut rows = Vec::new();
+    for model in [
+        LlamaConfig::llama32_1b(),
+        LlamaConfig::llama3_8b(),
+        LlamaConfig::llama2_13b(),
+    ] {
+        for wl in Workload::table2_set() {
+            let r = sim.run(&model, &wl)?;
+            rows.push(Table2Row {
+                model: model.name.clone(),
+                context: wl.label(),
+                tokens_per_s: r.stats.tokens_per_s,
+                avg_power_w: r.stats.avg_power_w,
+                tokens_per_j: r.stats.tokens_per_j,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn render_table2(rows: &[Table2Row]) -> String {
+    let mut s = String::from(
+        "TABLE II — BENCHMARK OF LLM INFERENCE FOR PICNIC (no CCPG)\n\
+         Model            Context     tokens/s   Power(W)   tokens/J\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16} {:<11} {:>8.1} {:>10.4} {:>10.1}\n",
+            r.model, r.context, r.tokens_per_s, r.avg_power_w, r.tokens_per_j
+        ));
+    }
+    s
+}
+
+/// One column of Table III.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub platform: String,
+    pub tokens_per_s: f64,
+    pub power_w: f64,
+    pub tokens_per_j: f64,
+    pub speedup_vs_h100: f64,
+    pub efficiency_vs_h100: f64,
+}
+
+/// Table III — PICNIC (with CCPG) vs the published baselines, Llama-8B
+/// 1024/1024 batch 1, H100 as baseline.
+pub fn table3(cfg: &PicnicConfig) -> crate::Result<Vec<Table3Row>> {
+    let sim = AnalyticSim::new(cfg.clone().with_ccpg(true));
+    let r = sim.run(&LlamaConfig::llama3_8b(), &Workload::new(1024, 1024))?;
+    let picnic = Platform {
+        name: "PICNIC (this work)",
+        kind: crate::baselines::PlatformKind::HybridPimNmc,
+        tokens_per_s: r.stats.tokens_per_s,
+        power_w: r.stats.avg_power_w,
+    };
+    let h100 = TABLE3_PLATFORMS
+        .iter()
+        .find(|p| p.name == "NV H100")
+        .expect("H100 baseline present");
+    let mut rows = vec![Table3Row {
+        platform: picnic.name.to_string(),
+        tokens_per_s: picnic.tokens_per_s,
+        power_w: picnic.power_w,
+        tokens_per_j: picnic.tokens_per_j(),
+        speedup_vs_h100: picnic.speedup_vs(h100),
+        efficiency_vs_h100: picnic.efficiency_vs(h100),
+    }];
+    for p in TABLE3_PLATFORMS {
+        rows.push(Table3Row {
+            platform: p.name.to_string(),
+            tokens_per_s: p.tokens_per_s,
+            power_w: p.power_w,
+            tokens_per_j: p.tokens_per_j(),
+            speedup_vs_h100: p.speedup_vs(h100),
+            efficiency_vs_h100: p.efficiency_vs(h100),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render_table3(rows: &[Table3Row]) -> String {
+    let mut s = String::from(
+        "TABLE III — COMPARISON WITH OTHER PLATFORMS (Llama-8B 1024/1024, H100 baseline)\n\
+         Platform              tokens/s   Power(W)  tokens/J  Speedup  EffImprove\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<21} {:>8.2} {:>10.1} {:>9.2} {:>7.2}x {:>9.2}x\n",
+            r.platform, r.tokens_per_s, r.power_w, r.tokens_per_j, r.speedup_vs_h100,
+            r.efficiency_vs_h100
+        ));
+    }
+    s
+}
+
+/// Table IV — per-macro power & area breakdown (regenerated from config).
+pub fn table4(cfg: &PicnicConfig) -> PowerBreakdown {
+    PowerBreakdown::unit(&cfg.power, &cfg.area)
+}
+
+pub fn render_table4(b: &PowerBreakdown) -> String {
+    let mut s = String::from(
+        "TABLE IV — POWER & AREA BREAKDOWN OF PICNIC MACROS (UNIT, 7 nm)\n\
+         Macro         Power(uW)  Power%   Area(mm2)  Area%\n",
+    );
+    for r in &b.rows {
+        s.push_str(&format!(
+            "{:<13} {:>9} {:>7} {:>10.4} {:>6}\n",
+            r.macro_name,
+            r.power_uw.map(|p| format!("{p:.2}")).unwrap_or_else(|| "-".into()),
+            r.power_pct.map(|p| format!("{p:.1}%")).unwrap_or_else(|| "-".into()),
+            r.area_mm2,
+            r.area_pct.map(|p| format!("{p:.1}%")).unwrap_or_else(|| "-".into()),
+        ));
+    }
+    s.push_str(&format!("Total (IPCN-PE pair): {:.0} uW\n", b.total_uw));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_shape_and_monotonicity() {
+        let rows = table2(&PicnicConfig::default()).unwrap();
+        assert_eq!(rows.len(), 9);
+        // within each model, throughput and efficiency fall with context
+        for m in 0..3 {
+            let r = &rows[m * 3..(m + 1) * 3];
+            assert!(r[0].tokens_per_s > r[1].tokens_per_s);
+            assert!(r[1].tokens_per_s > r[2].tokens_per_s);
+            assert!(r[0].tokens_per_j > r[1].tokens_per_j);
+        }
+        // power grows with model size
+        assert!(rows[0].avg_power_w < rows[3].avg_power_w);
+        assert!(rows[3].avg_power_w < rows[6].avg_power_w);
+    }
+
+    #[test]
+    fn table3_contains_picnic_plus_six() {
+        let rows = table3(&PicnicConfig::default()).unwrap();
+        assert_eq!(rows.len(), 7);
+        assert!(rows[0].platform.contains("PICNIC"));
+        // PICNIC must beat every platform on efficiency (the headline)
+        for r in &rows[1..] {
+            assert!(
+                rows[0].tokens_per_j > r.tokens_per_j,
+                "PICNIC ({:.2}) ≤ {} ({:.2})",
+                rows[0].tokens_per_j,
+                r.platform,
+                r.tokens_per_j
+            );
+        }
+    }
+
+    #[test]
+    fn render_functions_nonempty() {
+        let cfg = PicnicConfig::default();
+        assert!(render_table4(&table4(&cfg)).contains("IMC PE"));
+    }
+}

@@ -1,0 +1,159 @@
+//! The artifact manifest written by `python/compile/aot.py`, parsed with
+//! the in-tree JSON reader (util::json).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// File name relative to the artifacts directory.
+    pub path: String,
+    /// Shapes of the positional arguments.
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// The tiny-model config the oracle was lowered at.
+#[derive(Debug, Clone)]
+pub struct OracleConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+}
+
+/// manifest.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub config: OracleConfig,
+    pub param_order: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str, dir: &Path) -> crate::Result<ArtifactManifest> {
+        let j = Json::parse(text)?;
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+        let config = OracleConfig {
+            d_model: cfg.req_usize("d_model")?,
+            n_heads: cfg.req_usize("n_heads")?,
+            d_ff: cfg.req_usize("d_ff")?,
+            seq: cfg.req_usize("seq")?,
+        };
+        let param_order = j
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing param_order"))?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("param_order entries must be strings"))
+            })
+            .collect::<crate::Result<Vec<String>>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+        {
+            let path = spec.req_str("path")?.to_string();
+            let arg_shapes = spec
+                .get("arg_shapes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("{name}: missing arg_shapes"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("{name}: shape must be an array"))?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize()
+                                .ok_or_else(|| anyhow::anyhow!("{name}: bad dim"))
+                        })
+                        .collect::<crate::Result<Vec<usize>>>()
+                })
+                .collect::<crate::Result<Vec<Vec<usize>>>>()?;
+            artifacts.insert(name.clone(), ArtifactSpec { path, arg_shapes });
+        }
+        Ok(ArtifactManifest {
+            config,
+            param_order,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn load(dir: &Path) -> crate::Result<ArtifactManifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Absolute path of a named artifact.
+    pub fn path_of(&self, name: &str) -> crate::Result<PathBuf> {
+        let spec = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))?;
+        Ok(self.dir.join(&spec.path))
+    }
+
+    /// Default artifacts directory: $PICNIC_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PICNIC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let json = r#"{
+            "config": {"d_model": 64, "n_heads": 4, "d_ff": 128, "seq": 64},
+            "param_order": ["wq", "wk"],
+            "artifacts": {
+                "decoder_tiny": {"path": "decoder_tiny.hlo.txt",
+                                  "arg_shapes": [[64, 64], [64, 64]]}
+            }
+        }"#;
+        let m = ArtifactManifest::parse(json, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.config.d_model, 64);
+        assert_eq!(m.param_order, vec!["wq", "wk"]);
+        assert_eq!(m.artifacts["decoder_tiny"].arg_shapes[0], vec![64, 64]);
+        assert_eq!(
+            m.path_of("decoder_tiny").unwrap(),
+            PathBuf::from("/tmp/a/decoder_tiny.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let json = r#"{
+            "config": {"d_model": 64, "n_heads": 4, "d_ff": 128, "seq": 64},
+            "param_order": [],
+            "artifacts": {}
+        }"#;
+        let m = ArtifactManifest::parse(json, Path::new(".")).unwrap();
+        assert!(m.path_of("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_is_error() {
+        assert!(ArtifactManifest::parse("{}", Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse("not json", Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Thin wrapper over the `xla` crate: PJRT CPU client, HLO-text loading,
+//! compile, execute with f32 buffers.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`, unwrapping
+//! the 1-tuple produced by `return_tuple=True` lowering.
+
+use std::path::Path;
+
+/// A compiled executable plus its client handle.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU client.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Construct the CPU client (one per process is plenty; construction
+    /// spins up the TFRT thread pool).
+    pub fn cpu() -> crate::Result<RuntimeClient> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_text(&self, path: &Path) -> crate::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensors (data, dims) and return the first element
+    /// of the output tuple as a flat f32 vector.
+    pub fn run_f32(&self, args: &[(&[f32], &[usize])]) -> crate::Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for (data, dims) in args {
+            let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow::anyhow!("reshape {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple unwrap: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+}

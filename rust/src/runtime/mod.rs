@@ -1,0 +1,13 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO text artifacts emitted
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is how the JAX/Pallas golden model is consulted from rust — the
+//! functional simulator's outputs are held to these numerics in the
+//! integration tests. Python never runs at this point; the artifacts are
+//! self-contained HLO text.
+
+mod artifact;
+mod client;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec};
+pub use client::{Executable, RuntimeClient};

@@ -1,0 +1,228 @@
+//! The SCU's 3-state FSM (paper Fig 4).
+//!
+//! State 1 (Stream):  inputs arrive sequentially from the router (via the
+//!                    Up TSV); each is max-shifted, passed through the PWL
+//!                    exp, written to the indexed cache, and added into the
+//!                    partial-sum register.
+//! State 2 (Recip):   once the full sequence has arrived, the reciprocal of
+//!                    the partial sum is computed (the softmax denominator).
+//! State 3 (Scale):   the multiplier streams cache × reciprocal out; the
+//!                    FSM then bounces between states 2 and 3 per row for
+//!                    continuous output.
+//!
+//! The streaming formulation needs the row max *before* exp; hardware
+//! pre-passes the max while filling the cache (the cache stores raw values,
+//! exp applied on drain). We model exactly that: cache raw, exp at scale
+//! time — numerically identical to ref.py::softmax_pwl.
+
+use super::pwl::pwl_exp;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScuState {
+    /// State 1: accepting the input stream.
+    Stream,
+    /// State 2: denominator reciprocal ready to compute.
+    Recip,
+    /// State 3: draining scaled outputs.
+    Scale,
+}
+
+/// One softmax compute unit.
+#[derive(Debug, Clone)]
+pub struct Scu {
+    state: ScuState,
+    /// Indexed cache of raw inputs for the current row.
+    cache: Vec<f32>,
+    expected: usize,
+    row_max: f32,
+    recip: f32,
+    drain_idx: usize,
+    /// Elements processed since construction (for power accounting).
+    pub elems_processed: u64,
+    /// Rows completed.
+    pub rows_done: u64,
+}
+
+impl Scu {
+    pub fn new() -> Scu {
+        Scu {
+            state: ScuState::Stream,
+            cache: Vec::new(),
+            expected: 0,
+            row_max: f32::NEG_INFINITY,
+            recip: 0.0,
+            drain_idx: 0,
+            elems_processed: 0,
+            rows_done: 0,
+        }
+    }
+
+    pub fn state(&self) -> ScuState {
+        self.state
+    }
+
+    /// Begin a row of `n` elements.
+    pub fn begin_row(&mut self, n: usize) {
+        assert!(n > 0, "softmax over an empty row");
+        self.cache.clear();
+        self.cache.reserve(n);
+        self.expected = n;
+        self.row_max = f32::NEG_INFINITY;
+        self.drain_idx = 0;
+        self.state = ScuState::Stream;
+    }
+
+    /// State 1: push one element. Transitions to Recip when the row is full.
+    pub fn push(&mut self, x: f32) {
+        assert_eq!(self.state, ScuState::Stream, "push only in Stream state");
+        assert!(self.cache.len() < self.expected, "row overflow");
+        self.row_max = self.row_max.max(x);
+        self.cache.push(x);
+        self.elems_processed += 1;
+        if self.cache.len() == self.expected {
+            self.state = ScuState::Recip;
+        }
+    }
+
+    /// State 2: compute the reciprocal of the PWL-exp partial sum.
+    pub fn compute_reciprocal(&mut self) {
+        assert_eq!(self.state, ScuState::Recip, "reciprocal only after full row");
+        let sum: f32 = self
+            .cache
+            .iter()
+            .map(|&x| pwl_exp(x - self.row_max))
+            .sum();
+        self.recip = 1.0 / sum;
+        self.state = ScuState::Scale;
+    }
+
+    /// State 3: pop one scaled output; `None` when the row is drained
+    /// (FSM returns to Stream for the next row).
+    pub fn pop(&mut self) -> Option<f32> {
+        assert_eq!(self.state, ScuState::Scale, "pop only in Scale state");
+        if self.drain_idx >= self.cache.len() {
+            self.state = ScuState::Stream;
+            self.rows_done += 1;
+            return None;
+        }
+        let x = self.cache[self.drain_idx];
+        self.drain_idx += 1;
+        Some(pwl_exp(x - self.row_max) * self.recip)
+    }
+
+    /// Convenience: full row in, full row out (used by the functional sim).
+    pub fn softmax_row(&mut self, row: &[f32]) -> Vec<f32> {
+        self.begin_row(row.len());
+        for &x in row {
+            self.push(x);
+        }
+        self.compute_reciprocal();
+        let mut out = Vec::with_capacity(row.len());
+        while let Some(y) = self.pop() {
+            out.push(y);
+        }
+        out
+    }
+
+    /// Latency model: cycles to process one row of `n` elements —
+    /// n (stream) + recip + n (scale) + drain overhead. Matches
+    /// TimingConfig::{scu_cycles_per_elem, scu_drain_cycles}.
+    pub fn row_cycles(n: usize, per_elem: u64, drain: u64) -> u64 {
+        2 * n as u64 * per_elem + drain
+    }
+}
+
+impl Default for Scu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ref_softmax_pwl(row: &[f32]) -> Vec<f32> {
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f32> = row.iter().map(|&x| pwl_exp(x - m)).collect();
+        let s: f32 = e.iter().sum();
+        e.iter().map(|v| v / s).collect()
+    }
+
+    #[test]
+    fn fsm_walks_three_states() {
+        let mut scu = Scu::new();
+        scu.begin_row(2);
+        assert_eq!(scu.state(), ScuState::Stream);
+        scu.push(0.5);
+        scu.push(-1.0);
+        assert_eq!(scu.state(), ScuState::Recip);
+        scu.compute_reciprocal();
+        assert_eq!(scu.state(), ScuState::Scale);
+        assert!(scu.pop().is_some());
+        assert!(scu.pop().is_some());
+        assert!(scu.pop().is_none());
+        assert_eq!(scu.state(), ScuState::Stream, "back to Stream for next row");
+        assert_eq!(scu.rows_done, 1);
+    }
+
+    #[test]
+    fn matches_reference_softmax() {
+        let rows: Vec<Vec<f32>> = vec![
+            vec![0.0, 1.0, 2.0, 3.0],
+            vec![-5.0, -1.0, 0.0],
+            vec![10.0, 10.0, 10.0],
+            vec![3.0],
+        ];
+        let mut scu = Scu::new();
+        for row in rows {
+            let got = scu.softmax_row(&row);
+            let want = ref_softmax_pwl(&row);
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!((g - w).abs() < 1e-6, "{got:?} vs {want:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_sum_to_one() {
+        let mut scu = Scu::new();
+        let out = scu.softmax_row(&[2.0, -3.0, 0.5, 0.5, 7.0]);
+        let s: f32 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "sum {s}");
+        assert!(out.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn continuous_rows_state2_state3_bounce() {
+        let mut scu = Scu::new();
+        let a = scu.softmax_row(&[1.0, 2.0]);
+        let b = scu.softmax_row(&[5.0, 5.0]);
+        assert_eq!(a.len(), 2);
+        assert!((b[0] - 0.5).abs() < 1e-6 && (b[1] - 0.5).abs() < 1e-6);
+        assert_eq!(scu.rows_done, 2);
+        assert_eq!(scu.elems_processed, 4);
+    }
+
+    #[test]
+    fn large_negative_shift_stays_finite() {
+        let mut scu = Scu::new();
+        let out = scu.softmax_row(&[1000.0, -1000.0]);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert!(out[0] > 0.9, "dominant logit wins");
+    }
+
+    #[test]
+    #[should_panic(expected = "push only in Stream state")]
+    fn push_in_wrong_state_panics() {
+        let mut scu = Scu::new();
+        scu.begin_row(1);
+        scu.push(0.0);
+        scu.push(0.0); // row full → Recip; this must panic
+    }
+
+    #[test]
+    fn latency_model() {
+        assert_eq!(Scu::row_cycles(64, 1, 16), 144);
+    }
+}

@@ -1,0 +1,13 @@
+//! Softmax Compute Unit (paper §II-C, Fig 4): a 3-state FSM on the top
+//! (activation-function) die. State 1 streams inputs through the PWL exp
+//! into the indexed cache and partial-sum adder; state 2 computes the
+//! reciprocal of the sum; state 3 multiplies the cached numerators by the
+//! reciprocal, streaming results out. The exponential is an eight-segment
+//! piecewise-linear approximation — the tables are the same chord tables
+//! as `python/compile/kernels/ref.py` (single source of truth).
+
+mod fsm;
+mod pwl;
+
+pub use fsm::{Scu, ScuState};
+pub use pwl::{pwl_exp, PWL_HI, PWL_LO, PWL_SEGMENTS};

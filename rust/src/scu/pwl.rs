@@ -1,0 +1,88 @@
+//! Eight-segment piecewise-linear exp on [-8, 0] — chord interpolation
+//! between segment endpoints, identical to the JAX oracle's tables
+//! (`kernels/ref.py::_pwl_tables`). The integration test pins the two
+//! implementations against each other through the AOT HLO artifact.
+
+pub const PWL_SEGMENTS: usize = 8;
+pub const PWL_LO: f64 = -8.0;
+pub const PWL_HI: f64 = 0.0;
+
+const SEG_WIDTH: f64 = (PWL_HI - PWL_LO) / PWL_SEGMENTS as f64;
+
+/// (slope, intercept) per segment, computed once. f32 arithmetic inside to
+/// match the hardware LUT (and the f32 JAX kernel) bit-for-bit.
+fn tables() -> [(f32, f32); PWL_SEGMENTS] {
+    let mut t = [(0.0f32, 0.0f32); PWL_SEGMENTS];
+    for (i, slot) in t.iter_mut().enumerate() {
+        let x0 = PWL_LO + i as f64 * SEG_WIDTH;
+        let x1 = x0 + SEG_WIDTH;
+        let (y0, y1) = (x0.exp(), x1.exp());
+        let slope = (y1 - y0) / (x1 - x0);
+        let intercept = y0 - slope * x0;
+        *slot = (slope as f32, intercept as f32);
+    }
+    t
+}
+
+/// PWL exp for t ≤ 0 (clamped to [-8, 0] like the hardware).
+pub fn pwl_exp(t: f32) -> f32 {
+    static TABLES: std::sync::OnceLock<[(f32, f32); PWL_SEGMENTS]> = std::sync::OnceLock::new();
+    let tab = TABLES.get_or_init(tables);
+    let tc = t.clamp(PWL_LO as f32, PWL_HI as f32);
+    let seg = (((tc as f64 - PWL_LO) / SEG_WIDTH).floor() as isize)
+        .clamp(0, PWL_SEGMENTS as isize - 1) as usize;
+    let (a, b) = tab[seg];
+    a * tc + b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_exact() {
+        // chord interpolation is exact at segment endpoints
+        for i in 0..=PWL_SEGMENTS {
+            let x = PWL_LO + i as f64 * SEG_WIDTH;
+            let want = x.exp() as f32;
+            assert!(
+                (pwl_exp(x as f32) - want).abs() < 1e-6,
+                "endpoint {x}: {} vs {want}",
+                pwl_exp(x as f32)
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut prev = pwl_exp(-10.0);
+        for i in 1..=1000 {
+            let t = -10.0 + i as f32 * 0.011;
+            let y = pwl_exp(t.min(0.0));
+            assert!(y >= prev - 1e-7, "non-monotone at t={t}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn chord_error_bound() {
+        // max chord error for exp on a width-1 segment ending at 0: ~0.077
+        for i in 0..=800 {
+            let t = -8.0 + i as f32 * 0.01;
+            let err = (pwl_exp(t) - t.exp()).abs();
+            assert!(err < 0.08, "err {err} at t={t}");
+        }
+    }
+
+    #[test]
+    fn clamps_below_minus_eight() {
+        assert_eq!(pwl_exp(-100.0), pwl_exp(-8.0));
+        assert!(pwl_exp(-8.0) > 0.0);
+    }
+
+    #[test]
+    fn positive_inputs_clamp_to_one() {
+        assert!((pwl_exp(0.0) - 1.0).abs() < 1e-6);
+        assert!((pwl_exp(5.0) - 1.0).abs() < 1e-6);
+    }
+}

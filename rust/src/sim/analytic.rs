@@ -1,0 +1,430 @@
+//! The calibrated analytic simulator: walks `mapper::LayerPlan`s to
+//! produce per-run latency, energy, and C2C traces for full-size models.
+//!
+//! Per-phase cycle costs use the `TimingConfig` constants, which are
+//! calibrated against the detailed cycle engine on overlapping small
+//! configurations (see rust/tests/test_calibration.rs — the analytic model
+//! must track the engine within 5%).
+//!
+//! Layer-sequential execution (paper §II-E: "the workloads are executed in
+//! a sequential, layer-by-layer manner") means per-step latency is the sum
+//! of per-layer latencies plus C2C hops; CCPG adds wake latency whenever
+//! the active window crosses a cluster boundary.
+
+use crate::chiplet::Ccpg;
+use crate::config::PicnicConfig;
+use crate::mapper::{PhaseOp, ScheduleBuilder};
+use crate::models::{LlamaConfig, Workload};
+use crate::photonic::{Interconnect, LinkKind, OpticalTopology};
+use crate::power::{EnergyCategory, EnergyLedger};
+use crate::power::energy::EnergyRates;
+use crate::sim::stats::RunStats;
+use crate::sim::trace::C2cTrace;
+
+/// Result of one analytic run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub stats: RunStats,
+    pub ledger: EnergyLedger,
+    pub trace: C2cTrace,
+    /// Per-layer tile assignment (layer i → tile i).
+    pub tiles_deployed: usize,
+}
+
+/// The analytic simulator.
+pub struct AnalyticSim {
+    pub cfg: PicnicConfig,
+    pub rates: EnergyRates,
+    pub link_kind: LinkKind,
+}
+
+impl AnalyticSim {
+    pub fn new(cfg: PicnicConfig) -> AnalyticSim {
+        AnalyticSim {
+            cfg,
+            rates: EnergyRates::default(),
+            link_kind: LinkKind::Optical,
+        }
+    }
+
+    pub fn with_link(mut self, kind: LinkKind) -> AnalyticSim {
+        self.link_kind = kind;
+        self
+    }
+
+    /// Cycles one phase takes (the calibrated per-phase latency model).
+    pub fn phase_cycles(&self, phase: &PhaseOp) -> u64 {
+        let t = &self.cfg.timing;
+        match phase {
+            PhaseOp::Broadcast { words, tree_depth, .. }
+            | PhaseOp::Reduce { words, tree_depth, .. } => {
+                tree_depth * t.hop_cycles + words / t.words_per_cycle
+            }
+            PhaseOp::Smac { vectors, row_blocks, .. } => {
+                // crossbars in different column blocks run in parallel;
+                // row blocks pipeline their partial passes
+                vectors * t.xbar_cycles * row_blocks.max(&1)
+            }
+            PhaseOp::Dmac { macs, pool_routers, .. } => {
+                let pool = pool_routers * self.cfg.system.dmac_per_router as u64;
+                macs.div_ceil(pool.max(1))
+            }
+            PhaseOp::Softmax { rows, row_len, scus } => {
+                let per_row =
+                    2 * row_len * t.scu_cycles_per_elem + t.scu_drain_cycles;
+                let waves = rows.div_ceil((*scus).max(1));
+                waves * per_row
+            }
+            PhaseOp::KvAppend { words } => words / t.words_per_cycle,
+            PhaseOp::C2c { bits } => {
+                let link = Interconnect::new(self.cfg.interconnect.clone(), self.link_kind);
+                link.transfer_cycles(*bits, self.cfg.system.frequency_hz)
+            }
+        }
+    }
+
+    /// Charge one phase's dynamic energy.
+    fn charge_phase(&self, phase: &PhaseOp, ledger: &mut EnergyLedger) {
+        let r = &self.rates;
+        match phase {
+            PhaseOp::Broadcast { word_hops, .. } | PhaseOp::Reduce { word_hops, .. } => {
+                ledger.charge_n(EnergyCategory::Hop, *word_hops, r.hop_word_j);
+            }
+            PhaseOp::Smac { vectors, n_crossbars, .. } => {
+                ledger.charge_n(EnergyCategory::Smac, vectors * n_crossbars, r.smac_op_j);
+            }
+            PhaseOp::Dmac { macs, .. } => {
+                ledger.charge_n(EnergyCategory::Dmac, *macs, r.dmac_mac_j);
+            }
+            PhaseOp::Softmax { rows, row_len, .. } => {
+                ledger.charge_n(EnergyCategory::Softmax, rows * row_len, r.scu_elem_j);
+            }
+            PhaseOp::KvAppend { words } => {
+                ledger.charge_n(EnergyCategory::Scratchpad, *words, r.scratchpad_word_j);
+            }
+            PhaseOp::C2c { bits } => {
+                let j_per_bit = match self.link_kind {
+                    LinkKind::Optical => self.cfg.interconnect.optical_c2c_j_per_bit,
+                    LinkKind::Electrical => self.cfg.interconnect.electrical_c2c_j_per_bit,
+                    LinkKind::Dram => self.cfg.interconnect.dram_j_per_bit,
+                };
+                ledger.charge_n(EnergyCategory::C2c, *bits, j_per_bit);
+                // Burst-gated laser: the transmitting port's laser + tuning
+                // draw their static power only for the transfer duration
+                // (lasers in idle/sleeping tiles are gated, per the paper's
+                // power-gating philosophy — see DESIGN.md §4).
+                if self.link_kind == LinkKind::Optical {
+                    let cycles = self.phase_cycles(phase) as f64;
+                    let laser_j = self.cfg.interconnect.laser_static_w_per_port
+                        * (cycles / self.cfg.system.frequency_hz);
+                    ledger.charge(EnergyCategory::C2c, laser_j);
+                }
+            }
+        }
+    }
+
+    /// Tiles needed to hold the model, one layer per chiplet (paper §III),
+    /// large layers spilling onto extra chiplets per their placement.
+    pub fn tiles_for(&self, model: &LlamaConfig) -> usize {
+        self.layer_footprints(model).iter().map(|(_, t)| t).sum()
+    }
+
+    /// Router-PE pairs carrying weights, summed over the whole model —
+    /// the quantity the paper's system power scales with (each pair draws
+    /// the Table IV 259 µW when its layer is active).
+    pub fn pairs_for(&self, model: &LlamaConfig) -> usize {
+        self.layer_footprints(model).iter().map(|(p, _)| p).sum()
+    }
+
+    /// (pairs_used, tiles_needed) per layer, from the Fig 6 placement.
+    fn layer_footprints(&self, model: &LlamaConfig) -> Vec<(usize, usize)> {
+        let sys = &self.cfg.system;
+        model
+            .layers()
+            .iter()
+            .map(|l| {
+                crate::mapper::Placement::for_layer(
+                    l,
+                    model.d_model,
+                    model.kv_width(),
+                    sys.ipcn_dim,
+                    sys.pe_array_dim,
+                )
+                .map(|p| (p.pairs_used, p.tiles_needed()))
+                .unwrap_or((sys.routers_per_tile(), 1))
+            })
+            .collect()
+    }
+
+    /// System macro power, W (the paper's CCPG power model at pair
+    /// granularity): every weight-carrying router-PE pair draws the full
+    /// Table IV 259 µW (+ its SCU share) while its layer's cluster is
+    /// active; under CCPG all pairs outside the active cluster keep only
+    /// scratchpad retention plus gated leakage.
+    pub fn macro_power_w(&self, model: &LlamaConfig) -> f64 {
+        let p = &self.cfg.power;
+        let pairs_total = self.pairs_for(model) as f64;
+        let per_pair_active = p.unit_pair_w() + p.softmax_w;
+        if !self.cfg.ccpg.enabled {
+            return pairs_total * per_pair_active;
+        }
+        let active_pairs = (self.cfg.ccpg.tiles_per_cluster
+            * self.cfg.system.routers_per_tile()) as f64;
+        let active = active_pairs.min(pairs_total);
+        let sleeping = pairs_total - active;
+        let per_pair_sleep =
+            p.scratchpad_w + (p.pe_w + p.router_w + p.softmax_w) * p.sleep_leak_frac;
+        active * per_pair_active + sleeping * per_pair_sleep
+    }
+
+    /// Run a full inference workload. Returns stats + ledger + C2C trace.
+    pub fn run(&self, model: &LlamaConfig, wl: &Workload) -> crate::Result<RunResult> {
+        let sys = &self.cfg.system;
+        let builder = ScheduleBuilder::new(&self.cfg, model);
+        let tiles = self.tiles_for(model);
+        let topo = OpticalTopology::new(tiles);
+        let mut ccpg = Ccpg::new(tiles, sys, self.cfg.ccpg.clone(), &topo);
+
+        let mut ledger = EnergyLedger::new();
+        let mut trace = C2cTrace::new();
+        let mut cycle: u64 = 0;
+
+        // Prefill: process the prompt in chunks of the flash block to bound
+        // plan size; chunking along seq_q is exact for latency because the
+        // per-phase costs are linear in seq_q above the pipeline fill.
+        let chunk = 128.min(wl.input_len);
+        let mut processed = 0usize;
+        while processed < wl.input_len {
+            let q = chunk.min(wl.input_len - processed);
+            let kv = processed + q;
+            cycle += self.step_all_layers(&builder, tiles, q, kv, &mut ledger, &mut trace, &mut ccpg, cycle)?;
+            processed += q;
+        }
+
+        // Decode: `output_len` tokens, KV growing each step. Evaluating
+        // every step is O(output_len × layers); we sample KV growth at a
+        // fixed number of points and integrate (the per-step cost is affine
+        // in kv_len — verified by test_analytic_affine_in_kv).
+        let samples = 8usize.min(wl.output_len);
+        let mut decode_cycles_total = 0u64;
+        let mut sample_points = Vec::with_capacity(samples);
+        for s in 0..samples {
+            // midpoint sampling of each segment
+            let i = (s * wl.output_len + wl.output_len / 2) / samples;
+            sample_points.push(i);
+        }
+        let seg = (wl.output_len as f64 / samples as f64).ceil() as usize;
+        for &i in &sample_points {
+            let kv = wl.kv_len_at_decode(i);
+            let c = self.step_all_layers(&builder, tiles, 1, kv, &mut ledger, &mut trace, &mut ccpg, cycle)?;
+            // weight: this sample stands for `seg` decode steps; energy for
+            // the remaining steps of the segment is charged via scaling.
+            let extra = (seg as u64).saturating_sub(1);
+            if extra > 0 {
+                let mut seg_ledger = EnergyLedger::new();
+                for plan in builder.plan_all(1, kv)? {
+                    for ph in &plan.phases {
+                        self.charge_phase(ph, &mut seg_ledger);
+                    }
+                }
+                for (cat, j) in seg_ledger.by_category().clone() {
+                    ledger.charge_n(cat, extra, j);
+                }
+                decode_cycles_total += extra * c;
+            }
+            decode_cycles_total += c;
+            cycle += c * seg as u64;
+        }
+        let total_cycles = cycle.max(1);
+        let _ = decode_cycles_total;
+
+        // Static power: macro power at pair granularity (CCPG-aware).
+        // The Ccpg controller above tracked cluster wake latency; power
+        // comes from the pair-level model (see macro_power_w). Laser power
+        // is burst-gated and charged per C2C transfer in charge_phase.
+        let static_w = self.macro_power_w(model);
+
+        let c2c_j = ledger.joules(EnergyCategory::C2c);
+        let stats = RunStats::compute(
+            &model.name,
+            &wl.label(),
+            wl.total_tokens() as u64,
+            total_cycles,
+            sys.frequency_hz,
+            static_w,
+            &ledger,
+            tiles,
+            self.cfg.ccpg.enabled,
+            c2c_j,
+        );
+        Ok(RunResult {
+            stats,
+            ledger,
+            trace,
+            tiles_deployed: tiles,
+        })
+    }
+
+    /// One pass of all layers (one decode token or one prefill chunk).
+    /// Returns cycles consumed. `total_tiles` is computed once per run
+    /// (building placements for every layer is not free — profiled in
+    /// EXPERIMENTS.md §Perf #6).
+    #[allow(clippy::too_many_arguments)]
+    fn step_all_layers(
+        &self,
+        builder: &ScheduleBuilder,
+        total_tiles: usize,
+        seq_q: usize,
+        seq_kv: usize,
+        ledger: &mut EnergyLedger,
+        trace: &mut C2cTrace,
+        ccpg: &mut Ccpg,
+        start_cycle: u64,
+    ) -> crate::Result<u64> {
+        let mut cycles = 0u64;
+        let plans = builder.plan_all(seq_q, seq_kv)?;
+        // Walk the chiplet chain: layer i occupies tiles
+        // [cursor, cursor + tiles_needed), layer-wise in model order.
+        let mut tile_cursor = 0usize;
+        for plan in plans.iter() {
+            // CCPG: wake the cluster owning this layer's first chiplet.
+            let tile = (tile_cursor % total_tiles.max(1)) as u32;
+            cycles += ccpg.activate_for_tile(tile);
+            tile_cursor += plan.tiles_needed;
+            for ph in &plan.phases {
+                let c = self.phase_cycles(ph);
+                self.charge_phase(ph, ledger);
+                if let PhaseOp::C2c { bits } = ph {
+                    trace.record(start_cycle + cycles, *bits, c);
+                }
+                cycles += c;
+            }
+        }
+        Ok(cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(ccpg: bool) -> AnalyticSim {
+        AnalyticSim::new(PicnicConfig::default().with_ccpg(ccpg))
+    }
+
+    #[test]
+    fn tiny_model_runs_and_is_sane() {
+        let r = sim(false)
+            .run(&LlamaConfig::tiny(), &Workload::new(64, 16))
+            .unwrap();
+        assert!(r.stats.tokens_per_s > 0.0);
+        assert!(r.stats.avg_power_w > 0.0);
+        assert!(r.stats.tokens_per_j > 0.0);
+        assert!(r.trace.total_bits() > 0, "C2C happened");
+    }
+
+    #[test]
+    fn tile_counts_match_placement_math() {
+        let s = sim(false);
+        // 1B: every layer-unit fits one chiplet → 16 decoders × 4 = 64.
+        let t1 = s.tiles_for(&LlamaConfig::llama32_1b());
+        assert_eq!(t1, 64, "1B: every layer fits one tile");
+        // 8B: ditto (attention 640 PEs, FFN ≤ 896 PEs, both ≤ 1024).
+        let t8 = s.tiles_for(&LlamaConfig::llama3_8b());
+        assert_eq!(t8, 128, "8B: 32 decoders × 4 layers");
+        // 13B MHA: attention 1600 PEs and FFN 1080 PEs spill to 2 chiplets
+        // each → 8 per decoder.
+        let t13 = s.tiles_for(&LlamaConfig::llama2_13b());
+        assert_eq!(t13, 320);
+    }
+
+    #[test]
+    fn pair_counts_give_paper_power_scale() {
+        // Table II average power ≈ pairs × 259 µW: 1B ≈ 4 W, 8B ≈ 28 W,
+        // 13B ≈ 52 W. Pair counts must land in that range.
+        let s = sim(false);
+        let p = |m: &LlamaConfig| s.pairs_for(m) as f64 * 259e-6;
+        let p1 = p(&LlamaConfig::llama32_1b());
+        let p8 = p(&LlamaConfig::llama3_8b());
+        let p13 = p(&LlamaConfig::llama2_13b());
+        assert!((3.5..5.0).contains(&p1), "1B macro power {p1}");
+        assert!((26.0..31.0).contains(&p8), "8B macro power {p8}");
+        assert!((48.0..57.0).contains(&p13), "13B macro power {p13}");
+    }
+
+    #[test]
+    fn throughput_decreases_with_model_size() {
+        let s = sim(false);
+        let wl = Workload::new(512, 512);
+        let r1 = s.run(&LlamaConfig::llama32_1b(), &wl).unwrap();
+        let r8 = s.run(&LlamaConfig::llama3_8b(), &wl).unwrap();
+        assert!(
+            r1.stats.tokens_per_s > r8.stats.tokens_per_s,
+            "1B {} > 8B {}",
+            r1.stats.tokens_per_s,
+            r8.stats.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn throughput_decreases_with_context() {
+        let s = sim(false);
+        let m = LlamaConfig::llama32_1b();
+        let r512 = s.run(&m, &Workload::new(512, 512)).unwrap();
+        let r2048 = s.run(&m, &Workload::new(2048, 2048)).unwrap();
+        assert!(r512.stats.tokens_per_s > r2048.stats.tokens_per_s);
+        assert!(r512.stats.tokens_per_j > r2048.stats.tokens_per_j);
+    }
+
+    #[test]
+    fn ccpg_cuts_power_substantially() {
+        let m = LlamaConfig::llama3_8b();
+        let wl = Workload::new(1024, 1024);
+        let off = sim(false).run(&m, &wl).unwrap();
+        let on = sim(true).run(&m, &wl).unwrap();
+        let saving = 1.0 - on.stats.avg_power_w / off.stats.avg_power_w;
+        assert!(saving > 0.6, "CCPG saves >60% on 8B: {saving}");
+        // throughput must not collapse (wake latency is small)
+        assert!(on.stats.tokens_per_s > 0.9 * off.stats.tokens_per_s);
+    }
+
+    #[test]
+    fn optical_beats_electrical_c2c_power() {
+        let m = LlamaConfig::llama32_1b();
+        let wl = Workload::new(512, 512);
+        let opt = sim(false).run(&m, &wl).unwrap();
+        let mut s = sim(false);
+        s.link_kind = LinkKind::Electrical;
+        let ele = s.run(&m, &wl).unwrap();
+        let opt_dynamic = opt.ledger.joules(EnergyCategory::C2c);
+        let ele_dynamic = ele.ledger.joules(EnergyCategory::C2c);
+        assert!(
+            opt_dynamic < ele_dynamic / 3.0,
+            "optical dynamic C2C ≥3× cheaper: {opt_dynamic} vs {ele_dynamic}"
+        );
+    }
+
+    #[test]
+    fn decode_cost_affine_in_kv() {
+        // the decode sampling strategy assumes per-step cycles are affine
+        // in kv_len — verify on three points
+        let s = sim(false);
+        let m = LlamaConfig::llama32_1b();
+        let b = ScheduleBuilder::new(&s.cfg, &m);
+        let cost = |kv: usize| -> u64 {
+            b.plan_all(1, kv)
+                .unwrap()
+                .iter()
+                .flat_map(|p| p.phases.iter())
+                .map(|ph| s.phase_cycles(ph))
+                .sum()
+        };
+        let (c1, c2, c3) = (cost(512), cost(1024), cost(1536));
+        let d1 = c2 as i64 - c1 as i64;
+        let d2 = c3 as i64 - c2 as i64;
+        assert!(
+            (d1 - d2).abs() <= (d1 / 10).max(64),
+            "affine: deltas {d1} vs {d2}"
+        );
+    }
+}

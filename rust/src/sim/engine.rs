@@ -1,0 +1,284 @@
+//! The detailed cycle engine: one compute tile simulated cycle-by-cycle —
+//! NPM double-buffering, NMC issue, the router mesh, attached PE crossbars,
+//! SCUs on the top die and the optical egress on the bottom die.
+//!
+//! Used for functional verification (small configs, checked against the
+//! JAX/Pallas oracle through the PJRT runtime) and for calibrating the
+//! analytic model's TimingConfig constants.
+
+use crate::config::SystemConfig;
+use crate::ipcn::{Mesh, Nmc, Npm};
+use crate::isa::{Port, Program};
+use crate::pe::{Crossbar, QuantSpec};
+use crate::scu::Scu;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+/// A PE attachment: the crossbar plus its AXI input staging buffer and the
+/// result words queued for injection back into the router.
+struct PeSlot {
+    xbar: Crossbar,
+    /// Words staged from the router (input vector fills up to rows()).
+    staging: Vec<f32>,
+    /// Results pending injection into the router's PE FIFO.
+    results: VecDeque<f64>,
+    /// Cycle at which pending results become visible (xbar latency).
+    ready_at: u64,
+}
+
+/// The tile engine.
+pub struct TileEngine {
+    pub cfg: SystemConfig,
+    pub mesh: Mesh,
+    pub npm: Npm,
+    pub nmc: Nmc,
+    pes: HashMap<usize, PeSlot>,
+    scus: HashMap<usize, Scu>,
+    /// SCU row staging per router (words arriving over the Up TSV).
+    scu_staging: HashMap<usize, Vec<f32>>,
+    scu_row_len: usize,
+    /// Words that left the tile via the optical die: (cycle, router, word).
+    pub optical_egress: Vec<(u64, usize, f64)>,
+    pub cycle: u64,
+    /// Crossbar SMAC latency in cycles (from TimingConfig).
+    pub xbar_latency: u64,
+}
+
+impl TileEngine {
+    pub fn new(cfg: SystemConfig, xbar_latency: u64) -> TileEngine {
+        let n = cfg.routers_per_tile();
+        TileEngine {
+            mesh: Mesh::new(&cfg),
+            npm: Npm::new(),
+            nmc: Nmc::new(n),
+            pes: HashMap::new(),
+            scus: HashMap::new(),
+            scu_staging: HashMap::new(),
+            scu_row_len: 0,
+            optical_egress: Vec::new(),
+            cycle: 0,
+            xbar_latency,
+            cfg,
+        }
+    }
+
+    /// Attach a programmed crossbar to router `idx`.
+    pub fn attach_pe(&mut self, idx: usize, weights: &[f32], rows: usize, cols: usize) {
+        let mut xbar = Crossbar::program(weights, rows, cols, QuantSpec::default());
+        // calibration with a generic ramp set (tests can re-calibrate)
+        let cal: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..rows).map(|r| ((r + i) % 7) as f32 / 7.0).collect())
+            .collect();
+        xbar.calibrate(&cal);
+        self.pes.insert(
+            idx,
+            PeSlot {
+                xbar,
+                staging: Vec::with_capacity(rows),
+                results: VecDeque::new(),
+                ready_at: 0,
+            },
+        );
+    }
+
+    /// Give router `idx` an SCU on the top die, processing rows of `len`.
+    pub fn attach_scu(&mut self, idx: usize, row_len: usize) {
+        self.scus.insert(idx, Scu::new());
+        self.scu_staging.insert(idx, Vec::with_capacity(row_len));
+        self.scu_row_len = row_len;
+    }
+
+    /// Load and start a program.
+    pub fn load_program(&mut self, program: &Program) {
+        self.npm.bootstrap(program);
+    }
+
+    /// Step one cycle. Returns false when the NMC has drained the NPM and
+    /// no PE/SCU work is pending.
+    pub fn step(&mut self) -> bool {
+        let issued = self.nmc.issue(&mut self.npm);
+        let boundary = match &issued {
+            Some(slice) => self.mesh.step(&slice.instrs),
+            None => {
+                // drain-only cycle: keep the mesh idle but let PE/SCU finish
+                let idle = vec![crate::isa::Instruction::IDLE; self.mesh.n_routers()];
+                self.mesh.step(&idle)
+            }
+        };
+
+        // PE side: staging + SMAC trigger when the staging buffer is full.
+        for (r, w) in boundary.to_pe {
+            if let Some(pe) = self.pes.get_mut(&r) {
+                pe.staging.push(w as f32);
+                if pe.staging.len() == pe.xbar.rows() {
+                    let y = pe.xbar.smac(&pe.staging);
+                    pe.staging.clear();
+                    pe.ready_at = self.cycle + self.xbar_latency;
+                    pe.results.extend(y.into_iter().map(|v| v as f64));
+                }
+            }
+        }
+        // Inject ready PE results back into the router PE FIFOs.
+        for (r, pe) in self.pes.iter_mut() {
+            if pe.ready_at <= self.cycle {
+                while let Some(front) = pe.results.front().copied() {
+                    if self.mesh.router_mut(*r).inject(Port::Pe, front) {
+                        pe.results.pop_front();
+                    } else {
+                        break; // backpressure: retry next cycle
+                    }
+                }
+            }
+        }
+
+        // SCU side: accumulate a row, run the FSM, push results back down.
+        for (r, w) in boundary.to_scu {
+            if let (Some(stage), Some(scu)) =
+                (self.scu_staging.get_mut(&r), self.scus.get_mut(&r))
+            {
+                stage.push(w as f32);
+                if stage.len() == self.scu_row_len {
+                    let out = scu.softmax_row(stage);
+                    stage.clear();
+                    for v in out {
+                        // results come back via the Down... no: SCU sits on
+                        // the *top* die; results return through the Up port.
+                        let _ = self.mesh.router_mut(r).inject(Port::Up, v as f64);
+                    }
+                }
+            }
+        }
+
+        // Optical egress.
+        for (r, w) in boundary.to_optical {
+            self.optical_egress.push((self.cycle, r, w));
+        }
+
+        self.cycle += 1;
+        let pe_pending = self.pes.values().any(|p| !p.results.is_empty());
+        issued.is_some() || pe_pending
+    }
+
+    /// Run until the program drains (bounded by `max_cycles`).
+    pub fn run(&mut self, max_cycles: u64) -> u64 {
+        let start = self.cycle;
+        while self.step() {
+            if self.cycle - start >= max_cycles {
+                break;
+            }
+        }
+        self.cycle - start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Assembler, FirmwareOp, Instruction, Mode, PortSet};
+
+    /// Move a word across a row of the mesh and check it leaves the tile.
+    #[test]
+    fn pipeline_program_runs_to_completion() {
+        let cfg = SystemConfig::tiny(4);
+        let mut eng = TileEngine::new(cfg.clone(), 128);
+        let mut asm = Assembler::new(4);
+        asm.pipeline_east(0, 8);
+        eng.load_program(&asm.finish());
+        eng.mesh.inject(0, Port::West, 5.5);
+        let cycles = eng.run(100);
+        assert!(cycles <= 9, "8-repeat row + drain, got {cycles}");
+        assert_eq!(eng.optical_egress.len(), 1);
+        assert_eq!(eng.optical_egress[0].2, 5.5);
+    }
+
+    #[test]
+    fn pe_smac_roundtrip_through_mesh() {
+        let cfg = SystemConfig::tiny(4);
+        let mut eng = TileEngine::new(cfg, 4);
+        // 4×2 weight tile on router 0
+        let w = vec![0.1f32, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+        eng.attach_pe(0, &w, 4, 2);
+        // program: router 0 PeTriggers 4 words from its West FIFO, then
+        // routes PE results east.
+        let mut asm = Assembler::new(4);
+        asm.emit(
+            FirmwareOp::at(
+                0,
+                0,
+                Instruction::new(PortSet::single(Port::West), Mode::PeTrigger, PortSet::EMPTY),
+            )
+            .repeat(4),
+        );
+        asm.emit(
+            FirmwareOp::at(
+                0,
+                0,
+                Instruction::new(
+                    PortSet::single(Port::Pe),
+                    Mode::Route,
+                    PortSet::single(Port::East),
+                ),
+            )
+            .repeat(12),
+        );
+        eng.load_program(&asm.finish());
+        let x = [1.0f64, 2.0, 3.0, 4.0];
+        for v in x {
+            eng.mesh.inject(0, Port::West, v);
+        }
+        eng.run(200);
+        // expected: y = x^T W (within crossbar quantization error)
+        let want0 = 1.0 * 0.1 + 2.0 * 0.3 + 3.0 * 0.5 + 4.0 * 0.7;
+        let want1 = 1.0 * 0.2 + 2.0 * 0.4 + 3.0 * 0.6 + 4.0 * 0.8;
+        // router 1 forwards nothing (it only received), so results sit in
+        // router 1's West FIFO after routing east from router 0
+        let r1 = eng.mesh.router(1);
+        assert_eq!(r1.fifo(Port::West).len(), 2, "two output words arrived");
+        let mut r1m = eng.mesh.router_mut(1);
+        let y0 = r1m.fifo_mut(Port::West).pop().unwrap();
+        let y1 = r1m.fifo_mut(Port::West).pop().unwrap();
+        assert!((y0 - want0).abs() / want0 < 0.05, "{y0} vs {want0}");
+        assert!((y1 - want1).abs() / want1 < 0.05, "{y1} vs {want1}");
+    }
+
+    #[test]
+    fn scu_roundtrip_through_up_tsv() {
+        let cfg = SystemConfig::tiny(4);
+        let mut eng = TileEngine::new(cfg, 4);
+        eng.attach_scu(5, 4);
+        // router 5 streams 4 words up to the SCU
+        let mut asm = Assembler::new(4);
+        asm.emit(
+            FirmwareOp::at(
+                1,
+                1,
+                Instruction::new(PortSet::single(Port::West), Mode::ScuStream, PortSet::EMPTY),
+            )
+            .repeat(4),
+        );
+        eng.load_program(&asm.finish());
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            eng.mesh.inject(5, Port::West, v);
+        }
+        eng.run(50);
+        // SCU results injected back into router 5's Up FIFO
+        let r5 = eng.mesh.router(5);
+        assert_eq!(r5.fifo(Port::Up).len(), 4);
+        let mut total = 0.0;
+        let r5m = eng.mesh.router_mut(5);
+        for _ in 0..4 {
+            total += r5m.fifo_mut(Port::Up).pop().unwrap();
+        }
+        assert!((total - 1.0).abs() < 1e-5, "softmax sums to 1: {total}");
+    }
+
+    #[test]
+    fn engine_halts_on_empty_program() {
+        let cfg = SystemConfig::tiny(4);
+        let mut eng = TileEngine::new(cfg, 4);
+        let asm = Assembler::new(4);
+        eng.load_program(&asm.finish());
+        let cycles = eng.run(100);
+        assert!(cycles <= 1, "nothing to do: {cycles}");
+    }
+}

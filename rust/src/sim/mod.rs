@@ -1,0 +1,21 @@
+//! Two-level simulation (DESIGN.md §6):
+//!
+//! * [`engine`]   — the detailed cycle engine: NPM/NMC-driven mesh with PE,
+//!   SCU and optical models attached, used for small configs, functional
+//!   verification against the JAX oracle, and calibration;
+//! * [`analytic`] — the calibrated analytic model that walks
+//!   `mapper::LayerPlan`s to produce full-model latency/energy (Tables
+//!   II/III, Figs 8-10) — a 32×32 mesh × 8B params × 2048 tokens is not
+//!   tractable cycle-by-cycle in CI;
+//! * [`trace`]    — time-binned C2C transfer traces (Fig 10);
+//! * [`stats`]    — run-level summary (tokens/s, W, tokens/J).
+
+pub mod analytic;
+pub mod engine;
+pub mod stats;
+pub mod trace;
+
+pub use analytic::{AnalyticSim, RunResult};
+pub use engine::TileEngine;
+pub use stats::RunStats;
+pub use trace::C2cTrace;

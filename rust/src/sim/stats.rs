@@ -1,0 +1,76 @@
+//! Run-level summary statistics: the quantities Table II reports.
+
+use crate::power::EnergyLedger;
+
+/// Summary of one simulated inference run.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub model: String,
+    pub workload: String,
+    pub total_tokens: u64,
+    pub total_cycles: u64,
+    pub wall_seconds: f64,
+    /// Average system power over the run, W (static + dynamic/time).
+    pub avg_power_w: f64,
+    /// Throughput, tokens/s.
+    pub tokens_per_s: f64,
+    /// Energy efficiency, tokens/J.
+    pub tokens_per_j: f64,
+    /// Chiplets deployed / active on average.
+    pub tiles_deployed: usize,
+    pub ccpg_enabled: bool,
+    /// Average C2C transfer power, W (Fig 9 quantity).
+    pub c2c_avg_power_w: f64,
+}
+
+impl RunStats {
+    pub fn compute(
+        model: &str,
+        workload: &str,
+        total_tokens: u64,
+        total_cycles: u64,
+        freq_hz: f64,
+        static_power_w: f64,
+        ledger: &EnergyLedger,
+        tiles_deployed: usize,
+        ccpg_enabled: bool,
+        c2c_energy_j: f64,
+    ) -> RunStats {
+        let wall_seconds = total_cycles as f64 / freq_hz;
+        let dynamic_j = ledger.total_j();
+        let total_j = dynamic_j + static_power_w * wall_seconds;
+        let avg_power_w = total_j / wall_seconds;
+        RunStats {
+            model: model.to_string(),
+            workload: workload.to_string(),
+            total_tokens,
+            total_cycles,
+            wall_seconds,
+            avg_power_w,
+            tokens_per_s: total_tokens as f64 / wall_seconds,
+            tokens_per_j: total_tokens as f64 / total_j,
+            tiles_deployed,
+            ccpg_enabled,
+            c2c_avg_power_w: c2c_energy_j / wall_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::{EnergyCategory, EnergyLedger};
+
+    #[test]
+    fn stats_identities_hold() {
+        let mut l = EnergyLedger::new();
+        l.charge(EnergyCategory::Smac, 1.0); // 1 J dynamic
+        let s = RunStats::compute("m", "512/512", 1024, 2_000_000_000, 1e9, 3.0, &l, 10, false, 0.25);
+        assert!((s.wall_seconds - 2.0).abs() < 1e-12);
+        // total energy = 1 + 3*2 = 7 J → avg power 3.5 W
+        assert!((s.avg_power_w - 3.5).abs() < 1e-12);
+        assert!((s.tokens_per_s - 512.0).abs() < 1e-9);
+        assert!((s.tokens_per_j - 1024.0 / 7.0).abs() < 1e-9);
+        assert!((s.c2c_avg_power_w - 0.125).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,105 @@
+//! C2C transfer trace (Fig 10): time-binned record of chip-to-chip data
+//! movement over a run, showing the bursty pattern the paper highlights —
+//! transfers happen only between per-layer compute windows.
+
+
+/// One logical C2C burst.
+#[derive(Debug, Clone, Copy)]
+pub struct Burst {
+    pub start_cycle: u64,
+    pub bits: u64,
+    pub duration_cycles: u64,
+}
+
+/// The trace accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct C2cTrace {
+    pub bursts: Vec<Burst>,
+    pub total_cycles: u64,
+}
+
+impl C2cTrace {
+    pub fn new() -> C2cTrace {
+        C2cTrace::default()
+    }
+
+    pub fn record(&mut self, start_cycle: u64, bits: u64, duration_cycles: u64) {
+        self.bursts.push(Burst {
+            start_cycle,
+            bits,
+            duration_cycles: duration_cycles.max(1),
+        });
+        self.total_cycles = self.total_cycles.max(start_cycle + duration_cycles);
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.bursts.iter().map(|b| b.bits).sum()
+    }
+
+    /// Bits per bin over `n_bins` equal time bins (the Fig 10 series).
+    pub fn binned(&self, n_bins: usize) -> Vec<u64> {
+        assert!(n_bins > 0);
+        let mut bins = vec![0u64; n_bins];
+        if self.total_cycles == 0 {
+            return bins;
+        }
+        let bin_w = self.total_cycles.div_ceil(n_bins as u64).max(1);
+        for b in &self.bursts {
+            let first = (b.start_cycle / bin_w) as usize;
+            let last = ((b.start_cycle + b.duration_cycles - 1) / bin_w) as usize;
+            let span = (last - first + 1) as u64;
+            for i in first..=last.min(n_bins - 1) {
+                bins[i] += b.bits / span;
+            }
+        }
+        bins
+    }
+
+    /// Fraction of bins with zero traffic — the "burstiness" Fig 10 shows
+    /// (C2C active only between compute windows).
+    pub fn idle_fraction(&self, n_bins: usize) -> f64 {
+        let bins = self.binned(n_bins);
+        bins.iter().filter(|b| **b == 0).count() as f64 / n_bins as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bursty_trace_has_idle_gaps() {
+        let mut t = C2cTrace::new();
+        // bursts at the start of each "layer window" of 1000 cycles
+        for layer in 0..10u64 {
+            t.record(layer * 1000, 4096, 10);
+        }
+        let idle = t.idle_fraction(100);
+        assert!(idle > 0.8, "bursty trace mostly idle: {idle}");
+        assert_eq!(t.total_bits(), 40960);
+    }
+
+    #[test]
+    fn continuous_trace_has_no_gaps() {
+        let mut t = C2cTrace::new();
+        t.record(0, 1000, 1000);
+        assert_eq!(t.idle_fraction(10), 0.0);
+    }
+
+    #[test]
+    fn binning_conserves_order_of_magnitude() {
+        let mut t = C2cTrace::new();
+        t.record(0, 100, 1);
+        t.record(999, 300, 1);
+        let bins = t.binned(10);
+        assert_eq!(bins[0], 100);
+        assert_eq!(bins[9], 300);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = C2cTrace::new();
+        assert_eq!(t.binned(5), vec![0; 5]);
+        assert_eq!(t.total_bits(), 0);
+    }
+}

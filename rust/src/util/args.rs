@@ -1,0 +1,108 @@
+//! Tiny argv parser (replaces clap in this offline build): positional
+//! subcommand + `--flag` / `--key value` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --model 8b --input 1024 --ccpg");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.opt("model"), Some("8b"));
+        assert_eq!(a.opt_usize("input", 0).unwrap(), 1024);
+        assert!(a.flag("ccpg"));
+        assert!(!a.flag("electrical"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("report --what=table2");
+        assert_eq!(a.opt("what"), Some("table2"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --json");
+        assert!(a.flag("json"));
+    }
+
+    #[test]
+    fn bad_usize_is_error() {
+        let a = parse("run --input abc");
+        assert!(a.opt_usize("input", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.opt_or("model", "tiny"), "tiny");
+        assert_eq!(a.opt_usize("requests", 32).unwrap(), 32);
+    }
+}

@@ -1,0 +1,384 @@
+//! Minimal JSON parser + emitter (replaces serde_json in this offline
+//! build). Supports the full JSON grammar minus exotic number forms;
+//! enough for the artifact manifest, config files and stats dumps.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        anyhow::ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
+        Ok(v)
+    }
+
+    // -- typed accessors ----------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Convenience: object field as usize with error context.
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid field {key}"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid field {key}"))
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))
+    }
+
+    fn eat(&mut self, c: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(self.peek()? == c, "expected {:?} at byte {}", c as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> anyhow::Result<Json> {
+        anyhow::ensure!(
+            self.b[self.i..].starts_with(s.as_bytes()),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += s.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        match self.peek()? {
+            b'{' => self.obj(),
+            b'[' => self.arr(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.num(),
+        }
+    }
+
+    fn obj(&mut self) -> anyhow::Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            m.insert(k, self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => anyhow::bail!("expected , or }} got {:?}", c as char),
+            }
+        }
+    }
+
+    fn arr(&mut self) -> anyhow::Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => anyhow::bail!("expected , or ] got {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            anyhow::ensure!(self.i + 4 <= self.b.len(), "bad \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        c => anyhow::bail!("bad escape \\{}", c as char),
+                    }
+                }
+                c => {
+                    // collect full UTF-8 sequences
+                    let start = self.i - 1;
+                    let len = match c {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    self.i = start + len;
+                    anyhow::ensure!(self.i <= self.b.len(), "truncated UTF-8");
+                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    fn num(&mut self) -> anyhow::Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| {
+            anyhow::anyhow!("bad number {s:?} at byte {start}: {e}")
+        })?))
+    }
+}
+
+fn escape(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
+impl Json {
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => escape(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Builder helpers for emitting stats objects.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+pub fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let text = r#"{
+            "config": {"d_model": 64, "seq": 64},
+            "param_order": ["wq", "wk"],
+            "artifacts": {"a": {"path": "a.hlo.txt", "arg_shapes": [[64, 64]]}}
+        }"#;
+        let j = Json::parse(text).unwrap();
+        assert_eq!(j.get("config").unwrap().req_usize("d_model").unwrap(), 64);
+        let shapes = j.get("artifacts").unwrap().get("a").unwrap().get("arg_shapes").unwrap();
+        assert_eq!(shapes.as_arr().unwrap()[0].as_arr().unwrap()[1].as_usize(), Some(64));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let j = obj(vec![
+            ("name", s("llama \"8b\"")),
+            ("x", num(3.25)),
+            ("n", num(42.0)),
+            ("flag", Json::Bool(true)),
+            ("list", Json::Arr(vec![num(1.0), Json::Null])),
+        ]);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(Json::parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
+        assert_eq!(Json::parse("0").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn escapes() {
+        let j = Json::parse(r#""a\nbA\"q\"""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\nbA\"q\""));
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let j = Json::parse("\"héllo→\"").unwrap();
+        assert_eq!(j.as_str(), Some("héllo→"));
+    }
+}

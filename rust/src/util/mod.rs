@@ -1,0 +1,12 @@
+//! Small self-contained utilities that replace crates.io dependencies in
+//! this offline build: a deterministic PRNG (replaces rand/rand_chacha),
+//! a minimal JSON parser/emitter (replaces serde_json — only what the
+//! artifact manifest and config dumps need), and a tiny argv parser
+//! (replaces clap).
+
+pub mod args;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,146 @@
+//! Failure injection: the simulator must degrade loudly-but-gracefully,
+//! never silently corrupt data.
+//!
+//!  * NPM underflow mid-run (co-processor too slow) → CSR flag, no panic;
+//!  * FIFO saturation → backpressure, zero word loss;
+//!  * oversized KV cache → clean refusal;
+//!  * malformed firmware hex / manifest → errors, not garbage;
+//!  * power-gated cluster retains scratchpad + RRAM state.
+
+use picnic::config::SystemConfig;
+use picnic::ipcn::{Npm, Nmc};
+use picnic::isa::{Assembler, FirmwareOp, Instruction, Mode, Port, PortSet, Program, ProgramRow};
+use picnic::mapper::KvCache;
+use picnic::sim::TileEngine;
+
+#[test]
+fn npm_underflow_sets_csr_and_recovers() {
+    let mut npm = Npm::new();
+    let mut p = Program::new(4);
+    p.push(ProgramRow::uniform(Instruction::IDLE, 4, 1));
+    npm.bootstrap(&p);
+    let mut nmc = Nmc::new(4);
+    assert!(nmc.issue(&mut npm).is_some());
+    assert!(nmc.issue(&mut npm).is_none(), "drained");
+    // co-processor missed its deadline: flip fails, CSR says why
+    assert!(!npm.flip());
+    assert!(npm.csr.underflow, "underflow must be observable");
+    // late refill: system recovers without restart
+    npm.configure_inactive(vec![ProgramRow::uniform(Instruction::IDLE, 4, 2)]);
+    assert!(npm.flip(), "recovers after refill");
+    assert!(nmc.issue(&mut npm).is_some());
+}
+
+#[test]
+fn fifo_saturation_loses_no_words() {
+    // hammer a 2-router pipeline with more words than FIFO capacity while
+    // the consumer drains slowly; every word must come out exactly once.
+    let dim = 4;
+    let mut eng = TileEngine::new(SystemConfig::tiny(dim), 4);
+    let mut asm = Assembler::new(dim);
+    // only router (0,0) forwards; (0,1..3) route east too but start later
+    asm.emit(
+        FirmwareOp::region(
+            (0, 0),
+            (0, dim - 1),
+            Instruction::new(
+                PortSet::single(Port::West),
+                Mode::Route,
+                PortSet::single(Port::East),
+            ),
+        )
+        .repeat(600),
+    );
+    eng.load_program(&asm.finish());
+    let total = 200u64;
+    let mut injected = 0u64;
+    let mut rejected_injects = 0u64;
+    let mut cycles = 0;
+    while eng.optical_egress.len() < total as usize && cycles < 5000 {
+        // try to inject 3 words per cycle — deliberately over capacity
+        for _ in 0..3 {
+            if injected < total {
+                if eng.mesh.inject(0, Port::West, injected as f64) {
+                    injected += 1;
+                } else {
+                    rejected_injects += 1;
+                }
+            }
+        }
+        eng.step();
+        cycles += 1;
+    }
+    assert!(rejected_injects > 0, "saturation actually happened");
+    assert_eq!(eng.optical_egress.len(), total as usize, "no loss");
+    let mut seen: Vec<f64> = eng.optical_egress.iter().map(|(_, _, w)| *w).collect();
+    seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (i, w) in seen.iter().enumerate() {
+        assert_eq!(*w, i as f64, "no duplication/corruption");
+    }
+}
+
+#[test]
+fn kv_cache_full_refuses_cleanly() {
+    let mut kv = KvCache::new(vec![0, 1], 8, 16);
+    for _ in 0..kv.capacity_tokens() {
+        assert!(kv.append().is_some());
+    }
+    for _ in 0..10 {
+        assert!(kv.append().is_none(), "over-capacity appends must fail");
+    }
+    assert_eq!(kv.len(), kv.capacity_tokens(), "state not corrupted");
+    assert!(kv.imbalance() <= 1);
+}
+
+#[test]
+fn malformed_firmware_rejected() {
+    // truncated SEL field
+    assert!(Program::from_hex("00000000;00000000;00000001;0\n", 4).is_err());
+    // illegal mode bits (mode=0xf)
+    let bad_mode = format!("{:08x};00000000;00000001;00\n", 0xfu32 << 19);
+    assert!(Program::from_hex(&bad_mode, 1).is_err());
+    // giant repeat parses (u32) — bounded by the field width, not a hang
+    let big = Program::from_hex("00000000;00000000;ffffffff;00\n", 1).unwrap();
+    assert_eq!(big.rows[0].repeat, u32::MAX);
+}
+
+#[test]
+fn power_gating_preserves_state() {
+    use picnic::chiplet::{Cluster, ComputeTile};
+    use picnic::ipcn::Scratchpad;
+    use picnic::pe::RramArray;
+
+    // scratchpad retention flag + RRAM non-volatility are what make CCPG
+    // sleep safe; assert both, then assert the cluster wake path keeps
+    // tiles' pairs_used intact.
+    let mut spad = Scratchpad::new(64);
+    spad.write(7, 3.5);
+    assert!(spad.retain_through_power_gate());
+    assert_eq!(spad.read(7), Some(3.5));
+
+    let mut rram = RramArray::new(4, 4, 256);
+    rram.program(&vec![9; 16]);
+    assert!(rram.non_volatile());
+    assert_eq!(rram.program_count(), 1, "no reprogramming needed after wake");
+
+    let sys = SystemConfig::default();
+    let mut cluster = Cluster::new(0, (0..4).map(|i| ComputeTile::new(i, &sys)).collect());
+    let pairs_before: Vec<usize> = cluster.tiles.iter().map(|t| t.pairs_used).collect();
+    cluster.wake();
+    cluster.sleep();
+    cluster.wake();
+    let pairs_after: Vec<usize> = cluster.tiles.iter().map(|t| t.pairs_used).collect();
+    assert_eq!(pairs_before, pairs_after);
+}
+
+#[test]
+fn engine_bounded_run_never_hangs() {
+    // a program whose FIFOs never fill (no input) must terminate by the
+    // cycle bound, not spin
+    let mut eng = TileEngine::new(SystemConfig::tiny(4), 4);
+    let mut asm = Assembler::new(4);
+    asm.pipeline_east(0, u32::MAX / 2); // absurd repeat
+    eng.load_program(&asm.finish());
+    let cycles = eng.run(1000);
+    assert!(cycles <= 1001, "bounded: {cycles}");
+}

@@ -1,0 +1,200 @@
+//! Functional verification against the AOT JAX/Pallas oracle.
+//!
+//! These tests load `artifacts/*.hlo.txt` (built by `make artifacts`) on
+//! the PJRT CPU client and hold the rust models to the oracle's numerics:
+//!   * SCU softmax_row  ≡ the pallas softmax_pwl kernel,
+//!   * the rust reference attention ≡ the pallas flash-attention kernel,
+//!   * a rust float decoder block ≡ the AOT decoder artifact.
+//!
+//! Skipped gracefully when artifacts are missing (CI runs `make artifacts`
+//! first; `cargo test` alone must not hard-fail on a clean checkout).
+
+use picnic::runtime::{ArtifactManifest, RuntimeClient};
+use picnic::scu::Scu;
+use picnic::util::Rng;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = ArtifactManifest::default_dir();
+    match ArtifactManifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP oracle tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut d2, mut n2) = (0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        d2 += ((x - y) as f64).powi(2);
+        n2 += (*y as f64).powi(2);
+    }
+    (d2 / n2.max(1e-30)).sqrt()
+}
+
+#[test]
+fn scu_matches_pallas_softmax_oracle() {
+    let Some(m) = manifest() else { return };
+    let client = RuntimeClient::cpu().expect("pjrt");
+    let exe = client
+        .compile_hlo_text(&m.path_of("softmax_pwl").unwrap())
+        .expect("compile");
+    let (rows, cols) = (32usize, 64usize);
+    let mut rng = Rng::seed_from_u64(11);
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.sym_f32(4.0)).collect();
+    let want = exe.run_f32(&[(&x, &[rows, cols])]).expect("run");
+
+    let mut scu = Scu::new();
+    let mut got = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        got.extend(scu.softmax_row(&x[r * cols..(r + 1) * cols]));
+    }
+    for (g, w) in got.iter().zip(want.iter()) {
+        assert!(
+            (g - w).abs() < 1e-5,
+            "SCU diverges from the pallas kernel: {g} vs {w}"
+        );
+    }
+}
+
+/// Plain-float reference attention in rust (the oracle for the oracle —
+/// same math as kernels/ref.py::attention).
+fn ref_attention(q: &[f32], k: &[f32], v: &[f32], s: usize, d: usize, causal: bool) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; s * d];
+    for i in 0..s {
+        let mut scores = vec![f32::NEG_INFINITY; s];
+        let lim = if causal { i + 1 } else { s };
+        for (j, sc) in scores.iter_mut().enumerate().take(lim) {
+            let mut dot = 0.0f32;
+            for t in 0..d {
+                dot += q[i * d + t] * k[j * d + t];
+            }
+            *sc = dot * scale;
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let e: Vec<f32> = scores
+            .iter()
+            .map(|x| if x.is_finite() { (x - m).exp() } else { 0.0 })
+            .collect();
+        let sum: f32 = e.iter().sum();
+        for t in 0..d {
+            let mut acc = 0.0f32;
+            for (j, w) in e.iter().enumerate() {
+                acc += w / sum * v[j * d + t];
+            }
+            out[i * d + t] = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn pallas_flash_attention_oracle_matches_rust_reference() {
+    let Some(m) = manifest() else { return };
+    let client = RuntimeClient::cpu().expect("pjrt");
+    let exe = client
+        .compile_hlo_text(&m.path_of("attention_tiny").unwrap())
+        .expect("compile");
+    let (h, s, d) = (m.config.n_heads, m.config.seq, m.config.d_model / m.config.n_heads);
+    let mut rng = Rng::seed_from_u64(5);
+    let mk = |rng: &mut Rng| -> Vec<f32> {
+        (0..h * s * d).map(|_| rng.sym_f32(1.0)).collect()
+    };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let shape = [h, s, d];
+    let got = exe
+        .run_f32(&[(&q, &shape), (&k, &shape), (&v, &shape)])
+        .expect("run");
+    // per-head rust reference
+    let mut want = Vec::with_capacity(h * s * d);
+    for head in 0..h {
+        let off = head * s * d;
+        want.extend(ref_attention(
+            &q[off..off + s * d],
+            &k[off..off + s * d],
+            &v[off..off + s * d],
+            s,
+            d,
+            true,
+        ));
+    }
+    let err = rel_err(&got, &want);
+    assert!(err < 1e-4, "flash-attention oracle rel err {err}");
+}
+
+#[test]
+fn decoder_artifact_executes_and_is_causal() {
+    let Some(m) = manifest() else { return };
+    let client = RuntimeClient::cpu().expect("pjrt");
+    let exe = client
+        .compile_hlo_text(&m.path_of("decoder_tiny").unwrap())
+        .expect("compile");
+    let cfg = &m.config;
+    let spec = &m.artifacts["decoder_tiny"];
+    let mut rng = Rng::seed_from_u64(3);
+    // x plus the parameter tensors in manifest order, tiny random values
+    let mut args: Vec<(Vec<f32>, Vec<usize>)> = Vec::new();
+    for shape in &spec.arg_shapes {
+        let n: usize = shape.iter().product();
+        args.push(((0..n).map(|_| rng.sym_f32(0.05)).collect(), shape.clone()));
+    }
+    let refs: Vec<(&[f32], &[usize])> = args
+        .iter()
+        .map(|(d, s)| (d.as_slice(), s.as_slice()))
+        .collect();
+    let y1 = exe.run_f32(&refs).expect("run 1");
+    assert_eq!(y1.len(), cfg.seq * cfg.d_model);
+    assert!(y1.iter().all(|v| v.is_finite()));
+
+    // causality: perturb the last token of x, earlier outputs unchanged
+    let mut args2 = args.clone();
+    let d_model = cfg.d_model;
+    let last = (cfg.seq - 1) * d_model;
+    for t in 0..d_model {
+        args2[0].0[last + t] += 1.0;
+    }
+    let refs2: Vec<(&[f32], &[usize])> = args2
+        .iter()
+        .map(|(d, s)| (d.as_slice(), s.as_slice()))
+        .collect();
+    let y2 = exe.run_f32(&refs2).expect("run 2");
+    let prefix_err = rel_err(&y1[..last], &y2[..last]);
+    assert!(prefix_err < 1e-5, "prefix changed: {prefix_err}");
+    let last_err = rel_err(&y1[last..], &y2[last..]);
+    assert!(last_err > 1e-3, "last token must change: {last_err}");
+}
+
+#[test]
+fn quant_decoder_tracks_float_decoder() {
+    let Some(m) = manifest() else { return };
+    let client = RuntimeClient::cpu().expect("pjrt");
+    let float_exe = client
+        .compile_hlo_text(&m.path_of("decoder_tiny").unwrap())
+        .expect("compile float");
+    let quant_exe = client
+        .compile_hlo_text(&m.path_of("decoder_quant").unwrap())
+        .expect("compile quant");
+    let spec = &m.artifacts["decoder_tiny"];
+    let mut rng = Rng::seed_from_u64(9);
+    let args: Vec<(Vec<f32>, Vec<usize>)> = spec
+        .arg_shapes
+        .iter()
+        .map(|shape| {
+            let n: usize = shape.iter().product();
+            ((0..n).map(|_| rng.sym_f32(0.05)).collect(), shape.clone())
+        })
+        .collect();
+    let refs: Vec<(&[f32], &[usize])> = args
+        .iter()
+        .map(|(d, s)| (d.as_slice(), s.as_slice()))
+        .collect();
+    let yf = float_exe.run_f32(&refs).expect("float");
+    let yq = quant_exe.run_f32(&refs).expect("quant");
+    let err = rel_err(&yq, &yf);
+    // the SMAC/PWL transfer function bound — same bound the python test
+    // (test_model.py::test_tracks_float_path) enforces
+    assert!(err < 0.05, "quantized path rel err {err}");
+}
