@@ -80,11 +80,13 @@ fn main() {
 
     harness::section("A3 — CCPG cluster size sweep (Llama-8B, 1024/1024)");
     for tiles_per_cluster in [1usize, 2, 4, 8] {
-        let mut cfg = PicnicConfig::default();
-        cfg.ccpg = CcpgConfig {
-            enabled: true,
-            tiles_per_cluster,
-            ..CcpgConfig::default()
+        let cfg = PicnicConfig {
+            ccpg: CcpgConfig {
+                enabled: true,
+                tiles_per_cluster,
+                ..CcpgConfig::default()
+            },
+            ..PicnicConfig::default()
         };
         let sim = AnalyticSim::new(cfg);
         let r = sim

@@ -3,6 +3,10 @@
 //! (`harness = false`) regenerates one paper table/figure and times the
 //! underlying simulation so regressions in the hot path are visible.
 
+// Included via `mod harness;` by every bench binary; not every bench uses
+// every helper, and the standalone compile-check target uses none of them.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time `f` over `iters` iterations after `warmup` untimed ones; prints a

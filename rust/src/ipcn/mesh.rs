@@ -199,8 +199,8 @@ mod tests {
         // Inject at router (0,0) West FIFO; program row 0 to pipe east.
         m.inject(0, Port::West, 42.0);
         let mut slice = idle_slice(16);
-        for c in 0..4 {
-            slice[c] = route(Port::West, Port::East);
+        for slot in slice.iter_mut().take(4) {
+            *slot = route(Port::West, Port::East);
         }
         // 4 cycles to traverse 4 routers; the last hop exits the tile east.
         let mut exited = Vec::new();

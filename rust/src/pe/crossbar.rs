@@ -211,7 +211,7 @@ mod tests {
         let w = random_tile(16, 8, 4, 0.1);
         let mut xb = Crossbar::program(&w, 16, 8, QuantSpec::default());
         assert!(!xb.is_calibrated());
-        let y = xb.smac(&vec![0.5; 16]);
+        let y = xb.smac(&[0.5; 16]);
         assert_eq!(y.len(), 8);
     }
 
@@ -220,8 +220,8 @@ mod tests {
         let w = random_tile(8, 8, 5, 0.1);
         let mut xb = Crossbar::program(&w, 8, 8, QuantSpec::default());
         xb.calibrate(&[vec![1.0; 8]]);
-        xb.smac(&vec![1.0; 8]);
-        xb.smac(&vec![0.5; 8]);
+        xb.smac(&[1.0; 8]);
+        xb.smac(&[0.5; 8]);
         assert_eq!(xb.smacs(), 2);
     }
 

@@ -134,7 +134,7 @@ mod tests {
     #[test]
     fn relax_is_reproducible_and_small() {
         let mut a = RramArray::new(8, 8, 256);
-        a.program(&vec![100; 64]);
+        a.program(&[100; 64]);
         let mut b = a.clone();
         a.relax(0.01, 42);
         b.relax(0.01, 42);
@@ -149,7 +149,7 @@ mod tests {
     #[test]
     fn zero_input_skips_work() {
         let mut a = RramArray::new(4, 4, 256);
-        a.program(&vec![7; 16]);
+        a.program(&[7; 16]);
         let mut out = vec![9.0; 4];
         a.column_mac(&[0.0; 4], &mut out);
         assert_eq!(out, vec![0.0; 4]);

@@ -197,7 +197,16 @@ impl AnalyticSim {
         while processed < wl.input_len {
             let q = chunk.min(wl.input_len - processed);
             let kv = processed + q;
-            cycle += self.step_all_layers(&builder, tiles, q, kv, &mut ledger, &mut trace, &mut ccpg, cycle)?;
+            cycle += self.step_all_layers(
+                &builder,
+                tiles,
+                q,
+                kv,
+                &mut ledger,
+                &mut trace,
+                &mut ccpg,
+                cycle,
+            )?;
             processed += q;
         }
 
@@ -216,7 +225,16 @@ impl AnalyticSim {
         let seg = (wl.output_len as f64 / samples as f64).ceil() as usize;
         for &i in &sample_points {
             let kv = wl.kv_len_at_decode(i);
-            let c = self.step_all_layers(&builder, tiles, 1, kv, &mut ledger, &mut trace, &mut ccpg, cycle)?;
+            let c = self.step_all_layers(
+                &builder,
+                tiles,
+                1,
+                kv,
+                &mut ledger,
+                &mut trace,
+                &mut ccpg,
+                cycle,
+            )?;
             // weight: this sample stands for `seg` decode steps; energy for
             // the remaining steps of the segment is charged via scaling.
             let extra = (seg as u64).saturating_sub(1);

@@ -234,7 +234,7 @@ mod tests {
         // router 1's West FIFO after routing east from router 0
         let r1 = eng.mesh.router(1);
         assert_eq!(r1.fifo(Port::West).len(), 2, "two output words arrived");
-        let mut r1m = eng.mesh.router_mut(1);
+        let r1m = eng.mesh.router_mut(1);
         let y0 = r1m.fifo_mut(Port::West).pop().unwrap();
         let y1 = r1m.fifo_mut(Port::West).pop().unwrap();
         assert!((y0 - want0).abs() / want0 < 0.05, "{y0} vs {want0}");

@@ -24,6 +24,7 @@ pub struct RunStats {
 }
 
 impl RunStats {
+    #[allow(clippy::too_many_arguments)]
     pub fn compute(
         model: &str,
         workload: &str,
@@ -65,7 +66,8 @@ mod tests {
     fn stats_identities_hold() {
         let mut l = EnergyLedger::new();
         l.charge(EnergyCategory::Smac, 1.0); // 1 J dynamic
-        let s = RunStats::compute("m", "512/512", 1024, 2_000_000_000, 1e9, 3.0, &l, 10, false, 0.25);
+        let s =
+            RunStats::compute("m", "512/512", 1024, 2_000_000_000, 1e9, 3.0, &l, 10, false, 0.25);
         assert!((s.wall_seconds - 2.0).abs() < 1e-12);
         // total energy = 1 + 3*2 = 7 J → avg power 3.5 W
         assert!((s.avg_power_w - 3.5).abs() < 1e-12);

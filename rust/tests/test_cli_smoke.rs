@@ -1,0 +1,79 @@
+//! CLI surface smoke tests: the `picnic` binary must exit 0 and emit
+//! parseable output for the scriptable subcommands (`run --json`,
+//! `config-dump`), plus a sane usage screen — the contract scripts and
+//! the CI gate rely on.
+
+use picnic::util::Json;
+use std::process::Command;
+
+fn picnic() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_picnic"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = picnic().args(args).output().expect("spawn picnic");
+    assert!(
+        out.status.success(),
+        "`picnic {}` failed: {}",
+        args.join(" "),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("stdout is utf8")
+}
+
+fn tiny_run_args() -> Vec<&'static str> {
+    vec!["run", "--model", "tiny", "--input", "64", "--output", "16"]
+}
+
+#[test]
+fn run_tiny_json_exits_zero_and_emits_parseable_json() {
+    let mut args = tiny_run_args();
+    args.push("--json");
+    let text = run_ok(&args);
+    let j = Json::parse(text.trim()).expect("run --json output parses");
+    assert_eq!(j.get("model").and_then(Json::as_str), Some("tiny"));
+    assert_eq!(j.get("workload").and_then(Json::as_str), Some("64/16"));
+    assert_eq!(j.get("ccpg").and_then(Json::as_bool), Some(false));
+    assert!(j.get("tokens_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(j.get("tokens_per_j").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(j.get("avg_power_w").and_then(Json::as_f64).unwrap() > 0.0);
+}
+
+#[test]
+fn run_ccpg_flag_is_reflected_in_json() {
+    let mut args = tiny_run_args();
+    args.push("--ccpg");
+    args.push("--json");
+    let text = run_ok(&args);
+    let j = Json::parse(text.trim()).expect("json");
+    assert_eq!(j.get("ccpg").and_then(Json::as_bool), Some(true));
+}
+
+#[test]
+fn config_dump_exits_zero_and_round_trips() {
+    let text = run_ok(&["config-dump"]);
+    let j = Json::parse(&text).expect("config-dump output parses");
+    let system = j.get("system").expect("system section");
+    assert_eq!(system.get("ipcn_dim").and_then(Json::as_usize), Some(32));
+    assert_eq!(system.get("pe_array_dim").and_then(Json::as_usize), Some(256));
+    let timing = j.get("timing").expect("timing section");
+    assert_eq!(timing.get("xbar_cycles").and_then(Json::as_usize), Some(256));
+}
+
+#[test]
+fn no_args_prints_usage_and_exits_zero() {
+    let text = run_ok(&[]);
+    assert!(text.contains("USAGE"), "usage screen: {text}");
+    assert!(text.contains("picnic run"));
+}
+
+#[test]
+fn unknown_model_is_a_clean_error() {
+    let out = picnic()
+        .args(["run", "--model", "70b"])
+        .output()
+        .expect("spawn picnic");
+    assert!(!out.status.success(), "unknown model must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown model"), "stderr: {err}");
+}

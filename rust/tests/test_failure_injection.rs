@@ -119,7 +119,7 @@ fn power_gating_preserves_state() {
     assert_eq!(spad.read(7), Some(3.5));
 
     let mut rram = RramArray::new(4, 4, 256);
-    rram.program(&vec![9; 16]);
+    rram.program(&[9; 16]);
     assert!(rram.non_volatile());
     assert_eq!(rram.program_count(), 1, "no reprogramming needed after wake");
 

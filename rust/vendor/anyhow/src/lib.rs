@@ -1,0 +1,168 @@
+//! Minimal offline stand-in for the crates.io `anyhow` crate.
+//!
+//! The PICNIC workspace builds without network access, so this in-tree
+//! crate provides exactly the surface the workspace uses — an opaque
+//! [`Error`] type, the [`Result`] alias, and the `anyhow!` / `bail!` /
+//! `ensure!` macros — with no transitive dependencies. Like the real
+//! crate, `Error` converts from any `std::error::Error` via `?`, renders
+//! its source chain under the `{:#}` alternate format, and deliberately
+//! does **not** implement `std::error::Error` itself (that is what keeps
+//! the blanket `From` impl coherent).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque boxed error with a source chain.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// A plain-message error (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Construct an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            inner: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// The lowest-level cause in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cause: &(dyn StdError + 'static) = self.inner.as_ref();
+        while let Some(next) = cause.source() {
+            cause = next;
+        }
+        cause
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)?;
+        if f.alternate() {
+            let mut source = self.inner.source();
+            while let Some(s) = source {
+                write!(f, ": {s}")?;
+                source = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($tt)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_and_double(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?;
+        ensure!(n < 1000, "{n} too large");
+        Ok(n * 2)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_and_double("21").unwrap(), 42);
+        let e = parse_and_double("nope").unwrap_err();
+        assert!(e.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn ensure_and_bail_format() {
+        let e = parse_and_double("1001").unwrap_err();
+        assert_eq!(e.to_string(), "1001 too large");
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let what = "table9";
+        let e: Error = anyhow!("unknown report {what}");
+        assert_eq!(format!("{e}"), "unknown report table9");
+        assert_eq!(format!("{e:#}"), "unknown report table9");
+    }
+
+    #[test]
+    fn alternate_display_walks_source_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing file");
+        let e: Error = io.into();
+        assert!(format!("{e:#}").contains("missing file"));
+        assert_eq!(e.root_cause().to_string(), "missing file");
+    }
+}

@@ -1,0 +1,476 @@
+#!/usr/bin/env python3
+"""Independent Python mirror of the rust analytic model (sim::analytic +
+mapper + config constants).
+
+Purpose: verify the paper-regime assertions in rust/tests/test_headline.rs
+and the numeric unit tests in sim/report without a Rust toolchain — every
+formula here is a line-by-line port of the rust source. If you change
+timing/power constants or the schedule/placement math in rust/, update this
+mirror and re-run it (`python3 tools/analytic_mirror.py`); every printed
+check must say True/OK before the rust tests can be expected to pass."""
+import math
+from collections import defaultdict
+
+# ---------------- config ----------------
+class Sys:
+    bit_width = 64
+    frequency_hz = 1.0e9
+    ipcn_dim = 32
+    scu_per_tile = 1024
+    pe_array_dim = 256
+    dmac_per_router = 16
+    scratchpad_bytes = 32 * 1024
+    fifo_bytes = 256
+    def routers_per_tile(self): return self.ipcn_dim * self.ipcn_dim
+
+class Power:
+    pe_w = 120e-6
+    scratchpad_w = 42e-6
+    router_w = 97e-6
+    softmax_w = 5.31e-6
+    sleep_leak_frac = 0.02
+    def unit_pair_w(self): return self.pe_w + self.scratchpad_w + self.router_w
+
+class Inter:
+    electrical_c2c_j_per_bit = 3.0e-12
+    dram_j_per_bit = 30.0e-12
+    optical_c2c_j_per_bit = 0.5e-12
+    laser_static_w_per_port = 1.0e-3
+    optical_link_bps = 128.0e9
+    electrical_link_bps = 32.0e9
+
+class CcpgCfg:
+    def __init__(self, enabled, tiles_per_cluster=4, wake=1000):
+        self.enabled = enabled
+        self.tiles_per_cluster = tiles_per_cluster
+        self.wake_latency_cycles = wake
+
+class Timing:
+    xbar_cycles = 256
+    hop_cycles = 1
+    words_per_cycle = 1
+    scu_cycles_per_elem = 1
+    scu_drain_cycles = 16
+    npm_flip_cycles = 8
+    dram_latency_cycles = 100
+
+class Rates:
+    smac_op_j = 120e-6 * 256e-9
+    dmac_mac_j = 97e-6 / 16.0 * 1e-9
+    hop_word_j = 97e-6 * 1e-9
+    scratchpad_word_j = 42e-6 * 1e-9
+    scu_elem_j = 5.31e-6 * 2e-9
+
+class Cfg:
+    def __init__(self, ccpg=False):
+        self.system = Sys(); self.power = Power(); self.interconnect = Inter()
+        self.ccpg = CcpgCfg(ccpg); self.timing = Timing()
+
+# ---------------- models ----------------
+class Model:
+    def __init__(self, name, n_dec, d, heads, kvh, dff):
+        self.name, self.n_decoders, self.d_model = name, n_dec, d
+        self.n_heads, self.n_kv_heads, self.d_ff = heads, kvh, dff
+    def d_head(self): return self.d_model // self.n_heads
+    def kv_width(self): return self.n_kv_heads * self.d_head()
+    def layers(self):
+        out = []
+        for dec in range(self.n_decoders):
+            out.append(("attn", self.d_model, 2*self.d_model + 2*self.kv_width()))
+            out.append(("gate", self.d_model, self.d_ff))
+            out.append(("up", self.d_model, self.d_ff))
+            out.append(("down", self.d_ff, self.d_model))
+        return out
+
+M1B = Model("1B", 16, 2048, 32, 8, 8192)
+M8B = Model("8B", 32, 4096, 32, 8, 14336)
+M13B = Model("13B", 40, 5120, 40, 40, 13824)
+TINY = Model("tiny", 1, 64, 4, 4, 128)
+
+def div_ceil(a, b): return -(-a // b)
+
+# ---------------- partition/placement ----------------
+class Part:
+    def __init__(self, rows, cols, mr=256, mc=256):
+        self.rows, self.cols = rows, cols
+        self.tile_rows, self.tile_cols = min(rows, mr), min(cols, mc)
+    def row_blocks(self): return div_ceil(self.rows, self.tile_rows)
+    def col_blocks(self): return div_ceil(self.cols, self.tile_cols)
+    def n_tiles(self): return self.row_blocks() * self.col_blocks()
+
+class Placement:
+    def __init__(self, layer, d_model, kv_width, mesh_dim, pe_dim):
+        kind, lrows, lcols = layer
+        if kind == "attn":
+            mats = [("W_K", d_model, kv_width), ("W_Q", d_model, d_model),
+                    ("W_V", d_model, kv_width), ("W_O", d_model, d_model)]
+        else:
+            mats = [("W_" + kind, lrows, lcols)]
+        widths = [div_ceil(Part(r, c, pe_dim, pe_dim).n_tiles(), mesh_dim) for (_, r, c) in mats]
+        total_cols = max(sum(widths), 1)
+        self.mesh_dim = mesh_dim
+        self.grid_w = div_ceil(total_cols, mesh_dim) * mesh_dim
+        self.channels = []  # (name, part, routers)
+        next_col = 0
+        self.pairs_used = 0
+        for (name, r, c), width in zip(mats, widths):
+            part = Part(r, c, pe_dim, pe_dim)
+            routers = []
+            for p in range(part.n_tiles()):
+                row = p % mesh_dim
+                col = next_col + p // mesh_dim
+                routers.append(row * self.grid_w + col)
+            self.pairs_used += len(routers)
+            self.channels.append((name, part, routers))
+            next_col += width
+    def tiles_needed(self): return self.grid_w // self.mesh_dim
+
+# ---------------- spanning tree ----------------
+class Tree:
+    def __init__(self, members, dim):
+        assert members
+        n = len(members)
+        cy = sum((m // dim) for m in members) / n
+        cx = sum((m % dim) for m in members) / n
+        # rust folds y/n and x/n incrementally; result same value (float diffs negligible)
+        def dist(m): return abs(m // dim - cy) + abs(m % dim - cx)
+        root = min(members, key=lambda m: (dist(m),))  # rust min_by keeps first minimal
+        # careful: rust min_by with partial_cmp keeps first of equal; python min does same
+        def hop(a, b): return abs(a // dim - b // dim) + abs(a % dim - b % dim)
+        rest = [m for m in members if m != root]
+        rest.sort(key=lambda m: (hop(root, m), m))
+        ordered = [root] + rest
+        depth_of = [0] * len(ordered)
+        total_hops = 0
+        for i in range(1, len(ordered)):
+            pi = (i - 1) // 2
+            depth_of[i] = depth_of[pi] + 1
+            total_hops += hop(ordered[pi], ordered[i])
+        self.depth = max(depth_of) if depth_of else 0
+        self.total_hops = total_hops
+    def word_hops(self, words): return self.total_hops * words
+
+# ---------------- flash ----------------
+class Flash:
+    def __init__(self, n_heads, d_head, seq_q, seq_kv, pool_routers, lanes):
+        self.n_heads, self.d_head, self.seq_q, self.seq_kv = n_heads, d_head, seq_q, seq_kv
+        self.block_q = min(seq_q, 32)
+        self.block_k = min(seq_kv, 32)
+    def total_dmac_macs(self): return 2 * self.n_heads * self.seq_q * self.seq_kv * self.d_head
+    def softmax_rows(self): return self.n_heads * self.seq_q
+
+# ---------------- schedule ----------------
+def plan_layer(cfg, model, layer, seq_q, seq_kv):
+    """returns (phases, pairs_used, tiles_needed); phase = (kind, dict)"""
+    sys = cfg.system
+    pl = Placement(layer, model.d_model, model.kv_width(), sys.ipcn_dim, sys.pe_array_dim)
+    phases = []
+    bits_per_word = sys.bit_width
+    kind = layer[0]
+    if kind == "attn":
+        kqv = [r for (_, _, routers) in pl.channels[:3] for r in routers]
+        kqv_tree = Tree(kqv, pl.grid_w)
+        in_words = seq_q * model.d_model
+        phases.append(("bcast", dict(words=in_words, depth=kqv_tree.depth,
+                                     word_hops=kqv_tree.word_hops(in_words))))
+        for (name, part, routers) in pl.channels[:3]:
+            tree = Tree(routers, pl.grid_w)
+            phases.append(("smac", dict(vectors=seq_q, row_blocks=part.row_blocks(),
+                                        n_crossbars=part.n_tiles())))
+            slice_words = seq_q * part.tile_cols
+            all_words = seq_q * part.cols
+            phases.append(("reduce", dict(words=slice_words, depth=tree.depth,
+                                          word_hops=tree.word_hops(all_words))))
+        kv_words = 2 * seq_q * model.kv_width()
+        phases.append(("kv", dict(words=kv_words)))
+        pool = max(len(pl.channels[0][2]) + len(pl.channels[2][2]), 1)
+        fl = Flash(model.n_heads, model.d_head(), seq_q, seq_kv, pool, sys.dmac_per_router)
+        phases.append(("dmac", dict(macs=fl.total_dmac_macs(), pool_routers=pool)))
+        phases.append(("softmax", dict(rows=fl.softmax_rows(), row_len=seq_kv,
+                                       scus=sys.scu_per_tile)))
+        name, o_part, o_routers = pl.channels[3]
+        o_tree = Tree(o_routers, pl.grid_w)
+        phases.append(("bcast", dict(words=in_words, depth=o_tree.depth,
+                                     word_hops=o_tree.word_hops(in_words))))
+        phases.append(("smac", dict(vectors=seq_q, row_blocks=o_part.row_blocks(),
+                                    n_crossbars=o_part.n_tiles())))
+        o_all = seq_q * o_part.cols
+        phases.append(("reduce", dict(words=seq_q * o_part.tile_cols, depth=o_tree.depth,
+                                      word_hops=o_tree.word_hops(o_all))))
+        phases.append(("c2c", dict(bits=seq_q * model.d_model * bits_per_word)))
+    else:
+        name, part, routers = pl.channels[0]
+        tree = Tree(routers, pl.grid_w)
+        lrows, lcols = layer[1], layer[2]
+        in_words = seq_q * lrows
+        phases.append(("bcast", dict(words=in_words, depth=tree.depth,
+                                     word_hops=tree.word_hops(in_words))))
+        phases.append(("smac", dict(vectors=seq_q, row_blocks=part.row_blocks(),
+                                    n_crossbars=part.n_tiles())))
+        out_words = seq_q * lcols
+        phases.append(("reduce", dict(words=seq_q * part.tile_cols, depth=tree.depth,
+                                      word_hops=tree.word_hops(out_words))))
+        phases.append(("c2c", dict(bits=out_words * bits_per_word)))
+    return phases, pl.pairs_used, pl.tiles_needed()
+
+_plan_cache = {}
+def plan_all(cfg, model, seq_q, seq_kv):
+    out = []
+    for layer in model.layers():
+        key = (id(cfg.__class__), model.name, layer, seq_q, seq_kv, cfg.system.ipcn_dim)
+        if key not in _plan_cache:
+            _plan_cache[key] = plan_layer(cfg, model, layer, seq_q, seq_kv)
+        out.append(_plan_cache[key])
+    return out
+
+# ---------------- sim ----------------
+def phase_cycles(cfg, kind, d, link="optical"):
+    t = cfg.timing
+    if kind in ("bcast", "reduce"):
+        return d["depth"] * t.hop_cycles + d["words"] // t.words_per_cycle
+    if kind == "smac":
+        return d["vectors"] * t.xbar_cycles * max(d["row_blocks"], 1)
+    if kind == "dmac":
+        pool = d["pool_routers"] * cfg.system.dmac_per_router
+        return div_ceil(d["macs"], max(pool, 1))
+    if kind == "softmax":
+        per_row = 2 * d["row_len"] * t.scu_cycles_per_elem + t.scu_drain_cycles
+        waves = div_ceil(d["rows"], max(d["scus"], 1))
+        return waves * per_row
+    if kind == "kv":
+        return d["words"] // t.words_per_cycle
+    if kind == "c2c":
+        bps = cfg.interconnect.optical_link_bps if link == "optical" else cfg.interconnect.electrical_link_bps
+        seconds = d["bits"] / bps
+        return math.ceil(seconds * cfg.system.frequency_hz)
+    raise ValueError(kind)
+
+def charge_phase(cfg, kind, d, ledger, link="optical"):
+    r = Rates
+    if kind in ("bcast", "reduce"):
+        ledger["hop"] += d["word_hops"] * r.hop_word_j
+    elif kind == "smac":
+        ledger["smac"] += d["vectors"] * d["n_crossbars"] * r.smac_op_j
+    elif kind == "dmac":
+        ledger["dmac"] += d["macs"] * r.dmac_mac_j
+    elif kind == "softmax":
+        ledger["softmax"] += d["rows"] * d["row_len"] * r.scu_elem_j
+    elif kind == "kv":
+        ledger["spad"] += d["words"] * r.scratchpad_word_j
+    elif kind == "c2c":
+        jpb = cfg.interconnect.optical_c2c_j_per_bit if link == "optical" else cfg.interconnect.electrical_c2c_j_per_bit
+        ledger["c2c"] += d["bits"] * jpb
+        if link == "optical":
+            cyc = phase_cycles(cfg, kind, d, link)
+            ledger["c2c"] += cfg.interconnect.laser_static_w_per_port * (cyc / cfg.system.frequency_hz)
+
+class Topo:
+    def __init__(self, n):
+        self.n = n
+        self.grid_cols = max(math.ceil(math.sqrt(n)), 1)
+    def cluster_of(self, t):
+        r, c = t // self.grid_cols, t % self.grid_cols
+        cpr = div_ceil(self.grid_cols, 2)
+        return (r // 2) * cpr + c // 2
+
+class Ccpg:
+    def __init__(self, n_tiles, cfg):
+        self.cfg = cfg
+        self.topo = Topo(n_tiles)
+        self.active = None
+        self.wakes = 0
+    def activate_for_tile(self, t):
+        if not self.cfg.ccpg.enabled: return 0
+        idx = self.topo.cluster_of(t)
+        if self.active == idx: return 0
+        self.active = idx
+        self.wakes += 1
+        return self.cfg.ccpg.wake_latency_cycles
+
+def tiles_pairs_for(cfg, model):
+    tiles = pairs = 0
+    for layer in model.layers():
+        pl = Placement(layer, model.d_model, model.kv_width(), cfg.system.ipcn_dim, cfg.system.pe_array_dim)
+        tiles += pl.tiles_needed()
+        pairs += pl.pairs_used
+    return tiles, pairs
+
+def macro_power_w(cfg, model, pairs_total):
+    p = cfg.power
+    per_pair_active = p.unit_pair_w() + p.softmax_w
+    if not cfg.ccpg.enabled:
+        return pairs_total * per_pair_active
+    active_pairs = cfg.ccpg.tiles_per_cluster * cfg.system.routers_per_tile()
+    active = min(active_pairs, pairs_total)
+    sleeping = pairs_total - active
+    per_pair_sleep = p.scratchpad_w + (p.pe_w + p.router_w + p.softmax_w) * p.sleep_leak_frac
+    return active * per_pair_active + sleeping * per_pair_sleep
+
+def run(cfg, model, input_len, output_len, link="optical"):
+    tiles, pairs = tiles_pairs_for(cfg, model)
+    ccpg = Ccpg(tiles, cfg)
+    ledger = defaultdict(float)
+    cycle = 0
+    bursts = []  # (start, bits, dur)
+
+    def step_all(seq_q, seq_kv, start_cycle):
+        cycles = 0
+        plans = plan_all(cfg, model, seq_q, seq_kv)
+        tile_cursor = 0
+        for phases, pairs_used, tiles_needed in plans:
+            tile = tile_cursor % max(tiles, 1)
+            cycles += ccpg.activate_for_tile(tile)
+            tile_cursor += tiles_needed
+            for kind, d in phases:
+                c = phase_cycles(cfg, kind, d, link)
+                charge_phase(cfg, kind, d, ledger, link)
+                if kind == "c2c":
+                    bursts.append((start_cycle + cycles, d["bits"], max(c, 1)))
+                cycles += c
+        return cycles
+
+    chunk = min(128, input_len)
+    processed = 0
+    while processed < input_len:
+        q = min(chunk, input_len - processed)
+        kv = processed + q
+        cycle += step_all(q, kv, cycle)
+        processed += q
+
+    samples = min(8, output_len)
+    sample_points = [(s * output_len + output_len // 2) // samples for s in range(samples)]
+    seg = math.ceil(output_len / samples)
+    for i in sample_points:
+        kv = input_len + i
+        c = step_all(1, kv, cycle)
+        extra = max(seg - 1, 0)
+        if extra > 0:
+            seg_ledger = defaultdict(float)
+            for phases, _, _ in plan_all(cfg, model, 1, kv):
+                for kind, d in phases:
+                    charge_phase(cfg, kind, d, seg_ledger, link)
+            for k, j in seg_ledger.items():
+                ledger[k] += extra * j
+        cycle += c * seg
+    total_cycles = max(cycle, 1)
+    static_w = macro_power_w(cfg, model, pairs)
+    wall = total_cycles / cfg.system.frequency_hz
+    dynamic_j = sum(ledger.values())
+    total_j = dynamic_j + static_w * wall
+    total_tokens = input_len + output_len
+    return dict(
+        tokens_per_s=total_tokens / wall,
+        avg_power_w=total_j / wall,
+        tokens_per_j=total_tokens / total_j,
+        c2c_avg_power_w=ledger["c2c"] / wall,
+        c2c_j=ledger["c2c"],
+        total_cycles=total_cycles,
+        tiles=tiles, pairs=pairs, static_w=static_w, dynamic_j=dynamic_j,
+        wall=wall, wakes=ccpg.wakes, bursts=bursts,
+    )
+
+def main():
+    # Placement sanity vs rust unit tests
+    for m, want_tiles in [(M1B, 64), (M8B, 128), (M13B, 320)]:
+        cfg = Cfg()
+        t, p = tiles_pairs_for(cfg, m)
+        print(f"{m.name}: tiles={t} (want {want_tiles}) pairs={p} pairs*259u={p*259e-6:.2f} W")
+
+    wl = (1024, 1024)
+    r8_off = run(Cfg(False), M8B, *wl)
+    r8_on = run(Cfg(True), M8B, *wl)
+    r1_off = run(Cfg(False), M1B, *wl)
+    r1_on = run(Cfg(True), M1B, *wl)
+    r13_off = run(Cfg(False), M13B, *wl)
+    r13_on = run(Cfg(True), M13B, *wl)
+
+    a100_tps, a100_w = 78.36, 200.0
+    h100_tps, h100_w = 274.26, 280.0
+
+    print("\n=== 8B 1024/1024 no CCPG ===")
+    print(f"tokens/s={r8_off['tokens_per_s']:.1f} power={r8_off['avg_power_w']:.2f} tok/J={r8_off['tokens_per_j']:.2f}")
+    print(f"  cycles={r8_off['total_cycles']:.3e} static={r8_off['static_w']:.2f} dyn_j={r8_off['dynamic_j']:.3f}")
+    sp = r8_off['tokens_per_s'] / a100_tps
+    ef = r8_off['tokens_per_j'] / (a100_tps / a100_w)
+    print(f"  speedup vs A100 = {sp:.2f} (need 3..8), eff vs A100 = {ef:.1f} (need 20..60)")
+    print(f"  table2 8B: tps in (186..434)? {186 < r8_off['tokens_per_s'] < 434}, power in (24..33)? {24 < r8_off['avg_power_w'] < 33}")
+
+    print("\n=== 8B 1024/1024 CCPG ===")
+    print(f"tokens/s={r8_on['tokens_per_s']:.1f} power={r8_on['avg_power_w']:.2f} tok/J={r8_on['tokens_per_j']:.2f} wakes={r8_on['wakes']}")
+    sp = r8_on['tokens_per_s'] / h100_tps
+    ef = r8_on['tokens_per_j'] / (h100_tps / h100_w)
+    print(f"  speedup vs H100 = {sp:.2f} (need 0.7..2.0), eff vs H100 = {ef:.1f} (need 40..90)")
+    saving = 1 - r8_on['avg_power_w'] / r8_off['avg_power_w']
+    ratio = r8_on['tokens_per_s'] / r8_off['tokens_per_s']
+    print(f"  ccpg saving = {saving:.3f} (need >=0.70), tps ratio = {ratio:.3f} (need >0.95)")
+
+    print("\n=== 1B 1024/1024 ===")
+    print(f"tokens/s={r1_off['tokens_per_s']:.1f} (need 580..1360) power={r1_off['avg_power_w']:.2f} (need 3..5.5)")
+
+    print("\n=== sublinear power under CCPG ===")
+    p1, p8, p13 = r1_on['avg_power_w'], r8_on['avg_power_w'], r13_on['avg_power_w']
+    print(f"p1={p1:.3f} p8={p8:.3f} p13={p13:.3f}; p8/p1={p8/p1:.2f} (<5), p13/p8={p13/p8:.2f} (<1.9), monotone={p1<p8<p13}")
+
+    print("\n=== fig8 savings (1B,8B,13B) ===")
+    s1 = 1 - r1_on['avg_power_w']/r1_off['avg_power_w']
+    s8 = 1 - r8_on['avg_power_w']/r8_off['avg_power_w']
+    s13 = 1 - r13_on['avg_power_w']/r13_off['avg_power_w']
+    print(f"s1={s1:.3f} s8={s8:.3f} s13={s13:.3f}; grows? {s1<s8} {s8<=s13+0.02}; s8>0.6? {s8>0.6}")
+    print(f"eff on>off: 1B {r1_on['tokens_per_j']>r1_off['tokens_per_j']}, 8B {r8_on['tokens_per_j']>r8_off['tokens_per_j']}, 13B {r13_on['tokens_per_j']>r13_off['tokens_per_j']}")
+
+    print("\n=== ccpg_cuts_power_substantially (analytic test: 8B saving>0.6, tps ratio>0.9) ===")
+    print(f"saving={s8:.3f} ratio={r8_on['tokens_per_s']/r8_off['tokens_per_s']:.3f}")
+
+    print("\n=== table2 monotonicity ===")
+    for m in (M1B, M8B, M13B):
+        rows = [run(Cfg(False), m, c, c) for c in (512, 1024, 2048)]
+        tps = [r['tokens_per_s'] for r in rows]
+        tpj = [r['tokens_per_j'] for r in rows]
+        pw = [r['avg_power_w'] for r in rows]
+        print(f"{m.name}: tps={['%.1f'%x for x in tps]} falling? {tps[0]>tps[1]>tps[2]}; tpj falling? {tpj[0]>tpj[1]}; power={['%.2f'%x for x in pw]}")
+
+    print("\n=== table3: PICNIC (ccpg) beats all on efficiency ===")
+    plats = [("TransPIM",270,40),("Cambricon",36.34,36.3),("A100",78.36,200),("H100",274.26,280),("M4",69.77,80),("Cerebras",1800,15000)]
+    pj = r8_on['tokens_per_j']
+    for n,t,w in plats:
+        print(f"  {n}: {t/w:.2f} vs picnic {pj:.2f} -> {'OK' if pj > t/w else 'FAIL'}")
+
+    print("\n=== fig9: c2c power falls with context (electrical) + optical<electrical ===")
+    for m in (M1B, M8B, M13B):
+        ro = [run(Cfg(False), m, c, c, "optical") for c in (512, 1024, 2048)]
+        re = [run(Cfg(False), m, c, c, "electrical") for c in (512, 1024, 2048)]
+        ok_lt = all(a['c2c_avg_power_w'] < b['c2c_avg_power_w'] for a, b in zip(ro, re))
+        falling = re[0]['c2c_avg_power_w'] >= re[2]['c2c_avg_power_w']
+        print(f"{m.name}: opt<ele all? {ok_lt}; ele falls 512->2048? {falling} ({re[0]['c2c_avg_power_w']:.4f} vs {re[2]['c2c_avg_power_w']:.4f})")
+
+    print("\n=== tiny run + optical vs electrical dynamic ===")
+    rt = run(Cfg(False), TINY, 64, 16)
+    print(f"tiny: tps={rt['tokens_per_s']:.1f} pw={rt['avg_power_w']:.4f} c2c bits>0 {sum(b for _,b,_ in rt['bursts'])>0}")
+    ro = run(Cfg(False), M1B, 512, 512, "optical")
+    re = run(Cfg(False), M1B, 512, 512, "electrical")
+    print(f"opt dyn c2c {ro['c2c_j']:.4e} < ele/3 {re['c2c_j']/3:.4e}? {ro['c2c_j'] < re['c2c_j']/3}")
+
+    print("\n=== fig10 idle fraction (1B 64/16, 2000 bins) ===")
+    r = run(Cfg(False), M1B, 64, 16)
+    bursts = r['bursts']
+    total_cycles_trace = max(s + d for s, _, d in bursts)
+    n_bins = 2000
+    bin_w = max(div_ceil(total_cycles_trace, n_bins), 1)
+    bins = [0] * n_bins
+    for s, b, d in bursts:
+        first = s // bin_w
+        last = (s + d - 1) // bin_w
+        span = last - first + 1
+        for i in range(first, min(last, n_bins - 1) + 1):
+            bins[i] += b // span
+    idle = sum(1 for x in bins if x == 0) / n_bins
+    print(f"idle_fraction={idle:.3f} (need >0.2); nonzero bits {sum(bins)>0}")
+
+    print("\n=== decode affine in kv (1B) ===")
+    def cost(kv):
+        return sum(phase_cycles(Cfg(), k, d) for phases, _, _ in plan_all(Cfg(), M1B, 1, kv) for k, d in phases)
+    c1, c2, c3 = cost(512), cost(1024), cost(1536)
+    d1, d2 = c2 - c1, c3 - c2
+    print(f"deltas {d1} vs {d2}, ok? {abs(d1-d2) <= max(d1//10, 64)}")
+
+main()

@@ -1,0 +1,196 @@
+#!/usr/bin/env python3
+"""Bit-faithful mirror of util::Rng (SplitMix64) + pe::{RramArray, Adc,
+Crossbar} float32 numerics, used to check the seed-dependent test assertions
+in rust/src/pe/crossbar.rs, rram.rs and util/rng.rs without a Rust
+toolchain. Needs numpy. Run: `python3 tools/seeded_tests_mirror.py` — every
+printed check must say True."""
+import numpy as np
+import math
+
+MASK = (1 << 64) - 1
+
+class Rng:
+    def __init__(self, seed):
+        self.state = seed & MASK
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+    def gaussian(self):
+        u1 = max(self.f64(), 1e-300)
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+    def sym_f32(self, scale):
+        # ((self.f64() as f32) - 0.5) * 2.0 * scale  — f32 ops
+        v = np.float32(self.f64())
+        return np.float32((v - np.float32(0.5)) * np.float32(2.0) * np.float32(scale))
+    def below(self, n):
+        return self.next_u64() % n
+    def range_usize(self, lo, hi):
+        return lo + self.below(hi - lo + 1)
+
+def f32(x):
+    return np.float32(x)
+
+def rround(x):
+    # rust round: half away from zero
+    return np.trunc(x + np.copysign(np.float32(0.5), x)).astype(np.float32)
+
+def random_tile(rows, cols, seed, scale):
+    rng = Rng(seed)
+    return np.array([rng.sym_f32(scale) for _ in range(rows * cols)], dtype=np.float32)
+
+class Crossbar:
+    def __init__(self, w, rows, cols, w_levels=256, x_bits=8, adc_bits=12):
+        self.rows, self.cols = rows, cols
+        qmax = f32(w_levels // 2 - 1)
+        W = w.reshape(rows, cols)
+        w_scale = np.maximum(np.float32(1e-8), np.abs(W)).max(axis=0).astype(np.float32)
+        # rust: fold starting at 1e-8 then max per element — same as max with init
+        w_scale = np.maximum(np.float32(1e-8), np.abs(W).max(axis=0)).astype(np.float32)
+        w_scale = (w_scale / qmax).astype(np.float32)
+        codes = np.clip(rround((W / w_scale).astype(np.float32)), -qmax, qmax)
+        self.g = codes.astype(np.float32)  # i32 codes stored as f32
+        self.w_scale = w_scale
+        self.x_bits = x_bits
+        self.adc_bits = adc_bits
+        self.adc_fs = np.ones(cols, dtype=np.float32)
+        self.adc_off = np.zeros(cols, dtype=np.float32)
+
+    def dac_quantize(self, x):
+        qmax = f32((1 << (self.x_bits - 1)) - 1)
+        maxabs = np.float32(1e-8)
+        for v in x:
+            maxabs = max(maxabs, np.float32(abs(v)))
+        scale = np.float32(maxabs / qmax)
+        codes = np.clip(rround((x / scale).astype(np.float32)), -qmax, qmax)
+        return codes.astype(np.float32), scale
+
+    def column_mac(self, codes):
+        out = np.zeros(self.cols, dtype=np.float32)
+        for r in range(self.rows):
+            if codes[r] == 0.0:
+                continue
+            out = (out + codes[r] * self.g[r]).astype(np.float32)
+        return out
+
+    def calibrate(self, cal_set):
+        fs = np.ones(self.cols, dtype=np.float32)
+        for x in cal_set:
+            codes, _ = self.dac_quantize(np.asarray(x, dtype=np.float32))
+            buf = self.column_mac(codes)
+            fs = np.maximum(fs, np.abs(buf)).astype(np.float32)
+        self.adc_fs = fs
+        self.adc_off = np.zeros(self.cols, dtype=np.float32)
+
+    def adc_convert(self, cols):
+        qmax = f32((1 << (self.adc_bits - 1)) - 1)
+        lsb = (self.adc_fs / qmax).astype(np.float32)
+        code = np.clip(rround(((cols - self.adc_off) / lsb).astype(np.float32)), -qmax, qmax)
+        return (code * lsb).astype(np.float32)
+
+    def smac(self, x):
+        codes, x_scale = self.dac_quantize(np.asarray(x, dtype=np.float32))
+        cols = self.column_mac(codes)
+        cols = self.adc_convert(cols)
+        return (cols * (x_scale * self.w_scale).astype(np.float32)).astype(np.float32)
+
+    def relax(self, sigma_frac, seed, w_levels=256):
+        rng = Rng(seed)
+        qmax = float(w_levels // 2 - 1)
+        flat = self.g.reshape(-1)
+        for i in range(flat.size):
+            flat[i] = np.float32(flat[i] + np.float32(rng.gaussian() * sigma_frac * qmax))
+
+def float_ref(w, rows, cols, x):
+    W = w.reshape(rows, cols)
+    y = np.zeros(cols, dtype=np.float32)
+    for r in range(rows):
+        y = (y + x[r] * W[r]).astype(np.float32)
+    return y
+
+def rel_err(y, want):
+    e2 = float(((y.astype(np.float64) - want.astype(np.float64)) ** 2).sum())
+    r2 = float((want.astype(np.float64) ** 2).sum())
+    return math.sqrt(e2 / max(r2, 1e-12))
+
+# --- test 1: smac_tracks_float_within_quant_error
+rows, cols = 64, 32
+w = random_tile(rows, cols, 1, 0.05)
+xb = Crossbar(w, rows, cols)
+x = random_tile(rows, 1, 7, 1.0)
+cal = [random_tile(rows, 1, 100 + i, 1.0) for i in range(8)] + [x.copy()]
+xb.calibrate(cal)
+y = xb.smac(x)
+want = float_ref(w, rows, cols, x)
+r = rel_err(y, want)
+print(f"smac_tracks_float: rel={r:.4f} (<0.05 ? {r < 0.05})")
+
+# --- test 2: error_shrinks_with_adc_bits
+w = random_tile(64, 32, 2, 0.05)
+x = random_tile(64, 1, 3, 1.0)
+want = float_ref(w, 64, 32, x)
+errs = []
+for bits in (6, 8, 12):
+    xb = Crossbar(w, 64, 32, adc_bits=bits)
+    xb.calibrate([x.copy()])
+    y = xb.smac(x)
+    errs.append(float(((y.astype(np.float64) - want.astype(np.float64)) ** 2).sum()))
+print(f"adc_bits errs={errs} monotone? {errs[0] >= errs[1] >= errs[2]}")
+
+# --- test 3: nonvolatile relax
+w = random_tile(32, 32, 6, 0.05)
+x = random_tile(32, 1, 8, 1.0)
+xb = Crossbar(w, 32, 32)
+xb.calibrate([x.copy()])
+clean = xb.smac(x)
+xb.relax(0.005, 9)
+noisy = xb.smac(x)
+num = math.sqrt(float(((clean.astype(np.float64) - noisy.astype(np.float64)) ** 2).sum()))
+den = max(math.sqrt(float((clean.astype(np.float64) ** 2).sum())), 1e-12)
+print(f"relax rel={num/den:.4f} (<0.1 ? {num/den < 0.1})")
+
+# --- test 4: rng gaussian moments seed 1
+rng = Rng(1)
+n = 50_000
+s = s2 = 0.0
+for _ in range(n):
+    g = rng.gaussian()
+    s += g; s2 += g * g
+mean = s / n
+var = s2 / n - mean * mean
+print(f"gaussian: mean={mean:.5f} (<0.02 ? {abs(mean) < 0.02}) var={var:.5f} (|v-1|<0.05 ? {abs(var-1) < 0.05})")
+
+# --- test 5: range_usize seed 3 hits 2 and 5
+rng = Rng(3)
+seen = set()
+for _ in range(1000):
+    v = rng.range_usize(2, 5)
+    assert 2 <= v <= 5
+    seen.add(v)
+print(f"range_usize: seen={sorted(seen)} lo&hi? {2 in seen and 5 in seen}")
+
+# --- test 6: rram relax reproducible bound seed 42
+rng = Rng(42)
+worst = 0.0
+for _ in range(64):
+    worst = max(worst, abs(rng.gaussian() * 0.01 * 127))
+print(f"rram relax worst |noise|={worst:.3f} (<10 ? {worst < 10})")
+
+# --- test 7: f64 in [0,1) seed 7 (10k draws)
+rng = Rng(7)
+ok = all(0.0 <= rng.f64() < 1.0 for _ in range(10_000))
+print(f"f64 unit interval: {ok}")
+
+# --- test 8: uncalibrated crossbar (default fs=1) doesn't crash, len ok
+w = random_tile(16, 8, 4, 0.1)
+xb = Crossbar(w, 16, 8)
+y = xb.smac(np.full(16, 0.5, dtype=np.float32))
+print(f"uncalibrated len={len(y)} (==8 ? {len(y) == 8})")
+
+# --- hotpath/quickstart scu check is non-stochastic; skip.
+# --- oracle-style SCU vs softmax (quickstart asserts 1e-5; not run in CI)
