@@ -2,15 +2,35 @@
 //! warm-up, N timed iterations, mean/min/max report. Each bench binary
 //! (`harness = false`) regenerates one paper table/figure and times the
 //! underlying simulation so regressions in the hot path are visible.
+//!
+//! Every `bench()` result is also recorded in-process; a bench binary can
+//! call [`write_json`] before exiting to dump a machine-readable
+//! `BENCH_<name>.json` report (name → mean/min/max seconds, iters) so the
+//! perf trajectory stays diffable across PRs (CI archives the artifact).
 
 // Included via `mod harness;` by every bench binary; not every bench uses
 // every helper, and the standalone compile-check target uses none of them.
 #![allow(dead_code)]
 
+use picnic::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
+/// One recorded `bench()` run.
+struct Record {
+    name: String,
+    mean_s: f64,
+    min_s: f64,
+    max_s: f64,
+    iters: usize,
+}
+
+static RECORDS: Mutex<Vec<Record>> = Mutex::new(Vec::new());
+
 /// Time `f` over `iters` iterations after `warmup` untimed ones; prints a
-/// criterion-style line and returns the mean seconds per iteration.
+/// criterion-style line, records the result for [`write_json`], and
+/// returns the mean seconds per iteration.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
     for _ in 0..warmup {
         f();
@@ -21,19 +41,55 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
-    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
     let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    // Clamp: the true mean lies in [min, max], but summation rounding can
+    // push it a ulp outside, which would trip the CI report validator.
+    let mean = (samples.iter().sum::<f64>() / samples.len() as f64).clamp(min, max);
     println!(
         "bench {name:<40} mean {:>10.3} ms   min {:>10.3} ms   max {:>10.3} ms   ({iters} iters)",
         mean * 1e3,
         min * 1e3,
         max * 1e3
     );
+    RECORDS.lock().unwrap().push(Record {
+        name: name.to_string(),
+        mean_s: mean,
+        min_s: min,
+        max_s: max,
+        iters,
+    });
     mean
 }
 
 /// Pretty separator for bench output sections.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Dump every recorded `bench()` result to `path` as JSON:
+/// `{"schema": 1, "benches": {name: {mean_s, min_s, max_s, iters}}}`.
+/// Called by a bench binary's `main` after its last bench.
+pub fn write_json(path: &str) {
+    let records = RECORDS.lock().unwrap();
+    let benches: BTreeMap<String, Json> = records
+        .iter()
+        .map(|r| {
+            (
+                r.name.clone(),
+                json::obj(vec![
+                    ("mean_s", json::num(r.mean_s)),
+                    ("min_s", json::num(r.min_s)),
+                    ("max_s", json::num(r.max_s)),
+                    ("iters", json::num(r.iters as f64)),
+                ]),
+            )
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("schema", json::num(1.0)),
+        ("benches", Json::Obj(benches)),
+    ]);
+    std::fs::write(path, format!("{doc}\n")).expect("write bench report");
+    println!("\nwrote {path} ({} benches)", records.len());
 }

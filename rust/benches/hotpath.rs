@@ -1,6 +1,8 @@
 //! Bench: the L3 hot paths in isolation — detailed mesh cycle stepping,
 //! crossbar SMAC, SCU rows, plan building, and the analytic phase walker.
-//! This is the profile target for the EXPERIMENTS.md §Perf iteration log.
+//! This is the profile target for the EXPERIMENTS.md §Perf iteration log
+//! (repo root); results are also dumped to `BENCH_hotpath.json` so every
+//! PR's numbers are machine-diffable (CI archives the file).
 //! Run: `cargo bench --bench hotpath`
 
 mod harness;
@@ -50,8 +52,9 @@ fn main() {
             .collect();
         xb.calibrate(&cal);
         let x: Vec<f32> = (0..256).map(|_| rng.sym_f32(1.0)).collect();
+        let mut y: Vec<f32> = Vec::with_capacity(256);
         harness::bench("pe/smac_256x256", 10, 200, || {
-            let y = xb.smac(&x);
+            xb.smac_into(&x, &mut y);
             assert_eq!(y.len(), 256);
         });
     }
@@ -61,8 +64,9 @@ fn main() {
         let mut rng = Rng::seed_from_u64(2);
         let row: Vec<f32> = (0..2048).map(|_| rng.sym_f32(4.0)).collect();
         let mut scu = Scu::new();
+        let mut out: Vec<f32> = Vec::with_capacity(2048);
         harness::bench("scu/softmax_row_2048", 10, 200, || {
-            let out = scu.softmax_row(&row);
+            scu.softmax_row_into(&row, &mut out);
             assert_eq!(out.len(), 2048);
         });
     }
@@ -90,4 +94,6 @@ fn main() {
             assert!(r.stats.tokens_per_s > 0.0);
         });
     }
+
+    harness::write_json("BENCH_hotpath.json");
 }

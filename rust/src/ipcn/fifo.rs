@@ -80,6 +80,12 @@ impl Fifo {
         self.buf.front().copied()
     }
 
+    /// Iterate the buffered words front-to-back without consuming them
+    /// (state snapshots in determinism tests).
+    pub fn iter(&self) -> impl Iterator<Item = &Word> {
+        self.buf.iter()
+    }
+
     /// Called once per simulated cycle by the router to accumulate
     /// occupancy statistics.
     pub fn sample(&mut self) {

@@ -18,6 +18,8 @@ use crate::config::SystemConfig;
 use crate::isa::{Instruction, Port};
 
 /// Words that crossed a die or chip boundary this cycle, tagged by router.
+/// Reused across cycles via [`BoundaryTraffic::clear`] so steady-state
+/// stepping does not allocate.
 #[derive(Debug, Default, Clone)]
 pub struct BoundaryTraffic {
     /// Router index → words sent to its PE (AXI stream).
@@ -28,8 +30,17 @@ pub struct BoundaryTraffic {
     pub to_optical: Vec<(usize, Word)>,
 }
 
+impl BoundaryTraffic {
+    /// Empty all three lanes, keeping their capacity for reuse.
+    pub fn clear(&mut self) {
+        self.to_pe.clear();
+        self.to_scu.clear();
+        self.to_optical.clear();
+    }
+}
+
 /// Aggregate mesh statistics.
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct MeshStats {
     pub cycles: u64,
     pub words_delivered: u64,
@@ -41,14 +52,45 @@ pub struct MeshStats {
 pub struct Mesh {
     dim: usize,
     routers: Vec<Router>,
+    /// Planar-neighbour table, indexed `[router][port as usize]` for the
+    /// four planar ports (North=0 … West=3). Precomputed so the per-intent
+    /// delivery path does no `coords()` div/mod arithmetic.
+    nbr: Vec<[Option<usize>; 4]>,
+    /// Scratch arena for phase-1 output intents, drained from every router
+    /// and delivered in phase 2. Mesh-owned so stepping reuses its capacity
+    /// instead of allocating a `Vec<Vec<_>>` per cycle.
+    arena: Vec<OutputIntent>,
+    /// Arena span end offsets: router `i` produced
+    /// `arena[spans[i-1]..spans[i]]` this cycle.
+    spans: Vec<u32>,
     pub stats: MeshStats,
 }
 
 impl Mesh {
     pub fn new(cfg: &SystemConfig) -> Mesh {
-        let n = cfg.ipcn_dim * cfg.ipcn_dim;
+        let dim = cfg.ipcn_dim;
+        let n = dim * dim;
+        let nbr = (0..n)
+            .map(|i| {
+                let (r, c) = (i / dim, i % dim);
+                let mut t = [None; 4];
+                if r > 0 {
+                    t[Port::North as usize] = Some(i - dim);
+                }
+                if c + 1 < dim {
+                    t[Port::East as usize] = Some(i + 1);
+                }
+                if r + 1 < dim {
+                    t[Port::South as usize] = Some(i + dim);
+                }
+                if c > 0 {
+                    t[Port::West as usize] = Some(i - 1);
+                }
+                t
+            })
+            .collect();
         Mesh {
-            dim: cfg.ipcn_dim,
+            dim,
             routers: (0..n)
                 .map(|_| {
                     Router::new(
@@ -58,6 +100,9 @@ impl Mesh {
                     )
                 })
                 .collect(),
+            nbr,
+            arena: Vec::with_capacity(2 * n),
+            spans: Vec::with_capacity(n),
             stats: MeshStats::default(),
         }
     }
@@ -89,12 +134,8 @@ impl Mesh {
 
     /// Neighbour of `idx` through planar port `p` (None at the mesh edge).
     pub fn neighbour(&self, idx: usize, p: Port) -> Option<usize> {
-        let (r, c) = self.coords(idx);
         match p {
-            Port::North if r > 0 => Some(self.idx(r - 1, c)),
-            Port::South if r + 1 < self.dim => Some(self.idx(r + 1, c)),
-            Port::West if c > 0 => Some(self.idx(r, c - 1)),
-            Port::East if c + 1 < self.dim => Some(self.idx(r, c + 1)),
+            Port::North | Port::East | Port::South | Port::West => self.nbr[idx][p as usize],
             _ => None,
         }
     }
@@ -112,26 +153,31 @@ impl Mesh {
         self.routers[idx].inject(port, w)
     }
 
-    /// Step one cycle with the per-router instruction slice from the NMC.
-    /// Returns the boundary traffic produced this cycle.
-    pub fn step(&mut self, instrs: &[Instruction]) -> BoundaryTraffic {
+    /// Step one cycle with the per-router instruction slice from the NMC,
+    /// writing the boundary traffic into a caller-owned (reusable) buffer.
+    /// `boundary` is cleared first; steady-state stepping allocates nothing.
+    pub fn step_into(&mut self, instrs: &[Instruction], boundary: &mut BoundaryTraffic) {
         assert_eq!(instrs.len(), self.routers.len(), "instruction slice width");
-        // Phase 1: compute.
-        let mut all_intents: Vec<Vec<OutputIntent>> = Vec::with_capacity(self.routers.len());
+        boundary.clear();
+        // Phase 1: compute; drain every router's intents into the arena.
+        self.arena.clear();
+        self.spans.clear();
         for (i, r) in self.routers.iter_mut().enumerate() {
             if r.compute(instrs[i]) {
                 self.stats.active_router_cycles += 1;
             }
-            all_intents.push(r.take_intents());
+            r.drain_intents_into(&mut self.arena);
+            self.spans.push(self.arena.len() as u32);
         }
         // Phase 2: deliver.
-        let mut boundary = BoundaryTraffic::default();
-        for (src, intents) in all_intents.into_iter().enumerate() {
-            for intent in intents {
+        let mut start = 0usize;
+        for src in 0..self.routers.len() {
+            let end = self.spans[src] as usize;
+            for &intent in &self.arena[start..end] {
                 for p in intent.ports.iter() {
                     match p {
                         Port::North | Port::South | Port::East | Port::West => {
-                            match self.neighbour(src, p) {
+                            match self.nbr[src][p as usize] {
                                 Some(dst) => {
                                     let in_port =
                                         p.opposite().expect("planar port has opposite");
@@ -152,8 +198,16 @@ impl Mesh {
                     }
                 }
             }
+            start = end;
         }
         self.stats.cycles += 1;
+    }
+
+    /// Convenience wrapper over [`Mesh::step_into`] that returns a fresh
+    /// [`BoundaryTraffic`] (allocates; hot callers hold their own buffer).
+    pub fn step(&mut self, instrs: &[Instruction]) -> BoundaryTraffic {
+        let mut boundary = BoundaryTraffic::default();
+        self.step_into(instrs, &mut boundary);
         boundary
     }
 

@@ -22,7 +22,7 @@ pub mod router;
 pub mod scratchpad;
 
 pub use fifo::Fifo;
-pub use mesh::{Mesh, MeshStats};
+pub use mesh::{BoundaryTraffic, Mesh, MeshStats};
 pub use nmc::Nmc;
 pub use npm::{Bank, Npm};
 pub use router::{Router, RouterStats};

@@ -8,8 +8,10 @@
 use super::npm::Npm;
 use crate::isa::{Instruction, ProgramRow};
 
-/// The NMC's per-cycle output: one instruction per router.
-#[derive(Debug, Clone)]
+/// The NMC's per-cycle output: one instruction per router. The NMC owns
+/// one slice and refills it in place each cycle, so issuing allocates
+/// nothing in steady state.
+#[derive(Debug, Clone, Default)]
 pub struct IssueSlice {
     pub instrs: Vec<Instruction>,
     /// Label of the originating program row (for traces).
@@ -36,6 +38,8 @@ pub struct Nmc {
     repeat_left: u32,
     pub state: NmcState,
     pub cycles_issued: u64,
+    /// Reusable issue slice, refilled in place each cycle.
+    slice: IssueSlice,
 }
 
 impl Nmc {
@@ -46,18 +50,35 @@ impl Nmc {
             repeat_left: 0,
             state: NmcState::Fetch,
             cycles_issued: 0,
+            slice: IssueSlice {
+                instrs: Vec::with_capacity(n_routers),
+                label: String::new(),
+            },
         }
     }
 
     /// Advance one cycle: fetch/decode from the NPM as needed and produce
     /// the per-router instruction slice via the command crossbar. Returns
     /// `None` when the NPM is drained (caller decides whether to flip).
-    pub fn issue(&mut self, npm: &mut Npm) -> Option<IssueSlice> {
+    pub fn issue(&mut self, npm: &mut Npm) -> Option<&IssueSlice> {
         if self.repeat_left == 0 {
             match npm.next_row() {
                 Some(row) => {
                     self.repeat_left = row.repeat.max(1);
-                    self.current = Some(row.clone());
+                    // Copy the row into the NMC-owned slot field-by-field so
+                    // its Vec/String allocations are reused across fetches.
+                    match &mut self.current {
+                        Some(cur) => {
+                            cur.cmd1 = row.cmd1;
+                            cur.cmd2 = row.cmd2;
+                            cur.repeat = row.repeat;
+                            cur.router_cfg.clear();
+                            cur.router_cfg.extend_from_slice(&row.router_cfg);
+                            cur.label.clear();
+                            cur.label.push_str(&row.label);
+                        }
+                        None => self.current = Some(row.clone()),
+                    }
                     self.state = NmcState::Fetch;
                 }
                 None => {
@@ -71,16 +92,17 @@ impl Nmc {
         }
 
         let row = self.current.as_ref().expect("row present when issuing");
-        // Command crossbar: 3 inputs (CMD1, CMD2, IDLE) × N outputs.
-        let instrs: Vec<Instruction> = (0..self.n_routers)
-            .map(|r| row.instruction_for(r))
-            .collect();
+        // Command crossbar: 3 inputs (CMD1, CMD2, IDLE) × N outputs, fanned
+        // into the reusable slice.
+        self.slice.instrs.clear();
+        for r in 0..self.n_routers {
+            self.slice.instrs.push(row.instruction_for(r));
+        }
+        self.slice.label.clear();
+        self.slice.label.push_str(&row.label);
         self.repeat_left -= 1;
         self.cycles_issued += 1;
-        Some(IssueSlice {
-            instrs,
-            label: row.label.clone(),
-        })
+        Some(&self.slice)
     }
 
     /// True when the current row still has repeats pending.

@@ -74,14 +74,18 @@ impl Router {
         self.in_fifo[p as usize].push(w)
     }
 
-    fn read_enabled(&mut self, rd_en: PortSet) -> Vec<Word> {
-        let mut v = Vec::with_capacity(rd_en.len());
+    /// Read one word from each enabled input FIFO into the stack buffer
+    /// `buf` (at most 7 ports); returns the number of words read. A fixed
+    /// array keeps the steady-state compute path off the heap.
+    fn read_enabled(&mut self, rd_en: PortSet, buf: &mut [Word; 7]) -> usize {
+        let mut n = 0;
         for p in rd_en.iter() {
             if let Some(w) = self.in_fifo[p as usize].pop() {
-                v.push(w);
+                buf[n] = w;
+                n += 1;
             }
         }
-        v
+        n
     }
 
     /// Phase 1: execute `instr`, consuming input FIFOs and producing output
@@ -91,27 +95,28 @@ impl Router {
         for f in &mut self.in_fifo {
             f.sample();
         }
+        let mut buf: [Word; 7] = [0.0; 7];
         let active = match instr.mode {
             Mode::Idle => false,
             Mode::Route => {
-                let words = self.read_enabled(instr.rd_en);
-                if words.is_empty() {
+                let n = self.read_enabled(instr.rd_en, &mut buf);
+                if n == 0 {
                     self.stats.stalls += 1;
                     false
                 } else {
-                    for w in words {
+                    for &w in &buf[..n] {
                         self.queue_out(instr.out_en, w);
                     }
                     true
                 }
             }
             Mode::PartialSum => {
-                let words = self.read_enabled(instr.rd_en);
-                if words.is_empty() {
+                let n = self.read_enabled(instr.rd_en, &mut buf);
+                if n == 0 {
                     self.stats.stalls += 1;
                     false
                 } else {
-                    let s = partial_sum(&words);
+                    let s = partial_sum(&buf[..n]);
                     self.stats.psum_ops += 1;
                     self.queue_out(instr.out_en, s);
                     true
@@ -119,22 +124,20 @@ impl Router {
             }
             Mode::LinearAct => {
                 // (a, b) at SP_addr and SP_addr+1; x from the first rd port.
-                let x = self.read_enabled(instr.rd_en).first().copied();
-                match x {
-                    None => {
-                        self.stats.stalls += 1;
-                        false
-                    }
-                    Some(x) => {
-                        let a = self.scratchpad.read(instr.sp_addr as usize).unwrap_or(1.0);
-                        let b = self
-                            .scratchpad
-                            .read(instr.sp_addr as usize + 1)
-                            .unwrap_or(0.0);
-                        self.stats.linact_ops += 1;
-                        self.queue_out(instr.out_en, linear_act(x, a, b));
-                        true
-                    }
+                let n = self.read_enabled(instr.rd_en, &mut buf);
+                if n == 0 {
+                    self.stats.stalls += 1;
+                    false
+                } else {
+                    let x = buf[0];
+                    let a = self.scratchpad.read(instr.sp_addr as usize).unwrap_or(1.0);
+                    let b = self
+                        .scratchpad
+                        .read(instr.sp_addr as usize + 1)
+                        .unwrap_or(0.0);
+                    self.stats.linact_ops += 1;
+                    self.queue_out(instr.out_en, linear_act(x, a, b));
+                    true
                 }
             }
             Mode::Dmac => {
@@ -144,14 +147,17 @@ impl Router {
                 // multiplies the stream arriving from the north by the
                 // stream arriving from the west (QKᵀ streams K down the
                 // column while q flows along the row).
-                let words = self.read_enabled(instr.rd_en);
-                let pairs: Vec<(Word, Word)> =
-                    words.chunks_exact(2).map(|c| (c[0], c[1])).collect();
-                if pairs.is_empty() {
+                let n = self.read_enabled(instr.rd_en, &mut buf);
+                let mut pairs: [(Word, Word); 3] = [(0.0, 0.0); 3];
+                let np = n / 2;
+                for (i, pair) in pairs.iter_mut().enumerate().take(np) {
+                    *pair = (buf[2 * i], buf[2 * i + 1]);
+                }
+                if np == 0 {
                     self.stats.stalls += 1;
                     false
                 } else {
-                    self.dmac.issue(&pairs);
+                    self.dmac.issue(&pairs[..np]);
                     true
                 }
             }
@@ -174,12 +180,12 @@ impl Router {
                 }
             }
             Mode::SpWrite => {
-                let words = self.read_enabled(instr.rd_en);
-                if words.is_empty() {
+                let n = self.read_enabled(instr.rd_en, &mut buf);
+                if n == 0 {
                     self.stats.stalls += 1;
                     false
                 } else {
-                    for (i, w) in words.iter().enumerate() {
+                    for (i, w) in buf[..n].iter().enumerate() {
                         self.scratchpad.write(instr.sp_addr as usize + i, *w);
                         self.stats.sp_writes += 1;
                     }
@@ -189,13 +195,13 @@ impl Router {
             Mode::PeTrigger => {
                 // Forward input words to the PE port; the mesh moves them
                 // across the AXI adapter and triggers the crossbar.
-                let words = self.read_enabled(instr.rd_en);
-                if words.is_empty() {
+                let n = self.read_enabled(instr.rd_en, &mut buf);
+                if n == 0 {
                     self.stats.stalls += 1;
                     false
                 } else {
                     self.stats.pe_triggers += 1;
-                    for w in words {
+                    for &w in &buf[..n] {
                         self.queue_out(PortSet::single(Port::Pe), w);
                     }
                     true
@@ -203,12 +209,12 @@ impl Router {
             }
             Mode::ScuStream => {
                 // Stream to the activation die through the Up TSV.
-                let words = self.read_enabled(instr.rd_en);
-                if words.is_empty() {
+                let n = self.read_enabled(instr.rd_en, &mut buf);
+                if n == 0 {
                     self.stats.stalls += 1;
                     false
                 } else {
-                    for w in words {
+                    for &w in &buf[..n] {
                         self.queue_out(PortSet::single(Port::Up), w);
                     }
                     true
@@ -264,9 +270,13 @@ impl Router {
         self.pending.push(OutputIntent { ports, word: w });
     }
 
-    /// Phase 2 accessor: intents produced by the last `compute` call.
-    pub fn take_intents(&mut self) -> Vec<OutputIntent> {
-        std::mem::take(&mut self.pending)
+    /// Phase 2 accessor: append the intents produced by the last `compute`
+    /// call to `sink` and clear them. Unlike a `mem::take`-style getter,
+    /// this reuses both the router's pending buffer and the caller's sink,
+    /// so per-cycle intent collection performs no heap allocation.
+    pub fn drain_intents_into(&mut self, sink: &mut Vec<OutputIntent>) {
+        sink.extend_from_slice(&self.pending);
+        self.pending.clear();
     }
 }
 
@@ -276,6 +286,12 @@ mod tests {
 
     fn router() -> Router {
         Router::new(32, 4096, 16)
+    }
+
+    fn take_intents(r: &mut Router) -> Vec<OutputIntent> {
+        let mut v = Vec::new();
+        r.drain_intents_into(&mut v);
+        v
     }
 
     #[test]
@@ -288,7 +304,7 @@ mod tests {
             PortSet::single(Port::East),
         );
         assert!(r.compute(instr));
-        let intents = r.take_intents();
+        let intents = take_intents(&mut r);
         assert_eq!(intents.len(), 1);
         assert_eq!(intents[0].word, 3.25);
         assert!(intents[0].ports.contains(Port::East));
@@ -301,7 +317,7 @@ mod tests {
         r.inject(Port::Pe, 1.0);
         let instr = Instruction::new(PortSet::single(Port::Pe), Mode::Route, PortSet::ALL);
         assert!(r.compute(instr));
-        let intents = r.take_intents();
+        let intents = take_intents(&mut r);
         assert_eq!(intents.len(), 1);
         assert_eq!(intents[0].ports.len(), 7);
         assert_eq!(r.stats.broadcasts, 1);
@@ -333,7 +349,7 @@ mod tests {
             PortSet::single(Port::East),
         );
         assert!(r.compute(instr));
-        assert_eq!(r.take_intents()[0].word, 7.0);
+        assert_eq!(take_intents(&mut r)[0].word, 7.0);
         assert_eq!(r.stats.psum_ops, 1);
     }
 
@@ -350,7 +366,7 @@ mod tests {
         )
         .with_sp(10);
         assert!(r.compute(instr));
-        assert_eq!(r.take_intents()[0].word, 9.0);
+        assert_eq!(take_intents(&mut r)[0].word, 9.0);
     }
 
     #[test]
@@ -370,7 +386,7 @@ mod tests {
         assert!(r.compute(macd)); // (4, 5)
         let drain = Instruction::new(PortSet::EMPTY, Mode::DmacDrain, PortSet::single(Port::Pe));
         assert!(r.compute(drain));
-        assert_eq!(r.take_intents()[0].word, 2.0 * 3.0 + 4.0 * 5.0);
+        assert_eq!(take_intents(&mut r)[0].word, 2.0 * 3.0 + 4.0 * 5.0);
     }
 
     #[test]
@@ -393,7 +409,7 @@ mod tests {
         let rd = Instruction::new(PortSet::EMPTY, Mode::SpRead, PortSet::single(Port::East))
             .with_sp(100);
         assert!(r.compute(rd));
-        assert_eq!(r.take_intents()[0].word, 8.5);
+        assert_eq!(take_intents(&mut r)[0].word, 8.5);
         assert_eq!(r.stats.sp_writes, 1);
         assert_eq!(r.stats.sp_reads, 1);
     }
@@ -412,7 +428,7 @@ mod tests {
         .with_xfer(IntXfer::FifoToSp);
         assert!(r.compute(instr));
         assert_eq!(r.scratchpad.read(5), Some(9.0));
-        assert_eq!(r.take_intents().len(), 1, "route still happened");
+        assert_eq!(take_intents(&mut r).len(), 1, "route still happened");
     }
 
     #[test]
@@ -421,7 +437,7 @@ mod tests {
         r.inject(Port::Pe, 2.5);
         let instr = Instruction::new(PortSet::single(Port::Pe), Mode::ScuStream, PortSet::EMPTY);
         assert!(r.compute(instr));
-        let intents = r.take_intents();
+        let intents = take_intents(&mut r);
         assert!(intents[0].ports.contains(Port::Up));
     }
 }

@@ -16,14 +16,14 @@ pub struct Calibration {
 
 impl Calibration {
     /// Run the calibration loop: for every input vector in `cal_set`
-    /// (DAC codes, each of length `array.rows()`), record the max |column
-    /// sum| as the full-scale, floored at 1.0 (an empty column must not
-    /// produce a zero swing).
+    /// (integer DAC codes, each of length `array.rows()`), record the max
+    /// |column sum| as the full-scale, floored at 1.0 (an empty column must
+    /// not produce a zero swing).
     ///
     /// The offset term models the sense-amp systematic error: we measure it
     /// as the column response to the all-zero vector (which an ideal array
     /// answers with exactly 0).
-    pub fn run(array: &RramArray, cal_set: &[Vec<f32>]) -> Calibration {
+    pub fn run(array: &RramArray, cal_set: &[Vec<i32>]) -> Calibration {
         let cols = array.cols();
         let mut full_scale = vec![1.0f32; cols];
         let mut buf = vec![0.0f32; cols];
@@ -34,7 +34,7 @@ impl Calibration {
             }
         }
         // Offset probe: all-zero input.
-        let zero = vec![0.0f32; array.rows()];
+        let zero = vec![0i32; array.rows()];
         array.column_mac(&zero, &mut buf);
         Calibration {
             full_scale,
@@ -56,10 +56,7 @@ mod tests {
     #[test]
     fn full_scale_tracks_max_abs_sum() {
         let a = array_2x3();
-        let cal = Calibration::run(
-            &a,
-            &[vec![1.0, 1.0], vec![-2.0, 1.0]],
-        );
+        let cal = Calibration::run(&a, &[vec![1, 1], vec![-2, 1]]);
         // col sums: [15, -15, 25] and [-15, 45, -65]
         assert_eq!(cal.full_scale, vec![15.0, 45.0, 65.0]);
     }
@@ -68,14 +65,14 @@ mod tests {
     fn full_scale_floored_at_one() {
         let mut a = RramArray::new(2, 2, 256);
         a.program(&[0, 0, 0, 0]);
-        let cal = Calibration::run(&a, &[vec![1.0, 1.0]]);
+        let cal = Calibration::run(&a, &[vec![1, 1]]);
         assert_eq!(cal.full_scale, vec![1.0, 1.0]);
     }
 
     #[test]
     fn ideal_array_has_zero_offset() {
         let a = array_2x3();
-        let cal = Calibration::run(&a, &[vec![1.0, 0.0]]);
+        let cal = Calibration::run(&a, &[vec![1, 0]]);
         assert_eq!(cal.offset, vec![0.0, 0.0, 0.0]);
     }
 

@@ -36,9 +36,24 @@ pub struct Crossbar {
     spec: QuantSpec,
     /// Per-column weight scale from programming-time quantization.
     w_scale: Vec<f32>,
+    /// Persistent DAC-code scratch so a SMAC allocates nothing.
+    code_buf: Vec<i32>,
     /// SMAC operations performed (power accounting).
     smacs: u64,
     calibrated: bool,
+}
+
+/// Symmetric per-vector input quantization (ref.py::quantize_inputs):
+/// scale = max|x| / (2^(bits-1)-1), codes = round(x/scale) clamped. Free
+/// function so callers can pass a scratch buffer that lives inside the
+/// same struct as the spec.
+fn quantize_into(x_bits: u32, x: &[f32], codes: &mut Vec<i32>) -> f32 {
+    let qmax = (1i64 << (x_bits - 1)) as f32 - 1.0;
+    let maxabs = x.iter().fold(1e-8f32, |m, v| m.max(v.abs()));
+    let scale = maxabs / qmax;
+    codes.clear();
+    codes.extend(x.iter().map(|v| (v / scale).round().clamp(-qmax, qmax) as i32));
+    scale
 }
 
 impl Crossbar {
@@ -70,6 +85,7 @@ impl Crossbar {
             adc,
             spec,
             w_scale,
+            code_buf: Vec::with_capacity(rows),
             smacs: 0,
             calibrated: false,
         }
@@ -96,21 +112,23 @@ impl Crossbar {
     }
 
     /// DAC quantization of one float input vector → (codes, scale).
-    /// Per-vector symmetric, matching ref.py::quantize_inputs.
-    pub fn dac_quantize(&self, x: &[f32]) -> (Vec<f32>, f32) {
-        let qmax = (1i64 << (self.spec.x_bits - 1)) as f32 - 1.0;
-        let maxabs = x.iter().fold(1e-8f32, |m, v| m.max(v.abs()));
-        let scale = maxabs / qmax;
-        let codes = x
-            .iter()
-            .map(|v| (v / scale).round().clamp(-qmax, qmax))
-            .collect();
+    /// Per-vector symmetric, matching ref.py::quantize_inputs. Codes are
+    /// integer DAC levels, consumed directly by `RramArray::column_mac`.
+    pub fn dac_quantize(&self, x: &[f32]) -> (Vec<i32>, f32) {
+        let mut codes = Vec::with_capacity(x.len());
+        let scale = self.dac_quantize_into(x, &mut codes);
         (codes, scale)
+    }
+
+    /// Allocation-free DAC quantization into a caller-owned buffer;
+    /// returns the per-vector scale.
+    pub fn dac_quantize_into(&self, x: &[f32], codes: &mut Vec<i32>) -> f32 {
+        quantize_into(self.spec.x_bits, x, codes)
     }
 
     /// Feedback-loop calibration with a set of float calibration vectors.
     pub fn calibrate(&mut self, cal_set: &[Vec<f32>]) {
-        let dac_set: Vec<Vec<f32>> = cal_set
+        let dac_set: Vec<Vec<i32>> = cal_set
             .iter()
             .map(|x| self.dac_quantize(x).0)
             .collect();
@@ -119,18 +137,28 @@ impl Crossbar {
         self.calibrated = true;
     }
 
-    /// One SMAC: y[cols] = ADC(x_codes · G) · x_scale · w_scale.
-    pub fn smac(&mut self, x: &[f32]) -> Vec<f32> {
+    /// One SMAC into a caller-owned output buffer:
+    /// y[cols] = ADC(x_codes · G) · x_scale · w_scale. Uses the persistent
+    /// DAC-code scratch, so the steady-state path performs no allocation
+    /// once `out` has reached `cols()` capacity.
+    pub fn smac_into(&mut self, x: &[f32], out: &mut Vec<f32>) {
         assert_eq!(x.len(), self.rows(), "input length = crossbar rows");
-        let (codes, x_scale) = self.dac_quantize(x);
-        let mut cols = vec![0.0f32; self.cols()];
-        self.array.column_mac(&codes, &mut cols);
-        self.adc.convert(&mut cols);
-        for (c, v) in cols.iter_mut().enumerate() {
-            *v *= x_scale * self.w_scale[c];
+        let x_scale = quantize_into(self.spec.x_bits, x, &mut self.code_buf);
+        out.clear();
+        out.resize(self.array.cols(), 0.0);
+        self.array.column_mac(&self.code_buf, out);
+        self.adc.convert(out);
+        for (v, s) in out.iter_mut().zip(self.w_scale.iter()) {
+            *v *= x_scale * s;
         }
         self.smacs += 1;
-        cols
+    }
+
+    /// One SMAC: convenience wrapper over [`Crossbar::smac_into`].
+    pub fn smac(&mut self, x: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.cols());
+        self.smac_into(x, &mut out);
+        out
     }
 
     /// Float reference y = xᵀW for error-bound tests.

@@ -84,16 +84,19 @@ impl RramArray {
         self.g[r * self.cols + c]
     }
 
-    /// Analog column sums for one input vector of DAC codes:
-    /// out[c] = Σ_r in[r] · g[r][c]  (bitline current accumulation).
-    pub fn column_mac(&self, input: &[f32], out: &mut [f32]) {
+    /// Analog column sums for one input vector of integer DAC codes:
+    /// out[c] = Σ_r in[r] · g[r][c]  (bitline current accumulation). The
+    /// input stream stays in dense integer codes straight off the DAC;
+    /// zero codes skip their wordline row entirely.
+    pub fn column_mac(&self, input: &[i32], out: &mut [f32]) {
         assert_eq!(input.len(), self.rows);
         assert_eq!(out.len(), self.cols);
         out.iter_mut().for_each(|o| *o = 0.0);
-        for (r, &x) in input.iter().enumerate() {
-            if x == 0.0 {
+        for (r, &code) in input.iter().enumerate() {
+            if code == 0 {
                 continue;
             }
+            let x = code as f32;
             let row = &self.g[r * self.cols..(r + 1) * self.cols];
             for (o, &g) in out.iter_mut().zip(row.iter()) {
                 *o += x * g;
@@ -127,7 +130,7 @@ mod tests {
         let mut a = RramArray::new(2, 3, 256);
         a.program(&[1, 2, 3, 4, 5, 6]);
         let mut out = vec![0.0; 3];
-        a.column_mac(&[2.0, 10.0], &mut out);
+        a.column_mac(&[2, 10], &mut out);
         assert_eq!(out, vec![2.0 + 40.0, 4.0 + 50.0, 6.0 + 60.0]);
     }
 
@@ -151,7 +154,7 @@ mod tests {
         let mut a = RramArray::new(4, 4, 256);
         a.program(&[7; 16]);
         let mut out = vec![9.0; 4];
-        a.column_mac(&[0.0; 4], &mut out);
+        a.column_mac(&[0; 4], &mut out);
         assert_eq!(out, vec![0.0; 4]);
     }
 

@@ -110,17 +110,25 @@ impl Scu {
         Some(pwl_exp(x - self.row_max) * self.recip)
     }
 
-    /// Convenience: full row in, full row out (used by the functional sim).
-    pub fn softmax_row(&mut self, row: &[f32]) -> Vec<f32> {
+    /// Full row in, full row out, into a caller-owned buffer (cleared
+    /// first). The functional sim reuses one buffer per SCU so row
+    /// processing stays off the heap.
+    pub fn softmax_row_into(&mut self, row: &[f32], out: &mut Vec<f32>) {
         self.begin_row(row.len());
         for &x in row {
             self.push(x);
         }
         self.compute_reciprocal();
-        let mut out = Vec::with_capacity(row.len());
+        out.clear();
         while let Some(y) = self.pop() {
             out.push(y);
         }
+    }
+
+    /// Convenience wrapper over [`Scu::softmax_row_into`].
+    pub fn softmax_row(&mut self, row: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(row.len());
+        self.softmax_row_into(row, &mut out);
         out
     }
 

@@ -7,11 +7,10 @@
 //! analytic model's TimingConfig constants.
 
 use crate::config::SystemConfig;
-use crate::ipcn::{Mesh, Nmc, Npm};
-use crate::isa::{Port, Program};
+use crate::ipcn::{BoundaryTraffic, Mesh, Nmc, Npm};
+use crate::isa::{Instruction, Port, Program};
 use crate::pe::{Crossbar, QuantSpec};
 use crate::scu::Scu;
-use std::collections::HashMap;
 use std::collections::VecDeque;
 
 /// A PE attachment: the crossbar plus its AXI input staging buffer and the
@@ -24,6 +23,17 @@ struct PeSlot {
     results: VecDeque<f64>,
     /// Cycle at which pending results become visible (xbar latency).
     ready_at: u64,
+    /// Reusable SMAC output buffer (`smac_into` target).
+    out_buf: Vec<f32>,
+}
+
+/// An SCU attachment: the unit plus its row staging and output buffers.
+struct ScuSlot {
+    scu: Scu,
+    /// Row staging (words arriving over the Up TSV).
+    staging: Vec<f32>,
+    /// Reusable softmax output buffer (`softmax_row_into` target).
+    out_buf: Vec<f32>,
 }
 
 /// The tile engine.
@@ -32,32 +42,38 @@ pub struct TileEngine {
     pub mesh: Mesh,
     pub npm: Npm,
     pub nmc: Nmc,
-    pes: HashMap<usize, PeSlot>,
-    scus: HashMap<usize, Scu>,
-    /// SCU row staging per router (words arriving over the Up TSV).
-    scu_staging: HashMap<usize, Vec<f32>>,
+    /// PE / SCU attachments, dense-indexed by router so iteration order —
+    /// and therefore result-injection order — is deterministic.
+    pes: Vec<Option<PeSlot>>,
+    scus: Vec<Option<ScuSlot>>,
     scu_row_len: usize,
     /// Words that left the tile via the optical die: (cycle, router, word).
     pub optical_egress: Vec<(u64, usize, f64)>,
     pub cycle: u64,
     /// Crossbar SMAC latency in cycles (from TimingConfig).
     pub xbar_latency: u64,
+    /// Cached all-IDLE slice for drain-only cycles.
+    idle_slice: Vec<Instruction>,
+    /// Reusable boundary-traffic buffer for mesh stepping.
+    boundary: BoundaryTraffic,
 }
 
 impl TileEngine {
     pub fn new(cfg: SystemConfig, xbar_latency: u64) -> TileEngine {
-        let n = cfg.routers_per_tile();
+        let mesh = Mesh::new(&cfg);
+        let n = mesh.n_routers();
         TileEngine {
-            mesh: Mesh::new(&cfg),
+            mesh,
             npm: Npm::new(),
             nmc: Nmc::new(n),
-            pes: HashMap::new(),
-            scus: HashMap::new(),
-            scu_staging: HashMap::new(),
+            pes: (0..n).map(|_| None).collect(),
+            scus: (0..n).map(|_| None).collect(),
             scu_row_len: 0,
             optical_egress: Vec::new(),
             cycle: 0,
             xbar_latency,
+            idle_slice: vec![Instruction::IDLE; n],
+            boundary: BoundaryTraffic::default(),
             cfg,
         }
     }
@@ -70,21 +86,22 @@ impl TileEngine {
             .map(|i| (0..rows).map(|r| ((r + i) % 7) as f32 / 7.0).collect())
             .collect();
         xbar.calibrate(&cal);
-        self.pes.insert(
-            idx,
-            PeSlot {
-                xbar,
-                staging: Vec::with_capacity(rows),
-                results: VecDeque::new(),
-                ready_at: 0,
-            },
-        );
+        self.pes[idx] = Some(PeSlot {
+            xbar,
+            staging: Vec::with_capacity(rows),
+            results: VecDeque::with_capacity(4 * cols),
+            ready_at: 0,
+            out_buf: Vec::with_capacity(cols),
+        });
     }
 
     /// Give router `idx` an SCU on the top die, processing rows of `len`.
     pub fn attach_scu(&mut self, idx: usize, row_len: usize) {
-        self.scus.insert(idx, Scu::new());
-        self.scu_staging.insert(idx, Vec::with_capacity(row_len));
+        self.scus[idx] = Some(ScuSlot {
+            scu: Scu::new(),
+            staging: Vec::with_capacity(row_len),
+            out_buf: Vec::with_capacity(row_len),
+        });
         self.scu_row_len = row_len;
     }
 
@@ -96,33 +113,40 @@ impl TileEngine {
     /// Step one cycle. Returns false when the NMC has drained the NPM and
     /// no PE/SCU work is pending.
     pub fn step(&mut self) -> bool {
-        let issued = self.nmc.issue(&mut self.npm);
-        let boundary = match &issued {
-            Some(slice) => self.mesh.step(&slice.instrs),
+        // Reuse the engine-owned boundary buffer (mem::take moves it out
+        // without allocating; it is restored before returning).
+        let mut boundary = std::mem::take(&mut self.boundary);
+        let issued = match self.nmc.issue(&mut self.npm) {
+            Some(slice) => {
+                self.mesh.step_into(&slice.instrs, &mut boundary);
+                true
+            }
             None => {
                 // drain-only cycle: keep the mesh idle but let PE/SCU finish
-                let idle = vec![crate::isa::Instruction::IDLE; self.mesh.n_routers()];
-                self.mesh.step(&idle)
+                self.mesh.step_into(&self.idle_slice, &mut boundary);
+                false
             }
         };
 
         // PE side: staging + SMAC trigger when the staging buffer is full.
-        for (r, w) in boundary.to_pe {
-            if let Some(pe) = self.pes.get_mut(&r) {
+        for &(r, w) in &boundary.to_pe {
+            if let Some(pe) = self.pes[r].as_mut() {
                 pe.staging.push(w as f32);
                 if pe.staging.len() == pe.xbar.rows() {
-                    let y = pe.xbar.smac(&pe.staging);
+                    pe.xbar.smac_into(&pe.staging, &mut pe.out_buf);
                     pe.staging.clear();
                     pe.ready_at = self.cycle + self.xbar_latency;
-                    pe.results.extend(y.into_iter().map(|v| v as f64));
+                    pe.results.extend(pe.out_buf.iter().map(|&v| v as f64));
                 }
             }
         }
-        // Inject ready PE results back into the router PE FIFOs.
-        for (r, pe) in self.pes.iter_mut() {
+        // Inject ready PE results back into the router PE FIFOs, in router
+        // index order (deterministic).
+        for (r, slot) in self.pes.iter_mut().enumerate() {
+            let Some(pe) = slot else { continue };
             if pe.ready_at <= self.cycle {
                 while let Some(front) = pe.results.front().copied() {
-                    if self.mesh.router_mut(*r).inject(Port::Pe, front) {
+                    if self.mesh.router_mut(r).inject(Port::Pe, front) {
                         pe.results.pop_front();
                     } else {
                         break; // backpressure: retry next cycle
@@ -132,17 +156,15 @@ impl TileEngine {
         }
 
         // SCU side: accumulate a row, run the FSM, push results back down.
-        for (r, w) in boundary.to_scu {
-            if let (Some(stage), Some(scu)) =
-                (self.scu_staging.get_mut(&r), self.scus.get_mut(&r))
-            {
-                stage.push(w as f32);
-                if stage.len() == self.scu_row_len {
-                    let out = scu.softmax_row(stage);
-                    stage.clear();
-                    for v in out {
-                        // results come back via the Down... no: SCU sits on
-                        // the *top* die; results return through the Up port.
+        for &(r, w) in &boundary.to_scu {
+            if let Some(slot) = self.scus[r].as_mut() {
+                slot.staging.push(w as f32);
+                if slot.staging.len() == self.scu_row_len {
+                    slot.scu.softmax_row_into(&slot.staging, &mut slot.out_buf);
+                    slot.staging.clear();
+                    for &v in &slot.out_buf {
+                        // The SCU sits on the *top* die, so its results
+                        // return to the mesh through the router's Up port.
                         let _ = self.mesh.router_mut(r).inject(Port::Up, v as f64);
                     }
                 }
@@ -150,13 +172,14 @@ impl TileEngine {
         }
 
         // Optical egress.
-        for (r, w) in boundary.to_optical {
+        for &(r, w) in &boundary.to_optical {
             self.optical_egress.push((self.cycle, r, w));
         }
 
         self.cycle += 1;
-        let pe_pending = self.pes.values().any(|p| !p.results.is_empty());
-        issued.is_some() || pe_pending
+        let pe_pending = self.pes.iter().flatten().any(|p| !p.results.is_empty());
+        self.boundary = boundary;
+        issued || pe_pending
     }
 
     /// Run until the program drains (bounded by `max_cycles`).

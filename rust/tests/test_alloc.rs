@@ -1,0 +1,105 @@
+//! Steady-state allocation audit (EXPERIMENTS.md §Allocation audit): once
+//! its reusable buffers are warm, `TileEngine::step` must not touch the
+//! heap. A counting global allocator measures allocation events across
+//! several steady-state windows and requires an allocation-free window.
+//!
+//! This file intentionally holds exactly one `#[test]` so no concurrently
+//! running test thread can pollute the global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use picnic::config::SystemConfig;
+use picnic::isa::{Assembler, FirmwareOp, Instruction, Mode, Port, PortSet};
+use picnic::sim::TileEngine;
+
+/// Counts allocation events (alloc/realloc/alloc_zeroed) and delegates to
+/// the system allocator. Frees are not counted — a free implies a prior
+/// allocation elsewhere, and the audit only cares about acquisitions.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_step_is_allocation_free() {
+    let dim = 8;
+    let mut eng = TileEngine::new(SystemConfig::tiny(dim), 4);
+    // Router 0 drives a 4×2 crossbar; a long pipeline row keeps the rest
+    // of mesh row 0 routing words east so the measurement window exercises
+    // FIFO traffic, intent delivery and boundary egress — not just idling.
+    eng.attach_pe(0, &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8], 4, 2);
+    let mut asm = Assembler::new(dim);
+    let trigger = Instruction::new(PortSet::single(Port::West), Mode::PeTrigger, PortSet::EMPTY);
+    let route_pe_east = Instruction::new(
+        PortSet::single(Port::Pe),
+        Mode::Route,
+        PortSet::single(Port::East),
+    );
+    let route_we = Instruction::new(
+        PortSet::single(Port::West),
+        Mode::Route,
+        PortSet::single(Port::East),
+    );
+    // Alternate trigger/drain phases so the SMAC path runs repeatedly;
+    // routers (0,1)..(0,7) pipeline east in both phases (sharing each row
+    // as CMD2). Identical labels keep NMC row fetches on warm capacity.
+    for _ in 0..64 {
+        asm.emit(FirmwareOp::at(0, 0, trigger).repeat(4).label("trig"));
+        asm.emit(FirmwareOp::region((0, 1), (0, dim - 1), route_we).repeat(4));
+        asm.emit(FirmwareOp::at(0, 0, route_pe_east).repeat(8).label("drain"));
+        asm.emit(FirmwareOp::region((0, 1), (0, dim - 1), route_we).repeat(8));
+    }
+    eng.load_program(&asm.finish());
+    eng.optical_egress.reserve(1 << 14);
+
+    // Warm-up: one full trigger/drain period plus slack grows every
+    // reusable buffer (arena, boundary lanes, issue slice, PE buffers,
+    // router pending queues) to steady-state capacity.
+    for _ in 0..64 {
+        let _ = eng.mesh.inject(0, Port::West, 1.0);
+        eng.step();
+    }
+
+    // Measure windows of active steady-state stepping. The minimum over
+    // several windows makes the audit robust to a stray one-off
+    // allocation outside the engine (e.g. test-harness I/O).
+    let mut min_allocs = u64::MAX;
+    for _ in 0..4 {
+        let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+        for _ in 0..48 {
+            let _ = eng.mesh.inject(0, Port::West, 1.0);
+            eng.step();
+        }
+        let after = ALLOC_EVENTS.load(Ordering::Relaxed);
+        min_allocs = min_allocs.min(after - before);
+    }
+    assert_eq!(
+        min_allocs, 0,
+        "TileEngine::step allocated during steady-state windows"
+    );
+    assert!(eng.cycle >= 256, "engine actually stepped");
+}
