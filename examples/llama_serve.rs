@@ -1,13 +1,16 @@
 //! End-to-end serving driver (DESIGN.md deliverable (b)/E2E): a client
-//! thread submits a bursty stream of requests; the coordinator batches and
-//! schedules them on the simulated PICNIC fabric; we report throughput,
-//! TTFT and tail latency — the run recorded in EXPERIMENTS.md §E2E.
+//! thread submits a bursty stream of requests; the coordinator schedules
+//! them across the chiplet pipeline stages (event-driven, chunked
+//! prefill); we report throughput, TTFT and tail latency — the run
+//! recorded in EXPERIMENTS.md §E2E.
 //!
-//! Run: `cargo run --release --example llama_serve -- [--model 1b] [--requests 64]`
+//! Run: `cargo run --release --example llama_serve -- [--model 1b]
+//!       [--requests 64] [--backend analytic|engine]`
 
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{BatchPolicy, Server, ServerConfig};
 use picnic::models::LlamaConfig;
+use picnic::sim::{EngineBackend, SimBackend};
 use picnic::util::args::Args;
 use picnic::util::Rng;
 
@@ -15,19 +18,34 @@ fn main() -> picnic::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let model_name = args.opt_or("model", "1b");
     let n_requests = args.opt_usize("requests", 64)?;
+    let backend_name = args.opt_or("backend", "analytic");
     let model = LlamaConfig::by_name(&model_name)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
-    println!("serving {} with {n_requests} synthetic requests…", model.name);
+    println!(
+        "serving {} with {n_requests} synthetic requests on the {backend_name} backend…",
+        model.name
+    );
 
-    let mut server = Server::new(ServerConfig {
+    let cfg = ServerConfig {
         picnic: PicnicConfig::default().with_ccpg(true),
         model,
         policy: BatchPolicy {
             max_batch: 8,
             kv_budget: 64 * 1024,
+            ..BatchPolicy::default()
         },
-    });
+    };
+    match backend_name.as_str() {
+        "engine" => {
+            let backend = EngineBackend::calibrated(cfg.picnic.clone());
+            drive(Server::with_backend(cfg, backend), n_requests)
+        }
+        "analytic" => drive(Server::new(cfg), n_requests),
+        other => anyhow::bail!("unknown backend {other} (analytic|engine)"),
+    }
+}
 
+fn drive<B: SimBackend>(mut server: Server<B>, n_requests: usize) -> picnic::Result<()> {
     // Bursty workload: exponential-ish prompt lengths, short generations —
     // a chat-style trace.
     let mut rng = Rng::seed_from_u64(7);
@@ -48,7 +66,9 @@ fn main() -> picnic::Result<()> {
     server.run_to_completion()?;
 
     let m = &server.metrics;
+    let p = server.pipeline_stats();
     println!("---- results (accelerator-clock time) ----");
+    println!("backend            : {}", server.backend().name());
     println!("requests completed : {}", m.requests.len());
     println!("requests rejected  : {rejected} (retried under backpressure)");
     println!("total tokens       : {}", m.total_tokens);
@@ -56,6 +76,16 @@ fn main() -> picnic::Result<()> {
     println!("throughput         : {:.1} tokens/s", m.throughput_tokens_per_s());
     println!("mean TTFT          : {:.3} ms", 1e3 * m.mean_ttft_s());
     println!("p99 latency        : {:.3} ms", 1e3 * m.p99_total_s());
+    println!("---- pipeline ----");
+    println!("stages             : {}", p.stages);
+    println!(
+        "plan cache         : {} builds, {} hits",
+        p.plan_builds, p.plan_hits
+    );
+    println!(
+        "ccpg               : {} wakes, {} stall cycles",
+        p.ccpg_wakes, p.ccpg_wake_stall_cycles
+    );
     assert_eq!(m.requests.len(), n_requests, "all requests must complete");
     println!("llama_serve OK");
     Ok(())

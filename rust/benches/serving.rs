@@ -1,0 +1,89 @@
+//! Bench: the event-driven pipeline-parallel serving stack — simulated
+//! decode throughput vs. batch size at a fixed model, plus host-side
+//! timing of the scheduler itself. Dumps `BENCH_serving.json`
+//! (`{"schema": 1, "model", "prompt_len", "gen_len", "points": [...]}`,
+//! one point per batch size with simulated tokens/s, the serialized PR-2
+//! reference, TTFT and p99) so the pipelining win stays machine-diffable
+//! across PRs (CI validates batch-8 > 2× batch-1 and archives the file).
+//! Run: `cargo bench --bench serving`
+
+mod harness;
+
+use picnic::config::PicnicConfig;
+use picnic::coordinator::{serialized_workload_cycles, BatchPolicy, Metrics, Server, ServerConfig};
+use picnic::models::LlamaConfig;
+use picnic::sim::AnalyticSim;
+use picnic::util::json::{self, Json};
+
+const MODEL: &str = "1b";
+const PROMPT: usize = 256;
+const GEN: usize = 32;
+
+fn run_once(batch: usize) -> Metrics {
+    let mut s = Server::new(ServerConfig {
+        picnic: PicnicConfig::default(),
+        model: LlamaConfig::by_name(MODEL).expect("model"),
+        policy: BatchPolicy {
+            max_batch: batch.max(1),
+            kv_budget: 1 << 22,
+            ..BatchPolicy::default()
+        },
+    });
+    for _ in 0..batch {
+        s.submit(PROMPT, GEN).expect("submit");
+    }
+    s.run_to_completion().expect("run");
+    s.metrics.clone()
+}
+
+fn main() {
+    harness::section("pipeline-parallel serving: throughput vs batch size");
+    let cfg = PicnicConfig::default();
+    let model = LlamaConfig::by_name(MODEL).expect("model");
+    let sim = AnalyticSim::new(cfg.clone());
+    let freq = cfg.system.frequency_hz;
+    let chunk = BatchPolicy::default().prefill_chunk;
+
+    let batches = [1usize, 2, 4, 8];
+    let mut points: Vec<Json> = Vec::new();
+    for &batch in &batches {
+        harness::bench(&format!("serve/{MODEL}_batch{batch}"), 1, 3, || {
+            let m = run_once(batch);
+            assert_eq!(m.requests.len(), batch);
+        });
+        let m = run_once(batch);
+
+        // serialized PR-2 reference: the same jobs, each monopolizing the
+        // whole fabric back to back
+        let serialized =
+            serialized_workload_cycles(&sim, &cfg, &model, batch, PROMPT, GEN, chunk)
+                .expect("plan");
+        let ser_tps = m.total_tokens as f64 / (serialized as f64 / freq);
+        println!(
+            "  batch {batch}: {:>8.1} tokens/s pipelined   {:>8.1} tokens/s serialized   \
+             mean TTFT {:.3} ms   p99 {:.3} ms",
+            m.throughput_tokens_per_s(),
+            ser_tps,
+            1e3 * m.mean_ttft_s(),
+            1e3 * m.p99_total_s(),
+        );
+        points.push(json::obj(vec![
+            ("batch", json::num(batch as f64)),
+            ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
+            ("serialized_tokens_per_s", json::num(ser_tps)),
+            ("mean_ttft_s", json::num(m.mean_ttft_s())),
+            ("p99_total_s", json::num(m.p99_total_s())),
+        ]));
+    }
+
+    let n_points = points.len();
+    let doc = json::obj(vec![
+        ("schema", json::num(1.0)),
+        ("model", json::s(MODEL)),
+        ("prompt_len", json::num(PROMPT as f64)),
+        ("gen_len", json::num(GEN as f64)),
+        ("points", Json::Arr(points)),
+    ]);
+    std::fs::write("BENCH_serving.json", format!("{doc}\n")).expect("write serving report");
+    println!("\nwrote BENCH_serving.json ({n_points} batch points)");
+}

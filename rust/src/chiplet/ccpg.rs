@@ -129,6 +129,73 @@ impl Ccpg {
     }
 }
 
+/// Per-cluster wake accounting for the **pipeline-parallel** coordinator.
+///
+/// The sequential [`Ccpg`] controller keeps exactly one cluster awake —
+/// correct for the analytic model's layer-by-layer walk, but the
+/// event-driven scheduler has tokens of *different* requests occupying
+/// different pipeline stages (and therefore different clusters) at the
+/// same simulated instant. `CcpgTimeline` tracks, per cluster, the last
+/// cycle it was busy; a stage occupancy starting more than
+/// `idle_sleep_cycles` after that pays `wake_latency_cycles` as a
+/// per-stage event instead of the old flat per-pass adder.
+#[derive(Debug, Clone)]
+pub struct CcpgTimeline {
+    cfg: CcpgConfig,
+    /// tile → cluster index (Fig 5 2×2 grouping via the optical grid).
+    cluster_of_tile: Vec<usize>,
+    /// Per cluster: cycle its last occupancy ended; `None` = never woken.
+    busy_until: Vec<Option<u64>>,
+    pub stats: CcpgStats,
+}
+
+impl CcpgTimeline {
+    pub fn new(n_tiles: usize, cfg: CcpgConfig, topo: &OpticalTopology) -> CcpgTimeline {
+        let cluster_of_tile: Vec<usize> =
+            (0..n_tiles as u32).map(|t| topo.cluster_of(t) as usize).collect();
+        let n_clusters = cluster_of_tile.iter().copied().max().map_or(0, |m| m + 1);
+        CcpgTimeline {
+            cfg,
+            cluster_of_tile,
+            busy_until: vec![None; n_clusters],
+            stats: CcpgStats::default(),
+        }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    /// A pipeline stage on `tile` wants to run for `dur` cycles starting
+    /// at `start`. Returns the wake stall to add before the work (0 when
+    /// the cluster is still awake or CCPG is disabled) and records the
+    /// occupancy. Callers must present occupancies per stage in
+    /// nondecreasing `start` order (the event loop's dispatch order).
+    pub fn occupy(&mut self, tile: u32, start: u64, dur: u64) -> u64 {
+        if !self.cfg.enabled {
+            return 0;
+        }
+        let c = self.cluster_of_tile[tile as usize];
+        let asleep = match self.busy_until[c] {
+            None => true,
+            Some(end) => start.saturating_sub(end) > self.cfg.idle_sleep_cycles,
+        };
+        let stall = if asleep {
+            self.stats.wakes += 1;
+            self.stats.wake_stall_cycles += self.cfg.wake_latency_cycles;
+            self.cfg.wake_latency_cycles
+        } else {
+            0
+        };
+        let end = start + stall + dur;
+        match self.busy_until[c] {
+            Some(prev) if end <= prev => {}
+            _ => self.busy_until[c] = Some(end),
+        }
+        stall
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +279,60 @@ mod tests {
         let mut c = ccpg(16, true);
         c.activate_for_tile(5);
         assert!((c.sleep_fraction() - 0.75).abs() < 1e-9);
+    }
+
+    fn timeline(n_tiles: usize, enabled: bool) -> CcpgTimeline {
+        let topo = OpticalTopology::new(n_tiles);
+        let cfg = CcpgConfig {
+            enabled,
+            ..CcpgConfig::default()
+        };
+        CcpgTimeline::new(n_tiles, cfg, &topo)
+    }
+
+    #[test]
+    fn timeline_first_touch_pays_wake() {
+        let mut t = timeline(16, true);
+        let wake = CcpgConfig::default().wake_latency_cycles;
+        assert_eq!(t.occupy(0, 0, 100), wake, "cold cluster wakes");
+        assert_eq!(t.occupy(1, 50, 100), 0, "same 2×2 block already awake");
+        assert_eq!(t.stats.wakes, 1);
+    }
+
+    #[test]
+    fn timeline_concurrent_clusters_each_wake_once() {
+        // two tokens in different pipeline stages touch two clusters in
+        // the same window: both wake, neither puts the other to sleep
+        // (unlike the sequential Ccpg's single active window).
+        let mut t = timeline(16, true);
+        let wake = CcpgConfig::default().wake_latency_cycles;
+        assert_eq!(t.occupy(0, 0, 100), wake);
+        assert_eq!(t.occupy(15, 10, 100), wake, "second cluster wakes too");
+        assert_eq!(t.occupy(0, 200, 100), 0, "first cluster still awake");
+        assert_eq!(t.stats.wakes, 2);
+    }
+
+    #[test]
+    fn timeline_idle_cluster_sleeps_and_rewakes() {
+        let mut t = timeline(16, true);
+        let cfg = CcpgConfig::default();
+        t.occupy(0, 0, 100); // busy until wake+100
+        let idle_past = cfg.wake_latency_cycles + 100 + cfg.idle_sleep_cycles + 1;
+        assert_eq!(
+            t.occupy(0, idle_past, 10),
+            cfg.wake_latency_cycles,
+            "idle past the sleep threshold → wake again"
+        );
+        assert_eq!(t.stats.wakes, 2);
+        assert_eq!(t.stats.wake_stall_cycles, 2 * cfg.wake_latency_cycles);
+    }
+
+    #[test]
+    fn timeline_disabled_is_free() {
+        let mut t = timeline(16, false);
+        assert_eq!(t.occupy(0, 0, 100), 0);
+        assert_eq!(t.occupy(9, 1_000_000, 1), 0);
+        assert_eq!(t.stats.wakes, 0);
     }
 
     #[test]

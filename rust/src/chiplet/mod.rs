@@ -6,7 +6,7 @@ mod cluster;
 mod tile;
 mod tsv;
 
-pub use ccpg::{Ccpg, CcpgStats};
+pub use ccpg::{Ccpg, CcpgStats, CcpgTimeline};
 pub use cluster::{Cluster, ClusterState};
 pub use tile::{ComputeTile, Die, TileState};
 pub use tsv::TsvPlan;

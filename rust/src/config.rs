@@ -219,6 +219,12 @@ pub struct CcpgConfig {
     pub tiles_per_cluster: usize,
     /// Cycles to wake a sleeping cluster (power-gate settle + NPM refill).
     pub wake_latency_cycles: u64,
+    /// Cycles a cluster may sit idle before its power gate engages. The
+    /// pipeline-parallel coordinator uses this to decide, per stage event,
+    /// whether a cluster slept between two occupancies (the analytic
+    /// model's sequential walk sleeps a cluster as soon as the active
+    /// window leaves it, i.e. behaves as if this were 0).
+    pub idle_sleep_cycles: u64,
 }
 
 impl Default for CcpgConfig {
@@ -227,6 +233,7 @@ impl Default for CcpgConfig {
             enabled: false,
             tiles_per_cluster: 4,
             wake_latency_cycles: 1000,
+            idle_sleep_cycles: 4096,
         }
     }
 }
@@ -334,6 +341,8 @@ impl PicnicConfig {
             c.ccpg.tiles_per_cluster = int(g, "tiles_per_cluster", c.ccpg.tiles_per_cluster);
             c.ccpg.wake_latency_cycles =
                 int(g, "wake_latency_cycles", c.ccpg.wake_latency_cycles as usize) as u64;
+            c.ccpg.idle_sleep_cycles =
+                int(g, "idle_sleep_cycles", c.ccpg.idle_sleep_cycles as usize) as u64;
         }
         if let Some(t) = j.get("timing") {
             c.timing.xbar_cycles = int(t, "xbar_cycles", c.timing.xbar_cycles as usize) as u64;
@@ -354,7 +363,7 @@ impl PicnicConfig {
 
     pub fn to_json(&self) -> String {
         format!(
-            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}}\n}}\n",
+            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}}\n}}\n",
             self.system.bit_width,
             self.system.frequency_hz,
             self.system.ipcn_dim,
@@ -377,6 +386,7 @@ impl PicnicConfig {
             self.ccpg.enabled,
             self.ccpg.tiles_per_cluster,
             self.ccpg.wake_latency_cycles,
+            self.ccpg.idle_sleep_cycles,
             self.timing.xbar_cycles,
             self.timing.hop_cycles,
             self.timing.words_per_cycle,

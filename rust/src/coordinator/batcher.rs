@@ -8,7 +8,7 @@
 //! * decode-phase requests are scheduled before new prefills.
 
 use super::request::{Request, RequestId, RequestState};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// Batching policy parameters.
 #[derive(Debug, Clone)]
@@ -16,6 +16,12 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// Total KV tokens admissible concurrently.
     pub kv_budget: usize,
+    /// Query tokens per prefill chunk: long prompts enter the pipeline in
+    /// chunks of this size so decode tokens of other requests interleave
+    /// between chunks instead of stalling behind a whole prompt
+    /// (vLLM-style chunked prefill). 128 matches the analytic model's
+    /// prefill chunking.
+    pub prefill_chunk: usize,
 }
 
 impl Default for BatchPolicy {
@@ -23,6 +29,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 8,
             kv_budget: 16384,
+            prefill_chunk: 128,
         }
     }
 }
@@ -33,6 +40,8 @@ pub struct Batcher {
     policy: BatchPolicy,
     queue: VecDeque<Request>,
     inflight: Vec<Request>,
+    /// id → position in `inflight` (O(1) per-id lookup; rebuilt on reap).
+    index: HashMap<RequestId, usize>,
     /// Requests completed and drained.
     done: Vec<Request>,
 }
@@ -43,6 +52,7 @@ impl Batcher {
             policy,
             queue: VecDeque::new(),
             inflight: Vec::new(),
+            index: HashMap::new(),
             done: Vec::new(),
         }
     }
@@ -70,6 +80,18 @@ impl Batcher {
 
     pub fn inflight_mut(&mut self) -> &mut [Request] {
         &mut self.inflight
+    }
+
+    /// O(1) per-id access to an in-flight request (replaces the old
+    /// `inflight_mut().iter_mut().find(...)` linear scans in the server).
+    pub fn inflight_by_id(&mut self, id: RequestId) -> Option<&mut Request> {
+        let i = *self.index.get(&id)?;
+        let r = self.inflight.get_mut(i)?;
+        // `inflight_mut` can reorder entries behind the index's back;
+        // make a desync loud instead of silently handing back the wrong
+        // request.
+        debug_assert_eq!(r.id, id, "batcher id index out of sync");
+        Some(r)
     }
 
     pub fn done(&self) -> &[Request] {
@@ -102,14 +124,17 @@ impl Batcher {
             let mut r = self.queue.pop_front().unwrap();
             r.state = RequestState::Prefilling;
             admitted.push(r.id);
+            self.index.insert(r.id, self.inflight.len());
             self.inflight.push(r);
         }
         admitted
     }
 
-    /// The next work item under decode-priority: all decoding requests
-    /// step together (one fused decode batch); otherwise the oldest
-    /// prefilling request runs.
+    /// The next work item under coarse decode-priority: all decoding
+    /// requests step together (one fused decode batch); otherwise the
+    /// oldest prefilling request runs. The event-driven server schedules
+    /// per stage instead (`server.rs`) and does not call this; it remains
+    /// the whole-fabric view for coarse-grained callers and tests.
     pub fn next_work(&mut self) -> Work<'_> {
         let any_decoding = self
             .inflight
@@ -143,7 +168,14 @@ impl Batcher {
             .partition(|r| r.state == RequestState::Done);
         self.done.extend(done);
         self.inflight = still;
-        before - self.inflight.len()
+        let reaped = before - self.inflight.len();
+        if reaped > 0 {
+            self.index.clear();
+            for (i, r) in self.inflight.iter().enumerate() {
+                self.index.insert(r.id, i);
+            }
+        }
+        reaped
     }
 }
 
@@ -167,6 +199,7 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy {
             max_batch: 2,
             kv_budget: 1_000_000,
+            ..BatchPolicy::default()
         });
         for i in 0..5 {
             assert!(b.submit(req(i, 16, 4)));
@@ -181,6 +214,7 @@ mod tests {
         let mut b = Batcher::new(BatchPolicy {
             max_batch: 8,
             kv_budget: 100,
+            ..BatchPolicy::default()
         });
         b.submit(req(0, 50, 10)); // needs 60
         b.submit(req(1, 50, 10)); // would exceed 100
@@ -232,5 +266,22 @@ mod tests {
     fn idle_when_empty() {
         let mut b = Batcher::new(BatchPolicy::default());
         assert!(matches!(b.next_work(), Work::Idle));
+    }
+
+    #[test]
+    fn inflight_by_id_tracks_reaps() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        for i in 0..4 {
+            b.submit(req(i, 16, 4));
+        }
+        b.admit();
+        assert_eq!(b.inflight_by_id(2).unwrap().id, 2);
+        // finish request 0; positions shift, index must follow
+        b.inflight_by_id(0).unwrap().state = RequestState::Done;
+        b.reap();
+        assert!(b.inflight_by_id(0).is_none(), "reaped id gone");
+        for id in 1..4 {
+            assert_eq!(b.inflight_by_id(id).unwrap().id, id, "index rebuilt");
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! Serving metrics: per-request latency components and run aggregates.
 
 use super::request::Request;
+use std::collections::HashSet;
 
 /// Per-request latency metrics (all in seconds).
 #[derive(Debug, Clone)]
@@ -18,10 +19,20 @@ pub struct Metrics {
     pub requests: Vec<RequestMetrics>,
     pub total_tokens: u64,
     pub wall_s: f64,
+    /// Ids already recorded — makes `record` idempotent in O(1). The
+    /// server passes each finished request exactly once (the newly reaped
+    /// tail), so this is defense in depth for other callers that replay
+    /// the done list.
+    recorded: HashSet<u64>,
 }
 
 impl Metrics {
+    /// Record a finished request once; repeat calls for the same id are
+    /// no-ops.
     pub fn record(&mut self, r: &Request, prefill_started_cycle: u64, freq_hz: f64) {
+        if !self.recorded.insert(r.id) {
+            return;
+        }
         let s = |c: u64| c as f64 / freq_hz;
         let done = r.done_cycle.expect("recorded after completion");
         self.requests.push(RequestMetrics {
@@ -85,6 +96,17 @@ mod tests {
         assert!((rm.total_s - 9e-3).abs() < 1e-12);
         assert_eq!(m.total_tokens, 16);
         assert!((m.throughput_tokens_per_s() - 1600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn record_is_idempotent_per_id() {
+        let mut m = Metrics::default();
+        let r = done_request(7, 0, 10, 100, 4);
+        m.record(&r, 0, 1e9);
+        m.record(&r, 0, 1e9);
+        m.record(&r, 0, 1e9);
+        assert_eq!(m.requests.len(), 1, "same id recorded once");
+        assert_eq!(m.total_tokens, 4);
     }
 
     #[test]

@@ -1,12 +1,41 @@
 //! The serving coordinator: the L3 front-end that accepts inference
-//! requests, batches them, schedules prefill/decode phases onto the
-//! simulated PICNIC fabric, and reports latency/throughput metrics.
+//! requests, batches them, and schedules prefill/decode work onto the
+//! simulated PICNIC fabric as an **event-driven pipeline** with
+//! per-request metrics.
 //!
-//! The paper's contribution is the accelerator itself, so this layer is a
-//! realistic-but-thin serving loop (vLLM-router-like): a bounded request
-//! queue with backpressure, FCFS batching with a decode-priority policy
-//! (decode steps of in-flight sequences preempt new prefills to protect
-//! inter-token latency), and per-request metrics.
+//! ## Stage-resource model
+//!
+//! The paper maps consecutive transformer layers onto distinct
+//! photonically-linked chiplets (§II-E, §III.3), so the fabric *is* a
+//! hardware pipeline. The server models every mapped layer as a stage
+//! resource with its own busy-until cycle: one unit of work (a prefill
+//! chunk or one decode token of one request) enters stage 0, occupies
+//! each stage for that layer's plan cost, and exits at the last stage.
+//! Tokens of different requests overlap across stages — while request A's
+//! token runs on decoder 5's chiplets, request B's token occupies decoder
+//! 0 — whereas tokens of the *same* request stay serialized by the
+//! autoregressive dependency. CCPG wake latency is a per-stage event
+//! (`chiplet::CcpgTimeline`): a cluster that power-gated since its last
+//! occupancy charges its wake before the stage starts.
+//!
+//! ## Chunked prefill
+//!
+//! Long prompts enter the pipeline in `BatchPolicy::prefill_chunk`-sized
+//! chunks (vLLM-style). A prefill therefore never monopolizes the fabric
+//! for a whole prompt: decode tokens of in-flight requests interleave
+//! between chunks (decode wins release-cycle ties), protecting
+//! inter-token latency under bursty arrivals.
+//!
+//! ## Backends and plan reuse
+//!
+//! `Server` is generic over [`crate::sim::SimBackend`] — the calibrated
+//! analytic model by default, or the engine-measured
+//! [`crate::sim::EngineBackend`] for calibration mode. Per-stage costs
+//! flow through a memoized [`crate::mapper::PlanCache`] keyed by
+//! `(seq_q, kv_bucket)` with power-of-two KV bucketing; live-KV costs are
+//! interpolated between bucket boundaries (exact up to rounding — phase
+//! costs are affine in KV), so steady-state decode stops re-running
+//! partition/placement/flash-tiling every token.
 
 mod batcher;
 mod metrics;
@@ -16,4 +45,7 @@ mod server;
 pub use batcher::{Batcher, BatchPolicy};
 pub use metrics::{Metrics, RequestMetrics};
 pub use request::{Request, RequestId, RequestState};
-pub use server::{Server, ServerConfig};
+pub use server::{
+    serialized_pass_cycles, serialized_workload_cycles, PipelineStats, Server, ServerConfig,
+    StageSlot,
+};

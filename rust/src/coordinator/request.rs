@@ -21,8 +21,15 @@ pub struct Request {
     pub state: RequestState,
     /// Tokens generated so far.
     pub generated: usize,
+    /// Prompt tokens already prefixed into the KV cache (chunked prefill
+    /// progresses this in `prefill_chunk` steps; == prompt_len once the
+    /// request starts decoding).
+    pub prefilled: usize,
     /// Cycle the request arrived.
     pub arrived_cycle: u64,
+    /// Cycle the request was admitted and its first prefill chunk became
+    /// dispatchable (queue-delay marker).
+    pub prefill_start_cycle: Option<u64>,
     /// Cycle the first output token completed (TTFT marker).
     pub first_token_cycle: Option<u64>,
     /// Cycle the request finished.
@@ -38,10 +45,17 @@ impl Request {
             max_new_tokens,
             state: RequestState::Queued,
             generated: 0,
+            prefilled: 0,
             arrived_cycle: now,
+            prefill_start_cycle: None,
             first_token_cycle: None,
             done_cycle: None,
         }
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn prefill_remaining(&self) -> usize {
+        self.prompt_len.saturating_sub(self.prefilled)
     }
 
     /// Current KV length (prompt + generated).
@@ -50,8 +64,14 @@ impl Request {
     }
 
     /// Advance one decode token at `now`; returns true when finished.
+    /// Token completions must be presented in nondecreasing cycle order
+    /// (the event loop's per-request monotonicity invariant).
     pub fn advance_decode(&mut self, now: u64) -> bool {
         assert_eq!(self.state, RequestState::Decoding);
+        debug_assert!(
+            self.first_token_cycle.unwrap_or(0) <= now,
+            "decode completions must be monotone"
+        );
         self.generated += 1;
         if self.first_token_cycle.is_none() {
             self.first_token_cycle = Some(now);

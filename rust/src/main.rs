@@ -6,7 +6,7 @@
 //! picnic run --model 8b --input 1024 --output 1024 [--ccpg] [--electrical] [--json]
 //! picnic report table2|table3|table4|fig8|fig9|fig10|all
 //! picnic verify [--artifacts DIR]
-//! picnic serve --model tiny --requests 32 --prompt-len 64 --gen-len 16
+//! picnic serve --model tiny --requests 32 --prompt-len 64 --gen-len 16 [--backend engine]
 //! picnic isa-demo
 //! picnic config-dump
 //! ```
@@ -15,7 +15,7 @@ use picnic::config::PicnicConfig;
 use picnic::coordinator::{BatchPolicy, Server, ServerConfig};
 use picnic::models::{LlamaConfig, Workload};
 use picnic::report;
-use picnic::sim::AnalyticSim;
+use picnic::sim::{AnalyticSim, EngineBackend, SimBackend};
 use picnic::util::args::Args;
 use picnic::util::json;
 
@@ -26,7 +26,7 @@ USAGE:
   picnic run    [--model tiny|1b|8b|13b] [--input N] [--output N] [--ccpg] [--electrical] [--json]
   picnic report <table2|table3|table4|fig8|fig9|fig10|all>
   picnic verify [--artifacts DIR]
-  picnic serve  [--model NAME] [--requests N] [--prompt-len N] [--gen-len N]
+  picnic serve  [--model NAME] [--requests N] [--prompt-len N] [--gen-len N] [--backend analytic|engine]
   picnic isa-demo
   picnic config-dump
 ";
@@ -145,17 +145,35 @@ fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
     let requests = args.opt_usize("requests", 32)?;
     let prompt_len = args.opt_usize("prompt-len", 64)?;
     let gen_len = args.opt_usize("gen-len", 16)?;
-    let mut server = Server::new(ServerConfig {
+    let backend = args.opt_or("backend", "analytic");
+    let server_cfg = ServerConfig {
         picnic: cfg,
         model: m,
         policy: BatchPolicy::default(),
-    });
+    };
+    match backend.as_str() {
+        "engine" => {
+            let b = EngineBackend::calibrated(server_cfg.picnic.clone());
+            drive_serve(Server::with_backend(server_cfg, b), requests, prompt_len, gen_len)
+        }
+        "analytic" => drive_serve(Server::new(server_cfg), requests, prompt_len, gen_len),
+        other => anyhow::bail!("unknown backend {other} (analytic|engine)"),
+    }
+}
+
+fn drive_serve<B: SimBackend>(
+    mut server: Server<B>,
+    requests: usize,
+    prompt_len: usize,
+    gen_len: usize,
+) -> picnic::Result<()> {
     for _ in 0..requests {
         server
             .submit(prompt_len, gen_len)
             .ok_or_else(|| anyhow::anyhow!("queue full"))?;
     }
     server.run_to_completion()?;
+    let p = server.pipeline_stats();
     println!(
         "served {} requests, {} tokens, {:.1} tokens/s (accelerator time), mean TTFT {:.3} ms, p99 latency {:.3} ms",
         server.metrics.requests.len(),
@@ -163,6 +181,14 @@ fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
         server.metrics.throughput_tokens_per_s(),
         1e3 * server.metrics.mean_ttft_s(),
         1e3 * server.metrics.p99_total_s(),
+    );
+    println!(
+        "pipeline: {} backend, {} stages, plan cache {} builds / {} hits, ccpg {} wakes",
+        server.backend().name(),
+        p.stages,
+        p.plan_builds,
+        p.plan_hits,
+        p.ccpg_wakes,
     );
     Ok(())
 }

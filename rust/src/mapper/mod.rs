@@ -12,15 +12,20 @@
 //! * [`collective`]  — spanning-tree broadcast/reduce cycle costs (§III.3)
 //! * [`schedule`]    — assembling everything into per-layer phase plans the
 //!                     simulators execute
+//! * [`plan_cache`]  — memoized `plan_all` results with power-of-two KV
+//!                     bucketing, so steady-state decode stops re-running
+//!                     partition/placement/flash-tiling every token
 
 pub mod collective;
 pub mod flashattn;
 pub mod kvcache;
 pub mod partition;
 pub mod placement;
+pub mod plan_cache;
 pub mod schedule;
 
 pub use kvcache::KvCache;
 pub use partition::{MatrixPartition, TileAssignment};
 pub use placement::{ChannelRegion, Placement};
+pub use plan_cache::{kv_bucket_bounds, PlanCache, PlanCacheStats};
 pub use schedule::{LayerPlan, PhaseOp, ScheduleBuilder};

@@ -1,0 +1,139 @@
+//! Memoized plan cache for the serving path.
+//!
+//! Steady-state decode re-plans the whole model every token even though the
+//! only thing that changed is the KV length growing by one. `PlanCache`
+//! memoizes `ScheduleBuilder::plan_all` results keyed by
+//! `(seq_q, kv_point)` where `kv_point` is a **power-of-two KV bucket
+//! boundary**: a decode step at KV length `kv` is served from the plans at
+//! the two surrounding power-of-two points (`kv_bucket_bounds`), and the
+//! coordinator interpolates per-stage cycle costs between them — exact up
+//! to integer rounding, because every per-phase cost is affine in `seq_kv`
+//! (locked by `decode_cost_affine_in_kv` in sim/analytic.rs).
+//!
+//! The net effect: partition/placement/flash-tiling runs O(log max_kv)
+//! times per `seq_q` shape over a whole serving run instead of once per
+//! token.
+
+use super::schedule::{LayerPlan, ScheduleBuilder};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// The (lo, hi) power-of-two bracket around `kv`: `lo ≤ kv ≤ hi`, both
+/// powers of two (equal when `kv` itself is one).
+pub fn kv_bucket_bounds(kv: usize) -> (usize, usize) {
+    let kv = kv.max(1);
+    let hi = kv.next_power_of_two();
+    let lo = if hi == kv { hi } else { hi / 2 };
+    (lo, hi)
+}
+
+/// Cache statistics (exposed through `Server::pipeline_stats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanCacheStats {
+    /// Calls served from the cache.
+    pub hits: u64,
+    /// Calls that ran the full partition/placement/flash pipeline.
+    pub builds: u64,
+}
+
+/// Memoized `plan_all` results for one (config, model) pair.
+///
+/// The cache does not retain the `ScheduleBuilder` (it borrows config and
+/// model); callers pass a builder per lookup and must keep it pointing at
+/// the same config/model for the cache's lifetime.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    entries: HashMap<(usize, usize), Rc<Vec<LayerPlan>>>,
+    pub stats: PlanCacheStats,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Plans for every layer at `(seq_q, kv_point)`, building and caching
+    /// on first use. `kv_point` is typically a `kv_bucket_bounds` boundary;
+    /// the cache itself accepts any value.
+    pub fn plans(
+        &mut self,
+        builder: &ScheduleBuilder,
+        seq_q: usize,
+        kv_point: usize,
+    ) -> crate::Result<Rc<Vec<LayerPlan>>> {
+        if let Some(p) = self.entries.get(&(seq_q, kv_point)) {
+            self.stats.hits += 1;
+            return Ok(p.clone());
+        }
+        let built = Rc::new(builder.plan_all(seq_q, kv_point)?);
+        self.stats.builds += 1;
+        self.entries.insert((seq_q, kv_point), built.clone());
+        Ok(built)
+    }
+
+    /// Distinct (seq_q, kv_point) plan sets currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PicnicConfig;
+    use crate::models::LlamaConfig;
+
+    #[test]
+    fn bucket_bounds_bracket_kv() {
+        assert_eq!(kv_bucket_bounds(1), (1, 1));
+        assert_eq!(kv_bucket_bounds(2), (2, 2));
+        assert_eq!(kv_bucket_bounds(3), (2, 4));
+        assert_eq!(kv_bucket_bounds(64), (64, 64));
+        assert_eq!(kv_bucket_bounds(65), (64, 128));
+        assert_eq!(kv_bucket_bounds(1000), (512, 1024));
+        // degenerate input clamps to 1
+        assert_eq!(kv_bucket_bounds(0), (1, 1));
+        for kv in 1..2000usize {
+            let (lo, hi) = kv_bucket_bounds(kv);
+            assert!(lo <= kv && kv <= hi, "kv {kv} bracket ({lo}, {hi})");
+            assert!(lo.is_power_of_two() && hi.is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_plan_all() {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let mut cache = PlanCache::new();
+        let p1 = cache.plans(&b, 1, 512).unwrap();
+        let p2 = cache.plans(&b, 1, 512).unwrap();
+        assert!(Rc::ptr_eq(&p1, &p2), "second lookup is the same Rc");
+        assert_eq!(cache.stats.builds, 1);
+        assert_eq!(cache.stats.hits, 1);
+        // a different key builds again
+        let _ = cache.plans(&b, 1, 1024).unwrap();
+        assert_eq!(cache.stats.builds, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cached_plans_match_fresh_builds() {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let mut cache = PlanCache::new();
+        let cached = cache.plans(&b, 4, 128).unwrap();
+        let fresh = b.plan_all(4, 128).unwrap();
+        assert_eq!(cached.len(), fresh.len());
+        for (c, f) in cached.iter().zip(fresh.iter()) {
+            assert_eq!(c.phases.len(), f.phases.len());
+            assert_eq!(c.tiles_needed, f.tiles_needed);
+            assert_eq!(c.pairs_used, f.pairs_used);
+        }
+    }
+}

@@ -88,9 +88,17 @@ impl RramArray {
     /// out[c] = Σ_r in[r] · g[r][c]  (bitline current accumulation). The
     /// input stream stays in dense integer codes straight off the DAC;
     /// zero codes skip their wordline row entirely.
+    ///
+    /// The accumulation runs in fixed-width `LANES` chunks via
+    /// `chunks_exact`, which eliminates bounds checks and gives LLVM a
+    /// constant-trip-count inner loop to autovectorize (the ROADMAP
+    /// follow-up from the PR-2 integer-code streaming change); the
+    /// sub-`LANES` column remainder is handled by a scalar tail.
     pub fn column_mac(&self, input: &[i32], out: &mut [f32]) {
         assert_eq!(input.len(), self.rows);
         assert_eq!(out.len(), self.cols);
+        const LANES: usize = 8;
+        let body = self.cols - self.cols % LANES;
         out.iter_mut().for_each(|o| *o = 0.0);
         for (r, &code) in input.iter().enumerate() {
             if code == 0 {
@@ -98,7 +106,17 @@ impl RramArray {
             }
             let x = code as f32;
             let row = &self.g[r * self.cols..(r + 1) * self.cols];
-            for (o, &g) in out.iter_mut().zip(row.iter()) {
+            let (row_body, row_tail) = row.split_at(body);
+            let (out_body, out_tail) = out.split_at_mut(body);
+            for (o, g) in out_body
+                .chunks_exact_mut(LANES)
+                .zip(row_body.chunks_exact(LANES))
+            {
+                for i in 0..LANES {
+                    o[i] += x * g[i];
+                }
+            }
+            for (o, &g) in out_tail.iter_mut().zip(row_tail.iter()) {
                 *o += x * g;
             }
         }
@@ -146,6 +164,23 @@ mod tests {
                 assert_eq!(a.g(r, c), b.g(r, c), "same seed, same noise");
                 assert!((a.g(r, c) - 100.0).abs() < 10.0, "noise is ~1% of qmax");
             }
+        }
+    }
+
+    #[test]
+    fn column_mac_chunked_body_and_tail_agree() {
+        // cols = 19: two full 8-lane chunks + a 3-column scalar tail —
+        // result must equal the straightforward dot product on every col.
+        let (rows, cols) = (5usize, 19usize);
+        let mut a = RramArray::new(rows, cols, 256);
+        let codes: Vec<i32> = (0..rows * cols).map(|i| (i as i32 % 13) - 6).collect();
+        a.program(&codes);
+        let input: Vec<i32> = (0..rows as i32).map(|r| r - 2).collect();
+        let mut out = vec![0.0f32; cols];
+        a.column_mac(&input, &mut out);
+        for c in 0..cols {
+            let want: f32 = (0..rows).map(|r| input[r] as f32 * a.g(r, c)).sum();
+            assert_eq!(out[c], want, "col {c}");
         }
     }
 

@@ -83,8 +83,10 @@ impl AnalyticSim {
         }
     }
 
-    /// Charge one phase's dynamic energy.
-    fn charge_phase(&self, phase: &PhaseOp, ledger: &mut EnergyLedger) {
+    /// Charge one phase's dynamic energy (shared with the `SimBackend`
+    /// impl in sim/backend.rs — energy attribution is the analytic rate
+    /// model for every backend).
+    pub(crate) fn charge_phase(&self, phase: &PhaseOp, ledger: &mut EnergyLedger) {
         let r = &self.rates;
         match phase {
             PhaseOp::Broadcast { word_hops, .. } | PhaseOp::Reduce { word_hops, .. } => {

@@ -1,0 +1,272 @@
+//! `SimBackend` — the simulator interface the serving coordinator is
+//! generic over.
+//!
+//! The coordinator used to be hard-wired to [`AnalyticSim`]; the trait
+//! decouples it so the same event-driven scheduler can run against
+//! (a) the calibrated analytic model and (b) a **calibration-mode adapter
+//! over the detailed [`TileEngine`]**: [`EngineBackend`] measures the
+//! streaming and SCU cycle constants by running micro-probes on the cycle
+//! engine at construction and prices phases with the *measured* constants
+//! instead of the hand-calibrated `TimingConfig` defaults. Phases the
+//! detailed engine does not model at tile scale (the DMAC pool
+//! aggregation, C2C optical links, crossbar SMAC latency — the latter is
+//! an *input* to the engine) fall through to the analytic constants, the
+//! same split the calibration tests in rust/tests/test_calibration.rs
+//! exercise.
+
+use crate::config::{PicnicConfig, SystemConfig};
+use crate::isa::{Assembler, FirmwareOp, Instruction, Mode, Port, PortSet};
+use crate::mapper::{LayerPlan, PhaseOp};
+use crate::power::EnergyLedger;
+use crate::sim::analytic::AnalyticSim;
+use crate::sim::engine::TileEngine;
+
+/// What the coordinator needs from a simulator: per-phase cycle costs and
+/// per-phase energy attribution. Everything else (per-layer plan costs,
+/// plan execution) derives from those two.
+pub trait SimBackend {
+    /// Short backend label for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Cycles one phase takes on this backend.
+    fn phase_cycles(&self, phase: &PhaseOp) -> u64;
+
+    /// Charge one phase's dynamic energy.
+    fn charge_phase(&self, phase: &PhaseOp, ledger: &mut EnergyLedger);
+
+    /// Cycles one layer plan takes (sum of its phases).
+    fn plan_cycles(&self, plan: &LayerPlan) -> u64 {
+        plan.phases.iter().map(|ph| self.phase_cycles(ph)).sum()
+    }
+
+    /// Execute one layer plan: charge every phase's energy and return the
+    /// cycles consumed.
+    fn execute_plan(&self, plan: &LayerPlan, ledger: &mut EnergyLedger) -> u64 {
+        let mut cycles = 0u64;
+        for ph in &plan.phases {
+            self.charge_phase(ph, ledger);
+            cycles += self.phase_cycles(ph);
+        }
+        cycles
+    }
+}
+
+impl SimBackend for AnalyticSim {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn phase_cycles(&self, phase: &PhaseOp) -> u64 {
+        AnalyticSim::phase_cycles(self, phase)
+    }
+
+    fn charge_phase(&self, phase: &PhaseOp, ledger: &mut EnergyLedger) {
+        AnalyticSim::charge_phase(self, phase, ledger);
+    }
+}
+
+/// Timing constants measured on the detailed cycle engine (f64: the probe
+/// fit is a two-point linear solve, not an integer).
+#[derive(Debug, Clone, Copy)]
+pub struct MeasuredTiming {
+    /// Per-hop pipeline fill cost, cycles (route west→east chain probe).
+    pub hop_cycles: f64,
+    /// Steady-state cycles to forward one word.
+    pub cycles_per_word: f64,
+    /// SCU cycles per row element (stream-in + FSM, measured end to end).
+    pub scu_cycles_per_elem: f64,
+    /// SCU fixed per-row cost, cycles.
+    pub scu_drain_cycles: f64,
+}
+
+/// Calibration-mode backend: analytic formulas priced with constants
+/// measured on the [`TileEngine`].
+pub struct EngineBackend {
+    inner: AnalyticSim,
+    pub measured: MeasuredTiming,
+}
+
+impl EngineBackend {
+    /// Build the adapter by running the measurement probes on the detailed
+    /// engine (a few thousand simulated cycles; done once at construction).
+    pub fn calibrated(cfg: PicnicConfig) -> EngineBackend {
+        let xbar = cfg.timing.xbar_cycles;
+        // Streaming probe at two chain lengths and two word counts:
+        // c(L, W) = L·hop + W·cpw + const, so the differences isolate the
+        // per-hop and per-word slopes exactly.
+        let c_4_64 = Self::measure_stream(4, 64, xbar);
+        let c_8_64 = Self::measure_stream(8, 64, xbar);
+        let c_4_256 = Self::measure_stream(4, 256, xbar);
+        let cycles_per_word = (c_4_256.saturating_sub(c_4_64)) as f64 / 192.0;
+        let hop_cycles = (c_8_64.saturating_sub(c_4_64)) as f64 / 4.0;
+        // SCU probe at two row lengths ≤ the router FIFO depth (32 words —
+        // results return through the Up FIFO).
+        let s_8 = Self::measure_scu_row(4, 8, xbar);
+        let s_24 = Self::measure_scu_row(4, 24, xbar);
+        let scu_cycles_per_elem = (s_24.saturating_sub(s_8)) as f64 / 16.0;
+        let scu_drain_cycles = (s_8 as f64 - 8.0 * scu_cycles_per_elem).max(0.0);
+        EngineBackend {
+            inner: AnalyticSim::new(cfg),
+            measured: MeasuredTiming {
+                hop_cycles: hop_cycles.max(0.0),
+                cycles_per_word: cycles_per_word.max(1e-6),
+                scu_cycles_per_elem: scu_cycles_per_elem.max(0.0),
+                scu_drain_cycles,
+            },
+        }
+    }
+
+    /// Cycles the engine takes to stream `words` words down a west→east
+    /// chain of `dim` routers and out the optical die.
+    fn measure_stream(dim: usize, words: u64, xbar_latency: u64) -> u64 {
+        let mut eng = TileEngine::new(SystemConfig::tiny(dim), xbar_latency);
+        let mut asm = Assembler::new(dim);
+        let instr = Instruction::new(
+            PortSet::single(Port::West),
+            Mode::Route,
+            PortSet::single(Port::East),
+        );
+        asm.emit(
+            FirmwareOp::region((0, 0), (0, dim - 1), instr)
+                .repeat(words as u32 + dim as u32 + 8),
+        );
+        eng.load_program(&asm.finish());
+        let mut injected = 0u64;
+        while injected < words.min(30) {
+            eng.mesh.inject(0, Port::West, injected as f64);
+            injected += 1;
+        }
+        let mut cycles = 0u64;
+        while eng.optical_egress.len() < words as usize && cycles < 100_000 {
+            // keep the source FIFO fed (models the DRAM hub streaming in)
+            if injected < words && eng.mesh.router(0).fifo(Port::West).len() < 16 {
+                eng.mesh.inject(0, Port::West, injected as f64);
+                injected += 1;
+            }
+            eng.step();
+            cycles += 1;
+        }
+        // A stalled probe must never silently become a "measured"
+        // constant (release builds included): fail loudly instead.
+        assert_eq!(
+            eng.optical_egress.len(),
+            words as usize,
+            "streaming probe stalled (dim {dim}, {words} words, {cycles} cycles)"
+        );
+        cycles
+    }
+
+    /// Cycles the engine takes to push one `row_len`-element row through an
+    /// SCU and get every result back into the router's Up FIFO.
+    fn measure_scu_row(dim: usize, row_len: usize, xbar_latency: u64) -> u64 {
+        let mut eng = TileEngine::new(SystemConfig::tiny(dim), xbar_latency);
+        // router (1,1) of a dim-wide mesh
+        let router = dim + 1;
+        eng.attach_scu(router, row_len);
+        let mut asm = Assembler::new(dim);
+        asm.emit(
+            FirmwareOp::at(
+                1,
+                1,
+                Instruction::new(PortSet::single(Port::West), Mode::ScuStream, PortSet::EMPTY),
+            )
+            .repeat(row_len as u32),
+        );
+        eng.load_program(&asm.finish());
+        for i in 0..row_len {
+            eng.mesh.inject(router, Port::West, i as f64 / row_len as f64);
+        }
+        let cycles = eng.run(10_000);
+        assert_eq!(
+            eng.mesh.router(router).fifo(Port::Up).len(),
+            row_len,
+            "SCU probe did not return a full row (dim {dim}, len {row_len})"
+        );
+        cycles
+    }
+}
+
+impl SimBackend for EngineBackend {
+    fn name(&self) -> &'static str {
+        "engine"
+    }
+
+    fn phase_cycles(&self, phase: &PhaseOp) -> u64 {
+        let m = &self.measured;
+        match phase {
+            PhaseOp::Broadcast { words, tree_depth, .. }
+            | PhaseOp::Reduce { words, tree_depth, .. } => {
+                (*tree_depth as f64 * m.hop_cycles + *words as f64 * m.cycles_per_word).ceil()
+                    as u64
+            }
+            PhaseOp::Softmax { rows, row_len, scus } => {
+                let per_row = (*row_len as f64 * m.scu_cycles_per_elem + m.scu_drain_cycles)
+                    .ceil() as u64;
+                rows.div_ceil((*scus).max(1)) * per_row
+            }
+            // SMAC latency is an input to the engine (xbar_cycles), and the
+            // DMAC pool / KV scratchpad / C2C links are modeled analytically
+            // at tile scale — delegate.
+            other => AnalyticSim::phase_cycles(&self.inner, other),
+        }
+    }
+
+    fn charge_phase(&self, phase: &PhaseOp, ledger: &mut EnergyLedger) {
+        // Energy attribution is the analytic rate model for every backend.
+        self.inner.charge_phase(phase, ledger);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_backend_matches_inherent_costs() {
+        let sim = AnalyticSim::new(PicnicConfig::default());
+        let ph = PhaseOp::Broadcast {
+            channel: "t".into(),
+            words: 256,
+            tree_depth: 4,
+            word_hops: 1024,
+        };
+        assert_eq!(SimBackend::phase_cycles(&sim, &ph), sim.phase_cycles(&ph));
+        assert_eq!(SimBackend::name(&sim), "analytic");
+    }
+
+    #[test]
+    fn engine_backend_measures_sane_constants() {
+        let eb = EngineBackend::calibrated(PicnicConfig::default());
+        let m = &eb.measured;
+        // the engine forwards ~1 word/cycle and ~1 cycle/hop; the probes
+        // must land in that regime (wide bounds — exact parity is checked
+        // against the analytic model in rust/tests/test_calibration.rs)
+        assert!(
+            (0.5..=2.0).contains(&m.cycles_per_word),
+            "cycles/word {}",
+            m.cycles_per_word
+        );
+        assert!((0.0..=4.0).contains(&m.hop_cycles), "hop {}", m.hop_cycles);
+        assert!(
+            (0.5..=4.0).contains(&m.scu_cycles_per_elem),
+            "scu/elem {}",
+            m.scu_cycles_per_elem
+        );
+        assert!(m.scu_drain_cycles >= 0.0);
+    }
+
+    #[test]
+    fn execute_plan_charges_and_counts() {
+        use crate::mapper::ScheduleBuilder;
+        use crate::models::LlamaConfig;
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let plan = b.plan_all(1, 64).unwrap().remove(0);
+        let sim = AnalyticSim::new(cfg);
+        let mut ledger = EnergyLedger::new();
+        let cycles = sim.execute_plan(&plan, &mut ledger);
+        assert_eq!(cycles, SimBackend::plan_cycles(&sim, &plan));
+        assert!(ledger.total_j() > 0.0, "phases charged energy");
+    }
+}

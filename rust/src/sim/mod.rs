@@ -7,15 +7,21 @@
 //!   `mapper::LayerPlan`s to produce full-model latency/energy (Tables
 //!   II/III, Figs 8-10) — a 32×32 mesh × 8B params × 2048 tokens is not
 //!   tractable cycle-by-cycle in CI;
+//! * [`backend`]  — the `SimBackend` trait the serving coordinator is
+//!   generic over, implemented by the analytic model and by
+//!   `EngineBackend`, a calibration-mode adapter that prices phases with
+//!   constants measured on the detailed engine;
 //! * [`trace`]    — time-binned C2C transfer traces (Fig 10);
 //! * [`stats`]    — run-level summary (tokens/s, W, tokens/J).
 
 pub mod analytic;
+pub mod backend;
 pub mod engine;
 pub mod stats;
 pub mod trace;
 
 pub use analytic::{AnalyticSim, RunResult};
+pub use backend::{EngineBackend, MeasuredTiming, SimBackend};
 pub use engine::TileEngine;
 pub use stats::RunStats;
 pub use trace::C2cTrace;

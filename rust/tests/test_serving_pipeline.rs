@@ -1,0 +1,160 @@
+//! Regression tests for the event-driven pipeline-parallel serving stack
+//! (the PR-3 refactor): pipelined decode must strictly beat the PR-2
+//! serialized model at batch ≥ 4, single-request latency must match the
+//! serialized model within 1%, and the server must run unchanged over
+//! both `SimBackend` implementations.
+
+use picnic::config::PicnicConfig;
+use picnic::coordinator::{serialized_workload_cycles, BatchPolicy, Server, ServerConfig};
+use picnic::models::LlamaConfig;
+use picnic::sim::{AnalyticSim, EngineBackend, SimBackend};
+
+fn server_cfg(model: LlamaConfig) -> ServerConfig {
+    ServerConfig {
+        picnic: PicnicConfig::default(),
+        model,
+        policy: BatchPolicy {
+            max_batch: 8,
+            kv_budget: 1 << 20,
+            ..BatchPolicy::default()
+        },
+    }
+}
+
+/// The serialized PR-2 baseline for `batch` identical requests (the
+/// shared helper in coordinator/server.rs, default config).
+fn serialized_total_cycles<B: SimBackend>(
+    backend: &B,
+    model: &LlamaConfig,
+    batch: usize,
+    prompt: usize,
+    gen: usize,
+    chunk: usize,
+) -> u64 {
+    let cfg = PicnicConfig::default();
+    serialized_workload_cycles(backend, &cfg, model, batch, prompt, gen, chunk).unwrap()
+}
+
+fn run_batch(model: LlamaConfig, batch: usize, prompt: usize, gen: usize) -> Server {
+    let mut s = Server::new(server_cfg(model));
+    for _ in 0..batch {
+        s.submit(prompt, gen).expect("submit");
+    }
+    s.run_to_completion().expect("run");
+    s
+}
+
+/// Acceptance: batch-1 latency is unchanged within 1% of the serialized
+/// PR-2 model. A single request cannot overlap with anything, so the
+/// pipelined walk must degenerate to the serialized sum — the only
+/// allowed deviation is the power-of-two KV interpolation rounding.
+#[test]
+fn batch1_latency_matches_serialized_within_1pct() {
+    let model = LlamaConfig::llama32_1b;
+    let (prompt, gen) = (300usize, 20usize);
+    let s = run_batch(model(), 1, prompt, gen);
+    let pipelined = s.horizon_cycle() as f64;
+
+    let sim = AnalyticSim::new(PicnicConfig::default());
+    let chunk = BatchPolicy::default().prefill_chunk;
+    let serialized = serialized_total_cycles(&sim, &model(), 1, prompt, gen, chunk) as f64;
+    let rel = (pipelined - serialized).abs() / serialized;
+    assert!(
+        rel <= 0.01,
+        "batch-1 latency drifted {:.3}% from the serialized model \
+         (pipelined {pipelined} vs serialized {serialized})",
+        100.0 * rel
+    );
+}
+
+/// Acceptance: at batch ≥ 4 the pipelined event loop strictly beats the
+/// serialized model — concurrent requests overlap across chiplet stages.
+#[test]
+fn pipelined_batch4_strictly_beats_serialized() {
+    let model = LlamaConfig::llama32_1b;
+    let (batch, prompt, gen) = (4usize, 64usize, 16usize);
+    let s = run_batch(model(), batch, prompt, gen);
+    let pipelined = s.horizon_cycle();
+
+    let sim = AnalyticSim::new(PicnicConfig::default());
+    let serialized = serialized_total_cycles(&sim, &model(), batch, prompt, gen, 128);
+    assert!(
+        pipelined < serialized,
+        "no pipeline overlap: {pipelined} !< {serialized}"
+    );
+    // the win must be substantial, not rounding noise: ≥ 2× at batch 4 on
+    // a 64-stage model
+    assert!(
+        (pipelined as f64) < 0.5 * serialized as f64,
+        "overlap too small: {pipelined} vs serialized {serialized}"
+    );
+}
+
+/// Acceptance: decode throughput scales with batch size — batch-8
+/// tokens/s more than 2× batch-1 (the BENCH_serving.json criterion, kept
+/// as a test so CI fails loudly without bench artifacts).
+#[test]
+fn decode_throughput_scales_with_batch() {
+    let model = LlamaConfig::llama32_1b;
+    let (prompt, gen) = (64usize, 16usize);
+    let t1 = run_batch(model(), 1, prompt, gen)
+        .metrics
+        .throughput_tokens_per_s();
+    let t8 = run_batch(model(), 8, prompt, gen)
+        .metrics
+        .throughput_tokens_per_s();
+    assert!(
+        t8 > 2.0 * t1,
+        "batch-8 {t8:.1} tok/s is not >2× batch-1 {t1:.1} tok/s"
+    );
+}
+
+/// The server is generic over `SimBackend`: the engine-measured backend
+/// serves the same workload with metrics in the same regime as the
+/// analytic default (constants differ only by the measured-vs-budgeted
+/// SCU and streaming rates).
+#[test]
+fn engine_backend_serves_same_workload() {
+    let model = LlamaConfig::tiny;
+    let (batch, prompt, gen) = (4usize, 48usize, 8usize);
+
+    let analytic = run_batch(model(), batch, prompt, gen);
+
+    let backend = EngineBackend::calibrated(PicnicConfig::default());
+    let mut s = Server::with_backend(server_cfg(model()), backend);
+    for _ in 0..batch {
+        s.submit(prompt, gen).expect("submit");
+    }
+    s.run_to_completion().expect("run");
+
+    assert_eq!(s.metrics.requests.len(), batch, "all served on the engine backend");
+    assert_eq!(s.metrics.total_tokens, (batch * gen) as u64);
+    let ta = analytic.metrics.throughput_tokens_per_s();
+    let te = s.metrics.throughput_tokens_per_s();
+    let ratio = te / ta;
+    assert!(
+        (0.6..=1.7).contains(&ratio),
+        "backends diverge: engine {te:.1} vs analytic {ta:.1} tok/s (×{ratio:.2})"
+    );
+    assert!(s.ledger.total_j() > 0.0, "energy attributed on the engine backend");
+}
+
+/// CCPG in the pipeline: wake latency is charged per stage event, and a
+/// single request still completes with CCPG enabled (wakes > 0 since the
+/// active window walks across clusters).
+#[test]
+fn ccpg_wakes_are_per_stage_events() {
+    let mut cfg = server_cfg(LlamaConfig::llama32_1b());
+    cfg.picnic = cfg.picnic.with_ccpg(true);
+    let mut s = Server::new(cfg);
+    s.submit(32, 4).unwrap();
+    s.run_to_completion().unwrap();
+    let stats = s.pipeline_stats();
+    assert!(stats.ccpg_wakes > 0, "pipeline never woke a cluster");
+    assert_eq!(
+        stats.ccpg_wake_stall_cycles,
+        stats.ccpg_wakes * PicnicConfig::default().ccpg.wake_latency_cycles,
+        "stall accounting consistent"
+    );
+    assert_eq!(s.metrics.requests.len(), 1);
+}
