@@ -5,7 +5,8 @@
 //! recorded in EXPERIMENTS.md §E2E.
 //!
 //! Run: `cargo run --release --example llama_serve -- [--model 1b]
-//!       [--requests 64] [--backend analytic|engine]`
+//!       [--requests 64] [--backend analytic|engine]
+//!       [--spec-decode draft_len=4,accept=0.7,ratio=0.2]`
 
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{BatchPolicy, Server, ServerConfig};
@@ -26,8 +27,10 @@ fn main() -> picnic::Result<()> {
         model.name
     );
 
+    let mut picnic_cfg = PicnicConfig::default().with_ccpg(true);
+    picnic_cfg.spec_decode.apply_cli(&args)?;
     let cfg = ServerConfig {
-        picnic: PicnicConfig::default().with_ccpg(true),
+        picnic: picnic_cfg,
         model,
         policy: BatchPolicy {
             max_batch: 8,
@@ -86,6 +89,16 @@ fn drive<B: SimBackend>(mut server: Server<B>, n_requests: usize) -> picnic::Res
         "ccpg               : {} wakes, {} stall cycles",
         p.ccpg_wakes, p.ccpg_wake_stall_cycles
     );
+    if p.spec_rounds > 0 {
+        println!(
+            "spec-decode        : {} rounds, {} drafted, {} accepted ({:.0}%), {} rolled back",
+            p.spec_rounds,
+            p.spec_drafted,
+            p.spec_accepted,
+            100.0 * p.spec_accepted as f64 / p.spec_drafted.max(1) as f64,
+            p.spec_rolled_back
+        );
+    }
     assert_eq!(m.requests.len(), n_requests, "all requests must complete");
     println!("llama_serve OK");
     Ok(())

@@ -1,16 +1,22 @@
 //! Bench: the event-driven pipeline-parallel serving stack — simulated
 //! decode throughput vs. batch size at a fixed model, plus host-side
-//! timing of the scheduler itself. Dumps `BENCH_serving.json`
-//! (`{"schema": 1, "model", "prompt_len", "gen_len", "points": [...]}`,
-//! one point per batch size with simulated tokens/s, the serialized PR-2
-//! reference, TTFT and p99) so the pipelining win stays machine-diffable
-//! across PRs (CI validates batch-8 > 2× batch-1 and archives the file).
+//! timing of the scheduler itself, plus a **speculative-decode
+//! acceptance-rate sweep** at the largest batch. Dumps
+//! `BENCH_serving.json` (schema 2 — see EXPERIMENTS.md §BENCH_serving
+//! schema for the field-by-field contract): one `points` entry per batch
+//! size with simulated tokens/s, the serialized PR-2 reference, TTFT and
+//! p99; and a `spec` block with one entry per acceptance rate next to the
+//! non-speculative batch-8 reference. CI validates batch-8 > 2× batch-1
+//! and spec acceptance=1.0 ≥ the non-speculative reference, then archives
+//! the file as the `BENCH_serving` artifact.
 //! Run: `cargo bench --bench serving`
 
 mod harness;
 
-use picnic::config::PicnicConfig;
-use picnic::coordinator::{serialized_workload_cycles, BatchPolicy, Metrics, Server, ServerConfig};
+use picnic::config::{PicnicConfig, SpecDecodeConfig};
+use picnic::coordinator::{
+    serialized_workload_cycles, BatchPolicy, Metrics, PipelineStats, Server, ServerConfig,
+};
 use picnic::models::LlamaConfig;
 use picnic::sim::AnalyticSim;
 use picnic::util::json::{self, Json};
@@ -18,22 +24,53 @@ use picnic::util::json::{self, Json};
 const MODEL: &str = "1b";
 const PROMPT: usize = 256;
 const GEN: usize = 32;
+/// Spec-decode sweep shape: draft burst and draft-model cost ratio are
+/// fixed; the acceptance rate sweeps.
+const SPEC_BATCH: usize = 8;
+const SPEC_DRAFT_LEN: usize = 4;
+const SPEC_COST_RATIO: f64 = 0.2;
+
+fn policy(batch: usize) -> BatchPolicy {
+    BatchPolicy {
+        max_batch: batch.max(1),
+        kv_budget: 1 << 22,
+        ..BatchPolicy::default()
+    }
+}
 
 fn run_once(batch: usize) -> Metrics {
     let mut s = Server::new(ServerConfig {
         picnic: PicnicConfig::default(),
         model: LlamaConfig::by_name(MODEL).expect("model"),
-        policy: BatchPolicy {
-            max_batch: batch.max(1),
-            kv_budget: 1 << 22,
-            ..BatchPolicy::default()
-        },
+        policy: policy(batch),
     });
     for _ in 0..batch {
         s.submit(PROMPT, GEN).expect("submit");
     }
     s.run_to_completion().expect("run");
     s.metrics.clone()
+}
+
+fn run_spec_once(batch: usize, acceptance: f64) -> (Metrics, PipelineStats) {
+    let picnic = PicnicConfig {
+        spec_decode: SpecDecodeConfig {
+            enabled: true,
+            draft_len: SPEC_DRAFT_LEN,
+            acceptance_rate: acceptance,
+            draft_cost_ratio: SPEC_COST_RATIO,
+        },
+        ..PicnicConfig::default()
+    };
+    let mut s = Server::new(ServerConfig {
+        picnic,
+        model: LlamaConfig::by_name(MODEL).expect("model"),
+        policy: policy(batch),
+    });
+    for _ in 0..batch {
+        s.submit(PROMPT, GEN).expect("submit");
+    }
+    s.run_to_completion().expect("run");
+    (s.metrics.clone(), s.pipeline_stats())
 }
 
 fn main() {
@@ -46,6 +83,7 @@ fn main() {
 
     let batches = [1usize, 2, 4, 8];
     let mut points: Vec<Json> = Vec::new();
+    let mut reference_tps = 0.0f64;
     for &batch in &batches {
         harness::bench(&format!("serve/{MODEL}_batch{batch}"), 1, 3, || {
             let m = run_once(batch);
@@ -59,6 +97,9 @@ fn main() {
             serialized_workload_cycles(&sim, &cfg, &model, batch, PROMPT, GEN, chunk)
                 .expect("plan");
         let ser_tps = m.total_tokens as f64 / (serialized as f64 / freq);
+        if batch == SPEC_BATCH {
+            reference_tps = m.throughput_tokens_per_s();
+        }
         println!(
             "  batch {batch}: {:>8.1} tokens/s pipelined   {:>8.1} tokens/s serialized   \
              mean TTFT {:.3} ms   p99 {:.3} ms",
@@ -76,14 +117,56 @@ fn main() {
         ]));
     }
 
+    harness::section("speculative decode: throughput vs acceptance rate");
+    println!(
+        "  batch {SPEC_BATCH}, draft_len {SPEC_DRAFT_LEN}, draft cost ratio {SPEC_COST_RATIO} \
+         (non-speculative reference: {reference_tps:.1} tokens/s)"
+    );
+    let accepts = [0.0f64, 0.25, 0.5, 0.75, 1.0];
+    let mut spec_points: Vec<Json> = Vec::new();
+    for &acceptance in &accepts {
+        let (m, p) = run_spec_once(SPEC_BATCH, acceptance);
+        println!(
+            "  accept {acceptance:.2}: {:>8.1} tokens/s ({:+6.1}% vs non-spec)   \
+             {} rounds, {} drafted, {} rolled back   mean TTFT {:.3} ms",
+            m.throughput_tokens_per_s(),
+            100.0 * (m.throughput_tokens_per_s() / reference_tps - 1.0),
+            p.spec_rounds,
+            p.spec_drafted,
+            p.spec_rolled_back,
+            1e3 * m.mean_ttft_s(),
+        );
+        spec_points.push(json::obj(vec![
+            ("acceptance", json::num(acceptance)),
+            ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
+            ("mean_ttft_s", json::num(m.mean_ttft_s())),
+            ("p99_total_s", json::num(m.p99_total_s())),
+            ("spec_rounds", json::num(p.spec_rounds as f64)),
+            ("spec_drafted", json::num(p.spec_drafted as f64)),
+            ("spec_committed", json::num(p.spec_committed as f64)),
+            ("spec_rolled_back", json::num(p.spec_rolled_back as f64)),
+        ]));
+    }
+
     let n_points = points.len();
+    let n_spec = spec_points.len();
     let doc = json::obj(vec![
-        ("schema", json::num(1.0)),
+        ("schema", json::num(2.0)),
         ("model", json::s(MODEL)),
         ("prompt_len", json::num(PROMPT as f64)),
         ("gen_len", json::num(GEN as f64)),
         ("points", Json::Arr(points)),
+        (
+            "spec",
+            json::obj(vec![
+                ("batch", json::num(SPEC_BATCH as f64)),
+                ("draft_len", json::num(SPEC_DRAFT_LEN as f64)),
+                ("draft_cost_ratio", json::num(SPEC_COST_RATIO)),
+                ("reference_tokens_per_s", json::num(reference_tps)),
+                ("points", Json::Arr(spec_points)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serving.json", format!("{doc}\n")).expect("write serving report");
-    println!("\nwrote BENCH_serving.json ({n_points} batch points)");
+    println!("\nwrote BENCH_serving.json ({n_points} batch points, {n_spec} spec points)");
 }

@@ -6,6 +6,20 @@
 //! only scratchpad retention (KV cache survives; RRAM weights are
 //! non-volatile and unaffected). The paper's claim: ~80% system power
 //! saved on Llama-8B, power scaling O(log n) in deployed tiles.
+//!
+//! Two controllers implement the scheme for the two execution models:
+//!
+//! * [`Ccpg`] — the sequential controller for the analytic model's
+//!   layer-by-layer walk: exactly one cluster is awake; crossing a
+//!   cluster boundary sleeps the old cluster and pays
+//!   `wake_latency_cycles` for the new one.
+//! * [`CcpgTimeline`] — per-cluster wake accounting for the
+//!   pipeline-parallel serving scheduler, where tokens of different
+//!   requests occupy different clusters at the same simulated instant.
+//!   Each cluster tracks the cycle its last occupancy ended; a stage
+//!   occupancy starting more than `idle_sleep_cycles` later pays the
+//!   wake as a per-stage stall (see the worked example on
+//!   [`CcpgTimeline`]).
 
 use super::cluster::{Cluster, ClusterState};
 use super::tile::ComputeTile;
@@ -139,6 +153,24 @@ impl Ccpg {
 /// cycle it was busy; a stage occupancy starting more than
 /// `idle_sleep_cycles` after that pays `wake_latency_cycles` as a
 /// per-stage event instead of the old flat per-pass adder.
+///
+/// ```
+/// use picnic::chiplet::CcpgTimeline;
+/// use picnic::config::CcpgConfig;
+/// use picnic::photonic::OpticalTopology;
+///
+/// let cfg = CcpgConfig { enabled: true, ..CcpgConfig::default() };
+/// let (wake, idle) = (cfg.wake_latency_cycles, cfg.idle_sleep_cycles);
+/// let mut t = CcpgTimeline::new(16, cfg, &OpticalTopology::new(16));
+///
+/// assert_eq!(t.occupy(0, 0, 100), wake, "cold cluster pays its wake");
+/// assert_eq!(t.occupy(1, 50, 100), 0, "same 2x2 cluster is still awake");
+/// assert_eq!(t.occupy(15, 60, 100), wake, "other clusters wake separately");
+/// // …and a cluster left idle past the sleep threshold re-pays the wake
+/// let long_idle = wake + 100 + 100 + idle + 1;
+/// assert_eq!(t.occupy(0, long_idle, 10), wake);
+/// assert_eq!(t.stats.wakes, 3);
+/// ```
 #[derive(Debug, Clone)]
 pub struct CcpgTimeline {
     cfg: CcpgConfig,

@@ -238,6 +238,129 @@ impl Default for CcpgConfig {
     }
 }
 
+/// Speculative decoding on the serving pipeline (§Serving in
+/// ARCHITECTURE.md; implemented by `coordinator::Server`).
+///
+/// A cheap draft model proposes `draft_len` tokens per speculation round;
+/// the target model verifies the whole burst in **one batched pass**
+/// (query width = `draft_len`), the accepted prefix — plus the verify
+/// pass's own corrected/bonus token — commits to the KV cache, and the
+/// rejected tail rolls back. This is a *serving-policy* knob, not a paper
+/// Table I constant: the paper's layer-per-chiplet pipeline leaves stages
+/// idle between decode steps of a single request, which is exactly the
+/// slack a draft burst fills.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecDecodeConfig {
+    /// Whether the serving scheduler speculates at all.
+    pub enabled: bool,
+    /// Draft tokens proposed per speculation round (≥ 1); also the query
+    /// width of the single batched verify pass.
+    pub draft_len: usize,
+    /// Probability each draft token is accepted by the verify pass, in
+    /// [0, 1]. Acceptance is drawn i.i.d. per token on a seeded PRNG, so
+    /// runs are reproducible.
+    pub acceptance_rate: f64,
+    /// Cost of one draft-model decode pass as a fraction of the target
+    /// model's, in (0, 1]. `sim::SimBackend::draft_cycles` prices draft
+    /// bursts with it.
+    pub draft_cost_ratio: f64,
+}
+
+impl Default for SpecDecodeConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            draft_len: 4,
+            acceptance_rate: 0.7,
+            draft_cost_ratio: 0.2,
+        }
+    }
+}
+
+impl SpecDecodeConfig {
+    /// Reject out-of-range parameters with a message naming the field.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.draft_len >= 1,
+            "spec_decode.draft_len must be >= 1 (got {})",
+            self.draft_len
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.acceptance_rate),
+            "spec_decode.acceptance_rate must be in [0, 1] (got {})",
+            self.acceptance_rate
+        );
+        anyhow::ensure!(
+            self.draft_cost_ratio > 0.0 && self.draft_cost_ratio <= 1.0,
+            "spec_decode.draft_cost_ratio must be in (0, 1] (got {})",
+            self.draft_cost_ratio
+        );
+        Ok(())
+    }
+
+    /// Apply the `--spec-decode` CLI surface onto an already-loaded
+    /// config (shared by `picnic` and `examples/llama_serve.rs`):
+    /// `--spec-decode k=v,…` overrides only the named keys — values from
+    /// a `--config` file survive — and a bare `--spec-decode` flag just
+    /// enables speculation with the loaded values. Either form sets
+    /// `enabled = true`.
+    pub fn apply_cli(&mut self, args: &crate::util::args::Args) -> crate::Result<()> {
+        if let Some(text) = args.opt("spec-decode") {
+            *self = self.merge_cli(text)?;
+        } else if args.flag("spec-decode") {
+            self.enabled = true;
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI shorthand `draft_len=4,accept=0.7,ratio=0.2` over
+    /// the built-in defaults. Keys: `draft_len`,
+    /// `accept`/`acceptance_rate`, `ratio`/`draft_cost_ratio`; omitted
+    /// keys keep their defaults. The returned config has
+    /// `enabled = true` and is validated.
+    pub fn parse_cli(text: &str) -> crate::Result<SpecDecodeConfig> {
+        SpecDecodeConfig::default().merge_cli(text)
+    }
+
+    /// Parse the CLI shorthand onto `self` (typically the values a
+    /// `--config` file loaded): only the named keys change. The result
+    /// has `enabled = true` and is validated.
+    pub fn merge_cli(&self, text: &str) -> crate::Result<SpecDecodeConfig> {
+        let mut c = SpecDecodeConfig {
+            enabled: true,
+            ..self.clone()
+        };
+        for part in text.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("--spec-decode: expected key=value, got {part:?}")
+            })?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "draft_len" => {
+                    c.draft_len = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--spec-decode draft_len {v:?}: {e}"))?
+                }
+                "accept" | "acceptance_rate" => {
+                    c.acceptance_rate = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--spec-decode accept {v:?}: {e}"))?
+                }
+                "ratio" | "draft_cost_ratio" => {
+                    c.draft_cost_ratio = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--spec-decode ratio {v:?}: {e}"))?
+                }
+                other => anyhow::bail!(
+                    "--spec-decode: unknown key {other:?} (draft_len|accept|ratio)"
+                ),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+}
+
 /// Calibrated per-operation cycle costs for the analytic model. These are
 /// *derived* constants: `sim::calibrate` measures them on the detailed
 /// cycle engine; the defaults are the values so obtained on the default
@@ -285,6 +408,7 @@ pub struct PicnicConfig {
     pub interconnect: InterconnectConfig,
     pub ccpg: CcpgConfig,
     pub timing: TimingConfig,
+    pub spec_decode: SpecDecodeConfig,
 }
 
 impl PicnicConfig {
@@ -344,6 +468,20 @@ impl PicnicConfig {
             c.ccpg.idle_sleep_cycles =
                 int(g, "idle_sleep_cycles", c.ccpg.idle_sleep_cycles as usize) as u64;
         }
+        if let Some(s) = j.get("spec_decode") {
+            c.spec_decode.enabled = s
+                .get("enabled")
+                .and_then(Json::as_bool)
+                .unwrap_or(c.spec_decode.enabled);
+            c.spec_decode.draft_len = int(s, "draft_len", c.spec_decode.draft_len);
+            c.spec_decode.acceptance_rate =
+                num(s, "acceptance_rate", c.spec_decode.acceptance_rate);
+            c.spec_decode.draft_cost_ratio =
+                num(s, "draft_cost_ratio", c.spec_decode.draft_cost_ratio);
+        }
+        // Reject out-of-range speculative-decode parameters here rather
+        // than deep in the scheduler (clear error at the config boundary).
+        c.spec_decode.validate()?;
         if let Some(t) = j.get("timing") {
             c.timing.xbar_cycles = int(t, "xbar_cycles", c.timing.xbar_cycles as usize) as u64;
             c.timing.hop_cycles = int(t, "hop_cycles", c.timing.hop_cycles as usize) as u64;
@@ -363,7 +501,7 @@ impl PicnicConfig {
 
     pub fn to_json(&self) -> String {
         format!(
-            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}}\n}}\n",
+            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}}\n}}\n",
             self.system.bit_width,
             self.system.frequency_hz,
             self.system.ipcn_dim,
@@ -394,6 +532,10 @@ impl PicnicConfig {
             self.timing.scu_drain_cycles,
             self.timing.npm_flip_cycles,
             self.timing.dram_latency_cycles,
+            self.spec_decode.enabled,
+            self.spec_decode.draft_len,
+            self.spec_decode.acceptance_rate,
+            self.spec_decode.draft_cost_ratio,
         )
     }
 }
@@ -459,5 +601,73 @@ mod tests {
         let back = PicnicConfig::from_json(r#"{"timing": {"xbar_cycles": 200}}"#).unwrap();
         assert_eq!(back.timing.xbar_cycles, 200);
         assert_eq!(back.system.ipcn_dim, 32, "untouched fields keep defaults");
+    }
+
+    #[test]
+    fn spec_decode_json_roundtrip() {
+        let c = PicnicConfig {
+            spec_decode: SpecDecodeConfig {
+                enabled: true,
+                draft_len: 6,
+                acceptance_rate: 0.85,
+                draft_cost_ratio: 0.25,
+            },
+            ..PicnicConfig::default()
+        };
+        let back = PicnicConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.spec_decode.draft_len, 6);
+    }
+
+    #[test]
+    fn spec_decode_invalid_values_rejected() {
+        for (json, field) in [
+            (r#"{"spec_decode": {"draft_len": 0}}"#, "draft_len"),
+            (r#"{"spec_decode": {"acceptance_rate": 1.5}}"#, "acceptance_rate"),
+            (r#"{"spec_decode": {"acceptance_rate": -0.1}}"#, "acceptance_rate"),
+            (r#"{"spec_decode": {"draft_cost_ratio": 0}}"#, "draft_cost_ratio"),
+            (r#"{"spec_decode": {"draft_cost_ratio": 1.2}}"#, "draft_cost_ratio"),
+        ] {
+            let err = PicnicConfig::from_json(json).unwrap_err();
+            assert!(
+                err.to_string().contains(field),
+                "error for {json} must name {field}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_decode_cli_shorthand() {
+        let c = SpecDecodeConfig::parse_cli("draft_len=8,accept=0.5,ratio=0.3").unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.draft_len, 8);
+        assert!((c.acceptance_rate - 0.5).abs() < 1e-12);
+        assert!((c.draft_cost_ratio - 0.3).abs() < 1e-12);
+        // omitted keys keep defaults, empty string enables with defaults
+        let d = SpecDecodeConfig::parse_cli("").unwrap();
+        assert!(d.enabled);
+        assert_eq!(d.draft_len, SpecDecodeConfig::default().draft_len);
+        // invalid values and unknown keys are clear errors
+        assert!(SpecDecodeConfig::parse_cli("draft_len=0").is_err());
+        assert!(SpecDecodeConfig::parse_cli("accept=2.0").is_err());
+        assert!(SpecDecodeConfig::parse_cli("bogus=1").is_err());
+        assert!(SpecDecodeConfig::parse_cli("draft_len").is_err());
+    }
+
+    #[test]
+    fn spec_decode_cli_merges_onto_loaded_config() {
+        // a --config file set these; --spec-decode must only override the
+        // keys it names
+        let from_file = SpecDecodeConfig {
+            enabled: false,
+            draft_len: 8,
+            acceptance_rate: 0.9,
+            draft_cost_ratio: 0.5,
+        };
+        let merged = from_file.merge_cli("accept=0.6").unwrap();
+        assert!(merged.enabled);
+        assert_eq!(merged.draft_len, 8, "file values survive the merge");
+        assert!((merged.acceptance_rate - 0.6).abs() < 1e-12);
+        assert!((merged.draft_cost_ratio - 0.5).abs() < 1e-12);
     }
 }

@@ -35,6 +35,13 @@ impl Default for BatchPolicy {
 }
 
 /// The batcher: owns queued + in-flight requests.
+///
+/// Speculative decoding keeps these invariants intact without new
+/// bookkeeping here: `admit` reserves `prompt_len + max_new_tokens` KV
+/// tokens per request, and the scheduler caps every draft burst at the
+/// remaining generation budget ([`Request::draft_budget`]), so a round's
+/// tentative KV peak stays inside the reservation and a rejected tail
+/// always rolls back within it.
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,

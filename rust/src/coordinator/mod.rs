@@ -36,6 +36,17 @@
 //! interpolated between bucket boundaries (exact up to rounding — phase
 //! costs are affine in KV), so steady-state decode stops re-running
 //! partition/placement/flash-tiling every token.
+//!
+//! ## Speculative decode
+//!
+//! When [`crate::config::SpecDecodeConfig`] is enabled, a decoding
+//! request's scheduling event becomes a speculation round: a burst of
+//! `draft_len` cheap draft passes plus one batched verify pass occupy
+//! each stage as a single slot, the accepted draft prefix (plus the
+//! verify pass's own token) commits to the KV cache atomically, and the
+//! rejected tail rolls back without extra energy charges. See the
+//! `server` module docs and ARCHITECTURE.md §Serving for the scheduling
+//! details and invariants.
 
 mod batcher;
 mod metrics;
@@ -46,6 +57,6 @@ pub use batcher::{Batcher, BatchPolicy};
 pub use metrics::{Metrics, RequestMetrics};
 pub use request::{Request, RequestId, RequestState};
 pub use server::{
-    serialized_pass_cycles, serialized_workload_cycles, PipelineStats, Server, ServerConfig,
-    StageSlot,
+    serialized_pass_cycles, serialized_workload_cycles, JobKind, PipelineStats, Server,
+    ServerConfig, SpecRound, StageSlot,
 };

@@ -63,16 +63,48 @@ impl Request {
         self.prompt_len + self.generated
     }
 
+    /// Decode tokens still to generate.
+    pub fn decode_remaining(&self) -> usize {
+        self.max_new_tokens.saturating_sub(self.generated)
+    }
+
+    /// Largest **useful** draft burst for one speculation round. The
+    /// verify pass itself always contributes one committed token, so
+    /// drafting more than `decode_remaining - 1` tokens can never raise
+    /// the round's commit — the clamp would roll the excess back
+    /// unconditionally, wasting draft and verify work. Returns 0 when a
+    /// single token remains: a plain decode pass is strictly cheaper
+    /// there, and the scheduler falls back to it. The cap also keeps the
+    /// round's tentative KV peak (`kv_len + burst + 1 verify token`)
+    /// inside the admission-time reservation of
+    /// `prompt_len + max_new_tokens`.
+    pub fn draft_budget(&self, draft_len: usize) -> usize {
+        draft_len.min(self.decode_remaining().saturating_sub(1))
+    }
+
     /// Advance one decode token at `now`; returns true when finished.
     /// Token completions must be presented in nondecreasing cycle order
     /// (the event loop's per-request monotonicity invariant).
     pub fn advance_decode(&mut self, now: u64) -> bool {
+        self.commit_decode(1, now)
+    }
+
+    /// Commit `n ≥ 1` decode tokens at `now` — the acceptance-driven
+    /// commitment path of speculative decoding (an accepted draft prefix
+    /// plus the verify pass's own token land as one atomic commit; the
+    /// rejected tail was never added, so rollback is a no-op here).
+    /// Commits are clamped to the generation budget; returns true when
+    /// the request finished. As with [`Request::advance_decode`],
+    /// completions must arrive in nondecreasing cycle order, and the
+    /// committed token count is strictly monotone across calls.
+    pub fn commit_decode(&mut self, n: usize, now: u64) -> bool {
         assert_eq!(self.state, RequestState::Decoding);
+        assert!(n >= 1, "every decode round commits at least one token");
         debug_assert!(
             self.first_token_cycle.unwrap_or(0) <= now,
             "decode completions must be monotone"
         );
-        self.generated += 1;
+        self.generated += n.min(self.decode_remaining());
         if self.first_token_cycle.is_none() {
             self.first_token_cycle = Some(now);
         }
@@ -107,5 +139,31 @@ mod tests {
     #[should_panic]
     fn empty_prompt_rejected() {
         Request::new(1, 0, 1, 0);
+    }
+
+    #[test]
+    fn draft_budget_capped_by_generation_budget() {
+        let mut r = Request::new(3, 16, 4, 0);
+        r.state = RequestState::Decoding;
+        // 4 tokens remain: the verify pass commits one, so ≤ 3 drafts help
+        assert_eq!(r.draft_budget(8), 3, "burst capped at remaining - 1");
+        assert_eq!(r.draft_budget(2), 2, "short bursts pass through");
+        r.generated = 3;
+        assert_eq!(r.draft_budget(4), 0, "last token never drafts");
+    }
+
+    #[test]
+    fn commit_decode_clamps_to_budget_and_finishes() {
+        let mut r = Request::new(2, 8, 5, 0);
+        r.state = RequestState::Decoding;
+        assert!(!r.commit_decode(3, 100), "3 of 5 committed");
+        assert_eq!(r.generated, 3);
+        assert_eq!(r.first_token_cycle, Some(100));
+        // over-commit clamps at the generation budget and finishes
+        assert!(r.commit_decode(4, 200));
+        assert_eq!(r.generated, 5);
+        assert_eq!(r.state, RequestState::Done);
+        assert_eq!(r.done_cycle, Some(200));
+        assert_eq!(r.decode_remaining(), 0);
     }
 }

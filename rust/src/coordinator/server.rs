@@ -27,6 +27,21 @@
 //! power-of-two KV bucket boundaries around the live KV length and
 //! interpolated — exact up to rounding because per-phase costs are affine
 //! in KV — so steady-state decode never re-runs partition/placement.
+//!
+//! With speculative decoding enabled
+//! ([`SpecDecodeConfig`](crate::config::SpecDecodeConfig)), a decoding
+//! request's event is a **speculation round** instead of a single token:
+//! a burst of `draft_len` cheap draft passes
+//! ([`SimBackend::draft_cycles`]) plus one batched verify pass (query
+//! width = the burst) occupy each stage as a single slot; the verify
+//! pass's acceptance draw commits the accepted prefix plus one
+//! verify-pass token ([`super::Request::commit_decode`]) and rolls back
+//! the rejected tail. Bursts are capped at the remaining generation
+//! budget minus the verify token ([`super::Request::draft_budget`]), and
+//! a request's final token falls back to a plain decode pass — a draft
+//! there could never commit. The re-plan after a rollback is cheap by
+//! construction — the next round's costs come from the same power-of-two
+//! KV buckets already in the plan cache.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
@@ -38,6 +53,7 @@ use crate::models::LlamaConfig;
 use crate::photonic::OpticalTopology;
 use crate::power::EnergyLedger;
 use crate::sim::{AnalyticSim, SimBackend};
+use crate::util::Rng;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::rc::Rc;
@@ -50,13 +66,52 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
 }
 
+/// What kind of work a stage occupancy carried.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// One prefill chunk.
+    Prefill,
+    /// One non-speculative decode token.
+    Decode,
+    /// One speculation round: the draft burst plus its single batched
+    /// verify pass, held as one occupancy per stage.
+    SpecVerify,
+}
+
 /// One stage occupancy recorded by the (test-facing) stage trace.
 #[derive(Debug, Clone, Copy)]
 pub struct StageSlot {
     pub request: RequestId,
     pub stage: usize,
+    pub kind: JobKind,
     pub start: u64,
     pub end: u64,
+}
+
+/// One speculation round recorded by the (test-facing) spec trace.
+#[derive(Debug, Clone, Copy)]
+pub struct SpecRound {
+    pub request: RequestId,
+    /// KV length entering the round.
+    pub kv_start: usize,
+    /// Draft tokens proposed (burst size, capped by the decode budget).
+    pub drafted: usize,
+    /// Leading draft tokens the verify pass accepted.
+    pub accepted: usize,
+    /// Tokens committed to KV this round: the accepted prefix plus the
+    /// verify pass's own token (always `accepted + 1` — the draft budget
+    /// keeps rounds inside the generation budget); ≥ 1.
+    pub committed: usize,
+    /// The request's total committed tokens after this round (strictly
+    /// monotone across a request's rounds).
+    pub total_committed: usize,
+    /// Cycle the round left the last stage.
+    pub completion: u64,
+    /// Dynamic energy this round charged (draft burst + verify pass) —
+    /// the only charges a round ever makes; a rollback charges nothing,
+    /// and re-generating rolled-back tokens is charged to the *later*
+    /// rounds that commit them.
+    pub energy_j: f64,
 }
 
 /// Scheduler counters exposed for reports and tests.
@@ -72,6 +127,26 @@ pub struct PipelineStats {
     pub ccpg_wakes: u64,
     /// Total CCPG wake stall cycles.
     pub ccpg_wake_stall_cycles: u64,
+    /// Speculation rounds dispatched (0 unless spec decode is enabled).
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all rounds.
+    pub spec_drafted: u64,
+    /// Draft tokens the verify passes accepted.
+    pub spec_accepted: u64,
+    /// Tokens committed by speculation rounds (accepted + verify tokens).
+    pub spec_committed: u64,
+    /// Draft tokens rolled back (drafted − accepted).
+    pub spec_rolled_back: u64,
+}
+
+/// Private tally behind the `spec_*` fields of [`PipelineStats`].
+#[derive(Debug, Clone, Copy, Default)]
+struct SpecCounters {
+    rounds: u64,
+    drafted: u64,
+    accepted: u64,
+    committed: u64,
+    rolled_back: u64,
 }
 
 /// Event priority: decode tokens beat prefill chunks on release-cycle ties
@@ -101,11 +176,20 @@ pub struct Server<B: SimBackend = AnalyticSim> {
     plan_cache: PlanCache,
     /// (seq_q, kv_point) → per-stage cycles on `backend` (memoized).
     cost_cache: HashMap<(usize, usize), Rc<Vec<u64>>>,
+    /// (seq_q, kv_point) → per-stage *draft-model* cycles (memoized;
+    /// speculative decode only).
+    draft_cost_cache: HashMap<(usize, usize), Rc<Vec<u64>>>,
     /// (seq_q, kv_point) → whole-pass energy by category (memoized).
     energy_cache: HashMap<(usize, usize), Rc<EnergyLedger>>,
     /// Reusable per-stage cost buffer for the current job (interpolated).
     interp_buf: Vec<u64>,
+    /// Reusable per-stage cost buffer for one draft pass (interpolated).
+    draft_interp_buf: Vec<u64>,
+    /// Acceptance draws for speculation rounds (seeded → reproducible).
+    accept_rng: Rng,
+    spec: SpecCounters,
     stage_trace: Option<Vec<StageSlot>>,
+    spec_trace: Option<Vec<SpecRound>>,
 }
 
 impl Server<AnalyticSim> {
@@ -134,9 +218,14 @@ impl<B: SimBackend> Server<B> {
             events: BinaryHeap::new(),
             plan_cache: PlanCache::new(),
             cost_cache: HashMap::new(),
+            draft_cost_cache: HashMap::new(),
             energy_cache: HashMap::new(),
             interp_buf: Vec::new(),
+            draft_interp_buf: Vec::new(),
+            accept_rng: Rng::seed_from_u64(0x5bec_dec0de),
+            spec: SpecCounters::default(),
             stage_trace: None,
+            spec_trace: None,
         }
     }
 
@@ -162,6 +251,16 @@ impl<B: SimBackend> Server<B> {
         self.stage_trace.as_deref()
     }
 
+    /// Record every speculation round (tests assert monotone commits and
+    /// energy accounting on it).
+    pub fn enable_spec_trace(&mut self) {
+        self.spec_trace = Some(Vec::new());
+    }
+
+    pub fn spec_trace(&self) -> Option<&[SpecRound]> {
+        self.spec_trace.as_deref()
+    }
+
     pub fn pipeline_stats(&self) -> PipelineStats {
         PipelineStats {
             stages: self.stages.len(),
@@ -169,6 +268,11 @@ impl<B: SimBackend> Server<B> {
             plan_hits: self.plan_cache.stats.hits,
             ccpg_wakes: self.ccpg.stats.wakes,
             ccpg_wake_stall_cycles: self.ccpg.stats.wake_stall_cycles,
+            spec_rounds: self.spec.rounds,
+            spec_drafted: self.spec.drafted,
+            spec_accepted: self.spec.accepted,
+            spec_committed: self.spec.committed,
+            spec_rolled_back: self.spec.rolled_back,
         }
     }
 
@@ -229,19 +333,37 @@ impl<B: SimBackend> Server<B> {
     fn fill_job_costs(&mut self, seq_q: usize, kv: usize) -> crate::Result<()> {
         let (lo, hi) = kv_bucket_bounds(kv);
         let c_lo = self.stage_costs_at(seq_q, lo)?;
-        self.interp_buf.clear();
-        if lo == hi {
-            self.interp_buf.extend_from_slice(&c_lo);
-        } else {
-            let c_hi = self.stage_costs_at(seq_q, hi)?;
-            let num = (kv - lo) as u64;
-            let den = (hi - lo) as u64;
-            self.interp_buf.extend(
-                c_lo.iter()
-                    .zip(c_hi.iter())
-                    .map(|(&a, &b)| a + b.saturating_sub(a) * num / den),
-            );
+        let c_hi = self.stage_costs_at(seq_q, hi)?; // cache hit when lo == hi
+        interp_stage_costs(&mut self.interp_buf, kv, lo, hi, &c_lo, &c_hi);
+        Ok(())
+    }
+
+    /// Per-stage **draft-model** cycles at an exact plan point, memoized
+    /// ([`SimBackend::draft_cycles`] over each stage's plan).
+    fn draft_costs_at(&mut self, seq_q: usize, kv_point: usize) -> crate::Result<Rc<Vec<u64>>> {
+        if let Some(c) = self.draft_cost_cache.get(&(seq_q, kv_point)) {
+            return Ok(Rc::clone(c));
         }
+        let spec = self.cfg.picnic.spec_decode.clone();
+        let builder = ScheduleBuilder::new(&self.cfg.picnic, &self.cfg.model);
+        let plans = self.plan_cache.plans(&builder, seq_q, kv_point)?;
+        let costs: Vec<u64> = plans
+            .iter()
+            .map(|p| self.backend.draft_cycles(p, &spec))
+            .collect();
+        let rc = Rc::new(costs);
+        self.draft_cost_cache.insert((seq_q, kv_point), Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    /// Fill `draft_interp_buf` with the per-stage cycles of **one draft
+    /// pass** (seq_q = 1) at KV length `kv`, interpolated between the KV
+    /// bucket boundaries exactly like `fill_job_costs`.
+    fn fill_draft_costs(&mut self, kv: usize) -> crate::Result<()> {
+        let (lo, hi) = kv_bucket_bounds(kv);
+        let c_lo = self.draft_costs_at(1, lo)?;
+        let c_hi = self.draft_costs_at(1, hi)?; // cache hit when lo == hi
+        interp_stage_costs(&mut self.draft_interp_buf, kv, lo, hi, &c_lo, &c_hi);
         Ok(())
     }
 
@@ -268,48 +390,49 @@ impl<B: SimBackend> Server<B> {
     /// per-phase energy is affine in KV too. (Event counts in the serving
     /// ledger tally charge operations, not per-op events.)
     fn charge_job_energy(&mut self, seq_q: usize, kv: usize) -> crate::Result<()> {
+        self.charge_job_energy_scaled(seq_q, kv, 1.0)
+    }
+
+    /// Charge a scaled copy of one pass's KV-interpolated energy: the
+    /// speculative path uses it to charge a whole draft burst (k passes
+    /// at the draft cost ratio) in one call.
+    fn charge_job_energy_scaled(
+        &mut self,
+        seq_q: usize,
+        kv: usize,
+        scale: f64,
+    ) -> crate::Result<()> {
         let (lo, hi) = kv_bucket_bounds(kv);
         let e_lo = self.plan_energy_at(seq_q, lo)?;
         if lo == hi {
-            self.ledger.merge(&e_lo);
+            for (&cat, &j) in e_lo.by_category() {
+                self.ledger.charge(cat, j * scale);
+            }
             return Ok(());
         }
         let e_hi = self.plan_energy_at(seq_q, hi)?;
         let frac = (kv - lo) as f64 / (hi - lo) as f64;
         for (&cat, &j_lo) in e_lo.by_category() {
             let j_hi = e_hi.joules(cat);
-            self.ledger.charge(cat, j_lo + (j_hi - j_lo) * frac);
+            self.ledger.charge(cat, (j_lo + (j_hi - j_lo) * frac) * scale);
         }
         Ok(())
     }
 
-    /// Dispatch one job (prefill chunk or decode token) of request `id`
-    /// released at `release`: walk it through every stage resource, then
-    /// schedule the request's next job. Returns true when this job
-    /// finished the request (the caller reaps only then).
-    fn dispatch(&mut self, id: RequestId, release: u64) -> crate::Result<bool> {
-        let chunk = self.cfg.policy.prefill_chunk.max(1);
-        let (seq_q, kv, is_prefill) = {
-            let r = self
-                .batcher
-                .inflight_by_id(id)
-                .expect("event points at a live request");
-            match r.state {
-                RequestState::Prefilling => {
-                    let q = chunk.min(r.prefill_remaining()).max(1);
-                    (q, r.prefilled + q, true)
-                }
-                RequestState::Decoding => (1, r.kv_len().max(1), false),
-                s => unreachable!("dispatch on {s:?} request"),
-            }
-        };
-
-        self.fill_job_costs(seq_q, kv)?;
-        self.charge_job_energy(seq_q, kv)?;
-
-        // Walk the stage chain: enter each stage when both this job and
-        // the stage are ready; pay a CCPG wake if the stage's cluster
-        // power-gated since its last occupancy.
+    /// Walk one job through every stage resource: enter each stage when
+    /// both the job and the stage are ready, occupying it for this job's
+    /// cost from `interp_buf` — plus `draft_reps` draft passes from
+    /// `draft_interp_buf` for speculation rounds, whose draft burst and
+    /// batched verify pass hold each stage as **one** occupancy. Pays a
+    /// CCPG wake if the stage's cluster power-gated since its last
+    /// occupancy. Returns (first-stage start, completion cycle).
+    fn walk_stages(
+        &mut self,
+        id: RequestId,
+        release: u64,
+        kind: JobKind,
+        draft_reps: u64,
+    ) -> (u64, u64) {
         let mut t = release;
         let mut first_stage_start = release;
         for s in 0..self.stages.len() {
@@ -317,7 +440,10 @@ impl<B: SimBackend> Server<B> {
             if s == 0 {
                 first_stage_start = start;
             }
-            let dur = self.interp_buf[s];
+            let mut dur = self.interp_buf[s];
+            if draft_reps > 0 {
+                dur += draft_reps * self.draft_interp_buf[s];
+            }
             let stall = self.ccpg.occupy(self.stage_tiles[s], start, dur);
             let finish = start + stall + dur;
             self.stages[s] = finish;
@@ -325,22 +451,70 @@ impl<B: SimBackend> Server<B> {
                 trace.push(StageSlot {
                     request: id,
                     stage: s,
+                    kind,
                     start,
                     end: finish,
                 });
             }
             t = finish;
         }
-        let completion = t;
-        if completion > self.horizon {
-            self.horizon = completion;
+        if t > self.horizon {
+            self.horizon = t;
         }
+        (first_stage_start, t)
+    }
+
+    /// Dispatch one job (prefill chunk, decode token, or speculation
+    /// round) of request `id` released at `release`: walk it through
+    /// every stage resource, then schedule the request's next job.
+    /// Returns true when this job finished the request (the caller reaps
+    /// only then).
+    fn dispatch(&mut self, id: RequestId, release: u64) -> crate::Result<bool> {
+        let chunk = self.cfg.policy.prefill_chunk.max(1);
+        let spec_enabled = self.cfg.picnic.spec_decode.enabled;
+        let draft_len = self.cfg.picnic.spec_decode.draft_len;
+        // One id-index probe decides the job shape — state and lengths
+        // are read together so the hot event path never re-looks-up the
+        // same request before the stage walk.
+        let (seq_q, kv, kind) = {
+            let r = self
+                .batcher
+                .inflight_by_id(id)
+                .expect("event points at a live request");
+            match r.state {
+                RequestState::Prefilling => {
+                    let q = chunk.min(r.prefill_remaining()).max(1);
+                    (q, r.prefilled + q, JobKind::Prefill)
+                }
+                RequestState::Decoding if spec_enabled => {
+                    // the verify pass sees every draft token: k tentative
+                    // KV entries on top of the committed KV
+                    let k = r.draft_budget(draft_len);
+                    if k == 0 {
+                        // last token: a plain decode pass is strictly
+                        // cheaper than draft + verify for the same commit
+                        (1, r.kv_len().max(1), JobKind::Decode)
+                    } else {
+                        (k, r.kv_len().max(1) + k, JobKind::SpecVerify)
+                    }
+                }
+                RequestState::Decoding => (1, r.kv_len().max(1), JobKind::Decode),
+                s => unreachable!("dispatch on {s:?} request"),
+            }
+        };
+        if kind == JobKind::SpecVerify {
+            return self.dispatch_spec_round(id, release, seq_q, kv);
+        }
+
+        self.fill_job_costs(seq_q, kv)?;
+        self.charge_job_energy(seq_q, kv)?;
+        let (first_stage_start, completion) = self.walk_stages(id, release, kind, 0);
 
         let r = self
             .batcher
             .inflight_by_id(id)
             .expect("request still in flight");
-        if is_prefill {
+        if kind == JobKind::Prefill {
             // queue_s ends when prefill work actually starts executing on
             // stage 0, not at admission — scheduling contention stays
             // visible in the queue metric.
@@ -357,6 +531,93 @@ impl<B: SimBackend> Server<B> {
             self.events.push(Reverse((completion, pri, id)));
             Ok(false)
         } else if r.advance_decode(completion) {
+            Ok(true)
+        } else {
+            self.events.push(Reverse((completion, PRI_DECODE, id)));
+            Ok(false)
+        }
+    }
+
+    /// Dispatch one **speculation round** of request `id`: `k` draft
+    /// passes plus a single batched verify pass (query width `k`) walk
+    /// the stage chain as one job, then the acceptance draw commits the
+    /// accepted prefix + one verify-pass token and rolls back the rest.
+    /// `k` is the request's draft budget ([`super::Request::draft_budget`],
+    /// read by `dispatch`'s single lookup) so the tentative KV — which
+    /// peaks at `kv_end` during the verify pass — never leaves the
+    /// admission-time reservation. Returns true when the round finished
+    /// the request.
+    fn dispatch_spec_round(
+        &mut self,
+        id: RequestId,
+        release: u64,
+        k: usize,
+        kv_end: usize,
+    ) -> crate::Result<bool> {
+        let ratio = self.cfg.picnic.spec_decode.draft_cost_ratio;
+        let p_accept = self.cfg.picnic.spec_decode.acceptance_rate;
+        debug_assert!(k >= 1, "spec round dispatched on a non-decoding request");
+        let kv_start = kv_end - k;
+        self.fill_job_costs(k, kv_end)?; // one batched verify pass (seq_q = k)
+        // All k draft passes are priced at the round's final KV rather
+        // than each pass's own kv_start..kv_end-1 — a deliberate,
+        // slightly conservative simplification (≤ k/2 KV entries of
+        // affine cost per pass, within one KV bucket) that keeps the
+        // round at two interpolations instead of k+1.
+        self.fill_draft_costs(kv_end)?; // one draft pass (seq_q = 1)
+
+        // Energy: the verify pass at full cost plus k draft passes at the
+        // draft cost ratio, charged exactly once per round. A rejected
+        // tail is energy already spent — rollback charges nothing, and
+        // the rolled-back tokens are charged to the later rounds that
+        // actually commit them (the no-double-charge property locked in
+        // rust/tests/test_spec_decode.rs).
+        let e_before = self.ledger.total_j();
+        self.charge_job_energy(k, kv_end)?;
+        self.charge_job_energy_scaled(1, kv_end, k as f64 * ratio)?;
+        let energy_j = self.ledger.total_j() - e_before;
+
+        let (_, completion) = self.walk_stages(id, release, JobKind::SpecVerify, k as u64);
+
+        // Leading-prefix acceptance: i.i.d. Bernoulli per draft token on
+        // the server's seeded PRNG (runs are reproducible).
+        let mut accepted = 0usize;
+        while accepted < k && self.accept_rng.f64() < p_accept {
+            accepted += 1;
+        }
+        let (committed, done, total_committed) = {
+            let r = self
+                .batcher
+                .inflight_by_id(id)
+                .expect("request still in flight");
+            // The verify pass always yields one target-model token — the
+            // correction at the first rejection, or the bonus token when
+            // every draft survives. `k ≤ decode_remaining - 1`, so the
+            // accepted prefix plus the verify token always fit the
+            // generation budget in full.
+            let committed = accepted + 1;
+            debug_assert!(committed <= r.decode_remaining());
+            let done = r.commit_decode(committed, completion);
+            (committed, done, r.generated)
+        };
+        self.spec.rounds += 1;
+        self.spec.drafted += k as u64;
+        self.spec.accepted += accepted as u64;
+        self.spec.committed += committed as u64;
+        self.spec.rolled_back += (k - accepted) as u64;
+        if let Some(trace) = self.spec_trace.as_mut() {
+            trace.push(SpecRound {
+                request: id,
+                kv_start,
+                drafted: k,
+                accepted,
+                committed,
+                total_committed,
+                completion,
+                energy_j,
+            });
+        }
+        if done {
             Ok(true)
         } else {
             self.events.push(Reverse((completion, PRI_DECODE, id)));
@@ -401,6 +662,33 @@ impl<B: SimBackend> Server<B> {
         self.metrics.wall_s = self.horizon as f64 / self.cfg.picnic.system.frequency_hz;
         Ok(())
     }
+}
+
+/// Fill `buf` with per-stage costs linearly interpolated between the KV
+/// bucket boundary costs `c_lo`/`c_hi` (`lo ≤ kv ≤ hi`; the same slice
+/// twice when `lo == hi`) — the single copy of the bucket-interpolation
+/// formula every per-stage cost path shares. Exact up to integer
+/// rounding because per-phase costs are affine in KV.
+fn interp_stage_costs(
+    buf: &mut Vec<u64>,
+    kv: usize,
+    lo: usize,
+    hi: usize,
+    c_lo: &[u64],
+    c_hi: &[u64],
+) {
+    buf.clear();
+    if lo == hi {
+        buf.extend_from_slice(c_lo);
+        return;
+    }
+    let num = (kv - lo) as u64;
+    let den = (hi - lo) as u64;
+    buf.extend(
+        c_lo.iter()
+            .zip(c_hi.iter())
+            .map(|(&a, &b)| a + b.saturating_sub(a) * num / den),
+    );
 }
 
 /// Cycles one whole-fabric pass of all layers costs at `(seq_q, seq_kv)`
@@ -552,5 +840,86 @@ mod tests {
         // 2 requests × (1 prefill chunk + 2 decode tokens) × 4 stages
         assert_eq!(trace.len(), 2 * 3 * 4);
         assert!(trace.iter().all(|slot| slot.end > slot.start));
+        assert_eq!(
+            trace.iter().filter(|t| t.kind == JobKind::Prefill).count(),
+            2 * 4
+        );
+        assert_eq!(
+            trace.iter().filter(|t| t.kind == JobKind::Decode).count(),
+            2 * 2 * 4
+        );
+    }
+
+    fn spec_server(accept: f64, draft_len: usize) -> Server {
+        let picnic = PicnicConfig {
+            spec_decode: crate::config::SpecDecodeConfig {
+                enabled: true,
+                draft_len,
+                acceptance_rate: accept,
+                draft_cost_ratio: 0.2,
+            },
+            ..PicnicConfig::default()
+        };
+        Server::new(ServerConfig {
+            picnic,
+            model: LlamaConfig::tiny(),
+            policy: BatchPolicy::default(),
+        })
+    }
+
+    #[test]
+    fn spec_round_commits_all_tokens_exactly() {
+        let mut s = spec_server(0.7, 4);
+        s.enable_spec_trace();
+        s.submit(32, 11).unwrap();
+        s.run_to_completion().unwrap();
+        assert_eq!(s.metrics.requests.len(), 1);
+        assert_eq!(s.metrics.total_tokens, 11, "never over- or under-commits");
+        let p = s.pipeline_stats();
+        assert!(p.spec_rounds > 0);
+        // every round commits its accepted prefix plus one verify token;
+        // the final token may land through a plain decode fallback
+        assert_eq!(p.spec_committed, p.spec_accepted + p.spec_rounds);
+        assert!(p.spec_committed <= 11);
+        assert_eq!(p.spec_drafted, p.spec_accepted + p.spec_rolled_back);
+        let trace = s.spec_trace().unwrap();
+        assert_eq!(trace.len() as u64, p.spec_rounds);
+        assert!(trace.iter().all(|r| r.committed >= 1));
+    }
+
+    #[test]
+    fn full_acceptance_uses_fewer_rounds_than_tokens() {
+        let mut s = spec_server(1.0, 4);
+        s.submit(32, 20).unwrap();
+        s.run_to_completion().unwrap();
+        let p = s.pipeline_stats();
+        // accept=1.0 commits draft_len+1 per round: 20 tokens in 4 rounds
+        assert_eq!(p.spec_rounds, 4, "5+5+5+5 = 20");
+        assert_eq!(p.spec_rolled_back, 0);
+        assert_eq!(p.spec_committed, 20);
+    }
+
+    #[test]
+    fn zero_acceptance_commits_one_per_round_and_terminates() {
+        let mut s = spec_server(0.0, 4);
+        s.submit(32, 6).unwrap();
+        s.run_to_completion().unwrap();
+        let p = s.pipeline_stats();
+        // rounds while ≥ 2 tokens remain (remaining 6, 5, 4, 3, 2 — the
+        // burst is capped at remaining - 1); the last token plain-decodes
+        assert_eq!(p.spec_rounds, 5, "one verify token per round");
+        assert_eq!(p.spec_accepted, 0);
+        assert_eq!(p.spec_committed, 5);
+        assert_eq!(s.metrics.total_tokens, 6);
+    }
+
+    #[test]
+    fn single_token_requests_skip_speculation() {
+        let mut s = spec_server(1.0, 4);
+        s.submit(16, 1).unwrap();
+        s.run_to_completion().unwrap();
+        assert_eq!(s.metrics.total_tokens, 1);
+        // draft budget is 0 for the last (only) token: plain decode wins
+        assert_eq!(s.pipeline_stats().spec_rounds, 0);
     }
 }

@@ -17,14 +17,30 @@
 //!   analytic model) that regenerates every table and figure in the
 //!   paper's evaluation ([`sim`], [`report`]);
 //! * model zoo and baseline platform models ([`models`], [`baselines`]);
-//! * the serving front-end: request batcher, prefill/decode scheduler,
-//!   metrics ([`coordinator`]);
+//! * the serving front-end: request batcher, the event-driven
+//!   pipeline-parallel scheduler with chunked prefill and speculative
+//!   decoding, per-request metrics ([`coordinator`]);
 //! * the PJRT runtime bridge that loads the AOT-compiled JAX/Pallas golden
 //!   model and holds the functional simulator to its numerics
 //!   ([`runtime`]).
 //!
+//! ## Orientation
+//!
+//! ARCHITECTURE.md (repo root) is the front door: it maps every paper
+//! section to its module, draws the data flow of a request through
+//! prefill chunks → stage pipeline → (speculative) decode, and has a
+//! "where to add X" table for contributors. The serving path in one
+//! breath: [`coordinator::Server`] turns the chiplet chain into per-layer
+//! stage resources, prices jobs through a [`sim::SimBackend`] (analytic
+//! by default, engine-calibrated via [`sim::EngineBackend`]) memoized by
+//! [`mapper::PlanCache`] with power-of-two KV bucketing, charges CCPG
+//! wake latency per stage event through [`chiplet::CcpgTimeline`], and —
+//! with [`config::SpecDecodeConfig`] enabled — decodes speculatively
+//! (draft bursts verified in one batched pass, acceptance-driven
+//! commits, rollback of rejected tails).
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! paper-vs-measured record (including the BENCH_serving.json schema).
 
 pub mod baselines;
 pub mod chiplet;

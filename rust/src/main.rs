@@ -7,8 +7,9 @@
 //! picnic report table2|table3|table4|fig8|fig9|fig10|all
 //! picnic verify [--artifacts DIR]
 //! picnic serve --model tiny --requests 32 --prompt-len 64 --gen-len 16 [--backend engine]
+//!              [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
 //! picnic isa-demo
-//! picnic config-dump
+//! picnic config-dump [--spec-decode …]
 //! ```
 
 use picnic::config::PicnicConfig;
@@ -27,8 +28,14 @@ USAGE:
   picnic report <table2|table3|table4|fig8|fig9|fig10|all>
   picnic verify [--artifacts DIR]
   picnic serve  [--model NAME] [--requests N] [--prompt-len N] [--gen-len N] [--backend analytic|engine]
+                [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
   picnic isa-demo
   picnic config-dump
+
+`--spec-decode KEYS` enables speculative decoding on the serving
+scheduler (keys: draft_len, accept, ratio; all optional). It edits the
+loaded config, so it composes with any subcommand — `picnic config-dump
+--spec-decode draft_len=8` round-trips the resulting config.
 ";
 
 fn main() {
@@ -40,10 +47,14 @@ fn main() {
 
 fn run() -> picnic::Result<()> {
     let args = Args::from_env();
-    let cfg = match args.opt("config") {
+    let mut cfg = match args.opt("config") {
         Some(path) => PicnicConfig::from_json_file(std::path::Path::new(path))?,
         None => PicnicConfig::default(),
     };
+    // --spec-decode edits the loaded config (named keys only — values
+    // from --config survive), so it composes with any subcommand (serve
+    // schedules speculatively; config-dump round-trips).
+    cfg.spec_decode.apply_cli(&args)?;
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args, cfg),
         Some("report") => cmd_report(&args, cfg),
@@ -190,6 +201,12 @@ fn drive_serve<B: SimBackend>(
         p.plan_hits,
         p.ccpg_wakes,
     );
+    if p.spec_rounds > 0 {
+        println!(
+            "spec-decode: {} rounds, {} drafted, {} accepted, {} committed, {} rolled back",
+            p.spec_rounds, p.spec_drafted, p.spec_accepted, p.spec_committed, p.spec_rolled_back,
+        );
+    }
     Ok(())
 }
 

@@ -13,6 +13,33 @@
 //! The net effect: partition/placement/flash-tiling runs O(log max_kv)
 //! times per `seq_q` shape over a whole serving run instead of once per
 //! token.
+//!
+//! ## The interpolation invariant
+//!
+//! The whole scheme is sound because every per-phase cost is affine in
+//! `seq_kv`, so linear interpolation between the two bucket boundaries
+//! reproduces the exact cost up to integer rounding:
+//!
+//! ```
+//! use picnic::config::PicnicConfig;
+//! use picnic::mapper::ScheduleBuilder;
+//! use picnic::models::LlamaConfig;
+//! use picnic::sim::{AnalyticSim, SimBackend};
+//!
+//! let cfg = PicnicConfig::default();
+//! let model = LlamaConfig::tiny();
+//! let sim = AnalyticSim::new(cfg.clone());
+//! let builder = ScheduleBuilder::new(&cfg, &model);
+//! let cost = |kv: usize| -> u64 {
+//!     let plans = builder.plan_all(1, kv).unwrap();
+//!     plans.iter().map(|p| sim.plan_cycles(p)).sum()
+//! };
+//! // a decode step at kv = 96 sits between the 64 and 128 buckets…
+//! let (c64, c96, c128) = (cost(64), cost(96), cost(128));
+//! // …and the midpoint interpolation lands on the exact cost
+//! let interp = c64 + (c128 - c64) * (96 - 64) / (128 - 64);
+//! assert!(interp.abs_diff(c96) <= 1 + c96 / 100, "affine in KV");
+//! ```
 
 use super::schedule::{LayerPlan, ScheduleBuilder};
 use std::collections::HashMap;
@@ -20,6 +47,13 @@ use std::rc::Rc;
 
 /// The (lo, hi) power-of-two bracket around `kv`: `lo ≤ kv ≤ hi`, both
 /// powers of two (equal when `kv` itself is one).
+///
+/// ```
+/// use picnic::mapper::kv_bucket_bounds;
+/// assert_eq!(kv_bucket_bounds(100), (64, 128));
+/// assert_eq!(kv_bucket_bounds(64), (64, 64)); // exact powers collapse
+/// assert_eq!(kv_bucket_bounds(0), (1, 1));    // degenerate input clamps
+/// ```
 pub fn kv_bucket_bounds(kv: usize) -> (usize, usize) {
     let kv = kv.max(1);
     let hi = kv.next_power_of_two();

@@ -1,8 +1,10 @@
 //! System power/energy/area model (paper §IV-D, Table IV).
 //!
 //! Two pieces:
-//! * [`breakdown`] — static per-macro power/area aggregation (Table IV and
-//!   the tile/system roll-ups behind Table II's "Average Power" column);
+//! * `breakdown` (private; re-exported as [`PowerBreakdown`] /
+//!   [`AreaBreakdown`]) — static per-macro power/area aggregation (Table
+//!   IV and the tile/system roll-ups behind Table II's "Average Power"
+//!   column);
 //! * [`energy`]    — a dynamic energy ledger the simulators charge per
 //!   event (SMAC, DMAC, hop, scratchpad access, C2C bit, SCU element), used
 //!   for the efficiency (tokens/J) numbers.

@@ -13,8 +13,33 @@
 //! an *input* to the engine) fall through to the analytic constants, the
 //! same split the calibration tests in rust/tests/test_calibration.rs
 //! exercise.
+//!
+//! ## The contract
+//!
+//! A backend answers exactly two questions about a
+//! [`PhaseOp`](crate::mapper::PhaseOp) — how many cycles it takes
+//! ([`SimBackend::phase_cycles`]) and what dynamic energy it draws
+//! ([`SimBackend::charge_phase`], attributed by
+//! [`EnergyCategory`](crate::power::EnergyCategory) into an
+//! [`EnergyLedger`]). Everything else (per-plan costs, plan execution,
+//! draft-model pricing for speculative decode) derives from those two:
+//!
+//! ```
+//! use picnic::config::PicnicConfig;
+//! use picnic::mapper::PhaseOp;
+//! use picnic::power::EnergyLedger;
+//! use picnic::sim::{AnalyticSim, SimBackend};
+//!
+//! let sim = AnalyticSim::new(PicnicConfig::default());
+//! let phase = PhaseOp::KvAppend { words: 256 };
+//! assert!(sim.phase_cycles(&phase) > 0, "every phase costs cycles");
+//!
+//! let mut ledger = EnergyLedger::new();
+//! SimBackend::charge_phase(&sim, &phase, &mut ledger);
+//! assert!(ledger.total_j() > 0.0, "…and charges energy once");
+//! ```
 
-use crate::config::{PicnicConfig, SystemConfig};
+use crate::config::{PicnicConfig, SpecDecodeConfig, SystemConfig};
 use crate::isa::{Assembler, FirmwareOp, Instruction, Mode, Port, PortSet};
 use crate::mapper::{LayerPlan, PhaseOp};
 use crate::power::EnergyLedger;
@@ -48,6 +73,16 @@ pub trait SimBackend {
             cycles += self.phase_cycles(ph);
         }
         cycles
+    }
+
+    /// Cycles one **draft-model** pass of this layer plan takes: the
+    /// speculative-decode cost hook. The draft model is a proportionally
+    /// smaller network running on the same fabric, so its pass is priced
+    /// at [`SpecDecodeConfig::draft_cost_ratio`] of this backend's own
+    /// target-model cost (the engine-measured backend therefore drafts
+    /// with its *measured* constants too), never below one cycle.
+    fn draft_cycles(&self, plan: &LayerPlan, spec: &SpecDecodeConfig) -> u64 {
+        ((self.plan_cycles(plan) as f64 * spec.draft_cost_ratio).ceil() as u64).max(1)
     }
 }
 
@@ -253,6 +288,30 @@ mod tests {
             m.scu_cycles_per_elem
         );
         assert!(m.scu_drain_cycles >= 0.0);
+    }
+
+    #[test]
+    fn draft_cycles_priced_at_cost_ratio_on_both_backends() {
+        use crate::mapper::ScheduleBuilder;
+        use crate::models::LlamaConfig;
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let plan = b.plan_all(1, 256).unwrap().remove(0);
+        let spec = SpecDecodeConfig {
+            enabled: true,
+            draft_cost_ratio: 0.25,
+            ..SpecDecodeConfig::default()
+        };
+        let analytic = AnalyticSim::new(cfg.clone());
+        let engine = EngineBackend::calibrated(cfg);
+        for (cycles, draft) in [
+            (SimBackend::plan_cycles(&analytic, &plan), analytic.draft_cycles(&plan, &spec)),
+            (engine.plan_cycles(&plan), engine.draft_cycles(&plan, &spec)),
+        ] {
+            assert_eq!(draft, ((cycles as f64 * 0.25).ceil() as u64).max(1));
+            assert!(draft < cycles, "draft pass is cheaper than the target's");
+        }
     }
 
     #[test]

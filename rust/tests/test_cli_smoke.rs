@@ -68,6 +68,63 @@ fn no_args_prints_usage_and_exits_zero() {
 }
 
 #[test]
+fn spec_decode_round_trips_through_config_dump() {
+    let text = run_ok(&[
+        "config-dump",
+        "--spec-decode",
+        "draft_len=3,accept=0.5,ratio=0.25",
+    ]);
+    let j = Json::parse(&text).expect("config-dump output parses");
+    let sd = j.get("spec_decode").expect("spec_decode section");
+    assert_eq!(sd.get("enabled").and_then(Json::as_bool), Some(true));
+    assert_eq!(sd.get("draft_len").and_then(Json::as_usize), Some(3));
+    assert_eq!(sd.get("acceptance_rate").and_then(Json::as_f64), Some(0.5));
+    assert_eq!(sd.get("draft_cost_ratio").and_then(Json::as_f64), Some(0.25));
+    // the dump parses back into the same config (full round trip)
+    let back = picnic::config::PicnicConfig::from_json(&text).expect("round trip");
+    assert!(back.spec_decode.enabled);
+    assert_eq!(back.spec_decode.draft_len, 3);
+    assert!((back.spec_decode.acceptance_rate - 0.5).abs() < 1e-12);
+}
+
+#[test]
+fn spec_decode_invalid_values_are_clean_errors() {
+    for (arg, needle) in [
+        ("draft_len=0", "draft_len"),
+        ("accept=1.5", "acceptance_rate"),
+        ("ratio=0", "draft_cost_ratio"),
+        ("nope=1", "unknown key"),
+    ] {
+        let out = picnic()
+            .args(["config-dump", "--spec-decode", arg])
+            .output()
+            .expect("spawn picnic");
+        assert!(!out.status.success(), "--spec-decode {arg} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(needle), "stderr for {arg:?}: {err}");
+    }
+}
+
+#[test]
+fn serve_with_spec_decode_reports_rounds() {
+    let text = run_ok(&[
+        "serve",
+        "--model",
+        "tiny",
+        "--requests",
+        "4",
+        "--prompt-len",
+        "16",
+        "--gen-len",
+        "4",
+        "--spec-decode",
+        "draft_len=2,accept=0.5",
+    ]);
+    assert!(text.contains("spec-decode"), "spec stats printed: {text}");
+    assert!(text.contains("rounds"), "round counters printed: {text}");
+}
+
+#[test]
 fn unknown_model_is_a_clean_error() {
     let out = picnic()
         .args(["run", "--model", "70b"])

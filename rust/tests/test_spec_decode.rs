@@ -1,0 +1,279 @@
+//! Property and regression tests for speculative decoding on the
+//! event-driven pipeline scheduler:
+//!
+//!  * stage busy intervals never overlap, speculation rounds included —
+//!    a draft burst + verify pass hold a stage as one occupancy;
+//!  * committed tokens per request are strictly monotone across rounds
+//!    and every round commits at least one token;
+//!  * rollback never double-charges energy: the ledger delta over the
+//!    decode phase equals the sum of per-round charges in the spec trace
+//!    (rolled-back tokens are charged to the rounds that re-commit them,
+//!    never twice);
+//!  * acceptance = 1.0 degenerates to ≥ the non-speculative throughput
+//!    (the BENCH_serving.json CI criterion, kept as a test);
+//!  * acceptance = 0.0 never deadlocks — every round still commits the
+//!    verify pass's own token;
+//!  * both `SimBackend` implementations serve speculative schedules.
+
+use picnic::config::{PicnicConfig, SpecDecodeConfig};
+use picnic::coordinator::{BatchPolicy, JobKind, Server, ServerConfig};
+use picnic::models::LlamaConfig;
+use picnic::sim::EngineBackend;
+use picnic::util::Rng;
+
+fn spec_picnic(accept: f64, draft_len: usize) -> PicnicConfig {
+    PicnicConfig {
+        spec_decode: SpecDecodeConfig {
+            enabled: true,
+            draft_len,
+            acceptance_rate: accept,
+            draft_cost_ratio: 0.2,
+        },
+        ..PicnicConfig::default()
+    }
+}
+
+fn server_cfg(picnic: PicnicConfig, model: LlamaConfig, max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        picnic,
+        model,
+        policy: BatchPolicy {
+            max_batch,
+            kv_budget: 1 << 20,
+            ..BatchPolicy::default()
+        },
+    }
+}
+
+fn spec_server(accept: f64, draft_len: usize, max_batch: usize) -> Server {
+    Server::new(server_cfg(
+        spec_picnic(accept, draft_len),
+        LlamaConfig::tiny(),
+        max_batch,
+    ))
+}
+
+/// Stage resources are physical chiplets: their busy windows must never
+/// overlap even when speculation rounds (draft burst + batched verify)
+/// are interleaved with prefill chunks of other requests.
+#[test]
+fn prop_spec_stage_intervals_never_overlap() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(7000 + seed);
+        let accept = [0.0, 0.3, 0.7, 1.0][seed as usize % 4];
+        let draft_len = rng.range_usize(1, 5);
+        let mut s = spec_server(accept, draft_len, rng.range_usize(1, 6));
+        s.enable_stage_trace();
+        let n = rng.range_usize(1, 8);
+        for _ in 0..n {
+            // gen ≥ 2 so every request runs at least one speculation round
+            // (a request's last token always plain-decodes)
+            s.submit(rng.range_usize(1, 300), rng.range_usize(2, 8))
+                .expect("submit");
+        }
+        s.run_to_completion().expect("run");
+        let trace = s.stage_trace().expect("trace enabled");
+        assert!(
+            trace.iter().any(|t| t.kind == JobKind::SpecVerify),
+            "seed {seed}: decode ran through speculation rounds"
+        );
+        let n_stages = s.pipeline_stats().stages;
+        for stage in 0..n_stages {
+            let mut slots: Vec<(u64, u64)> = trace
+                .iter()
+                .filter(|t| t.stage == stage)
+                .map(|t| (t.start, t.end))
+                .collect();
+            slots.sort_unstable();
+            for w in slots.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0,
+                    "seed {seed} stage {stage}: overlap {:?} vs {:?}",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance-driven commitment is strictly monotone: each round commits
+/// its accepted prefix + 1 verify token, running totals only grow,
+/// completions only move forward, and the rounds' final total reaches the
+/// requested generation length (exactly, or one short when the last token
+/// falls back to a plain decode pass).
+#[test]
+fn prop_spec_commits_strictly_monotone() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(8000 + seed);
+        let accept = [0.0, 0.5, 0.9, 1.0][seed as usize % 4];
+        let mut s = spec_server(accept, rng.range_usize(1, 6), rng.range_usize(1, 4));
+        s.enable_spec_trace();
+        let n = rng.range_usize(1, 6);
+        let mut gen_of = std::collections::HashMap::new();
+        for _ in 0..n {
+            let gen = rng.range_usize(2, 12);
+            let id = s.submit(rng.range_usize(1, 128), gen).expect("submit");
+            gen_of.insert(id, gen);
+        }
+        s.run_to_completion().expect("run");
+        let trace = s.spec_trace().expect("trace enabled");
+        for (&id, &gen) in &gen_of {
+            let rounds: Vec<_> = trace.iter().filter(|r| r.request == id).collect();
+            assert!(!rounds.is_empty(), "seed {seed}: request {id} never sped");
+            let mut last_total = 0usize;
+            let mut last_completion = 0u64;
+            for r in &rounds {
+                assert_eq!(
+                    r.committed,
+                    r.accepted + 1,
+                    "seed {seed}: accepted prefix + the verify token"
+                );
+                assert_eq!(
+                    r.total_committed,
+                    last_total + r.committed,
+                    "seed {seed}: totals are the running sum of commits"
+                );
+                assert!(
+                    r.total_committed > last_total,
+                    "seed {seed}: commit total not strictly monotone"
+                );
+                assert!(
+                    r.completion > last_completion,
+                    "seed {seed}: round completions not monotone"
+                );
+                assert!(r.accepted <= r.drafted, "seed {seed}");
+                last_total = r.total_committed;
+                last_completion = r.completion;
+            }
+            assert!(
+                last_total == gen || last_total == gen - 1,
+                "seed {seed}: rounds committed {last_total} of {gen} (the last \
+                 token may plain-decode)"
+            );
+        }
+        assert_eq!(
+            s.metrics.total_tokens,
+            gen_of.values().map(|&g| g as u64).sum::<u64>(),
+            "seed {seed}: every token served"
+        );
+    }
+}
+
+/// Rollback never double-charges energy: a scheduling event that runs a
+/// speculation round charges the ledger exactly the round's recorded
+/// draft-burst + verify energy and nothing else — tokens that were
+/// rolled back and later re-generated appear in later rounds' charges,
+/// never twice.
+#[test]
+fn rollback_never_double_charges_energy() {
+    let mut s = spec_server(0.4, 4, 1);
+    s.enable_spec_trace();
+    s.submit(64, 12).expect("submit");
+    let mut rounds_seen = 0usize;
+    loop {
+        let before_j = s.ledger.total_j();
+        let progressed = s.step().expect("step");
+        let trace_len = s.spec_trace().unwrap().len();
+        if trace_len > rounds_seen {
+            assert_eq!(trace_len, rounds_seen + 1, "one round per event");
+            let round = s.spec_trace().unwrap()[trace_len - 1];
+            let step_j = s.ledger.total_j() - before_j;
+            assert!(round.energy_j > 0.0, "round {trace_len} charged energy");
+            assert!(
+                (step_j - round.energy_j).abs() <= 1e-12 * step_j.max(1e-30),
+                "round {trace_len}: event charged {step_j} J but recorded \
+                 {} J — extra or double charges",
+                round.energy_j
+            );
+            rounds_seen = trace_len;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    assert!(rounds_seen > 0, "request ran speculation rounds");
+    // and the commits add up: one verify token per round plus the
+    // accepted drafts; the final token may plain-decode
+    let p = s.pipeline_stats();
+    assert_eq!(p.spec_committed, p.spec_accepted + p.spec_rounds);
+    assert_eq!(p.spec_drafted, p.spec_accepted + p.spec_rolled_back);
+    assert_eq!(s.metrics.total_tokens, 12);
+}
+
+/// acceptance = 1.0 must degenerate to at least the non-speculative
+/// throughput: every round commits draft_len + 1 tokens for less than
+/// draft_len + 1 decode passes of work (the CI criterion on
+/// BENCH_serving.json, pinned here so it fails without bench artifacts).
+#[test]
+fn accept1_throughput_at_least_nonspec() {
+    let model = LlamaConfig::llama32_1b;
+    let (batch, prompt, gen) = (8usize, 256usize, 32usize);
+    let run = |picnic: PicnicConfig| {
+        let mut s = Server::new(server_cfg(picnic, model(), batch));
+        for _ in 0..batch {
+            s.submit(prompt, gen).expect("submit");
+        }
+        s.run_to_completion().expect("run");
+        s.metrics.throughput_tokens_per_s()
+    };
+    let nonspec = run(PicnicConfig::default());
+    let spec = run(spec_picnic(1.0, 4));
+    assert!(
+        spec >= nonspec,
+        "accept=1.0 spec decode {spec:.1} tok/s < non-speculative {nonspec:.1} tok/s"
+    );
+}
+
+/// acceptance = 0.0 must never deadlock: the verify pass's own token
+/// still commits every round, so every request terminates.
+#[test]
+fn accept0_terminates_without_deadlock() {
+    let mut s = spec_server(0.0, 4, 4);
+    for _ in 0..4 {
+        s.submit(48, 6).expect("submit");
+    }
+    s.run_to_completion().expect("run");
+    assert_eq!(s.metrics.requests.len(), 4);
+    assert_eq!(s.metrics.total_tokens, 24);
+    let p = s.pipeline_stats();
+    assert_eq!(p.spec_accepted, 0);
+    // per request: rounds while ≥ 2 tokens remain (5 of the 6), then the
+    // last token falls back to a plain decode pass
+    assert_eq!(p.spec_committed, 20, "one verify token per round");
+    assert_eq!(p.spec_rounds, 20);
+}
+
+/// The speculative schedule runs unchanged over the engine-measured
+/// backend, with the same invariants (no stage overlap, exact token
+/// accounting, energy attributed).
+#[test]
+fn engine_backend_serves_speculative_schedules() {
+    let backend = EngineBackend::calibrated(PicnicConfig::default());
+    let cfg = server_cfg(spec_picnic(0.7, 3), LlamaConfig::tiny(), 4);
+    let mut s = Server::with_backend(cfg, backend);
+    s.enable_stage_trace();
+    for _ in 0..4 {
+        s.submit(48, 8).expect("submit");
+    }
+    s.run_to_completion().expect("run");
+    assert_eq!(s.metrics.requests.len(), 4);
+    assert_eq!(s.metrics.total_tokens, 32);
+    let p = s.pipeline_stats();
+    assert!(p.spec_rounds > 0);
+    assert_eq!(p.spec_committed, p.spec_accepted + p.spec_rounds);
+    assert!(s.ledger.total_j() > 0.0);
+    let trace = s.stage_trace().unwrap();
+    let n_stages = p.stages;
+    for stage in 0..n_stages {
+        let mut slots: Vec<(u64, u64)> = trace
+            .iter()
+            .filter(|t| t.stage == stage)
+            .map(|t| (t.start, t.end))
+            .collect();
+        slots.sort_unstable();
+        for w in slots.windows(2) {
+            assert!(w[0].1 <= w[1].0, "stage {stage}: overlap {:?} vs {:?}", w[0], w[1]);
+        }
+    }
+}
