@@ -4,15 +4,23 @@
 //! prefill); we report throughput, TTFT and tail latency — the run
 //! recorded in EXPERIMENTS.md §E2E.
 //!
+//! With `--tenants` the chiplet chain is sharded between serving
+//! tenants: the driver submits a **symmetric** workload (each drawn
+//! request shape goes to every tenant in turn) so the per-tenant
+//! throughputs and Jain's fairness index it reports reflect the
+//! scheduler, not workload luck.
+//!
 //! Run: `cargo run --release --example llama_serve -- [--model 1b]
 //!       [--requests 64] [--backend analytic|engine]
-//!       [--spec-decode draft_len=4,accept=0.7,ratio=0.2]`
+//!       [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
+//!       [--tenants a:w=1:kv=8192,b:w=1:kv=8192] [--json]`
 
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{BatchPolicy, Server, ServerConfig};
 use picnic::models::LlamaConfig;
 use picnic::sim::{EngineBackend, SimBackend};
 use picnic::util::args::Args;
+use picnic::util::json::{self, Json};
 use picnic::util::Rng;
 
 fn main() -> picnic::Result<()> {
@@ -20,15 +28,19 @@ fn main() -> picnic::Result<()> {
     let model_name = args.opt_or("model", "1b");
     let n_requests = args.opt_usize("requests", 64)?;
     let backend_name = args.opt_or("backend", "analytic");
+    let as_json = args.flag("json");
     let model = LlamaConfig::by_name(&model_name)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
-    println!(
-        "serving {} with {n_requests} synthetic requests on the {backend_name} backend…",
-        model.name
-    );
+    if !as_json {
+        println!(
+            "serving {} with {n_requests} synthetic requests on the {backend_name} backend…",
+            model.name
+        );
+    }
 
     let mut picnic_cfg = PicnicConfig::default().with_ccpg(true);
     picnic_cfg.spec_decode.apply_cli(&args)?;
+    picnic_cfg.tenants.apply_cli(&args)?;
     let cfg = ServerConfig {
         picnic: picnic_cfg,
         model,
@@ -41,28 +53,47 @@ fn main() -> picnic::Result<()> {
     match backend_name.as_str() {
         "engine" => {
             let backend = EngineBackend::calibrated(cfg.picnic.clone());
-            drive(Server::with_backend(cfg, backend), n_requests)
+            drive(Server::with_backend(cfg, backend), n_requests, as_json)
         }
-        "analytic" => drive(Server::new(cfg), n_requests),
+        "analytic" => drive(Server::new(cfg), n_requests, as_json),
         other => anyhow::bail!("unknown backend {other} (analytic|engine)"),
     }
 }
 
-fn drive<B: SimBackend>(mut server: Server<B>, n_requests: usize) -> picnic::Result<()> {
+fn drive<B: SimBackend>(
+    mut server: Server<B>,
+    n_requests: usize,
+    as_json: bool,
+) -> picnic::Result<()> {
     // Bursty workload: exponential-ish prompt lengths, short generations —
-    // a chat-style trace.
+    // a chat-style trace. In multi-tenant mode every drawn shape is
+    // submitted once per tenant (round-robin), keeping the load symmetric;
+    // the request count rounds up to a whole number of rounds so no tenant
+    // carries a truncated final round (a spurious fairness skew otherwise).
     let mut rng = Rng::seed_from_u64(7);
+    let n_tenants = server.n_tenants();
+    let n_requests = n_requests.div_ceil(n_tenants) * n_tenants;
     let mut submitted = 0usize;
     let mut rejected = 0usize;
     while submitted < n_requests {
         let prompt = 32 + rng.below(481) as usize; // 32..512
         let gen = 8 + rng.below(57) as usize; // 8..64
-        match server.submit(prompt, gen) {
-            Some(_) => submitted += 1,
-            None => {
-                rejected += 1;
-                // drain a bit before retrying (backpressure)
-                server.step()?;
+        for tenant in 0..n_tenants {
+            if submitted >= n_requests {
+                break;
+            }
+            loop {
+                match server.submit_for(tenant, prompt, gen) {
+                    Some(_) => {
+                        submitted += 1;
+                        break;
+                    }
+                    None => {
+                        rejected += 1;
+                        // drain a bit before retrying (backpressure)
+                        server.step()?;
+                    }
+                }
             }
         }
     }
@@ -70,6 +101,43 @@ fn drive<B: SimBackend>(mut server: Server<B>, n_requests: usize) -> picnic::Res
 
     let m = &server.metrics;
     let p = server.pipeline_stats();
+    let tenants = server.tenant_stats();
+    assert_eq!(m.requests.len(), n_requests, "all requests must complete");
+
+    if as_json {
+        let per_tenant: Vec<Json> = tenants
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("name", json::s(&t.name)),
+                    ("weight", json::num(t.weight)),
+                    ("dedicated", Json::Bool(t.dedicated)),
+                    ("requests", json::num(t.requests as f64)),
+                    ("tokens", json::num(t.tokens as f64)),
+                    ("tokens_per_s", json::num(t.tokens_per_s)),
+                    ("mean_ttft_s", json::num(t.mean_ttft_s)),
+                    ("p50_total_s", json::num(t.p50_total_s)),
+                    ("p99_total_s", json::num(t.p99_total_s)),
+                    ("energy_j", json::num(t.energy_j)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("requests", json::num(m.requests.len() as f64)),
+            ("total_tokens", json::num(m.total_tokens as f64)),
+            ("wall_s", json::num(m.wall_s)),
+            ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
+            ("mean_ttft_s", json::num(m.mean_ttft_s())),
+            ("p99_total_s", json::num(m.p99_total_s())),
+            ("stages", json::num(p.stages as f64)),
+            ("stage_sets", json::num(p.stage_sets as f64)),
+            ("jain_index", json::num(server.fairness_index())),
+            ("tenants", Json::Arr(per_tenant)),
+        ]);
+        println!("{doc}");
+        return Ok(());
+    }
+
     println!("---- results (accelerator-clock time) ----");
     println!("backend            : {}", server.backend().name());
     println!("requests completed : {}", m.requests.len());
@@ -80,7 +148,7 @@ fn drive<B: SimBackend>(mut server: Server<B>, n_requests: usize) -> picnic::Res
     println!("mean TTFT          : {:.3} ms", 1e3 * m.mean_ttft_s());
     println!("p99 latency        : {:.3} ms", 1e3 * m.p99_total_s());
     println!("---- pipeline ----");
-    println!("stages             : {}", p.stages);
+    println!("stages             : {} × {} set(s)", p.stages, p.stage_sets);
     println!(
         "plan cache         : {} builds, {} hits",
         p.plan_builds, p.plan_hits
@@ -99,7 +167,13 @@ fn drive<B: SimBackend>(mut server: Server<B>, n_requests: usize) -> picnic::Res
             p.spec_rolled_back
         );
     }
-    assert_eq!(m.requests.len(), n_requests, "all requests must complete");
+    if tenants.len() > 1 {
+        println!("---- tenants ----");
+        for t in &tenants {
+            println!("{}", t.report_row());
+        }
+        println!("jain fairness index: {:.4}", server.fairness_index());
+    }
     println!("llama_serve OK");
     Ok(())
 }

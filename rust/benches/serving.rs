@@ -1,21 +1,26 @@
 //! Bench: the event-driven pipeline-parallel serving stack — simulated
 //! decode throughput vs. batch size at a fixed model, plus host-side
 //! timing of the scheduler itself, plus a **speculative-decode
-//! acceptance-rate sweep** at the largest batch. Dumps
-//! `BENCH_serving.json` (schema 2 — see EXPERIMENTS.md §BENCH_serving
-//! schema for the field-by-field contract): one `points` entry per batch
-//! size with simulated tokens/s, the serialized PR-2 reference, TTFT and
-//! p99; and a `spec` block with one entry per acceptance rate next to the
-//! non-speculative batch-8 reference. CI validates batch-8 > 2× batch-1
-//! and spec acceptance=1.0 ≥ the non-speculative reference, then archives
-//! the file as the `BENCH_serving` artifact.
+//! acceptance-rate sweep** at the largest batch, plus a **multi-tenant
+//! sweep** (1 vs 2 vs 4 equal-weight tenants, shared vs dedicated
+//! spans, symmetric workload). Dumps `BENCH_serving.json` (schema 3 —
+//! see EXPERIMENTS.md §BENCH_serving schema for the field-by-field
+//! contract): one `points` entry per batch size with simulated
+//! tokens/s, the serialized PR-2 reference, TTFT and p99; a `spec`
+//! block with one entry per acceptance rate next to the non-speculative
+//! batch-8 reference; and a `tenancy` block with per-tenant throughputs
+//! and Jain's fairness index per configuration. CI validates batch-8 >
+//! 2× batch-1, spec acceptance=1.0 ≥ the non-speculative reference, and
+//! equal-weight 2-tenant fairness (Jain ≥ 0.9 on the symmetric
+//! workload), then archives the file as the `BENCH_serving` artifact.
 //! Run: `cargo bench --bench serving`
 
 mod harness;
 
-use picnic::config::{PicnicConfig, SpecDecodeConfig};
+use picnic::config::{PicnicConfig, SpecDecodeConfig, TenantSpec, TenantsConfig};
 use picnic::coordinator::{
     serialized_workload_cycles, BatchPolicy, Metrics, PipelineStats, Server, ServerConfig,
+    TenantStats,
 };
 use picnic::models::LlamaConfig;
 use picnic::sim::AnalyticSim;
@@ -29,6 +34,9 @@ const GEN: usize = 32;
 const SPEC_BATCH: usize = 8;
 const SPEC_DRAFT_LEN: usize = 4;
 const SPEC_COST_RATIO: f64 = 0.2;
+/// Multi-tenant sweep shape: total concurrent requests stays at the
+/// largest batch row while the tenant count and span mode sweep.
+const TENANT_REQUESTS: usize = 8;
 
 fn policy(batch: usize) -> BatchPolicy {
     BatchPolicy {
@@ -49,6 +57,39 @@ fn run_once(batch: usize) -> Metrics {
     }
     s.run_to_completion().expect("run");
     s.metrics.clone()
+}
+
+/// One tenancy-sweep run: `n_tenants` equal-weight tenants (all shared
+/// or all dedicated), `TENANT_REQUESTS` identical requests spread
+/// round-robin — a symmetric workload, so any throughput skew is the
+/// scheduler's doing.
+fn run_tenancy_once(n_tenants: usize, dedicated: bool) -> (Metrics, Vec<TenantStats>, f64) {
+    let tenants = TenantsConfig {
+        tenants: (0..n_tenants)
+            .map(|i| TenantSpec {
+                name: format!("t{i}"),
+                weight: 1.0,
+                kv_budget: 0,
+                dedicated,
+            })
+            .collect(),
+    };
+    let picnic = PicnicConfig {
+        tenants,
+        ..PicnicConfig::default()
+    };
+    let mut s = Server::new(ServerConfig {
+        picnic,
+        model: LlamaConfig::by_name(MODEL).expect("model"),
+        policy: policy(TENANT_REQUESTS),
+    });
+    for i in 0..TENANT_REQUESTS {
+        s.submit_for(i % n_tenants, PROMPT, GEN).expect("submit");
+    }
+    s.run_to_completion().expect("run");
+    let stats = s.tenant_stats();
+    let jain = s.fairness_index();
+    (s.metrics.clone(), stats, jain)
 }
 
 fn run_spec_once(batch: usize, acceptance: f64) -> (Metrics, PipelineStats) {
@@ -148,10 +189,54 @@ fn main() {
         ]));
     }
 
+    harness::section("multi-tenant sharding: tenants × span mode (symmetric workload)");
+    println!("  {TENANT_REQUESTS} identical requests round-robined across equal-weight tenants");
+    let mut tenancy_points: Vec<Json> = Vec::new();
+    for &n_tenants in &[1usize, 2, 4] {
+        for &dedicated in &[false, true] {
+            let (m, stats, jain) = run_tenancy_once(n_tenants, dedicated);
+            let mode = if dedicated { "dedicated" } else { "shared" };
+            println!(
+                "  {n_tenants} tenant(s) {mode:<9}: {:>8.1} tokens/s aggregate   jain {jain:.4}   \
+                 per-tenant [{}]",
+                m.throughput_tokens_per_s(),
+                stats
+                    .iter()
+                    .map(|t| format!("{:.1}", t.tokens_per_s))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            );
+            let per_tenant: Vec<Json> = stats
+                .iter()
+                .map(|t| {
+                    json::obj(vec![
+                        ("name", json::s(&t.name)),
+                        ("requests", json::num(t.requests as f64)),
+                        ("tokens", json::num(t.tokens as f64)),
+                        ("tokens_per_s", json::num(t.tokens_per_s)),
+                        ("p50_total_s", json::num(t.p50_total_s)),
+                        ("p99_total_s", json::num(t.p99_total_s)),
+                        ("energy_j", json::num(t.energy_j)),
+                    ])
+                })
+                .collect();
+            tenancy_points.push(json::obj(vec![
+                ("tenants", json::num(n_tenants as f64)),
+                ("mode", json::s(mode)),
+                ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
+                ("mean_ttft_s", json::num(m.mean_ttft_s())),
+                ("p99_total_s", json::num(m.p99_total_s())),
+                ("jain_index", json::num(jain)),
+                ("per_tenant", Json::Arr(per_tenant)),
+            ]));
+        }
+    }
+
     let n_points = points.len();
     let n_spec = spec_points.len();
+    let n_tenancy = tenancy_points.len();
     let doc = json::obj(vec![
-        ("schema", json::num(2.0)),
+        ("schema", json::num(3.0)),
         ("model", json::s(MODEL)),
         ("prompt_len", json::num(PROMPT as f64)),
         ("gen_len", json::num(GEN as f64)),
@@ -166,7 +251,17 @@ fn main() {
                 ("points", Json::Arr(spec_points)),
             ]),
         ),
+        (
+            "tenancy",
+            json::obj(vec![
+                ("requests", json::num(TENANT_REQUESTS as f64)),
+                ("points", Json::Arr(tenancy_points)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serving.json", format!("{doc}\n")).expect("write serving report");
-    println!("\nwrote BENCH_serving.json ({n_points} batch points, {n_spec} spec points)");
+    println!(
+        "\nwrote BENCH_serving.json ({n_points} batch points, {n_spec} spec points, \
+         {n_tenancy} tenancy points)"
+    );
 }

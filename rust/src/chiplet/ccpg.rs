@@ -33,6 +33,18 @@ pub struct CcpgStats {
     pub wake_stall_cycles: u64,
 }
 
+impl CcpgStats {
+    /// Counters accumulated since an `earlier` snapshot of the same
+    /// controller — the multi-tenant server brackets each stage walk with
+    /// snapshots to attribute wakes to the tenant whose job paid them.
+    pub fn since(&self, earlier: &CcpgStats) -> CcpgStats {
+        CcpgStats {
+            wakes: self.wakes - earlier.wakes,
+            wake_stall_cycles: self.wake_stall_cycles - earlier.wake_stall_cycles,
+        }
+    }
+}
+
 /// The CCPG controller: owns all clusters and walks the active window
 /// across them as execution proceeds layer-by-layer.
 #[derive(Debug)]
@@ -365,6 +377,18 @@ mod tests {
         assert_eq!(t.occupy(0, 0, 100), 0);
         assert_eq!(t.occupy(9, 1_000_000, 1), 0);
         assert_eq!(t.stats.wakes, 0);
+    }
+
+    #[test]
+    fn stats_since_snapshot_subtracts() {
+        let mut t = timeline(16, true);
+        let wake = CcpgConfig::default().wake_latency_cycles;
+        t.occupy(0, 0, 100);
+        let snap = t.stats;
+        t.occupy(15, 10, 100); // second cluster wakes inside the window
+        let d = t.stats.since(&snap);
+        assert_eq!(d.wakes, 1);
+        assert_eq!(d.wake_stall_cycles, wake);
     }
 
     #[test]

@@ -361,6 +361,182 @@ impl SpecDecodeConfig {
     }
 }
 
+/// One serving tenant for multi-tenant chiplet sharding (ARCHITECTURE.md
+/// §Multi-tenancy; implemented by `coordinator::Batcher` admission lanes
+/// and the `coordinator::Server` stage maps).
+///
+/// The paper's CCPG scheme (§II-E) makes the chiplet chain naturally
+/// partitionable — clusters sleep and wake independently — so the serving
+/// layer can shard it: a tenant either **time-multiplexes the shared
+/// stage span** (the default) or, with `dedicated`, pins its layers onto
+/// a **disjoint chiplet range** with its own private pipeline of stage
+/// resources. Admission reserves `prompt + max_new_tokens` KV tokens per
+/// request against the owning tenant's `kv_budget`, and the scheduler
+/// breaks release-cycle ties by weighted-fair service (`weight`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant name: unique, `[A-Za-z0-9_-]+` (keeps the CLI shorthand and
+    /// the JSON/bench artifacts unambiguous).
+    pub name: String,
+    /// Weighted-fair share of scheduler ties (> 0). A weight-2 tenant
+    /// receives twice the service of a weight-1 tenant under contention.
+    pub weight: f64,
+    /// KV tokens this tenant may hold reserved concurrently (admission
+    /// reserves `prompt + max_new_tokens` per request — the worst-case
+    /// growth, which also covers speculative-decode draft bursts). 0 =
+    /// no per-tenant cap; the global `BatchPolicy::kv_budget` still
+    /// applies.
+    pub kv_budget: usize,
+    /// Pin this tenant's layers to a dedicated, disjoint chiplet range:
+    /// a private stage pipeline instead of time-multiplexing the shared
+    /// span. Buys isolation (no cross-tenant stage contention) at the
+    /// cost of deploying a full extra copy of the model's tiles.
+    pub dedicated: bool,
+}
+
+impl TenantSpec {
+    /// The implicit tenant of single-tenant mode: weight 1, no per-tenant
+    /// KV cap, time-multiplexing the (whole) shared span.
+    pub fn solo() -> TenantSpec {
+        TenantSpec {
+            name: "default".to_string(),
+            weight: 1.0,
+            kv_budget: 0,
+            dedicated: false,
+        }
+    }
+}
+
+/// The serving tenant set. Empty (the default) means single-tenant mode:
+/// one implicit [`TenantSpec::solo`] tenant owns the whole chain and the
+/// whole `BatchPolicy::kv_budget`.
+///
+/// Validation rejects duplicate or malformed names and non-positive
+/// weights:
+///
+/// ```
+/// use picnic::config::TenantsConfig;
+///
+/// let t = TenantsConfig::parse_cli("a:w=2:kv=8192,b:w=1").unwrap();
+/// assert_eq!(t.tenants.len(), 2);
+/// assert!((t.tenants[0].weight - 2.0).abs() < 1e-12);
+/// assert_eq!(t.tenants[0].kv_budget, 8192);
+/// assert_eq!(t.tenants[1].kv_budget, 0, "no per-tenant cap by default");
+///
+/// // duplicate names, zero weights and malformed names are rejected
+/// assert!(TenantsConfig::parse_cli("a,a").is_err());
+/// assert!(TenantsConfig::parse_cli("a:w=0").is_err());
+/// assert!(TenantsConfig::parse_cli("bad name").is_err());
+/// ```
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenantsConfig {
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenantsConfig {
+    /// True when more than one tenant is configured.
+    pub fn is_multi(&self) -> bool {
+        self.tenants.len() > 1
+    }
+
+    /// The effective tenant list: the configured tenants, or the single
+    /// implicit [`TenantSpec::solo`] tenant when none are configured.
+    pub fn effective(&self) -> Vec<TenantSpec> {
+        if self.tenants.is_empty() {
+            vec![TenantSpec::solo()]
+        } else {
+            self.tenants.clone()
+        }
+    }
+
+    /// Number of effective tenants (≥ 1).
+    pub fn n_effective(&self) -> usize {
+        self.tenants.len().max(1)
+    }
+
+    /// Reject duplicate/malformed names and non-positive weights with a
+    /// message naming the offending tenant.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, t) in self.tenants.iter().enumerate() {
+            anyhow::ensure!(
+                !t.name.is_empty()
+                    && t.name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+                "tenants[{i}].name {:?} must be non-empty [A-Za-z0-9_-]+",
+                t.name
+            );
+            anyhow::ensure!(
+                t.weight > 0.0 && t.weight.is_finite(),
+                "tenant {:?}: weight must be > 0 (got {})",
+                t.name,
+                t.weight
+            );
+            anyhow::ensure!(
+                self.tenants[..i].iter().all(|p| p.name != t.name),
+                "tenant {:?} declared twice",
+                t.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Apply the `--tenants` CLI surface onto an already-loaded config
+    /// (shared by `picnic` and `examples/llama_serve.rs`):
+    /// `--tenants a:w=2:kv=8192,b:w=1` replaces the loaded tenant list.
+    pub fn apply_cli(&mut self, args: &crate::util::args::Args) -> crate::Result<()> {
+        if let Some(text) = args.opt("tenants") {
+            *self = TenantsConfig::parse_cli(text)?;
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI shorthand: comma-separated tenants, each
+    /// `name[:w=WEIGHT][:kv=TOKENS][:dedicated]` (attribute order free;
+    /// omitted attributes default to weight 1, no per-tenant KV cap,
+    /// shared span). The result is validated.
+    pub fn parse_cli(text: &str) -> crate::Result<TenantsConfig> {
+        let mut tenants = Vec::new();
+        for part in text.split(',').filter(|p| !p.trim().is_empty()) {
+            let mut fields = part.trim().split(':');
+            let name = fields.next().unwrap_or("").trim().to_string();
+            let mut spec = TenantSpec {
+                name,
+                ..TenantSpec::solo()
+            };
+            for attr in fields {
+                let attr = attr.trim();
+                if attr == "dedicated" || attr == "ded" {
+                    spec.dedicated = true;
+                    continue;
+                }
+                let (k, v) = attr.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("--tenants: expected key=value, got {attr:?}")
+                })?;
+                match (k.trim(), v.trim()) {
+                    ("w", v) | ("weight", v) => {
+                        spec.weight = v
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--tenants weight {v:?}: {e}"))?
+                    }
+                    ("kv", v) | ("kv_budget", v) => {
+                        spec.kv_budget = v
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--tenants kv {v:?}: {e}"))?
+                    }
+                    (other, _) => {
+                        anyhow::bail!("--tenants: unknown key {other:?} (w|kv|dedicated)")
+                    }
+                }
+            }
+            tenants.push(spec);
+        }
+        let cfg = TenantsConfig { tenants };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Calibrated per-operation cycle costs for the analytic model. These are
 /// *derived* constants: `sim::calibrate` measures them on the detailed
 /// cycle engine; the defaults are the values so obtained on the default
@@ -409,6 +585,7 @@ pub struct PicnicConfig {
     pub ccpg: CcpgConfig,
     pub timing: TimingConfig,
     pub spec_decode: SpecDecodeConfig,
+    pub tenants: TenantsConfig,
 }
 
 impl PicnicConfig {
@@ -482,6 +659,22 @@ impl PicnicConfig {
         // Reject out-of-range speculative-decode parameters here rather
         // than deep in the scheduler (clear error at the config boundary).
         c.spec_decode.validate()?;
+        if let Some(arr) = j.get("tenants").and_then(Json::as_arr) {
+            c.tenants.tenants = arr
+                .iter()
+                .map(|e| TenantSpec {
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("tenant")
+                        .to_string(),
+                    weight: e.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
+                    kv_budget: e.get("kv_budget").and_then(Json::as_usize).unwrap_or(0),
+                    dedicated: e.get("dedicated").and_then(Json::as_bool).unwrap_or(false),
+                })
+                .collect();
+        }
+        c.tenants.validate()?;
         if let Some(t) = j.get("timing") {
             c.timing.xbar_cycles = int(t, "xbar_cycles", c.timing.xbar_cycles as usize) as u64;
             c.timing.hop_cycles = int(t, "hop_cycles", c.timing.hop_cycles as usize) as u64;
@@ -500,8 +693,19 @@ impl PicnicConfig {
     }
 
     pub fn to_json(&self) -> String {
+        let tenants: Vec<String> = self
+            .tenants
+            .tenants
+            .iter()
+            .map(|t| {
+                format!(
+                    "{{\"name\": \"{}\", \"weight\": {}, \"kv_budget\": {}, \"dedicated\": {}}}",
+                    t.name, t.weight, t.kv_budget, t.dedicated
+                )
+            })
+            .collect();
         format!(
-            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}}\n}}\n",
+            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}},\n  \"tenants\": [{}]\n}}\n",
             self.system.bit_width,
             self.system.frequency_hz,
             self.system.ipcn_dim,
@@ -536,6 +740,7 @@ impl PicnicConfig {
             self.spec_decode.draft_len,
             self.spec_decode.acceptance_rate,
             self.spec_decode.draft_cost_ratio,
+            tenants.join(", "),
         )
     }
 }
@@ -652,6 +857,75 @@ mod tests {
         assert!(SpecDecodeConfig::parse_cli("accept=2.0").is_err());
         assert!(SpecDecodeConfig::parse_cli("bogus=1").is_err());
         assert!(SpecDecodeConfig::parse_cli("draft_len").is_err());
+    }
+
+    #[test]
+    fn tenants_json_roundtrip() {
+        let c = PicnicConfig {
+            tenants: TenantsConfig {
+                tenants: vec![
+                    TenantSpec {
+                        name: "alpha".to_string(),
+                        weight: 2.0,
+                        kv_budget: 8192,
+                        dedicated: false,
+                    },
+                    TenantSpec {
+                        name: "beta".to_string(),
+                        weight: 1.0,
+                        kv_budget: 0,
+                        dedicated: true,
+                    },
+                ],
+            },
+            ..PicnicConfig::default()
+        };
+        let back = PicnicConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.tenants.tenants[1].name, "beta");
+        assert!(back.tenants.tenants[1].dedicated);
+        // empty tenant list round-trips to single-tenant mode
+        let solo = PicnicConfig::from_json(&PicnicConfig::default().to_json()).unwrap();
+        assert!(solo.tenants.tenants.is_empty());
+        assert_eq!(solo.tenants.n_effective(), 1);
+        assert_eq!(solo.tenants.effective()[0].name, "default");
+    }
+
+    #[test]
+    fn tenants_invalid_values_rejected() {
+        for (json, needle) in [
+            (r#"{"tenants": [{"name": "a", "weight": 0}]}"#, "weight"),
+            (r#"{"tenants": [{"name": "a"}, {"name": "a"}]}"#, "twice"),
+            (r#"{"tenants": [{"name": "a b"}]}"#, "name"),
+        ] {
+            let err = PicnicConfig::from_json(json).unwrap_err();
+            assert!(
+                err.to_string().contains(needle),
+                "error for {json} must mention {needle}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn tenants_cli_shorthand() {
+        let t = TenantsConfig::parse_cli("a:w=2:kv=8192,b:w=1,c:dedicated:kv=4096").unwrap();
+        assert_eq!(t.tenants.len(), 3);
+        assert_eq!(t.tenants[0].name, "a");
+        assert!((t.tenants[0].weight - 2.0).abs() < 1e-12);
+        assert_eq!(t.tenants[0].kv_budget, 8192);
+        assert!(!t.tenants[0].dedicated);
+        assert_eq!(t.tenants[1].kv_budget, 0, "kv cap optional");
+        assert!(t.tenants[2].dedicated);
+        assert_eq!(t.tenants[2].kv_budget, 4096);
+        assert!(t.is_multi());
+        // malformed attributes are clear errors
+        assert!(TenantsConfig::parse_cli("a:nope=1").is_err());
+        assert!(TenantsConfig::parse_cli("a:w=zero").is_err());
+        assert!(TenantsConfig::parse_cli("a:w").is_err());
+        // empty string = single-tenant mode
+        let solo = TenantsConfig::parse_cli("").unwrap();
+        assert!(solo.tenants.is_empty());
+        assert!(!solo.is_multi());
     }
 
     #[test]

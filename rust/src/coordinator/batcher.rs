@@ -1,13 +1,20 @@
-//! Batch formation: FCFS admission with a decode-priority policy.
+//! Batch formation: per-tenant admission lanes with KV reservations,
+//! under a global batch budget.
 //!
-//! Invariants (proptest-checked in rust/tests/test_coordinator_prop.rs):
+//! Invariants (proptest-checked in rust/tests/test_coordinator_prop.rs
+//! and rust/tests/test_multi_tenant.rs):
 //! * no request is ever dropped or duplicated;
 //! * the batch never exceeds `max_batch`;
-//! * aggregate KV length in a batch never exceeds `kv_budget` tokens
-//!   (the distributed-scratchpad capacity of the K/V channel regions);
+//! * aggregate KV reserved by in-flight requests never exceeds
+//!   `kv_budget` tokens (the distributed-scratchpad capacity of the K/V
+//!   channel regions);
+//! * each tenant's reserved KV never exceeds its own
+//!   [`TenantSpec::kv_budget`] (when set) — a tenant's oversized head
+//!   blocks only its own lane, never its neighbours';
 //! * decode-phase requests are scheduled before new prefills.
 
 use super::request::{Request, RequestId, RequestState};
+use crate::config::{TenantSpec, TenantsConfig};
 use std::collections::{HashMap, VecDeque};
 
 /// Batching policy parameters.
@@ -34,18 +41,51 @@ impl Default for BatchPolicy {
     }
 }
 
-/// The batcher: owns queued + in-flight requests.
+/// One tenant's admission lane: its own FCFS queue plus the KV tokens its
+/// in-flight requests hold reserved.
+#[derive(Debug)]
+struct TenantLane {
+    spec: TenantSpec,
+    queue: VecDeque<Request>,
+    /// KV tokens reserved by this tenant's in-flight requests
+    /// (worst-case growth: `prompt + max_new_tokens` per request).
+    reserved_kv: usize,
+}
+
+/// The batcher: owns queued + in-flight requests, one admission lane per
+/// tenant.
 ///
-/// Speculative decoding keeps these invariants intact without new
-/// bookkeeping here: `admit` reserves `prompt_len + max_new_tokens` KV
-/// tokens per request, and the scheduler caps every draft burst at the
-/// remaining generation budget ([`Request::draft_budget`]), so a round's
-/// tentative KV peak stays inside the reservation and a rejected tail
-/// always rolls back within it.
+/// ## Per-tenant admission contract
+///
+/// `admit` reserves [`Request::kv_reservation`] (`prompt +
+/// max_new_tokens`) KV tokens against the **owning** tenant's
+/// `kv_budget` — the worst-case KV growth, which also covers speculative
+/// decoding (the scheduler caps every draft burst at the remaining
+/// generation budget, [`Request::draft_budget`], so a round's tentative
+/// KV peak stays inside the reservation and a rejected tail always rolls
+/// back within it). A head-of-line request that would overflow its
+/// tenant's budget blocks only that lane; under contention the next
+/// admission goes to the tenant with the least reserved KV per unit
+/// weight:
+///
+/// ```
+/// use picnic::config::TenantsConfig;
+/// use picnic::coordinator::{Batcher, BatchPolicy, Request};
+///
+/// let tenants = TenantsConfig::parse_cli("a:kv=100,b:kv=100").unwrap();
+/// let mut b = Batcher::with_tenants(BatchPolicy::default(), &tenants);
+/// b.submit(Request::new_for_tenant(0, 0, 80, 10, 0)); // a: reserves 90
+/// b.submit(Request::new_for_tenant(1, 0, 40, 10, 0)); // a: would reach 140
+/// b.submit(Request::new_for_tenant(2, 1, 60, 20, 0)); // b: reserves 80
+/// // a's second request blocks on a's budget alone — b still admits
+/// assert_eq!(b.admit(), vec![0, 2]);
+/// assert_eq!(b.tenant_reserved_kv(0), 90);
+/// assert_eq!(b.tenant_reserved_kv(1), 80);
+/// ```
 #[derive(Debug)]
 pub struct Batcher {
     policy: BatchPolicy,
-    queue: VecDeque<Request>,
+    lanes: Vec<TenantLane>,
     inflight: Vec<Request>,
     /// id → position in `inflight` (O(1) per-id lookup; rebuilt on reap).
     index: HashMap<RequestId, usize>,
@@ -54,10 +94,25 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Single-tenant batcher (one implicit default lane).
     pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher::with_tenants(policy, &TenantsConfig::default())
+    }
+
+    /// Batcher with one admission lane per effective tenant.
+    pub fn with_tenants(policy: BatchPolicy, tenants: &TenantsConfig) -> Batcher {
+        let lanes = tenants
+            .effective()
+            .into_iter()
+            .map(|spec| TenantLane {
+                spec,
+                queue: VecDeque::new(),
+                reserved_kv: 0,
+            })
+            .collect();
         Batcher {
             policy,
-            queue: VecDeque::new(),
+            lanes,
             inflight: Vec::new(),
             index: HashMap::new(),
             done: Vec::new(),
@@ -68,17 +123,46 @@ impl Batcher {
         &self.policy
     }
 
-    /// Enqueue a request; false = queue full (backpressure to the client).
+    /// Admission lanes (= effective tenants; ≥ 1).
+    pub fn n_tenants(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn tenant_name(&self, tenant: usize) -> &str {
+        &self.lanes[tenant].spec.name
+    }
+
+    /// KV tokens tenant `tenant`'s in-flight requests hold reserved.
+    pub fn tenant_reserved_kv(&self, tenant: usize) -> usize {
+        self.lanes[tenant].reserved_kv
+    }
+
+    /// Queued (not yet admitted) requests of one tenant.
+    pub fn queued_for(&self, tenant: usize) -> usize {
+        self.lanes[tenant].queue.len()
+    }
+
+    /// Enqueue a request on its owning tenant's lane; false = that lane
+    /// is full (backpressure to the client).
     pub fn submit(&mut self, r: Request) -> bool {
-        if self.queue.len() >= self.policy.max_batch * 16 {
+        assert!(
+            r.tenant < self.lanes.len(),
+            "request {} names tenant {} but only {} configured",
+            r.id,
+            r.tenant,
+            self.lanes.len()
+        );
+        let lane = &mut self.lanes[r.tenant];
+        if lane.queue.len() >= self.policy.max_batch * 16 {
             return false;
         }
-        self.queue.push_back(r);
+        lane.queue.push_back(r);
         true
     }
 
+    /// Queued requests across all lanes.
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.lanes.iter().map(|l| l.queue.len()).sum()
     }
 
     pub fn inflight(&self) -> &[Request] {
@@ -105,31 +189,70 @@ impl Batcher {
         &self.done
     }
 
-    /// KV tokens *reserved* by in-flight requests: worst-case growth
+    /// KV tokens *reserved* by all in-flight requests: worst-case growth
     /// (prompt + max_new_tokens), not current occupancy — admission must
     /// reserve the ceiling or decode growth overflows the scratchpads
     /// later (found by prop_budgets_never_exceeded).
     fn inflight_kv_reserved(&self) -> usize {
-        self.inflight
-            .iter()
-            .map(|r| r.prompt_len + r.max_new_tokens)
-            .sum()
+        self.lanes.iter().map(|l| l.reserved_kv).sum()
     }
 
-    /// Admit queued requests while batch and KV budgets allow.
-    /// Returns ids admitted this call.
+    /// The lane the next admission should come from: nonempty queue, not
+    /// blocked, least reserved KV per unit weight (ties to the lower
+    /// index) — deficit-style weighted fairness across tenants.
+    fn pick_lane(&self, blocked: &[bool]) -> Option<usize> {
+        let mut pick: Option<usize> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if blocked[i] || lane.queue.is_empty() {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(j) => {
+                    let a = lane.reserved_kv as f64 / lane.spec.weight;
+                    let b = self.lanes[j].reserved_kv as f64 / self.lanes[j].spec.weight;
+                    a < b
+                }
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        pick
+    }
+
+    /// Admit queued requests while batch and KV budgets allow, draining
+    /// lanes in least-reserved-per-weight order. Returns ids admitted
+    /// this call. A head that overflows the **global** KV budget stops
+    /// admission entirely (the most underserved tenant keeps first claim
+    /// on shared capacity — no one jumps the line); a head that overflows
+    /// only its **own tenant's** budget blocks just that lane.
     pub fn admit(&mut self) -> Vec<RequestId> {
         let mut admitted = Vec::new();
+        let mut blocked = vec![false; self.lanes.len()];
         while self.inflight.len() < self.policy.max_batch {
-            let Some(front) = self.queue.front() else { break };
-            let kv_needed = front.prompt_len + front.max_new_tokens;
+            let Some(i) = self.pick_lane(&blocked) else { break };
+            let kv_needed = self.lanes[i]
+                .queue
+                .front()
+                .expect("picked lane has a head")
+                .kv_reservation();
             if !self.inflight.is_empty()
                 && self.inflight_kv_reserved() + kv_needed > self.policy.kv_budget
             {
-                break; // head-of-line blocks: keeps FCFS fairness
+                break; // global head-of-line blocks: keeps FCFS fairness
             }
-            let mut r = self.queue.pop_front().unwrap();
+            let lane_budget = self.lanes[i].spec.kv_budget;
+            if lane_budget > 0
+                && self.lanes[i].reserved_kv > 0
+                && self.lanes[i].reserved_kv + kv_needed > lane_budget
+            {
+                blocked[i] = true; // tenant head-of-line blocks its lane only
+                continue;
+            }
+            let mut r = self.lanes[i].queue.pop_front().unwrap();
             r.state = RequestState::Prefilling;
+            self.lanes[i].reserved_kv += kv_needed;
             admitted.push(r.id);
             self.index.insert(r.id, self.inflight.len());
             self.inflight.push(r);
@@ -166,13 +289,18 @@ impl Batcher {
         Work::Idle
     }
 
-    /// Remove finished requests from the in-flight set.
+    /// Remove finished requests from the in-flight set, releasing their
+    /// KV reservations back to the owning tenants.
     pub fn reap(&mut self) -> usize {
         let before = self.inflight.len();
         let (done, still): (Vec<Request>, Vec<Request>) = self
             .inflight
             .drain(..)
             .partition(|r| r.state == RequestState::Done);
+        for r in &done {
+            let lane = &mut self.lanes[r.tenant];
+            lane.reserved_kv = lane.reserved_kv.saturating_sub(r.kv_reservation());
+        }
         self.done.extend(done);
         self.inflight = still;
         let reaped = before - self.inflight.len();
@@ -199,6 +327,25 @@ mod tests {
 
     fn req(id: u64, prompt: usize, new: usize) -> Request {
         Request::new(id, prompt, new, 0)
+    }
+
+    fn two_tenants(kv_a: usize, kv_b: usize) -> TenantsConfig {
+        TenantsConfig {
+            tenants: vec![
+                TenantSpec {
+                    name: "a".to_string(),
+                    weight: 1.0,
+                    kv_budget: kv_a,
+                    dedicated: false,
+                },
+                TenantSpec {
+                    name: "b".to_string(),
+                    weight: 1.0,
+                    kv_budget: kv_b,
+                    dedicated: false,
+                },
+            ],
+        }
     }
 
     #[test]
@@ -228,6 +375,56 @@ mod tests {
         let admitted = b.admit();
         assert_eq!(admitted, vec![0]);
         assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn tenant_budget_blocks_only_its_own_lane() {
+        let mut b = Batcher::with_tenants(BatchPolicy::default(), &two_tenants(100, 0));
+        b.submit(Request::new_for_tenant(0, 0, 80, 10, 0)); // a: 90
+        b.submit(Request::new_for_tenant(1, 0, 40, 10, 0)); // a: blocked at 140
+        b.submit(Request::new_for_tenant(2, 1, 200, 20, 0)); // b: uncapped lane
+        let admitted = b.admit();
+        assert_eq!(admitted, vec![0, 2], "a's overflow never blocks b");
+        assert_eq!(b.tenant_reserved_kv(0), 90);
+        assert_eq!(b.tenant_reserved_kv(1), 220);
+        assert_eq!(b.queued_for(0), 1);
+    }
+
+    #[test]
+    fn weighted_admission_prefers_underserved_tenant() {
+        // equal queues; the weight-2 tenant should hold ~2x the
+        // reservation once admission saturates the batch
+        let tenants = TenantsConfig::parse_cli("a:w=2,b:w=1").unwrap();
+        let mut b = Batcher::with_tenants(
+            BatchPolicy {
+                max_batch: 6,
+                kv_budget: 1_000_000,
+                ..BatchPolicy::default()
+            },
+            &tenants,
+        );
+        for i in 0..8u64 {
+            b.submit(Request::new_for_tenant(2 * i, 0, 100, 10, 0));
+            b.submit(Request::new_for_tenant(2 * i + 1, 1, 100, 10, 0));
+        }
+        b.admit();
+        let (a, bb) = (b.tenant_reserved_kv(0), b.tenant_reserved_kv(1));
+        assert_eq!(a + bb, 6 * 110, "batch limit reached");
+        assert_eq!(a, 4 * 110, "weight-2 tenant holds 2x the reservation");
+        assert_eq!(bb, 2 * 110);
+    }
+
+    #[test]
+    fn reap_releases_tenant_reservations() {
+        let mut b = Batcher::with_tenants(BatchPolicy::default(), &two_tenants(1000, 1000));
+        b.submit(Request::new_for_tenant(0, 0, 50, 10, 0));
+        b.submit(Request::new_for_tenant(1, 1, 30, 10, 0));
+        b.admit();
+        assert_eq!(b.tenant_reserved_kv(0), 60);
+        b.inflight_by_id(0).unwrap().state = RequestState::Done;
+        assert_eq!(b.reap(), 1);
+        assert_eq!(b.tenant_reserved_kv(0), 0, "a's reservation released");
+        assert_eq!(b.tenant_reserved_kv(1), 40, "b's untouched");
     }
 
     #[test]

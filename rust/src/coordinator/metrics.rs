@@ -1,4 +1,5 @@
-//! Serving metrics: per-request latency components and run aggregates.
+//! Serving metrics: per-request latency components, run aggregates, and
+//! the fairness helpers the multi-tenant stats are built from.
 
 use super::request::Request;
 use std::collections::HashSet;
@@ -7,6 +8,9 @@ use std::collections::HashSet;
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
     pub id: u64,
+    /// Owning tenant (index into the effective tenant list; 0 in
+    /// single-tenant mode).
+    pub tenant: usize,
     pub queue_s: f64,
     pub ttft_s: f64,
     pub total_s: f64,
@@ -37,6 +41,7 @@ impl Metrics {
         let done = r.done_cycle.expect("recorded after completion");
         self.requests.push(RequestMetrics {
             id: r.id,
+            tenant: r.tenant,
             queue_s: s(prefill_started_cycle.saturating_sub(r.arrived_cycle)),
             ttft_s: s(r.first_token_cycle.unwrap_or(done).saturating_sub(r.arrived_cycle)),
             total_s: s(done.saturating_sub(r.arrived_cycle)),
@@ -60,14 +65,54 @@ impl Metrics {
         self.requests.iter().map(|r| r.ttft_s).sum::<f64>() / self.requests.len() as f64
     }
 
-    pub fn p99_total_s(&self) -> f64 {
-        if self.requests.is_empty() {
-            return 0.0;
-        }
-        let mut v: Vec<f64> = self.requests.iter().map(|r| r.total_s).collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        v[((v.len() as f64 * 0.99).ceil() as usize - 1).min(v.len() - 1)]
+    pub fn p50_total_s(&self) -> f64 {
+        let v: Vec<f64> = self.requests.iter().map(|r| r.total_s).collect();
+        percentile(&v, 0.50)
     }
+
+    pub fn p99_total_s(&self) -> f64 {
+        let v: Vec<f64> = self.requests.iter().map(|r| r.total_s).collect();
+        percentile(&v, 0.99)
+    }
+}
+
+/// The `q`-th percentile (0 < q ≤ 1) of `values` by the nearest-rank
+/// method (`ceil(n·q)`-th smallest); 0.0 for an empty slice. The caller's
+/// slice is not required to be sorted.
+pub fn percentile(values: &[f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() as f64 * q).ceil() as usize)
+        .saturating_sub(1)
+        .min(v.len() - 1);
+    v[idx]
+}
+
+/// Jain's fairness index over per-tenant rates:
+/// `(Σx)² / (n · Σx²)` — 1.0 when every tenant receives the same rate,
+/// approaching `1/n` as one tenant monopolizes. Degenerate inputs (empty
+/// slice, all-zero rates) report 1.0: no tenant is being shorted.
+///
+/// ```
+/// use picnic::coordinator::jain_index;
+/// assert!((jain_index(&[10.0, 10.0]) - 1.0).abs() < 1e-12);
+/// assert!((jain_index(&[10.0, 0.0]) - 0.5).abs() < 1e-12);
+/// assert!(jain_index(&[8.0, 12.0]) > 0.9, "mild skew stays high");
+/// assert_eq!(jain_index(&[]), 1.0);
+/// ```
+pub fn jain_index(rates: &[f64]) -> f64 {
+    if rates.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = rates.iter().sum();
+    let sq: f64 = rates.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    sum * sum / (rates.len() as f64 * sq)
 }
 
 #[cfg(test)]
@@ -94,6 +139,7 @@ mod tests {
         assert!((rm.queue_s - 1e-3).abs() < 1e-12);
         assert!((rm.ttft_s - 2e-3).abs() < 1e-12);
         assert!((rm.total_s - 9e-3).abs() < 1e-12);
+        assert_eq!(rm.tenant, 0, "default tenant recorded");
         assert_eq!(m.total_tokens, 16);
         assert!((m.throughput_tokens_per_s() - 1600.0).abs() < 1e-6);
     }
@@ -110,10 +156,40 @@ mod tests {
     }
 
     #[test]
-    fn p99_of_single_request() {
+    fn record_tags_owning_tenant() {
+        let mut m = Metrics::default();
+        let mut r = Request::new_for_tenant(3, 2, 8, 4, 0);
+        r.state = RequestState::Done;
+        r.generated = 4;
+        r.first_token_cycle = Some(10);
+        r.done_cycle = Some(100);
+        m.record(&r, 0, 1e9);
+        assert_eq!(m.requests[0].tenant, 2);
+    }
+
+    #[test]
+    fn p50_p99_of_single_request() {
         let mut m = Metrics::default();
         m.record(&done_request(1, 0, 10, 100, 4), 0, 1e9);
         assert!(m.p99_total_s() > 0.0);
+        assert!((m.p50_total_s() - m.p99_total_s()).abs() < 1e-15);
         assert!((m.mean_ttft_s() - 1e-8).abs() < 1e-15);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&v, 0.50) - 2.0).abs() < 1e-12);
+        assert!((percentile(&v, 0.99) - 4.0).abs() < 1e-12);
+        assert!((percentile(&v, 1.0) - 4.0).abs() < 1e-12);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert!((jain_index(&[5.0, 5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        let skewed = jain_index(&[100.0, 1.0, 1.0, 1.0]);
+        assert!(skewed > 0.25 && skewed < 0.5, "monopoly approaches 1/n");
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0, "no traffic = trivially fair");
     }
 }

@@ -47,6 +47,17 @@
 //! rejected tail rolls back without extra energy charges. See the
 //! `server` module docs and ARCHITECTURE.md §Serving for the scheduling
 //! details and invariants.
+//!
+//! ## Multi-tenant sharding
+//!
+//! With [`crate::config::TenantsConfig`] populated, the chain is shared
+//! between tenants: per-tenant admission lanes with per-tenant KV
+//! budgets in the [`Batcher`], per-tenant stage maps in the server
+//! (`dedicated` tenants pin their layers to disjoint chiplet ranges;
+//! the rest time-multiplex the shared span), weighted-fair tie-breaking
+//! in the event loop, and per-tenant service/energy/CCPG attribution
+//! ([`TenantStats`], [`jain_index`]). See ARCHITECTURE.md
+//! §Multi-tenancy.
 
 mod batcher;
 mod metrics;
@@ -54,9 +65,9 @@ mod request;
 mod server;
 
 pub use batcher::{Batcher, BatchPolicy};
-pub use metrics::{Metrics, RequestMetrics};
+pub use metrics::{jain_index, percentile, Metrics, RequestMetrics};
 pub use request::{Request, RequestId, RequestState};
 pub use server::{
     serialized_pass_cycles, serialized_workload_cycles, JobKind, PipelineStats, Server,
-    ServerConfig, SpecRound, StageSlot,
+    ServerConfig, SpecRound, StageSlot, TenantStats,
 };

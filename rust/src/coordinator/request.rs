@@ -16,6 +16,11 @@ pub enum RequestState {
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: RequestId,
+    /// Owning tenant (index into the effective
+    /// [`crate::config::TenantsConfig`] tenant list; 0 in single-tenant
+    /// mode). Admission reserves KV against this tenant's budget, and the
+    /// scheduler's weighted-fair tie-breaking reads its weight.
+    pub tenant: usize,
     pub prompt_len: usize,
     pub max_new_tokens: usize,
     pub state: RequestState,
@@ -37,10 +42,23 @@ pub struct Request {
 }
 
 impl Request {
+    /// A request of the (single) default tenant 0.
     pub fn new(id: RequestId, prompt_len: usize, max_new_tokens: usize, now: u64) -> Request {
+        Request::new_for_tenant(id, 0, prompt_len, max_new_tokens, now)
+    }
+
+    /// A request owned by `tenant` (index into the effective tenant list).
+    pub fn new_for_tenant(
+        id: RequestId,
+        tenant: usize,
+        prompt_len: usize,
+        max_new_tokens: usize,
+        now: u64,
+    ) -> Request {
         assert!(prompt_len > 0 && max_new_tokens > 0);
         Request {
             id,
+            tenant,
             prompt_len,
             max_new_tokens,
             state: RequestState::Queued,
@@ -66,6 +84,14 @@ impl Request {
     /// Decode tokens still to generate.
     pub fn decode_remaining(&self) -> usize {
         self.max_new_tokens.saturating_sub(self.generated)
+    }
+
+    /// KV tokens admission reserves for this request: the worst-case
+    /// growth `prompt + max_new_tokens`. Speculative decoding stays
+    /// inside it too — a round's tentative KV peaks at
+    /// `kv_len + draft_budget + 1 ≤ prompt_len + max_new_tokens`.
+    pub fn kv_reservation(&self) -> usize {
+        self.prompt_len + self.max_new_tokens
     }
 
     /// Largest **useful** draft burst for one speculation round. The
@@ -139,6 +165,15 @@ mod tests {
     #[should_panic]
     fn empty_prompt_rejected() {
         Request::new(1, 0, 1, 0);
+    }
+
+    #[test]
+    fn tenant_ownership_and_reservation() {
+        let r = Request::new(1, 16, 4, 0);
+        assert_eq!(r.tenant, 0, "default tenant");
+        let r = Request::new_for_tenant(2, 3, 16, 4, 0);
+        assert_eq!(r.tenant, 3);
+        assert_eq!(r.kv_reservation(), 20);
     }
 
     #[test]

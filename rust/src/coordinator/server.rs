@@ -42,13 +42,24 @@
 //! there could never commit. The re-plan after a rollback is cheap by
 //! construction — the next round's costs come from the same power-of-two
 //! KV buckets already in the plan cache.
+//!
+//! With tenants configured
+//! ([`TenantsConfig`](crate::config::TenantsConfig)), the chiplet chain
+//! is **sharded**: shared tenants time-multiplex one stage pipeline
+//! while each `dedicated` tenant gets a private pipeline on a disjoint
+//! chiplet range ([`crate::mapper::StageMap`] lays the spans out
+//! contiguously). The [`Batcher`] admits per tenant against per-tenant
+//! KV budgets, release-cycle ties in the event loop go to the tenant
+//! with the least service per unit weight, and every job's stage cycles,
+//! dynamic energy and CCPG wakes are attributed to the owning tenant
+//! ([`TenantStats`], [`Server::fairness_index`]).
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::metrics::Metrics;
+use super::metrics::{jain_index, percentile, Metrics};
 use super::request::{RequestId, RequestState};
-use crate::chiplet::CcpgTimeline;
+use crate::chiplet::{CcpgStats, CcpgTimeline};
 use crate::config::PicnicConfig;
-use crate::mapper::{kv_bucket_bounds, PlanCache, ScheduleBuilder};
+use crate::mapper::{kv_bucket_bounds, PlanCache, ScheduleBuilder, StageMap};
 use crate::models::LlamaConfig;
 use crate::photonic::OpticalTopology;
 use crate::power::EnergyLedger;
@@ -82,6 +93,11 @@ pub enum JobKind {
 #[derive(Debug, Clone, Copy)]
 pub struct StageSlot {
     pub request: RequestId,
+    /// Stage set (pipeline) the occupancy ran on: 0 is the shared span;
+    /// each dedicated tenant adds its own. A stage resource is identified
+    /// by `(set, stage)` — two sets reuse stage indices on disjoint
+    /// chiplet ranges.
+    pub set: usize,
     pub stage: usize,
     pub kind: JobKind,
     pub start: u64,
@@ -117,8 +133,11 @@ pub struct SpecRound {
 /// Scheduler counters exposed for reports and tests.
 #[derive(Debug, Clone, Copy)]
 pub struct PipelineStats {
-    /// Pipeline stages (= mapped layers).
+    /// Pipeline stages (= mapped layers) per stage set.
     pub stages: usize,
+    /// Stage sets deployed: 1 in single-tenant / all-shared mode, plus
+    /// one disjoint chiplet span per dedicated tenant.
+    pub stage_sets: usize,
     /// Plan sets built from scratch (partition/placement/flash runs).
     pub plan_builds: u64,
     /// Plan-cache hits.
@@ -149,6 +168,78 @@ struct SpecCounters {
     rolled_back: u64,
 }
 
+/// One stage pipeline: per-stage busy-until cycles over a tile span of
+/// the chiplet chain. Set 0 is the shared span (time-multiplexed by all
+/// non-dedicated tenants); each dedicated tenant owns a further set on a
+/// disjoint range.
+#[derive(Debug, Clone)]
+struct StageSet {
+    /// Per-stage busy-until cycle (stage = mapped layer, in model order).
+    busy: Vec<u64>,
+    /// Where each stage sits on the chiplet chain (CCPG clustering).
+    map: StageMap,
+}
+
+/// Private per-tenant attribution behind [`TenantStats`].
+#[derive(Debug, Clone, Copy, Default)]
+struct TenantCounters {
+    /// Stage-cycles of service this tenant's jobs consumed (the
+    /// weighted-fair tie-breaker normalizes this by the tenant weight).
+    service_cycles: u64,
+    /// Dynamic energy charged by this tenant's jobs, J.
+    energy_j: f64,
+    /// CCPG wakes this tenant's stage walks paid for.
+    ccpg_wakes: u64,
+    ccpg_wake_stall_cycles: u64,
+}
+
+/// Per-tenant serving stats ([`Server::tenant_stats`]): the per-tenant
+/// cut of [`PipelineStats`] + [`Metrics`], plus energy and CCPG-wake
+/// attribution. [`Server::fairness_index`] reduces the per-tenant
+/// throughputs to Jain's index.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub name: String,
+    pub weight: f64,
+    pub dedicated: bool,
+    /// Requests completed.
+    pub requests: usize,
+    /// Tokens generated.
+    pub tokens: u64,
+    /// Decode throughput over the run's wall clock, tokens/s.
+    pub tokens_per_s: f64,
+    pub mean_ttft_s: f64,
+    pub p50_total_s: f64,
+    pub p99_total_s: f64,
+    /// Dynamic energy this tenant's jobs charged, J.
+    pub energy_j: f64,
+    /// CCPG wakes charged to this tenant's stage walks.
+    pub ccpg_wakes: u64,
+    pub ccpg_wake_stall_cycles: u64,
+    /// Stage-cycles of service consumed (the fairness tie-breaker's
+    /// accounting basis).
+    pub service_cycles: u64,
+}
+
+impl TenantStats {
+    /// One aligned human-readable report row — shared by `picnic serve`
+    /// and examples/llama_serve.rs so the two tables never drift.
+    pub fn report_row(&self) -> String {
+        format!(
+            "{:<12} w={:<4} {:<9} {:>3} reqs  {:>6} tok  {:>9.1} tok/s  p50 {:.3} ms  p99 {:.3} ms  {:.4} J",
+            self.name,
+            self.weight,
+            if self.dedicated { "dedicated" } else { "shared" },
+            self.requests,
+            self.tokens,
+            self.tokens_per_s,
+            1e3 * self.p50_total_s,
+            1e3 * self.p99_total_s,
+            self.energy_j,
+        )
+    }
+}
+
 /// Event priority: decode tokens beat prefill chunks on release-cycle ties
 /// (the decode-priority policy at stage granularity).
 const PRI_DECODE: u8 = 0;
@@ -166,10 +257,15 @@ pub struct Server<B: SimBackend = AnalyticSim> {
     /// Latest completion across all stages (wall-clock horizon).
     horizon: u64,
     next_id: u64,
-    /// Per-stage busy-until cycle (stage = mapped layer, in model order).
-    stages: Vec<u64>,
-    /// First tile of each stage on the chiplet chain (CCPG clustering).
-    stage_tiles: Vec<u32>,
+    /// Stage pipelines: index 0 is the shared span, then one per
+    /// dedicated tenant, laid out on disjoint tile ranges.
+    stage_sets: Vec<StageSet>,
+    /// tenant → index into `stage_sets`.
+    tenant_set: Vec<usize>,
+    /// Per-tenant service/energy/wake attribution (same indexing).
+    tenant_counters: Vec<TenantCounters>,
+    /// Cached tenant weights (weighted-fair tie-breaking).
+    tenant_weights: Vec<f64>,
     ccpg: CcpgTimeline,
     /// Pending jobs: Reverse<(release_cycle, priority, request id)>.
     events: BinaryHeap<Reverse<(u64, u8, u64)>>,
@@ -188,6 +284,9 @@ pub struct Server<B: SimBackend = AnalyticSim> {
     /// Acceptance draws for speculation rounds (seeded → reproducible).
     accept_rng: Rng,
     spec: SpecCounters,
+    /// Reusable scratch for `pick_fair`'s losing tie candidates (the
+    /// event loop stays allocation-free in steady state).
+    fair_scratch: Vec<u64>,
     stage_trace: Option<Vec<StageSlot>>,
     spec_trace: Option<Vec<SpecRound>>,
 }
@@ -203,9 +302,12 @@ impl Server<AnalyticSim> {
 impl<B: SimBackend> Server<B> {
     /// Server over an explicit simulation backend.
     pub fn with_backend(cfg: ServerConfig, backend: B) -> Server<B> {
+        let tenants = cfg.picnic.tenants.effective();
         Server {
-            batcher: Batcher::new(cfg.policy.clone()),
+            batcher: Batcher::with_tenants(cfg.policy.clone(), &cfg.picnic.tenants),
             ccpg: CcpgTimeline::new(0, cfg.picnic.ccpg.clone(), &OpticalTopology::new(0)),
+            tenant_counters: vec![TenantCounters::default(); tenants.len()],
+            tenant_weights: tenants.iter().map(|t| t.weight).collect(),
             cfg,
             backend,
             metrics: Metrics::default(),
@@ -213,8 +315,8 @@ impl<B: SimBackend> Server<B> {
             now_cycle: 0,
             horizon: 0,
             next_id: 0,
-            stages: Vec::new(),
-            stage_tiles: Vec::new(),
+            stage_sets: Vec::new(),
+            tenant_set: Vec::new(),
             events: BinaryHeap::new(),
             plan_cache: PlanCache::new(),
             cost_cache: HashMap::new(),
@@ -224,6 +326,7 @@ impl<B: SimBackend> Server<B> {
             draft_interp_buf: Vec::new(),
             accept_rng: Rng::seed_from_u64(0x5bec_dec0de),
             spec: SpecCounters::default(),
+            fair_scratch: Vec::new(),
             stage_trace: None,
             spec_trace: None,
         }
@@ -263,7 +366,8 @@ impl<B: SimBackend> Server<B> {
 
     pub fn pipeline_stats(&self) -> PipelineStats {
         PipelineStats {
-            stages: self.stages.len(),
+            stages: self.stage_sets.first().map_or(0, |s| s.busy.len()),
+            stage_sets: self.stage_sets.len(),
             plan_builds: self.plan_cache.stats.builds,
             plan_hits: self.plan_cache.stats.hits,
             ccpg_wakes: self.ccpg.stats.wakes,
@@ -276,11 +380,28 @@ impl<B: SimBackend> Server<B> {
         }
     }
 
-    /// Submit a request arriving *now*; returns its id, or None on
-    /// backpressure.
+    /// Submit a request arriving *now* for the default tenant 0; returns
+    /// its id, or None on backpressure.
     pub fn submit(&mut self, prompt_len: usize, max_new_tokens: usize) -> Option<u64> {
+        self.submit_for(0, prompt_len, max_new_tokens)
+    }
+
+    /// Submit a request arriving *now* for `tenant` (index into the
+    /// effective tenant list); returns its id, or None on backpressure.
+    pub fn submit_for(
+        &mut self,
+        tenant: usize,
+        prompt_len: usize,
+        max_new_tokens: usize,
+    ) -> Option<u64> {
         let id = self.next_id;
-        let r = super::request::Request::new(id, prompt_len, max_new_tokens, self.now_cycle);
+        let r = super::request::Request::new_for_tenant(
+            id,
+            tenant,
+            prompt_len,
+            max_new_tokens,
+            self.now_cycle,
+        );
         if self.batcher.submit(r) {
             self.next_id += 1;
             Some(id)
@@ -289,24 +410,107 @@ impl<B: SimBackend> Server<B> {
         }
     }
 
-    /// Lazily build the stage map: one stage per mapped layer, tiles laid
-    /// out along the chiplet chain exactly like the analytic model's walk.
+    /// Effective tenants (≥ 1; 1 in single-tenant mode).
+    pub fn n_tenants(&self) -> usize {
+        self.tenant_counters.len()
+    }
+
+    /// Per-tenant serving stats: the per-tenant cut of the run metrics
+    /// plus this server's service/energy/CCPG attribution. Call after
+    /// [`Server::run_to_completion`] (throughput needs the wall clock).
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        let tenants = self.cfg.picnic.tenants.effective();
+        let wall = self.metrics.wall_s;
+        tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let mut tokens = 0u64;
+                let mut n = 0usize;
+                let mut ttft_sum = 0.0f64;
+                let mut totals: Vec<f64> = Vec::new();
+                for r in self.metrics.requests.iter().filter(|r| r.tenant == i) {
+                    tokens += r.tokens as u64;
+                    n += 1;
+                    ttft_sum += r.ttft_s;
+                    totals.push(r.total_s);
+                }
+                let c = self.tenant_counters.get(i).copied().unwrap_or_default();
+                TenantStats {
+                    name: t.name.clone(),
+                    weight: t.weight,
+                    dedicated: t.dedicated,
+                    requests: n,
+                    tokens,
+                    tokens_per_s: if wall > 0.0 { tokens as f64 / wall } else { 0.0 },
+                    mean_ttft_s: if n > 0 { ttft_sum / n as f64 } else { 0.0 },
+                    p50_total_s: percentile(&totals, 0.50),
+                    p99_total_s: percentile(&totals, 0.99),
+                    energy_j: c.energy_j,
+                    ccpg_wakes: c.ccpg_wakes,
+                    ccpg_wake_stall_cycles: c.ccpg_wake_stall_cycles,
+                    service_cycles: c.service_cycles,
+                }
+            })
+            .collect()
+    }
+
+    /// Jain's fairness index over the per-tenant throughputs of tenants
+    /// that completed at least one request (1.0 when ≤ 1 tenant was
+    /// active — nobody to be unfair to).
+    pub fn fairness_index(&self) -> f64 {
+        let rates: Vec<f64> = self
+            .tenant_stats()
+            .iter()
+            .filter(|t| t.requests > 0)
+            .map(|t| t.tokens_per_s)
+            .collect();
+        jain_index(&rates)
+    }
+
+    /// Lazily build the per-tenant stage maps: one stage per mapped
+    /// layer, tile spans laid out along the chiplet chain exactly like
+    /// the analytic model's walk. The shared span (time-multiplexed by
+    /// every non-dedicated tenant) comes first; each dedicated tenant
+    /// then gets a private pipeline on its own disjoint tile range, and
+    /// one [`CcpgTimeline`] covers the whole deployment.
     fn ensure_stages(&mut self) -> crate::Result<()> {
-        if !self.stages.is_empty() {
+        if !self.stage_sets.is_empty() {
             return Ok(());
         }
         let builder = ScheduleBuilder::new(&self.cfg.picnic, &self.cfg.model);
         let plans = self.plan_cache.plans(&builder, 1, 1)?;
+        let tenants = self.cfg.picnic.tenants.effective();
+        let mut sets: Vec<StageSet> = Vec::new();
         let mut cursor = 0u32;
-        self.stage_tiles = plans
+        let shared_idx = if tenants.iter().any(|t| !t.dedicated) {
+            let map = StageMap::from_plans(&plans, cursor);
+            cursor = map.end_tile();
+            sets.push(StageSet {
+                busy: vec![0u64; map.n_stages()],
+                map,
+            });
+            Some(0)
+        } else {
+            None
+        };
+        self.tenant_set = tenants
             .iter()
-            .map(|p| {
-                let t = cursor;
-                cursor += p.tiles_needed as u32;
-                t
+            .map(|t| {
+                if t.dedicated {
+                    let map = StageMap::from_plans(&plans, cursor);
+                    cursor = map.end_tile();
+                    sets.push(StageSet {
+                        busy: vec![0u64; map.n_stages()],
+                        map,
+                    });
+                    sets.len() - 1
+                } else {
+                    shared_idx.expect("a non-dedicated tenant implies a shared span")
+                }
             })
             .collect();
-        self.stages = vec![0u64; plans.len()];
+        self.stage_sets = sets;
         let n_tiles = (cursor as usize).max(1);
         let topo = OpticalTopology::new(n_tiles);
         self.ccpg = CcpgTimeline::new(n_tiles, self.cfg.picnic.ccpg.clone(), &topo);
@@ -419,15 +623,17 @@ impl<B: SimBackend> Server<B> {
         Ok(())
     }
 
-    /// Walk one job through every stage resource: enter each stage when
-    /// both the job and the stage are ready, occupying it for this job's
-    /// cost from `interp_buf` — plus `draft_reps` draft passes from
+    /// Walk one job through every stage resource of stage set `set` (the
+    /// owning tenant's pipeline): enter each stage when both the job and
+    /// the stage are ready, occupying it for this job's cost from
+    /// `interp_buf` — plus `draft_reps` draft passes from
     /// `draft_interp_buf` for speculation rounds, whose draft burst and
     /// batched verify pass hold each stage as **one** occupancy. Pays a
     /// CCPG wake if the stage's cluster power-gated since its last
     /// occupancy. Returns (first-stage start, completion cycle).
     fn walk_stages(
         &mut self,
+        set: usize,
         id: RequestId,
         release: u64,
         kind: JobKind,
@@ -435,8 +641,8 @@ impl<B: SimBackend> Server<B> {
     ) -> (u64, u64) {
         let mut t = release;
         let mut first_stage_start = release;
-        for s in 0..self.stages.len() {
-            let start = t.max(self.stages[s]);
+        for s in 0..self.stage_sets[set].busy.len() {
+            let start = t.max(self.stage_sets[set].busy[s]);
             if s == 0 {
                 first_stage_start = start;
             }
@@ -444,12 +650,14 @@ impl<B: SimBackend> Server<B> {
             if draft_reps > 0 {
                 dur += draft_reps * self.draft_interp_buf[s];
             }
-            let stall = self.ccpg.occupy(self.stage_tiles[s], start, dur);
+            let tile = self.stage_sets[set].map.stage_tiles[s];
+            let stall = self.ccpg.occupy(tile, start, dur);
             let finish = start + stall + dur;
-            self.stages[s] = finish;
+            self.stage_sets[set].busy[s] = finish;
             if let Some(trace) = self.stage_trace.as_mut() {
                 trace.push(StageSlot {
                     request: id,
+                    set,
                     stage: s,
                     kind,
                     start,
@@ -464,6 +672,24 @@ impl<B: SimBackend> Server<B> {
         (first_stage_start, t)
     }
 
+    /// Fold one job's attribution into the owning tenant's counters:
+    /// `service_cycles` of stage time, `energy_j` of dynamic energy, and
+    /// whatever CCPG wakes accrued since the `ccpg_before` snapshot.
+    fn credit_tenant(
+        &mut self,
+        tenant: usize,
+        service_cycles: u64,
+        energy_j: f64,
+        ccpg_before: CcpgStats,
+    ) {
+        let d = self.ccpg.stats.since(&ccpg_before);
+        let c = &mut self.tenant_counters[tenant];
+        c.service_cycles += service_cycles;
+        c.energy_j += energy_j;
+        c.ccpg_wakes += d.wakes;
+        c.ccpg_wake_stall_cycles += d.wake_stall_cycles;
+    }
+
     /// Dispatch one job (prefill chunk, decode token, or speculation
     /// round) of request `id` released at `release`: walk it through
     /// every stage resource, then schedule the request's next job.
@@ -473,18 +699,19 @@ impl<B: SimBackend> Server<B> {
         let chunk = self.cfg.policy.prefill_chunk.max(1);
         let spec_enabled = self.cfg.picnic.spec_decode.enabled;
         let draft_len = self.cfg.picnic.spec_decode.draft_len;
-        // One id-index probe decides the job shape — state and lengths
-        // are read together so the hot event path never re-looks-up the
-        // same request before the stage walk.
-        let (seq_q, kv, kind) = {
+        // One id-index probe decides the job shape — state, lengths and
+        // owning tenant are read together so the hot event path never
+        // re-looks-up the same request before the stage walk.
+        let (tenant, seq_q, kv, kind) = {
             let r = self
                 .batcher
                 .inflight_by_id(id)
                 .expect("event points at a live request");
+            let t = r.tenant;
             match r.state {
                 RequestState::Prefilling => {
                     let q = chunk.min(r.prefill_remaining()).max(1);
-                    (q, r.prefilled + q, JobKind::Prefill)
+                    (t, q, r.prefilled + q, JobKind::Prefill)
                 }
                 RequestState::Decoding if spec_enabled => {
                     // the verify pass sees every draft token: k tentative
@@ -493,22 +720,28 @@ impl<B: SimBackend> Server<B> {
                     if k == 0 {
                         // last token: a plain decode pass is strictly
                         // cheaper than draft + verify for the same commit
-                        (1, r.kv_len().max(1), JobKind::Decode)
+                        (t, 1, r.kv_len().max(1), JobKind::Decode)
                     } else {
-                        (k, r.kv_len().max(1) + k, JobKind::SpecVerify)
+                        (t, k, r.kv_len().max(1) + k, JobKind::SpecVerify)
                     }
                 }
-                RequestState::Decoding => (1, r.kv_len().max(1), JobKind::Decode),
+                RequestState::Decoding => (t, 1, r.kv_len().max(1), JobKind::Decode),
                 s => unreachable!("dispatch on {s:?} request"),
             }
         };
         if kind == JobKind::SpecVerify {
-            return self.dispatch_spec_round(id, release, seq_q, kv);
+            return self.dispatch_spec_round(tenant, id, release, seq_q, kv);
         }
 
         self.fill_job_costs(seq_q, kv)?;
+        let e_before = self.ledger.total_j();
         self.charge_job_energy(seq_q, kv)?;
-        let (first_stage_start, completion) = self.walk_stages(id, release, kind, 0);
+        let job_cycles: u64 = self.interp_buf.iter().sum();
+        let ccpg_before = self.ccpg.stats;
+        let set = self.tenant_set[tenant];
+        let (first_stage_start, completion) = self.walk_stages(set, id, release, kind, 0);
+        let energy_j = self.ledger.total_j() - e_before;
+        self.credit_tenant(tenant, job_cycles, energy_j, ccpg_before);
 
         let r = self
             .batcher
@@ -545,10 +778,12 @@ impl<B: SimBackend> Server<B> {
     /// `k` is the request's draft budget ([`super::Request::draft_budget`],
     /// read by `dispatch`'s single lookup) so the tentative KV — which
     /// peaks at `kv_end` during the verify pass — never leaves the
-    /// admission-time reservation. Returns true when the round finished
-    /// the request.
+    /// admission-time reservation of the **owning tenant** (`tenant`,
+    /// who is charged the round's service, energy and CCPG wakes).
+    /// Returns true when the round finished the request.
     fn dispatch_spec_round(
         &mut self,
+        tenant: usize,
         id: RequestId,
         release: u64,
         k: usize,
@@ -577,7 +812,12 @@ impl<B: SimBackend> Server<B> {
         self.charge_job_energy_scaled(1, kv_end, k as f64 * ratio)?;
         let energy_j = self.ledger.total_j() - e_before;
 
-        let (_, completion) = self.walk_stages(id, release, JobKind::SpecVerify, k as u64);
+        let job_cycles: u64 = self.interp_buf.iter().sum::<u64>()
+            + k as u64 * self.draft_interp_buf.iter().sum::<u64>();
+        let ccpg_before = self.ccpg.stats;
+        let set = self.tenant_set[tenant];
+        let (_, completion) = self.walk_stages(set, id, release, JobKind::SpecVerify, k as u64);
+        self.credit_tenant(tenant, job_cycles, energy_j, ccpg_before);
 
         // Leading-prefix acceptance: i.i.d. Bernoulli per draft token on
         // the server's seeded PRNG (runs are reproducible).
@@ -636,8 +876,13 @@ impl<B: SimBackend> Server<B> {
                 self.events.push(Reverse((release, PRI_PREFILL, id)));
             }
         }
-        let Some(Reverse((release, _pri, id))) = self.events.pop() else {
+        let Some(Reverse((release, pri, id))) = self.events.pop() else {
             return Ok(false);
+        };
+        let id = if self.tenant_counters.len() > 1 {
+            self.pick_fair(release, pri, id)
+        } else {
+            id
         };
         self.now_cycle = self.now_cycle.max(release);
         let release = self.now_cycle;
@@ -654,6 +899,48 @@ impl<B: SimBackend> Server<B> {
             }
         }
         Ok(true)
+    }
+
+    /// Weighted-fair tie-breaking: among the events sharing this
+    /// `(release, priority)` key, run the request whose tenant has
+    /// received the least service per unit weight so far. Candidates pop
+    /// from the heap in increasing id order, so equal fairness keys
+    /// resolve FCFS by construction. Single-tenant servers never call
+    /// this; ties fall through to the heap's id order.
+    fn pick_fair(&mut self, release: u64, pri: u8, first: u64) -> u64 {
+        let mut best = first;
+        let mut best_key = self.fair_key(first);
+        let mut losers = std::mem::take(&mut self.fair_scratch);
+        while let Some(&Reverse((r, p, _))) = self.events.peek() {
+            if r != release || p != pri {
+                break;
+            }
+            let Some(Reverse((_, _, cand))) = self.events.pop() else {
+                break;
+            };
+            let key = self.fair_key(cand);
+            if key < best_key {
+                losers.push(best);
+                best = cand;
+                best_key = key;
+            } else {
+                losers.push(cand);
+            }
+        }
+        for &l in &losers {
+            self.events.push(Reverse((release, pri, l)));
+        }
+        losers.clear();
+        self.fair_scratch = losers;
+        best
+    }
+
+    /// The fairness key of one pending event: the owning tenant's
+    /// normalized service (stage-cycles consumed / weight).
+    fn fair_key(&mut self, id: u64) -> f64 {
+        let t = self.batcher.inflight_by_id(id).map_or(0, |r| r.tenant);
+        let w = self.tenant_weights.get(t).copied().unwrap_or(1.0);
+        self.tenant_counters[t].service_cycles as f64 / w
     }
 
     /// Drive until all submitted requests complete.
@@ -921,5 +1208,83 @@ mod tests {
         assert_eq!(s.metrics.total_tokens, 1);
         // draft budget is 0 for the last (only) token: plain decode wins
         assert_eq!(s.pipeline_stats().spec_rounds, 0);
+    }
+
+    fn tenant_server(spec: &str) -> Server {
+        let picnic = PicnicConfig {
+            tenants: crate::config::TenantsConfig::parse_cli(spec).unwrap(),
+            ..PicnicConfig::default()
+        };
+        Server::new(ServerConfig {
+            picnic,
+            model: LlamaConfig::tiny(),
+            policy: BatchPolicy::default(),
+        })
+    }
+
+    #[test]
+    fn shared_tenants_multiplex_one_stage_set() {
+        let mut s = tenant_server("a:w=1,b:w=1");
+        s.submit_for(0, 16, 4).unwrap();
+        s.submit_for(1, 16, 4).unwrap();
+        s.run_to_completion().unwrap();
+        let p = s.pipeline_stats();
+        assert_eq!(p.stage_sets, 1, "shared tenants share one pipeline");
+        assert_eq!(p.stages, 4);
+        let ts = s.tenant_stats();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].requests, 1);
+        assert_eq!(ts[1].requests, 1);
+        assert_eq!(ts[0].tokens, 4);
+        assert_eq!(ts[1].tokens, 4);
+        assert!(s.fairness_index() > 0.9, "symmetric load is fair");
+        // attribution covers the whole run
+        let sum: f64 = ts.iter().map(|t| t.energy_j).sum();
+        assert!((sum - s.ledger.total_j()).abs() <= 1e-9 * sum.max(1.0));
+    }
+
+    #[test]
+    fn dedicated_tenants_get_disjoint_stage_sets() {
+        let mut s = tenant_server("a:dedicated,b:dedicated");
+        s.submit_for(0, 16, 2).unwrap();
+        s.submit_for(1, 16, 2).unwrap();
+        s.enable_stage_trace();
+        s.run_to_completion().unwrap();
+        let p = s.pipeline_stats();
+        assert_eq!(p.stage_sets, 2, "one private pipeline per tenant");
+        let trace = s.stage_trace().unwrap();
+        assert!(trace.iter().any(|t| t.set == 0));
+        assert!(trace.iter().any(|t| t.set == 1));
+        assert_eq!(s.metrics.requests.len(), 2);
+    }
+
+    #[test]
+    fn mixed_dedicated_and_shared_spans() {
+        let mut s = tenant_server("a,b:dedicated,c");
+        for t in 0..3 {
+            s.submit_for(t, 16, 2).unwrap();
+        }
+        s.run_to_completion().unwrap();
+        let p = s.pipeline_stats();
+        // a and c share set 0; b owns set 1
+        assert_eq!(p.stage_sets, 2);
+        assert_eq!(s.metrics.requests.len(), 3);
+        assert_eq!(s.n_tenants(), 3);
+    }
+
+    #[test]
+    fn single_tenant_mode_matches_legacy_behavior() {
+        // no tenants configured: submit() still works and stats expose
+        // exactly one implicit tenant
+        let mut s = server();
+        s.submit(32, 4).unwrap();
+        s.run_to_completion().unwrap();
+        assert_eq!(s.n_tenants(), 1);
+        let ts = s.tenant_stats();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].name, "default");
+        assert_eq!(ts[0].tokens, 4);
+        assert!((s.fairness_index() - 1.0).abs() < 1e-12);
+        assert_eq!(s.pipeline_stats().stage_sets, 1);
     }
 }

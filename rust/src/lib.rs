@@ -18,8 +18,10 @@
 //!   paper's evaluation ([`sim`], [`report`]);
 //! * model zoo and baseline platform models ([`models`], [`baselines`]);
 //! * the serving front-end: request batcher, the event-driven
-//!   pipeline-parallel scheduler with chunked prefill and speculative
-//!   decoding, per-request metrics ([`coordinator`]);
+//!   pipeline-parallel scheduler with chunked prefill, speculative
+//!   decoding and multi-tenant chiplet sharding (per-tenant stage
+//!   ranges, KV budgets, weighted fairness), per-request and per-tenant
+//!   metrics ([`coordinator`]);
 //! * the PJRT runtime bridge that loads the AOT-compiled JAX/Pallas golden
 //!   model and holds the functional simulator to its numerics
 //!   ([`runtime`]).
@@ -37,7 +39,12 @@
 //! wake latency per stage event through [`chiplet::CcpgTimeline`], and —
 //! with [`config::SpecDecodeConfig`] enabled — decodes speculatively
 //! (draft bursts verified in one batched pass, acceptance-driven
-//! commits, rollback of rejected tails).
+//! commits, rollback of rejected tails). With
+//! [`config::TenantsConfig`] populated the chain is sharded between
+//! tenants: dedicated tenants pin layers onto disjoint chiplet ranges
+//! ([`mapper::StageMap`]), shared tenants time-multiplex under
+//! weighted-fair tie-breaking, and every job's service, energy and CCPG
+//! wakes are attributed to its owner ([`coordinator::TenantStats`]).
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record (including the BENCH_serving.json schema).

@@ -8,8 +8,9 @@
 //! picnic verify [--artifacts DIR]
 //! picnic serve --model tiny --requests 32 --prompt-len 64 --gen-len 16 [--backend engine]
 //!              [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
+//!              [--tenants a:w=2:kv=8192,b:w=1]
 //! picnic isa-demo
-//! picnic config-dump [--spec-decode …]
+//! picnic config-dump [--spec-decode …] [--tenants …]
 //! ```
 
 use picnic::config::PicnicConfig;
@@ -29,6 +30,7 @@ USAGE:
   picnic verify [--artifacts DIR]
   picnic serve  [--model NAME] [--requests N] [--prompt-len N] [--gen-len N] [--backend analytic|engine]
                 [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
+                [--tenants a:w=2:kv=8192,b:w=1[:dedicated]]
   picnic isa-demo
   picnic config-dump
 
@@ -36,6 +38,13 @@ USAGE:
 scheduler (keys: draft_len, accept, ratio; all optional). It edits the
 loaded config, so it composes with any subcommand — `picnic config-dump
 --spec-decode draft_len=8` round-trips the resulting config.
+
+`--tenants LIST` shards the chiplet chain between serving tenants
+(`name[:w=WEIGHT][:kv=TOKENS][:dedicated]`, comma-separated): per-tenant
+admission queues and KV budgets, weighted-fair scheduling, and — with
+`:dedicated` — a private pipeline on a disjoint chiplet range. `serve`
+spreads its synthetic requests round-robin across the tenants and
+reports per-tenant throughput plus Jain's fairness index.
 ";
 
 fn main() {
@@ -51,10 +60,12 @@ fn run() -> picnic::Result<()> {
         Some(path) => PicnicConfig::from_json_file(std::path::Path::new(path))?,
         None => PicnicConfig::default(),
     };
-    // --spec-decode edits the loaded config (named keys only — values
-    // from --config survive), so it composes with any subcommand (serve
-    // schedules speculatively; config-dump round-trips).
+    // --spec-decode and --tenants edit the loaded config (named keys
+    // only — values from --config survive), so they compose with any
+    // subcommand (serve schedules speculatively / multi-tenant;
+    // config-dump round-trips).
     cfg.spec_decode.apply_cli(&args)?;
+    cfg.tenants.apply_cli(&args)?;
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args, cfg),
         Some("report") => cmd_report(&args, cfg),
@@ -178,9 +189,13 @@ fn drive_serve<B: SimBackend>(
     prompt_len: usize,
     gen_len: usize,
 ) -> picnic::Result<()> {
-    for _ in 0..requests {
+    // Round-robin the synthetic requests across the effective tenants —
+    // identical shapes per tenant, so the reported fairness reflects the
+    // scheduler, not the workload.
+    let n_tenants = server.n_tenants();
+    for i in 0..requests {
         server
-            .submit(prompt_len, gen_len)
+            .submit_for(i % n_tenants, prompt_len, gen_len)
             .ok_or_else(|| anyhow::anyhow!("queue full"))?;
     }
     server.run_to_completion()?;
@@ -206,6 +221,12 @@ fn drive_serve<B: SimBackend>(
             "spec-decode: {} rounds, {} drafted, {} accepted, {} committed, {} rolled back",
             p.spec_rounds, p.spec_drafted, p.spec_accepted, p.spec_committed, p.spec_rolled_back,
         );
+    }
+    if server.n_tenants() > 1 {
+        for t in server.tenant_stats() {
+            println!("tenant {}", t.report_row());
+        }
+        println!("jain fairness index: {:.4}", server.fairness_index());
     }
     Ok(())
 }

@@ -15,6 +15,9 @@
 //! * [`plan_cache`]  — memoized `plan_all` results with power-of-two KV
 //!                     bucketing, so steady-state decode stops re-running
 //!                     partition/placement/flash-tiling every token
+//! * [`stage_map`]   — tile spans of the serving pipelines on the chiplet
+//!                     chain (the shared span plus one disjoint span per
+//!                     dedicated tenant)
 
 pub mod collective;
 pub mod flashattn;
@@ -23,9 +26,11 @@ pub mod partition;
 pub mod placement;
 pub mod plan_cache;
 pub mod schedule;
+pub mod stage_map;
 
 pub use kvcache::KvCache;
 pub use partition::{MatrixPartition, TileAssignment};
 pub use placement::{ChannelRegion, Placement};
 pub use plan_cache::{kv_bucket_bounds, PlanCache, PlanCacheStats};
 pub use schedule::{LayerPlan, PhaseOp, ScheduleBuilder};
+pub use stage_map::StageMap;

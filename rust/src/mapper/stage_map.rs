@@ -1,0 +1,124 @@
+//! Stage maps: where each pipeline stage (mapped layer) begins on the
+//! chiplet chain.
+//!
+//! The serving scheduler models every mapped layer as a stage resource;
+//! the `StageMap` records the tile span those stages occupy — the same
+//! contiguous walk the analytic model performs, but reified so the
+//! multi-tenant server can lay **several** pipelines out on disjoint
+//! chiplet ranges (dedicated tenant spans) next to the shared span.
+//!
+//! ```
+//! use picnic::config::PicnicConfig;
+//! use picnic::mapper::{ScheduleBuilder, StageMap};
+//! use picnic::models::LlamaConfig;
+//!
+//! let cfg = PicnicConfig::default();
+//! let model = LlamaConfig::tiny();
+//! let plans = ScheduleBuilder::new(&cfg, &model).plan_all(1, 1).unwrap();
+//! let shared = StageMap::from_plans(&plans, 0);
+//! // a dedicated tenant's pipeline starts where the shared span ends…
+//! let dedicated = StageMap::from_plans(&plans, shared.end_tile());
+//! assert_eq!(dedicated.tile_offset, shared.end_tile());
+//! assert_eq!(dedicated.n_stages(), shared.n_stages());
+//! // …so the two spans are disjoint chiplet ranges
+//! assert!(dedicated.stage_tiles[0] >= shared.end_tile());
+//! ```
+
+use super::schedule::LayerPlan;
+
+/// The tile span of one stage pipeline on the chiplet chain: per-stage
+/// first-tile indices plus the contiguous range `[tile_offset, end_tile)`
+/// the whole pipeline occupies.
+#[derive(Debug, Clone, Default)]
+pub struct StageMap {
+    /// First tile of the span (where stage 0 starts).
+    pub tile_offset: u32,
+    /// First tile of each stage, in model order (one entry per mapped
+    /// layer; consecutive layers occupy consecutive tile ranges, exactly
+    /// like the analytic model's walk).
+    pub stage_tiles: Vec<u32>,
+    /// Total tiles the pipeline spans.
+    pub span_tiles: u32,
+}
+
+impl StageMap {
+    /// Lay the plans' tile needs out contiguously starting at
+    /// `tile_offset`: stage `i` begins where stage `i-1`'s tiles end.
+    pub fn from_plans(plans: &[LayerPlan], tile_offset: u32) -> StageMap {
+        let mut cursor = tile_offset;
+        let stage_tiles = plans
+            .iter()
+            .map(|p| {
+                let t = cursor;
+                cursor += p.tiles_needed as u32;
+                t
+            })
+            .collect();
+        StageMap {
+            tile_offset,
+            stage_tiles,
+            span_tiles: cursor - tile_offset,
+        }
+    }
+
+    /// Pipeline stages (= mapped layers).
+    pub fn n_stages(&self) -> usize {
+        self.stage_tiles.len()
+    }
+
+    /// One past the last tile of the span — the offset where the next
+    /// disjoint span may begin.
+    pub fn end_tile(&self) -> u32 {
+        self.tile_offset + self.span_tiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PicnicConfig;
+    use crate::mapper::ScheduleBuilder;
+    use crate::models::LlamaConfig;
+
+    #[test]
+    fn stages_are_contiguous_and_offset() {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let plans = ScheduleBuilder::new(&cfg, &model).plan_all(1, 1).unwrap();
+        let m = StageMap::from_plans(&plans, 5);
+        assert_eq!(m.tile_offset, 5);
+        assert_eq!(m.n_stages(), plans.len());
+        assert_eq!(m.stage_tiles[0], 5);
+        let mut cursor = 5u32;
+        for (p, &t) in plans.iter().zip(m.stage_tiles.iter()) {
+            assert_eq!(t, cursor, "stage begins where its predecessor ended");
+            cursor += p.tiles_needed as u32;
+        }
+        assert_eq!(m.end_tile(), cursor);
+        assert_eq!(m.span_tiles as usize, (cursor - 5) as usize);
+    }
+
+    #[test]
+    fn disjoint_spans_never_overlap() {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let plans = ScheduleBuilder::new(&cfg, &model).plan_all(1, 1).unwrap();
+        let a = StageMap::from_plans(&plans, 0);
+        let b = StageMap::from_plans(&plans, a.end_tile());
+        for &ta in &a.stage_tiles {
+            assert!(ta < a.end_tile());
+        }
+        for &tb in &b.stage_tiles {
+            assert!(tb >= a.end_tile(), "dedicated span starts past the shared one");
+        }
+        assert_eq!(b.end_tile(), 2 * a.span_tiles);
+    }
+
+    #[test]
+    fn empty_plans_make_an_empty_span() {
+        let m = StageMap::from_plans(&[], 7);
+        assert_eq!(m.n_stages(), 0);
+        assert_eq!(m.span_tiles, 0);
+        assert_eq!(m.end_tile(), 7);
+    }
+}

@@ -125,6 +125,67 @@ fn serve_with_spec_decode_reports_rounds() {
 }
 
 #[test]
+fn tenants_round_trip_through_config_dump() {
+    let text = run_ok(&[
+        "config-dump",
+        "--tenants",
+        "a:w=2:kv=8192,b:w=1:dedicated",
+    ]);
+    let j = Json::parse(&text).expect("config-dump output parses");
+    let tenants = j.get("tenants").and_then(Json::as_arr).expect("tenants array");
+    assert_eq!(tenants.len(), 2);
+    assert_eq!(tenants[0].get("name").and_then(Json::as_str), Some("a"));
+    assert_eq!(tenants[0].get("weight").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(tenants[0].get("kv_budget").and_then(Json::as_usize), Some(8192));
+    assert_eq!(tenants[1].get("dedicated").and_then(Json::as_bool), Some(true));
+    // the dump parses back into the same config (full round trip)
+    let back = picnic::config::PicnicConfig::from_json(&text).expect("round trip");
+    assert_eq!(back.tenants.tenants.len(), 2);
+    assert_eq!(back.tenants.tenants[1].name, "b");
+    assert!(back.tenants.tenants[1].dedicated);
+}
+
+#[test]
+fn tenants_invalid_specs_are_clean_errors() {
+    for (arg, needle) in [
+        ("a,a", "twice"),
+        ("a:w=0", "weight"),
+        ("a:nope=1", "unknown key"),
+    ] {
+        let out = picnic()
+            .args(["config-dump", "--tenants", arg])
+            .output()
+            .expect("spawn picnic");
+        assert!(!out.status.success(), "--tenants {arg} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(needle), "stderr for {arg:?}: {err}");
+    }
+}
+
+#[test]
+fn serve_with_tenants_reports_fairness() {
+    let text = run_ok(&[
+        "serve",
+        "--model",
+        "tiny",
+        "--requests",
+        "4",
+        "--prompt-len",
+        "16",
+        "--gen-len",
+        "4",
+        "--tenants",
+        "a:w=1,b:w=1",
+    ]);
+    assert!(text.contains("tenant a"), "per-tenant rows printed: {text}");
+    assert!(text.contains("tenant b"), "per-tenant rows printed: {text}");
+    assert!(
+        text.contains("jain fairness index"),
+        "fairness summary printed: {text}"
+    );
+}
+
+#[test]
 fn unknown_model_is_a_clean_error() {
     let out = picnic()
         .args(["run", "--model", "70b"])
