@@ -1,23 +1,37 @@
 //! End-to-end serving driver (DESIGN.md deliverable (b)/E2E): a client
-//! thread submits a bursty stream of requests; the coordinator schedules
-//! them across the chiplet pipeline stages (event-driven, chunked
-//! prefill); we report throughput, TTFT and tail latency — the run
-//! recorded in EXPERIMENTS.md §E2E.
+//! thread submits a stream of requests; the coordinator schedules them
+//! across the chiplet pipeline stages (event-driven, chunked prefill);
+//! we report throughput, TTFT and tail latency — the run recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! Two driving modes:
+//!
+//! - **Closed-loop** (default): a fixed pool of synthetic chat-shaped
+//!   requests, submitted up-front with backpressure retries — measures
+//!   the accelerator's capacity.
+//! - **Open-loop** (`--open-loop [rate=R,shape=poisson|bursty,seed=N]`):
+//!   a seeded [`TrafficModel`] stamps every request with an arrival
+//!   cycle on the simulated clock; the generator never waits for the
+//!   server, so queueing delay (and SLO shedding, if tenants carry
+//!   targets) shows up in the latency tails — measures behavior *under
+//!   load*.
 //!
 //! With `--tenants` the chiplet chain is sharded between serving
-//! tenants: the driver submits a **symmetric** workload (each drawn
-//! request shape goes to every tenant in turn) so the per-tenant
-//! throughputs and Jain's fairness index it reports reflect the
-//! scheduler, not workload luck.
+//! tenants: the closed-loop driver submits a **symmetric** workload
+//! (each drawn request shape goes to every tenant in turn) so the
+//! per-tenant throughputs and Jain's fairness index it reports reflect
+//! the scheduler, not workload luck; the open-loop driver round-robins
+//! the arrival stream.
 //!
 //! Run: `cargo run --release --example llama_serve -- [--model 1b]
 //!       [--requests 64] [--backend analytic|engine]
 //!       [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
-//!       [--tenants a:w=1:kv=8192,b:w=1:kv=8192] [--json]`
+//!       [--tenants a:w=1:kv=8192:ttft=0.05,b:w=1]
+//!       [--open-loop rate=2000,shape=bursty,seed=7] [--json]`
 
 use picnic::config::PicnicConfig;
-use picnic::coordinator::{BatchPolicy, Server, ServerConfig};
-use picnic::models::LlamaConfig;
+use picnic::coordinator::{BatchPolicy, LatencyKind, Server, ServerConfig, SubmitSpec};
+use picnic::models::{LlamaConfig, TrafficModel};
 use picnic::sim::{EngineBackend, SimBackend};
 use picnic::util::args::Args;
 use picnic::util::json::{self, Json};
@@ -29,11 +43,21 @@ fn main() -> picnic::Result<()> {
     let n_requests = args.opt_usize("requests", 64)?;
     let backend_name = args.opt_or("backend", "analytic");
     let as_json = args.flag("json");
+    let traffic = match args.opt("open-loop") {
+        Some(spec) => Some(TrafficModel::parse_cli(spec)?),
+        None if args.flag("open-loop") => Some(TrafficModel::parse_cli("")?),
+        None => None,
+    };
     let model = LlamaConfig::by_name(&model_name)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
     if !as_json {
+        let mode = if traffic.is_some() {
+            "open-loop"
+        } else {
+            "closed-loop"
+        };
         println!(
-            "serving {} with {n_requests} synthetic requests on the {backend_name} backend…",
+            "serving {} with {n_requests} synthetic requests ({mode}) on the {backend_name} backend…",
             model.name
         );
     }
@@ -41,6 +65,7 @@ fn main() -> picnic::Result<()> {
     let mut picnic_cfg = PicnicConfig::default().with_ccpg(true);
     picnic_cfg.spec_decode.apply_cli(&args)?;
     picnic_cfg.tenants.apply_cli(&args)?;
+    let freq = picnic_cfg.system.frequency_hz;
     let cfg = ServerConfig {
         picnic: picnic_cfg,
         model,
@@ -53,9 +78,10 @@ fn main() -> picnic::Result<()> {
     match backend_name.as_str() {
         "engine" => {
             let backend = EngineBackend::calibrated(cfg.picnic.clone());
-            drive(Server::with_backend(cfg, backend), n_requests, as_json)
+            let s = Server::with_backend(cfg, backend);
+            drive(s, n_requests, as_json, traffic, freq)
         }
-        "analytic" => drive(Server::new(cfg), n_requests, as_json),
+        "analytic" => drive(Server::new(cfg), n_requests, as_json, traffic, freq),
         other => anyhow::bail!("unknown backend {other} (analytic|engine)"),
     }
 }
@@ -64,34 +90,50 @@ fn drive<B: SimBackend>(
     mut server: Server<B>,
     n_requests: usize,
     as_json: bool,
+    traffic: Option<TrafficModel>,
+    freq: f64,
 ) -> picnic::Result<()> {
-    // Bursty workload: exponential-ish prompt lengths, short generations —
-    // a chat-style trace. In multi-tenant mode every drawn shape is
-    // submitted once per tenant (round-robin), keeping the load symmetric;
-    // the request count rounds up to a whole number of rounds so no tenant
-    // carries a truncated final round (a spurious fairness skew otherwise).
-    let mut rng = Rng::seed_from_u64(7);
     let n_tenants = server.n_tenants();
-    let n_requests = n_requests.div_ceil(n_tenants) * n_tenants;
-    let mut submitted = 0usize;
     let mut rejected = 0usize;
-    while submitted < n_requests {
-        let prompt = 32 + rng.below(481) as usize; // 32..512
-        let gen = 8 + rng.below(57) as usize; // 8..64
-        for tenant in 0..n_tenants {
-            if submitted >= n_requests {
-                break;
+    let open_loop = traffic.is_some();
+    match traffic {
+        Some(model) => {
+            // Open-loop: the seeded stream stamps arrival cycles; enqueue
+            // never applies backpressure to explicit arrivals.
+            for (_, spec) in model.across_tenants(n_tenants).stream(freq).take(n_requests) {
+                server
+                    .enqueue(spec)
+                    .ok_or_else(|| anyhow::anyhow!("enqueue failed"))?;
             }
-            loop {
-                match server.submit_for(tenant, prompt, gen) {
-                    Some(_) => {
-                        submitted += 1;
+        }
+        None => {
+            // Closed-loop: chat-shaped pool, symmetric across tenants; the
+            // request count rounds up to a whole number of rounds so no
+            // tenant carries a truncated final round (a spurious fairness
+            // skew otherwise).
+            let mut rng = Rng::seed_from_u64(7);
+            let n_requests = n_requests.div_ceil(n_tenants) * n_tenants;
+            let mut submitted = 0usize;
+            while submitted < n_requests {
+                let prompt = 32 + rng.below(481) as usize; // 32..512
+                let gen = 8 + rng.below(57) as usize; // 8..64
+                for tenant in 0..n_tenants {
+                    if submitted >= n_requests {
                         break;
                     }
-                    None => {
-                        rejected += 1;
-                        // drain a bit before retrying (backpressure)
-                        server.step()?;
+                    loop {
+                        let spec = SubmitSpec::new(prompt, gen).tenant(tenant);
+                        match server.enqueue(spec) {
+                            Some(_) => {
+                                submitted += 1;
+                                break;
+                            }
+                            None => {
+                                rejected += 1;
+                                // drain a bit before retrying (backpressure)
+                                server.step()?;
+                            }
+                        }
                     }
                 }
             }
@@ -102,7 +144,22 @@ fn drive<B: SimBackend>(
     let m = &server.metrics;
     let p = server.pipeline_stats();
     let tenants = server.tenant_stats();
-    assert_eq!(m.requests.len(), n_requests, "all requests must complete");
+    if open_loop {
+        // Every arrival is either served or explicitly shed — none lost.
+        assert_eq!(
+            m.requests.len() + m.shed_count(),
+            n_requests,
+            "all arrivals must resolve"
+        );
+    } else {
+        assert!(
+            m.requests.len() >= n_requests,
+            "all requests must complete"
+        );
+    }
+    let ttft = m.summary(LatencyKind::Ttft);
+    let tpot = m.summary(LatencyKind::PerToken);
+    let total = m.summary(LatencyKind::Total);
 
     if as_json {
         let per_tenant: Vec<Json> = tenants
@@ -113,22 +170,28 @@ fn drive<B: SimBackend>(
                     ("weight", json::num(t.weight)),
                     ("dedicated", Json::Bool(t.dedicated)),
                     ("requests", json::num(t.requests as f64)),
+                    ("shed", json::num(t.shed as f64)),
                     ("tokens", json::num(t.tokens as f64)),
                     ("tokens_per_s", json::num(t.tokens_per_s)),
-                    ("mean_ttft_s", json::num(t.mean_ttft_s)),
-                    ("p50_total_s", json::num(t.p50_total_s)),
-                    ("p99_total_s", json::num(t.p99_total_s)),
+                    ("ttft", t.ttft.json()),
+                    ("tpot", t.tpot.json()),
+                    ("total", t.total.json()),
+                    ("ttft_attainment", json::num(t.ttft_attainment)),
+                    ("tpot_attainment", json::num(t.tpot_attainment)),
                     ("energy_j", json::num(t.energy_j)),
                 ])
             })
             .collect();
         let doc = json::obj(vec![
+            ("open_loop", Json::Bool(open_loop)),
             ("requests", json::num(m.requests.len() as f64)),
+            ("shed", json::num(m.shed_count() as f64)),
             ("total_tokens", json::num(m.total_tokens as f64)),
             ("wall_s", json::num(m.wall_s)),
             ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
-            ("mean_ttft_s", json::num(m.mean_ttft_s())),
-            ("p99_total_s", json::num(m.p99_total_s())),
+            ("ttft", ttft.json()),
+            ("tpot", tpot.json()),
+            ("total", total.json()),
             ("stages", json::num(p.stages as f64)),
             ("stage_sets", json::num(p.stage_sets as f64)),
             ("jain_index", json::num(server.fairness_index())),
@@ -141,12 +204,35 @@ fn drive<B: SimBackend>(
     println!("---- results (accelerator-clock time) ----");
     println!("backend            : {}", server.backend().name());
     println!("requests completed : {}", m.requests.len());
-    println!("requests rejected  : {rejected} (retried under backpressure)");
+    if open_loop {
+        println!("requests shed      : {}", m.shed_count());
+    } else {
+        println!("requests rejected  : {rejected} (retried under backpressure)");
+    }
     println!("total tokens       : {}", m.total_tokens);
     println!("wall time          : {:.3} s", m.wall_s);
     println!("throughput         : {:.1} tokens/s", m.throughput_tokens_per_s());
-    println!("mean TTFT          : {:.3} ms", 1e3 * m.mean_ttft_s());
-    println!("p99 latency        : {:.3} ms", 1e3 * m.p99_total_s());
+    println!(
+        "ttft               : mean {:.3} / p50 {:.3} / p95 {:.3} / p99 {:.3} ms",
+        1e3 * ttft.mean_s,
+        1e3 * ttft.p50_s,
+        1e3 * ttft.p95_s,
+        1e3 * ttft.p99_s
+    );
+    println!(
+        "per-token          : mean {:.3} / p50 {:.3} / p95 {:.3} / p99 {:.3} ms",
+        1e3 * tpot.mean_s,
+        1e3 * tpot.p50_s,
+        1e3 * tpot.p95_s,
+        1e3 * tpot.p99_s
+    );
+    println!(
+        "end-to-end         : mean {:.3} / p50 {:.3} / p95 {:.3} / p99 {:.3} ms",
+        1e3 * total.mean_s,
+        1e3 * total.p50_s,
+        1e3 * total.p95_s,
+        1e3 * total.p99_s
+    );
     println!("---- pipeline ----");
     println!("stages             : {} × {} set(s)", p.stages, p.stage_sets);
     println!(

@@ -3,26 +3,33 @@
 //! timing of the scheduler itself, plus a **speculative-decode
 //! acceptance-rate sweep** at the largest batch, plus a **multi-tenant
 //! sweep** (1 vs 2 vs 4 equal-weight tenants, shared vs dedicated
-//! spans, symmetric workload). Dumps `BENCH_serving.json` (schema 3 —
-//! see EXPERIMENTS.md §BENCH_serving schema for the field-by-field
-//! contract): one `points` entry per batch size with simulated
-//! tokens/s, the serialized PR-2 reference, TTFT and p99; a `spec`
-//! block with one entry per acceptance rate next to the non-speculative
-//! batch-8 reference; and a `tenancy` block with per-tenant throughputs
-//! and Jain's fairness index per configuration. CI validates batch-8 >
-//! 2× batch-1, spec acceptance=1.0 ≥ the non-speculative reference, and
-//! equal-weight 2-tenant fairness (Jain ≥ 0.9 on the symmetric
-//! workload), then archives the file as the `BENCH_serving` artifact.
+//! spans, symmetric workload), plus an **open-loop traffic sweep**
+//! (Poisson and bursty arrivals at 30/60/90% of measured capacity,
+//! thousands of seeded chat-mixture requests per point). Dumps
+//! `BENCH_serving.json` (schema 4 — see EXPERIMENTS.md §BENCH_serving
+//! schema for the field-by-field contract): one `points` entry per
+//! batch size with simulated tokens/s, the serialized PR-2 reference,
+//! TTFT and p99; a `spec` block with one entry per acceptance rate next
+//! to the non-speculative batch-8 reference; a `tenancy` block with
+//! per-tenant throughputs and Jain's fairness index per configuration;
+//! and an `open_loop` block with a closed-loop parity check (every
+//! arrival at cycle 0 must match the batch-8 closed-loop run) and
+//! p50/p95/p99 TTFT / per-token / end-to-end latency per
+//! (shape × utilization) point. CI validates batch-8 > 2× batch-1, spec
+//! acceptance=1.0 ≥ the non-speculative reference, equal-weight
+//! 2-tenant fairness (Jain ≥ 0.9 on the symmetric workload), open/closed
+//! parity within 5%, and that p99 TTFT grows with offered load, then
+//! archives the file as the `BENCH_serving` artifact.
 //! Run: `cargo bench --bench serving`
 
 mod harness;
 
-use picnic::config::{PicnicConfig, SpecDecodeConfig, TenantSpec, TenantsConfig};
+use picnic::config::{PicnicConfig, SloSpec, SpecDecodeConfig, TenantSpec, TenantsConfig};
 use picnic::coordinator::{
-    serialized_workload_cycles, BatchPolicy, Metrics, PipelineStats, Server, ServerConfig,
-    TenantStats,
+    serialized_workload_cycles, BatchPolicy, LatencyKind, Metrics, PipelineStats, Server,
+    ServerConfig, SubmitSpec, TenantStats,
 };
-use picnic::models::LlamaConfig;
+use picnic::models::{LlamaConfig, TrafficModel};
 use picnic::sim::AnalyticSim;
 use picnic::util::json::{self, Json};
 
@@ -37,6 +44,11 @@ const SPEC_COST_RATIO: f64 = 0.2;
 /// Multi-tenant sweep shape: total concurrent requests stays at the
 /// largest batch row while the tenant count and span mode sweep.
 const TENANT_REQUESTS: usize = 8;
+/// Open-loop sweep shape: seeded chat-mixture traffic, thousands of
+/// requests per (shape × utilization) point.
+const OPEN_SEED: u64 = 11;
+const OPEN_CAPACITY_REQUESTS: usize = 512;
+const OPEN_SWEEP_REQUESTS: usize = 2000;
 
 fn policy(batch: usize) -> BatchPolicy {
     BatchPolicy {
@@ -46,14 +58,18 @@ fn policy(batch: usize) -> BatchPolicy {
     }
 }
 
-fn run_once(batch: usize) -> Metrics {
-    let mut s = Server::new(ServerConfig {
+fn server(batch: usize) -> Server {
+    Server::new(ServerConfig {
         picnic: PicnicConfig::default(),
         model: LlamaConfig::by_name(MODEL).expect("model"),
         policy: policy(batch),
-    });
+    })
+}
+
+fn run_once(batch: usize) -> Metrics {
+    let mut s = server(batch);
     for _ in 0..batch {
-        s.submit(PROMPT, GEN).expect("submit");
+        s.enqueue(SubmitSpec::new(PROMPT, GEN)).expect("enqueue");
     }
     s.run_to_completion().expect("run");
     s.metrics.clone()
@@ -71,6 +87,7 @@ fn run_tenancy_once(n_tenants: usize, dedicated: bool) -> (Metrics, Vec<TenantSt
                 weight: 1.0,
                 kv_budget: 0,
                 dedicated,
+                slo: SloSpec::default(),
             })
             .collect(),
     };
@@ -84,7 +101,8 @@ fn run_tenancy_once(n_tenants: usize, dedicated: bool) -> (Metrics, Vec<TenantSt
         policy: policy(TENANT_REQUESTS),
     });
     for i in 0..TENANT_REQUESTS {
-        s.submit_for(i % n_tenants, PROMPT, GEN).expect("submit");
+        s.enqueue(SubmitSpec::new(PROMPT, GEN).tenant(i % n_tenants))
+            .expect("enqueue");
     }
     s.run_to_completion().expect("run");
     let stats = s.tenant_stats();
@@ -108,10 +126,62 @@ fn run_spec_once(batch: usize, acceptance: f64) -> (Metrics, PipelineStats) {
         policy: policy(batch),
     });
     for _ in 0..batch {
-        s.submit(PROMPT, GEN).expect("submit");
+        s.enqueue(SubmitSpec::new(PROMPT, GEN)).expect("enqueue");
     }
     s.run_to_completion().expect("run");
     (s.metrics.clone(), s.pipeline_stats())
+}
+
+/// Closed-loop parity probe: the same `batch` fixed-shape requests as
+/// `run_once`, but through the open-loop path with every arrival
+/// stamped at cycle 0. The schedules must coincide — this pins the
+/// rate→∞ limit of the open-loop machinery to the closed-loop result.
+fn run_open_parity(batch: usize) -> Metrics {
+    let mut s = server(batch);
+    for _ in 0..batch {
+        s.enqueue(SubmitSpec::new(PROMPT, GEN).arrives_at(0))
+            .expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+    s.metrics.clone()
+}
+
+/// Capacity probe: `n` seeded chat-mixture requests all arriving at
+/// cycle 0 (infinite offered load) → sustainable tokens/s for this
+/// model/policy, plus the mixture's mean generation length (used to
+/// convert a utilization target into an arrival rate).
+fn run_capacity(n: usize, freq: f64) -> (f64, f64) {
+    let model = TrafficModel::poisson(OPEN_SEED, 1.0);
+    let mut s = server(SPEC_BATCH);
+    let mut gen_tokens = 0u64;
+    for (_, spec) in model.stream(freq).take(n) {
+        gen_tokens += spec.max_new_tokens as u64;
+        s.enqueue(spec.arrives_at(0)).expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+    let mean_gen = gen_tokens as f64 / n as f64;
+    (s.metrics.throughput_tokens_per_s(), mean_gen)
+}
+
+/// One open-loop sweep point: `n` requests from the seeded stream at
+/// `rate_rps`, Poisson or bursty. Returns the metrics and the offered
+/// token rate (mixture generation tokens per arrival-clock second).
+fn run_open_loop(shape: &str, rate_rps: f64, n: usize, freq: f64) -> (Metrics, f64) {
+    let model = match shape {
+        "bursty" => TrafficModel::bursty(OPEN_SEED, rate_rps),
+        _ => TrafficModel::poisson(OPEN_SEED, rate_rps),
+    };
+    let mut s = server(SPEC_BATCH);
+    let mut offered_tokens = 0u64;
+    let mut last_arrival = 0u64;
+    for (arrival, spec) in model.stream(freq).take(n) {
+        offered_tokens += spec.max_new_tokens as u64;
+        last_arrival = arrival;
+        s.enqueue(spec).expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+    let span_s = (last_arrival as f64 / freq).max(1e-12);
+    (s.metrics.clone(), offered_tokens as f64 / span_s)
 }
 
 fn main() {
@@ -141,20 +211,22 @@ fn main() {
         if batch == SPEC_BATCH {
             reference_tps = m.throughput_tokens_per_s();
         }
+        let ttft = m.summary(LatencyKind::Ttft);
+        let total = m.summary(LatencyKind::Total);
         println!(
             "  batch {batch}: {:>8.1} tokens/s pipelined   {:>8.1} tokens/s serialized   \
              mean TTFT {:.3} ms   p99 {:.3} ms",
             m.throughput_tokens_per_s(),
             ser_tps,
-            1e3 * m.mean_ttft_s(),
-            1e3 * m.p99_total_s(),
+            1e3 * ttft.mean_s,
+            1e3 * total.p99_s,
         );
         points.push(json::obj(vec![
             ("batch", json::num(batch as f64)),
             ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
             ("serialized_tokens_per_s", json::num(ser_tps)),
-            ("mean_ttft_s", json::num(m.mean_ttft_s())),
-            ("p99_total_s", json::num(m.p99_total_s())),
+            ("mean_ttft_s", json::num(ttft.mean_s)),
+            ("p99_total_s", json::num(total.p99_s)),
         ]));
     }
 
@@ -167,6 +239,8 @@ fn main() {
     let mut spec_points: Vec<Json> = Vec::new();
     for &acceptance in &accepts {
         let (m, p) = run_spec_once(SPEC_BATCH, acceptance);
+        let ttft = m.summary(LatencyKind::Ttft);
+        let total = m.summary(LatencyKind::Total);
         println!(
             "  accept {acceptance:.2}: {:>8.1} tokens/s ({:+6.1}% vs non-spec)   \
              {} rounds, {} drafted, {} rolled back   mean TTFT {:.3} ms",
@@ -175,13 +249,13 @@ fn main() {
             p.spec_rounds,
             p.spec_drafted,
             p.spec_rolled_back,
-            1e3 * m.mean_ttft_s(),
+            1e3 * ttft.mean_s,
         );
         spec_points.push(json::obj(vec![
             ("acceptance", json::num(acceptance)),
             ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
-            ("mean_ttft_s", json::num(m.mean_ttft_s())),
-            ("p99_total_s", json::num(m.p99_total_s())),
+            ("mean_ttft_s", json::num(ttft.mean_s)),
+            ("p99_total_s", json::num(total.p99_s)),
             ("spec_rounds", json::num(p.spec_rounds as f64)),
             ("spec_drafted", json::num(p.spec_drafted as f64)),
             ("spec_committed", json::num(p.spec_committed as f64)),
@@ -214,20 +288,71 @@ fn main() {
                         ("requests", json::num(t.requests as f64)),
                         ("tokens", json::num(t.tokens as f64)),
                         ("tokens_per_s", json::num(t.tokens_per_s)),
-                        ("p50_total_s", json::num(t.p50_total_s)),
-                        ("p99_total_s", json::num(t.p99_total_s)),
+                        ("p50_total_s", json::num(t.total.p50_s)),
+                        ("p99_total_s", json::num(t.total.p99_s)),
                         ("energy_j", json::num(t.energy_j)),
                     ])
                 })
                 .collect();
+            let ttft = m.summary(LatencyKind::Ttft);
+            let total = m.summary(LatencyKind::Total);
             tenancy_points.push(json::obj(vec![
                 ("tenants", json::num(n_tenants as f64)),
                 ("mode", json::s(mode)),
                 ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
-                ("mean_ttft_s", json::num(m.mean_ttft_s())),
-                ("p99_total_s", json::num(m.p99_total_s())),
+                ("mean_ttft_s", json::num(ttft.mean_s)),
+                ("p99_total_s", json::num(total.p99_s)),
                 ("jain_index", json::num(jain)),
                 ("per_tenant", Json::Arr(per_tenant)),
+            ]));
+        }
+    }
+
+    harness::section("open-loop traffic: latency tails vs offered load");
+    let closed = run_once(SPEC_BATCH);
+    let parity = run_open_parity(SPEC_BATCH);
+    let parity_ratio =
+        parity.throughput_tokens_per_s() / closed.throughput_tokens_per_s().max(1e-12);
+    println!(
+        "  parity (rate→∞ vs closed-loop batch-{SPEC_BATCH}): {:.1} vs {:.1} tokens/s \
+         (ratio {parity_ratio:.4})",
+        parity.throughput_tokens_per_s(),
+        closed.throughput_tokens_per_s(),
+    );
+    let (capacity_tps, mean_gen) = run_capacity(OPEN_CAPACITY_REQUESTS, freq);
+    println!(
+        "  capacity ({OPEN_CAPACITY_REQUESTS} chat-mixture requests at cycle 0): \
+         {capacity_tps:.1} tokens/s, mean generation {mean_gen:.1} tokens"
+    );
+    let mut open_points: Vec<Json> = Vec::new();
+    for shape in ["poisson", "bursty"] {
+        for &utilization in &[0.3f64, 0.6, 0.9] {
+            let rate_rps = utilization * capacity_tps / mean_gen;
+            let (m, offered_tps) = run_open_loop(shape, rate_rps, OPEN_SWEEP_REQUESTS, freq);
+            let ttft = m.summary(LatencyKind::Ttft);
+            let tpot = m.summary(LatencyKind::PerToken);
+            let total = m.summary(LatencyKind::Total);
+            println!(
+                "  {shape:<7} util {utilization:.1} ({rate_rps:>8.1} req/s): \
+                 {:>8.1} tokens/s delivered   ttft p50 {:.3} / p99 {:.3} ms   \
+                 tpot p99 {:.3} ms",
+                m.throughput_tokens_per_s(),
+                1e3 * ttft.p50_s,
+                1e3 * ttft.p99_s,
+                1e3 * tpot.p99_s,
+            );
+            open_points.push(json::obj(vec![
+                ("shape", json::s(shape)),
+                ("utilization", json::num(utilization)),
+                ("rate_rps", json::num(rate_rps)),
+                ("requests", json::num(OPEN_SWEEP_REQUESTS as f64)),
+                ("completed", json::num(m.requests.len() as f64)),
+                ("shed", json::num(m.shed_count() as f64)),
+                ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
+                ("offered_tokens_per_s", json::num(offered_tps)),
+                ("ttft", ttft.json()),
+                ("tpot", tpot.json()),
+                ("total", total.json()),
             ]));
         }
     }
@@ -235,8 +360,9 @@ fn main() {
     let n_points = points.len();
     let n_spec = spec_points.len();
     let n_tenancy = tenancy_points.len();
+    let n_open = open_points.len();
     let doc = json::obj(vec![
-        ("schema", json::num(3.0)),
+        ("schema", json::num(4.0)),
         ("model", json::s(MODEL)),
         ("prompt_len", json::num(PROMPT as f64)),
         ("gen_len", json::num(GEN as f64)),
@@ -258,10 +384,28 @@ fn main() {
                 ("points", Json::Arr(tenancy_points)),
             ]),
         ),
+        (
+            "open_loop",
+            json::obj(vec![
+                ("seed", json::num(OPEN_SEED as f64)),
+                ("requests_per_point", json::num(OPEN_SWEEP_REQUESTS as f64)),
+                ("capacity_tokens_per_s", json::num(capacity_tps)),
+                ("mean_gen_tokens", json::num(mean_gen)),
+                (
+                    "parity",
+                    json::obj(vec![
+                        ("closed_tokens_per_s", json::num(closed.throughput_tokens_per_s())),
+                        ("open_tokens_per_s", json::num(parity.throughput_tokens_per_s())),
+                        ("ratio", json::num(parity_ratio)),
+                    ]),
+                ),
+                ("points", Json::Arr(open_points)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serving.json", format!("{doc}\n")).expect("write serving report");
     println!(
         "\nwrote BENCH_serving.json ({n_points} batch points, {n_spec} spec points, \
-         {n_tenancy} tenancy points)"
+         {n_tenancy} tenancy points, {n_open} open-loop points)"
     );
 }

@@ -361,6 +361,48 @@ impl SpecDecodeConfig {
     }
 }
 
+/// Tail-latency service-level objectives for one tenant (ARCHITECTURE.md
+/// §Open-loop serving; enforced by `coordinator::Server`).
+///
+/// Targets are in seconds; `0.0` (the default) leaves that dimension
+/// unconstrained. A constrained tenant changes the serving loop twice:
+/// the event-loop tie-break becomes earliest-deadline-first before the
+/// weighted-fair comparison, and admission **sheds** queued requests
+/// whose TTFT target already expired before any work ran (they can only
+/// burn pipeline capacity other requests could still convert into met
+/// SLOs).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SloSpec {
+    /// Time-to-first-token target, seconds. 0 = unconstrained.
+    pub ttft_s: f64,
+    /// Per-output-token (inter-token) latency target, seconds.
+    /// 0 = unconstrained.
+    pub tpot_s: f64,
+}
+
+impl SloSpec {
+    /// True when at least one target is set.
+    pub fn is_constrained(&self) -> bool {
+        self.ttft_s > 0.0 || self.tpot_s > 0.0
+    }
+
+    /// Reject negative or non-finite targets with a message naming the
+    /// field.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.ttft_s >= 0.0 && self.ttft_s.is_finite(),
+            "slo.ttft_s must be finite and >= 0 (got {})",
+            self.ttft_s
+        );
+        anyhow::ensure!(
+            self.tpot_s >= 0.0 && self.tpot_s.is_finite(),
+            "slo.tpot_s must be finite and >= 0 (got {})",
+            self.tpot_s
+        );
+        Ok(())
+    }
+}
+
 /// One serving tenant for multi-tenant chiplet sharding (ARCHITECTURE.md
 /// §Multi-tenancy; implemented by `coordinator::Batcher` admission lanes
 /// and the `coordinator::Server` stage maps).
@@ -392,6 +434,10 @@ pub struct TenantSpec {
     /// span. Buys isolation (no cross-tenant stage contention) at the
     /// cost of deploying a full extra copy of the model's tiles.
     pub dedicated: bool,
+    /// Tail-latency targets for this tenant's requests (default:
+    /// unconstrained). Per-request [`SloSpec`] overrides on
+    /// `coordinator::SubmitSpec` take precedence.
+    pub slo: SloSpec,
 }
 
 impl TenantSpec {
@@ -403,6 +449,7 @@ impl TenantSpec {
             weight: 1.0,
             kv_budget: 0,
             dedicated: false,
+            slo: SloSpec::default(),
         }
     }
 }
@@ -477,6 +524,9 @@ impl TenantsConfig {
                 "tenant {:?} declared twice",
                 t.name
             );
+            t.slo
+                .validate()
+                .map_err(|e| anyhow::anyhow!("tenant {:?}: {e}", t.name))?;
         }
         Ok(())
     }
@@ -492,9 +542,9 @@ impl TenantsConfig {
     }
 
     /// Parse the CLI shorthand: comma-separated tenants, each
-    /// `name[:w=WEIGHT][:kv=TOKENS][:dedicated]` (attribute order free;
-    /// omitted attributes default to weight 1, no per-tenant KV cap,
-    /// shared span). The result is validated.
+    /// `name[:w=WEIGHT][:kv=TOKENS][:ttft=SECONDS][:tpot=SECONDS][:dedicated]`
+    /// (attribute order free; omitted attributes default to weight 1, no
+    /// per-tenant KV cap, no SLO, shared span). The result is validated.
     pub fn parse_cli(text: &str) -> crate::Result<TenantsConfig> {
         let mut tenants = Vec::new();
         for part in text.split(',').filter(|p| !p.trim().is_empty()) {
@@ -524,8 +574,20 @@ impl TenantsConfig {
                             .parse()
                             .map_err(|e| anyhow::anyhow!("--tenants kv {v:?}: {e}"))?
                     }
+                    ("ttft", v) | ("ttft_s", v) => {
+                        spec.slo.ttft_s = v
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--tenants ttft {v:?}: {e}"))?
+                    }
+                    ("tpot", v) | ("tpot_s", v) => {
+                        spec.slo.tpot_s = v
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--tenants tpot {v:?}: {e}"))?
+                    }
                     (other, _) => {
-                        anyhow::bail!("--tenants: unknown key {other:?} (w|kv|dedicated)")
+                        anyhow::bail!(
+                            "--tenants: unknown key {other:?} (w|kv|ttft|tpot|dedicated)"
+                        )
                     }
                 }
             }
@@ -671,6 +733,10 @@ impl PicnicConfig {
                     weight: e.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
                     kv_budget: e.get("kv_budget").and_then(Json::as_usize).unwrap_or(0),
                     dedicated: e.get("dedicated").and_then(Json::as_bool).unwrap_or(false),
+                    slo: SloSpec {
+                        ttft_s: e.get("ttft_s").and_then(Json::as_f64).unwrap_or(0.0),
+                        tpot_s: e.get("tpot_s").and_then(Json::as_f64).unwrap_or(0.0),
+                    },
                 })
                 .collect();
         }
@@ -699,8 +765,8 @@ impl PicnicConfig {
             .iter()
             .map(|t| {
                 format!(
-                    "{{\"name\": \"{}\", \"weight\": {}, \"kv_budget\": {}, \"dedicated\": {}}}",
-                    t.name, t.weight, t.kv_budget, t.dedicated
+                    "{{\"name\": \"{}\", \"weight\": {}, \"kv_budget\": {}, \"dedicated\": {}, \"ttft_s\": {}, \"tpot_s\": {}}}",
+                    t.name, t.weight, t.kv_budget, t.dedicated, t.slo.ttft_s, t.slo.tpot_s
                 )
             })
             .collect();
@@ -869,12 +935,17 @@ mod tests {
                         weight: 2.0,
                         kv_budget: 8192,
                         dedicated: false,
+                        slo: SloSpec {
+                            ttft_s: 0.05,
+                            tpot_s: 0.002,
+                        },
                     },
                     TenantSpec {
                         name: "beta".to_string(),
                         weight: 1.0,
                         kv_budget: 0,
                         dedicated: true,
+                        slo: SloSpec::default(),
                     },
                 ],
             },
@@ -884,6 +955,9 @@ mod tests {
         assert_eq!(back, c);
         assert_eq!(back.tenants.tenants[1].name, "beta");
         assert!(back.tenants.tenants[1].dedicated);
+        assert!((back.tenants.tenants[0].slo.ttft_s - 0.05).abs() < 1e-12);
+        assert!((back.tenants.tenants[0].slo.tpot_s - 0.002).abs() < 1e-12);
+        assert!(!back.tenants.tenants[1].slo.is_constrained());
         // empty tenant list round-trips to single-tenant mode
         let solo = PicnicConfig::from_json(&PicnicConfig::default().to_json()).unwrap();
         assert!(solo.tenants.tenants.is_empty());
@@ -897,6 +971,8 @@ mod tests {
             (r#"{"tenants": [{"name": "a", "weight": 0}]}"#, "weight"),
             (r#"{"tenants": [{"name": "a"}, {"name": "a"}]}"#, "twice"),
             (r#"{"tenants": [{"name": "a b"}]}"#, "name"),
+            (r#"{"tenants": [{"name": "a", "ttft_s": -1}]}"#, "ttft_s"),
+            (r#"{"tenants": [{"name": "a", "tpot_s": -0.5}]}"#, "tpot_s"),
         ] {
             let err = PicnicConfig::from_json(json).unwrap_err();
             assert!(
@@ -926,6 +1002,18 @@ mod tests {
         let solo = TenantsConfig::parse_cli("").unwrap();
         assert!(solo.tenants.is_empty());
         assert!(!solo.is_multi());
+    }
+
+    #[test]
+    fn tenants_cli_slo_keys() {
+        let t = TenantsConfig::parse_cli("gold:ttft=0.05:tpot=0.002,free").unwrap();
+        assert!((t.tenants[0].slo.ttft_s - 0.05).abs() < 1e-12);
+        assert!((t.tenants[0].slo.tpot_s - 0.002).abs() < 1e-12);
+        assert!(t.tenants[0].slo.is_constrained());
+        assert!(!t.tenants[1].slo.is_constrained(), "no SLO by default");
+        // negative / non-finite targets are rejected by validation
+        assert!(TenantsConfig::parse_cli("a:ttft=-1").is_err());
+        assert!(TenantsConfig::parse_cli("a:tpot=nan").is_err());
     }
 
     #[test]

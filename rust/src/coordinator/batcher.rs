@@ -160,6 +160,23 @@ impl Batcher {
         true
     }
 
+    /// Enqueue a request on its owning tenant's lane unconditionally —
+    /// the open-loop surfacing path. An open-loop request was accepted
+    /// when its trace was submitted; by the time its arrival cycle comes
+    /// around there is no client left to backpressure, so the lane cap
+    /// of [`Batcher::submit`] does not apply (queue depth becomes
+    /// queueing delay in the latency metrics instead).
+    pub fn enqueue(&mut self, r: Request) {
+        assert!(
+            r.tenant < self.lanes.len(),
+            "request {} names tenant {} but only {} configured",
+            r.id,
+            r.tenant,
+            self.lanes.len()
+        );
+        self.lanes[r.tenant].queue.push_back(r);
+    }
+
     /// Queued requests across all lanes.
     pub fn queued(&self) -> usize {
         self.lanes.iter().map(|l| l.queue.len()).sum()
@@ -228,7 +245,39 @@ impl Batcher {
     /// on shared capacity — no one jumps the line); a head that overflows
     /// only its **own tenant's** budget blocks just that lane.
     pub fn admit(&mut self) -> Vec<RequestId> {
-        let mut admitted = Vec::new();
+        // `now = 0` makes every TTFT deadline unexpired, so this is the
+        // plain admission round with no shedding.
+        self.admit_at(0, 1.0).admitted
+    }
+
+    /// [`Batcher::admit`] with SLO-aware shedding: before the admission
+    /// round, each lane's head requests whose TTFT deadline already
+    /// passed at `now_cycle` are dropped (terminal
+    /// [`RequestState::Shed`]) and returned for the server to record —
+    /// they can only burn pipeline capacity that requests still inside
+    /// their targets could convert into met SLOs. Only lane *heads* are
+    /// inspected: lanes are FCFS per tenant, so under a uniform
+    /// per-tenant SLO everything behind an expired head is expired too,
+    /// and a still-live head keeps its tenant's line moving (per-request
+    /// SLO overrides deeper in a lane are shed when they reach the
+    /// front).
+    pub fn admit_at(&mut self, now_cycle: u64, freq_hz: f64) -> Admission {
+        let mut out = Admission::default();
+        for lane in self.lanes.iter_mut() {
+            loop {
+                let overdue = lane
+                    .queue
+                    .front()
+                    .and_then(|r| r.ttft_deadline_cycle(freq_hz))
+                    .is_some_and(|d| d < now_cycle);
+                if !overdue {
+                    break;
+                }
+                let mut r = lane.queue.pop_front().expect("checked head");
+                r.state = RequestState::Shed;
+                out.shed.push(r);
+            }
+        }
         let mut blocked = vec![false; self.lanes.len()];
         while self.inflight.len() < self.policy.max_batch {
             let Some(i) = self.pick_lane(&blocked) else { break };
@@ -253,11 +302,11 @@ impl Batcher {
             let mut r = self.lanes[i].queue.pop_front().unwrap();
             r.state = RequestState::Prefilling;
             self.lanes[i].reserved_kv += kv_needed;
-            admitted.push(r.id);
+            out.admitted.push(r.id);
             self.index.insert(r.id, self.inflight.len());
             self.inflight.push(r);
         }
-        admitted
+        out
     }
 
     /// The next work item under coarse decode-priority: all decoding
@@ -314,6 +363,17 @@ impl Batcher {
     }
 }
 
+/// Outcome of one SLO-aware admission round ([`Batcher::admit_at`]).
+#[derive(Debug, Default)]
+pub struct Admission {
+    /// Ids moved into the in-flight set this round.
+    pub admitted: Vec<RequestId>,
+    /// Requests dropped because their TTFT deadline expired while queued
+    /// (terminal [`RequestState::Shed`]; never entered the in-flight
+    /// set).
+    pub shed: Vec<Request>,
+}
+
 /// What the server should execute next.
 pub enum Work<'a> {
     Prefill(&'a mut Request),
@@ -334,15 +394,13 @@ mod tests {
             tenants: vec![
                 TenantSpec {
                     name: "a".to_string(),
-                    weight: 1.0,
                     kv_budget: kv_a,
-                    dedicated: false,
+                    ..TenantSpec::solo()
                 },
                 TenantSpec {
                     name: "b".to_string(),
-                    weight: 1.0,
                     kv_budget: kv_b,
-                    dedicated: false,
+                    ..TenantSpec::solo()
                 },
             ],
         }
@@ -464,6 +522,58 @@ mod tests {
         assert_eq!(b.reap(), 1);
         assert_eq!(b.inflight().len(), 0);
         assert_eq!(b.done().len(), 1);
+    }
+
+    #[test]
+    fn admit_at_sheds_expired_heads_only() {
+        use crate::config::SloSpec;
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1,
+            kv_budget: 1_000_000,
+            ..BatchPolicy::default()
+        });
+        let slo = SloSpec {
+            ttft_s: 1e-6, // 1000-cycle deadline at 1 GHz
+            tpot_s: 0.0,
+        };
+        for i in 0..3u64 {
+            let mut r = req(i, 16, 4);
+            r.slo = slo;
+            b.enqueue(r);
+        }
+        // max_batch 1: request 0 admits, 1 and 2 stay queued
+        let first = b.admit_at(0, 1e9);
+        assert_eq!(first.admitted, vec![0]);
+        assert!(first.shed.is_empty(), "nothing expired at cycle 0");
+        // far past every deadline: the queued heads shed, nothing admits
+        // (the batch is still full)
+        let late = b.admit_at(10_000, 1e9);
+        assert!(late.admitted.is_empty());
+        assert_eq!(late.shed.len(), 2);
+        assert!(late.shed.iter().all(|r| r.state == RequestState::Shed));
+        assert_eq!(b.queued(), 0);
+        // unconstrained requests never shed
+        b.enqueue(req(9, 16, 4));
+        let never = b.admit_at(u64::MAX - 1, 1e9);
+        assert!(never.shed.is_empty());
+    }
+
+    #[test]
+    fn enqueue_bypasses_lane_cap() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 1,
+            ..BatchPolicy::default()
+        });
+        // submit() backpressures past max_batch * 16 …
+        let cap = 16;
+        for i in 0..cap {
+            assert!(b.submit(req(i, 16, 4)));
+        }
+        assert!(!b.submit(req(99, 16, 4)), "lane cap reached");
+        // … enqueue() never does (open-loop arrivals have no client to
+        // push back on)
+        b.enqueue(req(100, 16, 4));
+        assert_eq!(b.queued(), cap as usize + 1);
     }
 
     #[test]

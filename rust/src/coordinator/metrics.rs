@@ -1,8 +1,65 @@
-//! Serving metrics: per-request latency components, run aggregates, and
-//! the fairness helpers the multi-tenant stats are built from.
+//! Serving metrics: per-request latency components, run aggregates with
+//! one generic [`LatencySummary`] surface, and the fairness helpers the
+//! multi-tenant stats are built from.
 
 use super::request::Request;
+use crate::util::{json, Json};
 use std::collections::HashSet;
+
+/// Which recorded latency series a [`Metrics::summary`] call aggregates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LatencyKind {
+    /// Arrival → first prefill chunk dispatchable (queue delay).
+    Queue,
+    /// Arrival → first output token (TTFT).
+    Ttft,
+    /// Mean inter-token latency per request (TPOT); requests with fewer
+    /// than two output tokens have no inter-token gap and are excluded.
+    PerToken,
+    /// Arrival → last token (end-to-end).
+    Total,
+}
+
+/// Mean + tail percentiles of one latency series, all in seconds — the
+/// single aggregate shape the bench, both CLIs and the per-tenant stats
+/// report (replacing the old one-accessor-per-statistic sprawl).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Number of samples aggregated (0 ⇒ all statistics are 0.0).
+    pub n: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl LatencySummary {
+    /// Aggregate a series by the nearest-rank [`percentile`] method.
+    pub fn of(values: &[f64]) -> LatencySummary {
+        if values.is_empty() {
+            return LatencySummary::default();
+        }
+        LatencySummary {
+            n: values.len(),
+            mean_s: values.iter().sum::<f64>() / values.len() as f64,
+            p50_s: percentile(values, 0.50),
+            p95_s: percentile(values, 0.95),
+            p99_s: percentile(values, 0.99),
+        }
+    }
+
+    /// The summary as a JSON object (`n`, `mean_s`, `p50_s`, `p95_s`,
+    /// `p99_s`) for the bench artifact and the CLI `--json` outputs.
+    pub fn json(&self) -> Json {
+        json::obj(vec![
+            ("n", json::num(self.n as f64)),
+            ("mean_s", json::num(self.mean_s)),
+            ("p50_s", json::num(self.p50_s)),
+            ("p95_s", json::num(self.p95_s)),
+            ("p99_s", json::num(self.p99_s)),
+        ])
+    }
+}
 
 /// Per-request latency metrics (all in seconds).
 #[derive(Debug, Clone)]
@@ -13,14 +70,28 @@ pub struct RequestMetrics {
     pub tenant: usize,
     pub queue_s: f64,
     pub ttft_s: f64,
+    /// Mean inter-token latency, `(total - ttft) / (tokens - 1)`; 0.0
+    /// for single-token requests (no inter-token gap exists).
+    pub tpot_s: f64,
     pub total_s: f64,
     pub tokens: usize,
+}
+
+/// One request dropped by SLO admission control before any work ran.
+#[derive(Debug, Clone)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub tenant: usize,
+    /// Seconds the request sat queued before being shed.
+    pub waited_s: f64,
 }
 
 /// Run-level aggregates.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: Vec<RequestMetrics>,
+    /// Requests shed by SLO admission control (terminal, never served).
+    pub shed: Vec<ShedRecord>,
     pub total_tokens: u64,
     pub wall_s: f64,
     /// Ids already recorded — makes `record` idempotent in O(1). The
@@ -39,15 +110,62 @@ impl Metrics {
         }
         let s = |c: u64| c as f64 / freq_hz;
         let done = r.done_cycle.expect("recorded after completion");
+        let ttft_s = s(r.first_token_cycle.unwrap_or(done).saturating_sub(r.arrived_cycle));
+        let total_s = s(done.saturating_sub(r.arrived_cycle));
         self.requests.push(RequestMetrics {
             id: r.id,
             tenant: r.tenant,
             queue_s: s(prefill_started_cycle.saturating_sub(r.arrived_cycle)),
-            ttft_s: s(r.first_token_cycle.unwrap_or(done).saturating_sub(r.arrived_cycle)),
-            total_s: s(done.saturating_sub(r.arrived_cycle)),
+            ttft_s,
+            tpot_s: if r.generated > 1 {
+                (total_s - ttft_s) / (r.generated - 1) as f64
+            } else {
+                0.0
+            },
+            total_s,
             tokens: r.generated,
         });
         self.total_tokens += r.generated as u64;
+    }
+
+    /// Record a request shed at admission time once; repeat calls for the
+    /// same id are no-ops (shares the id space with [`Metrics::record`]).
+    pub fn record_shed(&mut self, r: &Request, now_cycle: u64, freq_hz: f64) {
+        if !self.recorded.insert(r.id) {
+            return;
+        }
+        self.shed.push(ShedRecord {
+            id: r.id,
+            tenant: r.tenant,
+            waited_s: now_cycle.saturating_sub(r.arrived_cycle) as f64 / freq_hz,
+        });
+    }
+
+    /// Number of requests shed by SLO admission control.
+    pub fn shed_count(&self) -> usize {
+        self.shed.len()
+    }
+
+    /// The raw series behind [`Metrics::summary`] (completed requests
+    /// only, in completion-record order).
+    pub fn series(&self, kind: LatencyKind) -> Vec<f64> {
+        match kind {
+            LatencyKind::Queue => self.requests.iter().map(|r| r.queue_s).collect(),
+            LatencyKind::Ttft => self.requests.iter().map(|r| r.ttft_s).collect(),
+            LatencyKind::PerToken => self
+                .requests
+                .iter()
+                .filter(|r| r.tokens > 1)
+                .map(|r| r.tpot_s)
+                .collect(),
+            LatencyKind::Total => self.requests.iter().map(|r| r.total_s).collect(),
+        }
+    }
+
+    /// Mean/p50/p95/p99 of one latency series — the single aggregation
+    /// entry point.
+    pub fn summary(&self, kind: LatencyKind) -> LatencySummary {
+        LatencySummary::of(&self.series(kind))
     }
 
     pub fn throughput_tokens_per_s(&self) -> f64 {
@@ -58,21 +176,19 @@ impl Metrics {
         }
     }
 
+    #[deprecated(note = "use Metrics::summary(LatencyKind::Ttft).mean_s")]
     pub fn mean_ttft_s(&self) -> f64 {
-        if self.requests.is_empty() {
-            return 0.0;
-        }
-        self.requests.iter().map(|r| r.ttft_s).sum::<f64>() / self.requests.len() as f64
+        self.summary(LatencyKind::Ttft).mean_s
     }
 
+    #[deprecated(note = "use Metrics::summary(LatencyKind::Total).p50_s")]
     pub fn p50_total_s(&self) -> f64 {
-        let v: Vec<f64> = self.requests.iter().map(|r| r.total_s).collect();
-        percentile(&v, 0.50)
+        self.summary(LatencyKind::Total).p50_s
     }
 
+    #[deprecated(note = "use Metrics::summary(LatencyKind::Total).p99_s")]
     pub fn p99_total_s(&self) -> f64 {
-        let v: Vec<f64> = self.requests.iter().map(|r| r.total_s).collect();
-        percentile(&v, 0.99)
+        self.summary(LatencyKind::Total).p99_s
     }
 }
 
@@ -116,6 +232,7 @@ pub fn jain_index(rates: &[f64]) -> f64 {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy accessors stay covered until removal
 mod tests {
     use super::*;
     use crate::coordinator::request::RequestState;
@@ -174,6 +291,64 @@ mod tests {
         assert!(m.p99_total_s() > 0.0);
         assert!((m.p50_total_s() - m.p99_total_s()).abs() < 1e-15);
         assert!((m.mean_ttft_s() - 1e-8).abs() < 1e-15);
+    }
+
+    #[test]
+    fn summary_matches_legacy_accessors() {
+        let mut m = Metrics::default();
+        for (id, done) in [(1u64, 100u64), (2, 400), (3, 900), (4, 1600)] {
+            m.record(&done_request(id, 0, done / 2, done, 4), 0, 1e9);
+        }
+        let total = m.summary(LatencyKind::Total);
+        assert_eq!(total.n, 4);
+        assert!((total.p50_s - m.p50_total_s()).abs() < 1e-18);
+        assert!((total.p99_s - m.p99_total_s()).abs() < 1e-18);
+        assert!((m.summary(LatencyKind::Ttft).mean_s - m.mean_ttft_s()).abs() < 1e-18);
+        // p95 sits between p50 and p99 on a monotone series
+        assert!(total.p50_s <= total.p95_s && total.p95_s <= total.p99_s);
+    }
+
+    #[test]
+    fn per_token_series_excludes_single_token_requests() {
+        let mut m = Metrics::default();
+        // 4 tokens, first at 100, done at 400 → 3 gaps of 100 cycles
+        m.record(&done_request(1, 0, 100, 400, 4), 0, 1e9);
+        m.record(&done_request(2, 0, 50, 50, 1), 0, 1e9);
+        let tpot = m.summary(LatencyKind::PerToken);
+        assert_eq!(tpot.n, 1, "single-token request has no inter-token gap");
+        assert!((tpot.mean_s - 1e-7).abs() < 1e-15);
+        assert!((m.requests[0].tpot_s - 1e-7).abs() < 1e-15);
+        assert_eq!(m.requests[1].tpot_s, 0.0);
+        // the other series still see both requests
+        assert_eq!(m.summary(LatencyKind::Total).n, 2);
+        assert_eq!(m.summary(LatencyKind::Queue).n, 2);
+    }
+
+    #[test]
+    fn empty_metrics_summaries_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.summary(LatencyKind::Ttft), LatencySummary::default());
+        assert_eq!(m.summary(LatencyKind::Ttft).n, 0);
+    }
+
+    #[test]
+    fn latency_summary_json_shape() {
+        let s = LatencySummary::of(&[1.0, 2.0, 3.0, 4.0]);
+        let j = s.json();
+        assert_eq!(j.get("n").and_then(Json::as_usize), Some(4));
+        assert!((j.get("mean_s").and_then(Json::as_f64).unwrap() - 2.5).abs() < 1e-12);
+        assert!((j.get("p99_s").and_then(Json::as_f64).unwrap() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_records_are_idempotent_and_separate() {
+        let mut m = Metrics::default();
+        let r = Request::new(9, 8, 4, 1_000);
+        m.record_shed(&r, 2_000, 1e9);
+        m.record_shed(&r, 3_000, 1e9);
+        assert_eq!(m.shed_count(), 1, "same id shed once");
+        assert!((m.shed[0].waited_s - 1e-6).abs() < 1e-15);
+        assert!(m.requests.is_empty(), "shed requests never complete");
     }
 
     #[test]

@@ -58,15 +58,34 @@
 //! in the event loop, and per-tenant service/energy/CCPG attribution
 //! ([`TenantStats`], [`jain_index`]). See ARCHITECTURE.md
 //! §Multi-tenancy.
+//!
+//! ## Open-loop serving and SLOs
+//!
+//! Requests are described by a [`SubmitSpec`] and handed to
+//! [`Server::enqueue`]. A spec may carry an explicit **arrival cycle**
+//! ([`SubmitSpec::arrives_at`]) — the server parks it on an internal
+//! arrival calendar, invisible to the batcher until the simulated clock
+//! reaches it, which is what makes open-loop (arrival-rate-driven)
+//! experiments honest: the generator never waits for the server
+//! ([`crate::models::TrafficModel`] produces such streams). Tenants may
+//! carry TTFT / per-token SLO targets ([`crate::config::SloSpec`]):
+//! admission sheds requests whose TTFT deadline already expired while
+//! queued ([`Batcher::admit_at`], recorded in [`Metrics::shed`]), and
+//! the event loop breaks release-cycle ties earliest-deadline-first
+//! before weighted fairness. Latency tails surface through
+//! [`Metrics::summary`] as [`LatencySummary`] (mean/p50/p95/p99) per
+//! [`LatencyKind`].
 
 mod batcher;
 mod metrics;
 mod request;
 mod server;
 
-pub use batcher::{Batcher, BatchPolicy};
-pub use metrics::{jain_index, percentile, Metrics, RequestMetrics};
-pub use request::{Request, RequestId, RequestState};
+pub use batcher::{Admission, Batcher, BatchPolicy};
+pub use metrics::{
+    jain_index, percentile, LatencyKind, LatencySummary, Metrics, RequestMetrics, ShedRecord,
+};
+pub use request::{Request, RequestId, RequestState, SubmitSpec};
 pub use server::{
     serialized_pass_cycles, serialized_workload_cycles, JobKind, PipelineStats, Server,
     ServerConfig, SpecRound, StageSlot, TenantStats,

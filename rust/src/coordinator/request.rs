@@ -1,15 +1,87 @@
-//! Inference request lifecycle.
+//! Inference request lifecycle and the submission spec.
 
+use crate::config::SloSpec;
 
 pub type RequestId = u64;
 
 /// Request state machine: Queued → Prefilling → Decoding → Done.
+/// `Shed` is a terminal alternative to Done: admission dropped the
+/// request because its TTFT target expired before any work ran.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestState {
     Queued,
     Prefilling,
     Decoding,
     Done,
+    Shed,
+}
+
+/// Everything a caller says about one request, in builder form — the
+/// single submission surface of [`crate::coordinator::Server::enqueue`]
+/// (replacing the old `submit(prompt, gen)` / `submit_for(tenant, …)`
+/// positional family).
+///
+/// ```
+/// use picnic::coordinator::SubmitSpec;
+///
+/// let spec = SubmitSpec::new(256, 32).tenant(1).arrives_at(5_000_000);
+/// assert_eq!(spec.prompt_len, 256);
+/// assert_eq!(spec.tenant, 1);
+/// assert_eq!(spec.arrival_cycle, Some(5_000_000));
+/// ```
+///
+/// Arrival semantics: with `arrival_cycle` set the request is part of an
+/// **open-loop** trace — the server time-releases it (invisible to the
+/// batcher until the arrival cycle) and never applies backpressure, the
+/// way real traffic doesn't wait for the server's permission to exist.
+/// Without it the request arrives "now" and the classic closed-loop
+/// backpressure (bounded admission queue) applies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubmitSpec {
+    /// Prompt length in tokens (> 0).
+    pub prompt_len: usize,
+    /// Output-token budget (> 0).
+    pub max_new_tokens: usize,
+    /// Owning tenant (index into the effective tenant list; default 0).
+    pub tenant: usize,
+    /// Absolute arrival cycle; `None` = arrives at the server's current
+    /// cycle (closed-loop).
+    pub arrival_cycle: Option<u64>,
+    /// Per-request SLO override; `None` inherits the owning tenant's
+    /// [`SloSpec`].
+    pub slo: Option<SloSpec>,
+}
+
+impl SubmitSpec {
+    /// A default-tenant, arrives-now request with no SLO override.
+    pub fn new(prompt_len: usize, max_new_tokens: usize) -> SubmitSpec {
+        SubmitSpec {
+            prompt_len,
+            max_new_tokens,
+            tenant: 0,
+            arrival_cycle: None,
+            slo: None,
+        }
+    }
+
+    /// Assign the request to `tenant`.
+    pub fn tenant(mut self, tenant: usize) -> SubmitSpec {
+        self.tenant = tenant;
+        self
+    }
+
+    /// Time-release the request at an absolute `cycle` (open-loop; see
+    /// the type-level docs for the backpressure contract).
+    pub fn arrives_at(mut self, cycle: u64) -> SubmitSpec {
+        self.arrival_cycle = Some(cycle);
+        self
+    }
+
+    /// Override the owning tenant's SLO for this request alone.
+    pub fn with_slo(mut self, slo: SloSpec) -> SubmitSpec {
+        self.slo = Some(slo);
+        self
+    }
 }
 
 /// One inference request.
@@ -39,6 +111,9 @@ pub struct Request {
     pub first_token_cycle: Option<u64>,
     /// Cycle the request finished.
     pub done_cycle: Option<u64>,
+    /// Resolved tail-latency targets (tenant default or per-request
+    /// override; unconstrained unless the submitter set one).
+    pub slo: SloSpec,
 }
 
 impl Request {
@@ -68,7 +143,41 @@ impl Request {
             prefill_start_cycle: None,
             first_token_cycle: None,
             done_cycle: None,
+            slo: SloSpec::default(),
         }
+    }
+
+    /// Absolute cycle by which the first token must complete to meet the
+    /// TTFT target; `None` when unconstrained.
+    pub fn ttft_deadline_cycle(&self, freq_hz: f64) -> Option<u64> {
+        if self.slo.ttft_s <= 0.0 {
+            return None;
+        }
+        Some(
+            self.arrived_cycle
+                .saturating_add((self.slo.ttft_s * freq_hz) as u64),
+        )
+    }
+
+    /// Earliest-deadline-first key for the scheduler's tie-break: the
+    /// absolute cycle by which the *next* token should complete to stay
+    /// on target (TTFT budget plus one per-token budget per committed
+    /// token). Unconstrained requests sort last (`u64::MAX`), so they
+    /// yield ties to SLO-bound work.
+    pub fn deadline_cycle(&self, freq_hz: f64) -> u64 {
+        if !self.slo.is_constrained() {
+            return u64::MAX;
+        }
+        let mut d = self.arrived_cycle;
+        if self.slo.ttft_s > 0.0 {
+            d = d.saturating_add((self.slo.ttft_s * freq_hz) as u64);
+        }
+        if self.slo.tpot_s > 0.0 {
+            d = d.saturating_add(
+                ((self.slo.tpot_s * freq_hz) as u64).saturating_mul(self.generated as u64),
+            );
+        }
+        d
     }
 
     /// Prompt tokens still to prefill.
@@ -185,6 +294,41 @@ mod tests {
         assert_eq!(r.draft_budget(2), 2, "short bursts pass through");
         r.generated = 3;
         assert_eq!(r.draft_budget(4), 0, "last token never drafts");
+    }
+
+    #[test]
+    fn submit_spec_builder_composes() {
+        let spec = SubmitSpec::new(128, 16)
+            .tenant(2)
+            .arrives_at(42)
+            .with_slo(SloSpec {
+                ttft_s: 0.01,
+                tpot_s: 0.0,
+            });
+        assert_eq!((spec.prompt_len, spec.max_new_tokens), (128, 16));
+        assert_eq!(spec.tenant, 2);
+        assert_eq!(spec.arrival_cycle, Some(42));
+        assert!(spec.slo.unwrap().is_constrained());
+        let plain = SubmitSpec::new(128, 16);
+        assert_eq!(plain.tenant, 0);
+        assert_eq!(plain.arrival_cycle, None);
+        assert!(plain.slo.is_none());
+    }
+
+    #[test]
+    fn deadlines_from_slo() {
+        let mut r = Request::new(1, 16, 4, 1_000);
+        assert_eq!(r.ttft_deadline_cycle(1e9), None, "unconstrained");
+        assert_eq!(r.deadline_cycle(1e9), u64::MAX);
+        r.slo = SloSpec {
+            ttft_s: 1e-6,
+            tpot_s: 1e-7,
+        };
+        // 1 µs at 1 GHz = 1000 cycles past arrival
+        assert_eq!(r.ttft_deadline_cycle(1e9), Some(2_000));
+        assert_eq!(r.deadline_cycle(1e9), 2_000, "no tokens yet");
+        r.generated = 3;
+        assert_eq!(r.deadline_cycle(1e9), 2_300, "100 cycles per token");
     }
 
     #[test]

@@ -20,6 +20,20 @@
 //! synthetic client in examples/llama_serve.rs feeds it a bursty
 //! chat-style request stream.
 //!
+//! **Open-loop serving**: [`Server::enqueue`] takes a
+//! [`SubmitSpec`](super::SubmitSpec) whose arrival cycle may lie in the
+//! future — such requests wait on a time-release calendar, invisible to
+//! the batcher until the clock reaches their arrival (and exempt from
+//! closed-loop backpressure: an open-loop trace has no client waiting
+//! for permission). [`crate::models::TrafficModel`] generates such
+//! streams (Poisson / bursty arrivals, long-tail length mixtures)
+//! deterministically from a seed. With SLOs configured
+//! ([`crate::config::SloSpec`] per tenant or per request), release-cycle
+//! ties resolve earliest-deadline-first before the weighted-fair
+//! comparison, and admission sheds queued requests whose TTFT target
+//! already expired ([`super::Batcher::admit_at`];
+//! [`Metrics::shed_count`](super::Metrics::shed_count) reports them).
+//!
 //! Per-stage cycle costs come from a [`SimBackend`] (the server is
 //! backend-generic: the calibrated analytic model by default, the
 //! engine-measured [`crate::sim::EngineBackend`] for calibration mode)
@@ -55,10 +69,10 @@
 //! ([`TenantStats`], [`Server::fairness_index`]).
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::metrics::{jain_index, percentile, Metrics};
-use super::request::{RequestId, RequestState};
+use super::metrics::{jain_index, LatencySummary, Metrics};
+use super::request::{Request, RequestId, RequestState, SubmitSpec};
 use crate::chiplet::{CcpgStats, CcpgTimeline};
-use crate::config::PicnicConfig;
+use crate::config::{PicnicConfig, SloSpec};
 use crate::mapper::{kv_bucket_bounds, PlanCache, ScheduleBuilder, StageMap};
 use crate::models::LlamaConfig;
 use crate::photonic::OpticalTopology;
@@ -208,9 +222,22 @@ pub struct TenantStats {
     pub tokens: u64,
     /// Decode throughput over the run's wall clock, tokens/s.
     pub tokens_per_s: f64,
-    pub mean_ttft_s: f64,
-    pub p50_total_s: f64,
-    pub p99_total_s: f64,
+    /// TTFT over this tenant's completed requests.
+    pub ttft: LatencySummary,
+    /// Mean inter-token latency over this tenant's completed requests
+    /// with ≥ 2 output tokens.
+    pub tpot: LatencySummary,
+    /// End-to-end latency over this tenant's completed requests.
+    pub total: LatencySummary,
+    /// Requests shed by SLO admission control (never served).
+    pub shed: usize,
+    /// Fraction of completed requests whose TTFT met the tenant's target
+    /// (1.0 when no target is set or nothing completed).
+    pub ttft_attainment: f64,
+    /// Fraction of completed multi-token requests whose mean inter-token
+    /// latency met the tenant's target (1.0 when no target is set or
+    /// nothing qualifies).
+    pub tpot_attainment: f64,
     /// Dynamic energy this tenant's jobs charged, J.
     pub energy_j: f64,
     /// CCPG wakes charged to this tenant's stage walks.
@@ -226,16 +253,21 @@ impl TenantStats {
     /// and examples/llama_serve.rs so the two tables never drift.
     pub fn report_row(&self) -> String {
         format!(
-            "{:<12} w={:<4} {:<9} {:>3} reqs  {:>6} tok  {:>9.1} tok/s  p50 {:.3} ms  p99 {:.3} ms  {:.4} J",
+            "{:<12} w={:<4} {:<9} {:>3} reqs  {:>6} tok  {:>9.1} tok/s  p50 {:.3} ms  p99 {:.3} ms  {:.4} J{}",
             self.name,
             self.weight,
             if self.dedicated { "dedicated" } else { "shared" },
             self.requests,
             self.tokens,
             self.tokens_per_s,
-            1e3 * self.p50_total_s,
-            1e3 * self.p99_total_s,
+            1e3 * self.total.p50_s,
+            1e3 * self.total.p99_s,
             self.energy_j,
+            if self.shed > 0 {
+                format!("  shed {}", self.shed)
+            } else {
+                String::new()
+            },
         )
     }
 }
@@ -244,6 +276,33 @@ impl TenantStats {
 /// (the decode-priority policy at stage granularity).
 const PRI_DECODE: u8 = 0;
 const PRI_PREFILL: u8 = 1;
+
+/// One time-released request on the open-loop arrival calendar: invisible
+/// to the batcher until the clock reaches `arrival`. Ordered by
+/// `(arrival, request id)` so same-cycle arrivals surface in submission
+/// order.
+#[derive(Debug)]
+struct Pending {
+    arrival: u64,
+    request: Request,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.arrival == other.arrival && self.request.id == other.request.id
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.arrival, self.request.id).cmp(&(other.arrival, other.request.id))
+    }
+}
 
 /// The coordinator server, generic over the simulation backend.
 pub struct Server<B: SimBackend = AnalyticSim> {
@@ -269,6 +328,15 @@ pub struct Server<B: SimBackend = AnalyticSim> {
     ccpg: CcpgTimeline,
     /// Pending jobs: Reverse<(release_cycle, priority, request id)>.
     events: BinaryHeap<Reverse<(u64, u8, u64)>>,
+    /// Open-loop arrival calendar: accepted requests whose arrival cycle
+    /// has not come yet (invisible to the batcher until then).
+    pending: BinaryHeap<Reverse<Pending>>,
+    /// Cached per-tenant SLOs (the default a request inherits when its
+    /// [`SubmitSpec`] carries no override).
+    tenant_slos: Vec<SloSpec>,
+    /// True once any constrained SLO entered the server — switches the
+    /// release-tie resolution to EDF-first even in single-tenant mode.
+    slo_active: bool,
     plan_cache: PlanCache,
     /// (seq_q, kv_point) → per-stage cycles on `backend` (memoized).
     cost_cache: HashMap<(usize, usize), Rc<Vec<u64>>>,
@@ -308,6 +376,8 @@ impl<B: SimBackend> Server<B> {
             ccpg: CcpgTimeline::new(0, cfg.picnic.ccpg.clone(), &OpticalTopology::new(0)),
             tenant_counters: vec![TenantCounters::default(); tenants.len()],
             tenant_weights: tenants.iter().map(|t| t.weight).collect(),
+            tenant_slos: tenants.iter().map(|t| t.slo).collect(),
+            slo_active: tenants.iter().any(|t| t.slo.is_constrained()),
             cfg,
             backend,
             metrics: Metrics::default(),
@@ -318,6 +388,7 @@ impl<B: SimBackend> Server<B> {
             stage_sets: Vec::new(),
             tenant_set: Vec::new(),
             events: BinaryHeap::new(),
+            pending: BinaryHeap::new(),
             plan_cache: PlanCache::new(),
             cost_cache: HashMap::new(),
             draft_cost_cache: HashMap::new(),
@@ -380,34 +451,89 @@ impl<B: SimBackend> Server<B> {
         }
     }
 
+    /// Submit a request described by a [`SubmitSpec`] — the single
+    /// submission entry point. Returns the request id, or None on
+    /// closed-loop backpressure.
+    ///
+    /// Arrival semantics follow the spec: with `arrival_cycle` set the
+    /// request is **open-loop** — accepted unconditionally (no client
+    /// exists to backpressure), held on a time-release calendar until the
+    /// clock reaches its arrival, then queued on its tenant's lane.
+    /// Without it the request arrives at the server's current cycle and
+    /// the classic bounded-queue backpressure applies. The request's SLO
+    /// resolves as the spec's override if present, else the owning
+    /// tenant's [`SloSpec`].
+    pub fn enqueue(&mut self, spec: SubmitSpec) -> Option<RequestId> {
+        let slo = spec.slo.unwrap_or_else(|| {
+            self.tenant_slos.get(spec.tenant).copied().unwrap_or_default()
+        });
+        if slo.is_constrained() {
+            self.slo_active = true;
+        }
+        let id = self.next_id;
+        let make = |id: u64, arrived: u64| {
+            let mut r = Request::new_for_tenant(
+                id,
+                spec.tenant,
+                spec.prompt_len,
+                spec.max_new_tokens,
+                arrived,
+            );
+            r.slo = slo;
+            r
+        };
+        match spec.arrival_cycle {
+            Some(arrival) if arrival > self.now_cycle => {
+                self.pending.push(Reverse(Pending {
+                    arrival,
+                    request: make(id, arrival),
+                }));
+                self.next_id += 1;
+                Some(id)
+            }
+            Some(arrival) => {
+                // arrival due (or in the past relative to a running
+                // clock, e.g. a trace loaded mid-run): straight to the
+                // lane, still uncapped — open-loop traffic never
+                // backpressures
+                self.batcher.enqueue(make(id, arrival));
+                self.next_id += 1;
+                Some(id)
+            }
+            None => {
+                if self.batcher.submit(make(id, self.now_cycle)) {
+                    self.next_id += 1;
+                    Some(id)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
     /// Submit a request arriving *now* for the default tenant 0; returns
     /// its id, or None on backpressure.
+    #[deprecated(note = "use Server::enqueue(SubmitSpec::new(prompt_len, max_new_tokens))")]
     pub fn submit(&mut self, prompt_len: usize, max_new_tokens: usize) -> Option<u64> {
-        self.submit_for(0, prompt_len, max_new_tokens)
+        self.enqueue(SubmitSpec::new(prompt_len, max_new_tokens))
     }
 
     /// Submit a request arriving *now* for `tenant` (index into the
     /// effective tenant list); returns its id, or None on backpressure.
+    #[deprecated(note = "use Server::enqueue(SubmitSpec::new(…).tenant(tenant))")]
     pub fn submit_for(
         &mut self,
         tenant: usize,
         prompt_len: usize,
         max_new_tokens: usize,
     ) -> Option<u64> {
-        let id = self.next_id;
-        let r = super::request::Request::new_for_tenant(
-            id,
-            tenant,
-            prompt_len,
-            max_new_tokens,
-            self.now_cycle,
-        );
-        if self.batcher.submit(r) {
-            self.next_id += 1;
-            Some(id)
-        } else {
-            None
-        }
+        self.enqueue(SubmitSpec::new(prompt_len, max_new_tokens).tenant(tenant))
+    }
+
+    /// Requests accepted onto the open-loop calendar whose arrival cycle
+    /// is still in the future.
+    pub fn pending_arrivals(&self) -> usize {
+        self.pending.len()
     }
 
     /// Effective tenants (≥ 1; 1 in single-tenant mode).
@@ -427,14 +553,28 @@ impl<B: SimBackend> Server<B> {
             .map(|(i, t)| {
                 let mut tokens = 0u64;
                 let mut n = 0usize;
-                let mut ttft_sum = 0.0f64;
+                let mut ttfts: Vec<f64> = Vec::new();
+                let mut tpots: Vec<f64> = Vec::new();
                 let mut totals: Vec<f64> = Vec::new();
                 for r in self.metrics.requests.iter().filter(|r| r.tenant == i) {
                     tokens += r.tokens as u64;
                     n += 1;
-                    ttft_sum += r.ttft_s;
+                    ttfts.push(r.ttft_s);
+                    if r.tokens > 1 {
+                        tpots.push(r.tpot_s);
+                    }
                     totals.push(r.total_s);
                 }
+                // SLO attainment: the fraction of the relevant series
+                // within the tenant's target (trivially 1.0 when no
+                // target, or when the series is empty).
+                let within = |series: &[f64], target: f64| {
+                    if target <= 0.0 || series.is_empty() {
+                        return 1.0;
+                    }
+                    series.iter().filter(|&&v| v <= target).count() as f64 / series.len() as f64
+                };
+                let shed = self.metrics.shed.iter().filter(|s| s.tenant == i).count();
                 let c = self.tenant_counters.get(i).copied().unwrap_or_default();
                 TenantStats {
                     name: t.name.clone(),
@@ -443,9 +583,12 @@ impl<B: SimBackend> Server<B> {
                     requests: n,
                     tokens,
                     tokens_per_s: if wall > 0.0 { tokens as f64 / wall } else { 0.0 },
-                    mean_ttft_s: if n > 0 { ttft_sum / n as f64 } else { 0.0 },
-                    p50_total_s: percentile(&totals, 0.50),
-                    p99_total_s: percentile(&totals, 0.99),
+                    ttft: LatencySummary::of(&ttfts),
+                    tpot: LatencySummary::of(&tpots),
+                    total: LatencySummary::of(&totals),
+                    shed,
+                    ttft_attainment: within(&ttfts, t.slo.ttft_s),
+                    tpot_attainment: within(&tpots, t.slo.tpot_s),
                     energy_j: c.energy_j,
                     ccpg_wakes: c.ccpg_wakes,
                     ccpg_wake_stall_cycles: c.ccpg_wake_stall_cycles,
@@ -865,21 +1008,67 @@ impl<B: SimBackend> Server<B> {
         }
     }
 
-    /// Run one scheduling event. Returns false when idle with nothing
-    /// queued.
-    pub fn step(&mut self) -> crate::Result<bool> {
-        self.ensure_stages()?;
-        for id in self.batcher.admit() {
+    /// Surface open-loop arrivals due at (or before) the current clock:
+    /// pop the calendar onto the owning tenants' lanes.
+    fn surface_arrivals(&mut self) {
+        while self
+            .pending
+            .peek()
+            .is_some_and(|Reverse(p)| p.arrival <= self.now_cycle)
+        {
+            let Reverse(p) = self.pending.pop().expect("peeked");
+            self.batcher.enqueue(p.request);
+        }
+    }
+
+    /// One SLO-aware admission round at the current clock: admitted
+    /// requests become prefill events, shed requests are recorded.
+    fn admit_new(&mut self) {
+        let freq = self.cfg.picnic.system.frequency_hz;
+        let adm = self.batcher.admit_at(self.now_cycle, freq);
+        for r in &adm.shed {
+            self.metrics.record_shed(r, self.now_cycle, freq);
+        }
+        for id in adm.admitted {
             let now = self.now_cycle;
             if let Some(r) = self.batcher.inflight_by_id(id) {
                 let release = now.max(r.arrived_cycle);
                 self.events.push(Reverse((release, PRI_PREFILL, id)));
             }
         }
+    }
+
+    /// Earliest arrival still waiting on the open-loop calendar.
+    fn next_pending_arrival(&self) -> Option<u64> {
+        self.pending.peek().map(|Reverse(p)| p.arrival)
+    }
+
+    /// Run one scheduling event. Returns false when idle with nothing
+    /// queued, in flight, or waiting to arrive.
+    pub fn step(&mut self) -> crate::Result<bool> {
+        self.ensure_stages()?;
+        // Surface + admit, advancing the clock across idle gaps: when the
+        // next thing to happen is an open-loop arrival (no event, or the
+        // arrival precedes the next event's release), jump the clock to
+        // it and let it surface and admit before dispatching anything.
+        loop {
+            self.surface_arrivals();
+            self.admit_new();
+            match (self.events.peek().copied(), self.next_pending_arrival()) {
+                (Some(Reverse((release, _, _))), Some(a)) if a < release => {
+                    self.now_cycle = a;
+                }
+                (Some(_), _) => break,
+                (None, Some(a)) => {
+                    self.now_cycle = a;
+                }
+                (None, None) => return Ok(false),
+            }
+        }
         let Some(Reverse((release, pri, id))) = self.events.pop() else {
             return Ok(false);
         };
-        let id = if self.tenant_counters.len() > 1 {
+        let id = if self.tenant_counters.len() > 1 || self.slo_active {
             self.pick_fair(release, pri, id)
         } else {
             id
@@ -901,11 +1090,13 @@ impl<B: SimBackend> Server<B> {
         Ok(true)
     }
 
-    /// Weighted-fair tie-breaking: among the events sharing this
-    /// `(release, priority)` key, run the request whose tenant has
+    /// SLO- and fairness-aware tie-breaking: among the events sharing
+    /// this `(release, priority)` key, run the request with the earliest
+    /// SLO deadline (earliest-deadline-first; unconstrained requests sort
+    /// last at `u64::MAX`), breaking deadline ties by the tenant that has
     /// received the least service per unit weight so far. Candidates pop
-    /// from the heap in increasing id order, so equal fairness keys
-    /// resolve FCFS by construction. Single-tenant servers never call
+    /// from the heap in increasing id order, so equal keys resolve FCFS
+    /// by construction. Single-tenant servers without SLOs never call
     /// this; ties fall through to the heap's id order.
     fn pick_fair(&mut self, release: u64, pri: u8, first: u64) -> u64 {
         let mut best = first;
@@ -935,12 +1126,23 @@ impl<B: SimBackend> Server<B> {
         best
     }
 
-    /// The fairness key of one pending event: the owning tenant's
-    /// normalized service (stage-cycles consumed / weight).
-    fn fair_key(&mut self, id: u64) -> f64 {
-        let t = self.batcher.inflight_by_id(id).map_or(0, |r| r.tenant);
+    /// The scheduling key of one pending event: the request's SLO
+    /// deadline cycle first (EDF; `u64::MAX` when unconstrained), then
+    /// the owning tenant's normalized service (stage-cycles consumed /
+    /// weight). The tuple comparison is total because the second field
+    /// is never NaN (weights validate positive and finite).
+    fn fair_key(&mut self, id: u64) -> (u64, f64) {
+        let freq = self.cfg.picnic.system.frequency_hz;
+        let (t, deadline) = self
+            .batcher
+            .inflight_by_id(id)
+            .map_or((0, u64::MAX), |r| (r.tenant, r.deadline_cycle(freq)));
         let w = self.tenant_weights.get(t).copied().unwrap_or(1.0);
-        self.tenant_counters[t].service_cycles as f64 / w
+        let service = self
+            .tenant_counters
+            .get(t)
+            .map_or(0, |c| c.service_cycles);
+        (deadline, service as f64 / w)
     }
 
     /// Drive until all submitted requests complete.
@@ -1028,6 +1230,7 @@ pub fn serialized_workload_cycles<B: SimBackend>(
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 
@@ -1286,5 +1489,40 @@ mod tests {
         assert_eq!(ts[0].tokens, 4);
         assert!((s.fairness_index() - 1.0).abs() < 1e-12);
         assert_eq!(s.pipeline_stats().stage_sets, 1);
+    }
+
+    #[test]
+    fn open_loop_arrivals_wait_for_their_cycle() {
+        let mut s = server();
+        let late = 50_000_000; // well past the first request's service
+        s.enqueue(SubmitSpec::new(16, 2)).unwrap();
+        s.enqueue(SubmitSpec::new(16, 2).arrives_at(late)).unwrap();
+        assert_eq!(s.pending_arrivals(), 1, "future arrival stays invisible");
+        s.run_to_completion().unwrap();
+        assert_eq!(s.pending_arrivals(), 0);
+        assert_eq!(s.metrics.requests.len(), 2);
+        // the late request is measured from its own arrival, not from 0
+        let freq = 1.0e9;
+        let late_r = &s.metrics.requests[1];
+        assert!(
+            late_r.total_s < late as f64 / freq,
+            "latency excludes pre-arrival time: {}",
+            late_r.total_s
+        );
+        assert!(s.now_cycle() >= late);
+    }
+
+    #[test]
+    fn enqueue_parity_with_deprecated_submit() {
+        let mut a = server();
+        let mut b = server();
+        for _ in 0..4 {
+            a.submit(32, 4).unwrap();
+            b.enqueue(SubmitSpec::new(32, 4)).unwrap();
+        }
+        a.run_to_completion().unwrap();
+        b.run_to_completion().unwrap();
+        assert_eq!(a.now_cycle(), b.now_cycle());
+        assert_eq!(a.metrics.total_tokens, b.metrics.total_tokens);
     }
 }

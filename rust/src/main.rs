@@ -8,14 +8,15 @@
 //! picnic verify [--artifacts DIR]
 //! picnic serve --model tiny --requests 32 --prompt-len 64 --gen-len 16 [--backend engine]
 //!              [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
-//!              [--tenants a:w=2:kv=8192,b:w=1]
+//!              [--tenants a:w=2:kv=8192:ttft=0.05,b:w=1]
+//!              [--open-loop rate=2000,shape=bursty,seed=7]
 //! picnic isa-demo
 //! picnic config-dump [--spec-decode …] [--tenants …]
 //! ```
 
 use picnic::config::PicnicConfig;
-use picnic::coordinator::{BatchPolicy, Server, ServerConfig};
-use picnic::models::{LlamaConfig, Workload};
+use picnic::coordinator::{BatchPolicy, LatencyKind, Server, ServerConfig, SubmitSpec};
+use picnic::models::{LlamaConfig, TrafficModel, Workload};
 use picnic::report;
 use picnic::sim::{AnalyticSim, EngineBackend, SimBackend};
 use picnic::util::args::Args;
@@ -31,6 +32,7 @@ USAGE:
   picnic serve  [--model NAME] [--requests N] [--prompt-len N] [--gen-len N] [--backend analytic|engine]
                 [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
                 [--tenants a:w=2:kv=8192,b:w=1[:dedicated]]
+                [--open-loop [rate=2000,shape=poisson|bursty,seed=7]]
   picnic isa-demo
   picnic config-dump
 
@@ -40,11 +42,21 @@ loaded config, so it composes with any subcommand — `picnic config-dump
 --spec-decode draft_len=8` round-trips the resulting config.
 
 `--tenants LIST` shards the chiplet chain between serving tenants
-(`name[:w=WEIGHT][:kv=TOKENS][:dedicated]`, comma-separated): per-tenant
-admission queues and KV budgets, weighted-fair scheduling, and — with
-`:dedicated` — a private pipeline on a disjoint chiplet range. `serve`
-spreads its synthetic requests round-robin across the tenants and
-reports per-tenant throughput plus Jain's fairness index.
+(`name[:w=WEIGHT][:kv=TOKENS][:ttft=S][:tpot=S][:dedicated]`,
+comma-separated): per-tenant admission queues and KV budgets,
+weighted-fair scheduling, optional TTFT / per-token SLO targets in
+seconds (expired requests shed at admission, earliest-deadline-first
+tie-breaks), and — with `:dedicated` — a private pipeline on a disjoint
+chiplet range. `serve` spreads its synthetic requests round-robin across
+the tenants and reports per-tenant throughput plus Jain's fairness
+index.
+
+`--open-loop [SPEC]` replaces the fixed-shape closed-loop stream with a
+seeded open-loop arrival process (requests arrive on the simulated
+clock whether or not the server keeps up) drawn from chat-style
+prompt/generation length mixtures. `--requests N` bounds the stream;
+latency percentiles (TTFT, per-token, end-to-end) are reported either
+way.
 ";
 
 fn main() {
@@ -168,6 +180,12 @@ fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
     let prompt_len = args.opt_usize("prompt-len", 64)?;
     let gen_len = args.opt_usize("gen-len", 16)?;
     let backend = args.opt_or("backend", "analytic");
+    let traffic = match args.opt("open-loop") {
+        Some(spec) => Some(TrafficModel::parse_cli(spec)?),
+        None if args.flag("open-loop") => Some(TrafficModel::parse_cli("")?),
+        None => None,
+    };
+    let freq = cfg.system.frequency_hz;
     let server_cfg = ServerConfig {
         picnic: cfg,
         model: m,
@@ -176,9 +194,13 @@ fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
     match backend.as_str() {
         "engine" => {
             let b = EngineBackend::calibrated(server_cfg.picnic.clone());
-            drive_serve(Server::with_backend(server_cfg, b), requests, prompt_len, gen_len)
+            let s = Server::with_backend(server_cfg, b);
+            drive_serve(s, requests, prompt_len, gen_len, traffic, freq)
         }
-        "analytic" => drive_serve(Server::new(server_cfg), requests, prompt_len, gen_len),
+        "analytic" => {
+            let s = Server::new(server_cfg);
+            drive_serve(s, requests, prompt_len, gen_len, traffic, freq)
+        }
         other => anyhow::bail!("unknown backend {other} (analytic|engine)"),
     }
 }
@@ -188,25 +210,64 @@ fn drive_serve<B: SimBackend>(
     requests: usize,
     prompt_len: usize,
     gen_len: usize,
+    traffic: Option<TrafficModel>,
+    freq: f64,
 ) -> picnic::Result<()> {
     // Round-robin the synthetic requests across the effective tenants —
     // identical shapes per tenant, so the reported fairness reflects the
     // scheduler, not the workload.
     let n_tenants = server.n_tenants();
-    for i in 0..requests {
-        server
-            .submit_for(i % n_tenants, prompt_len, gen_len)
-            .ok_or_else(|| anyhow::anyhow!("queue full"))?;
+    match traffic {
+        Some(model) => {
+            // Open-loop: arrivals land on the simulated clock from the
+            // seeded traffic model; the generator never waits.
+            for (_, spec) in model.across_tenants(n_tenants).stream(freq).take(requests) {
+                server
+                    .enqueue(spec)
+                    .ok_or_else(|| anyhow::anyhow!("queue full"))?;
+            }
+        }
+        None => {
+            for i in 0..requests {
+                let spec = SubmitSpec::new(prompt_len, gen_len).tenant(i % n_tenants);
+                server
+                    .enqueue(spec)
+                    .ok_or_else(|| anyhow::anyhow!("queue full"))?;
+            }
+        }
     }
     server.run_to_completion()?;
     let p = server.pipeline_stats();
+    let ttft = server.metrics.summary(LatencyKind::Ttft);
+    let tpot = server.metrics.summary(LatencyKind::PerToken);
+    let total = server.metrics.summary(LatencyKind::Total);
     println!(
-        "served {} requests, {} tokens, {:.1} tokens/s (accelerator time), mean TTFT {:.3} ms, p99 latency {:.3} ms",
+        "served {} requests ({} shed), {} tokens, {:.1} tokens/s (accelerator time)",
         server.metrics.requests.len(),
+        server.metrics.shed_count(),
         server.metrics.total_tokens,
         server.metrics.throughput_tokens_per_s(),
-        1e3 * server.metrics.mean_ttft_s(),
-        1e3 * server.metrics.p99_total_s(),
+    );
+    println!(
+        "ttft  ms: mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+        1e3 * ttft.mean_s,
+        1e3 * ttft.p50_s,
+        1e3 * ttft.p95_s,
+        1e3 * ttft.p99_s,
+    );
+    println!(
+        "tpot  ms: mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+        1e3 * tpot.mean_s,
+        1e3 * tpot.p50_s,
+        1e3 * tpot.p95_s,
+        1e3 * tpot.p99_s,
+    );
+    println!(
+        "e2e   ms: mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+        1e3 * total.mean_s,
+        1e3 * total.p50_s,
+        1e3 * total.p95_s,
+        1e3 * total.p99_s,
     );
     println!(
         "pipeline: {} backend, {} stages, plan cache {} builds / {} hits, ccpg {} wakes",

@@ -1,7 +1,11 @@
-//! LLM model zoo and workload definitions (paper §III, Table II).
+//! LLM model zoo and workload definitions (paper §III, Table II), plus
+//! the seeded open-loop [`TrafficModel`] for serving experiments.
 
 mod llama;
 mod workload;
 
 pub use llama::{LayerKind, LlamaConfig, ModelLayer};
-pub use workload::{Phase, Workload};
+pub use workload::{
+    ArrivalShape, DiurnalSchedule, LengthBand, LengthMixture, Phase, TrafficModel, TrafficStream,
+    Workload,
+};

@@ -1,6 +1,12 @@
 //! Inference workloads: the (input, output) context-length pairs from
-//! Table II, plus prefill/decode phase bookkeeping.
+//! Table II, plus prefill/decode phase bookkeeping — and the seeded
+//! open-loop [`TrafficModel`] that turns a `u64` seed into a
+//! deterministic stream of `(arrival_cycle, SubmitSpec)` pairs for
+//! serving experiments (Poisson / bursty arrivals, long-tail length
+//! mixtures, optional diurnal rate modulation, explicit trace replay).
 
+use crate::coordinator::SubmitSpec;
+use crate::util::Rng;
 
 /// Inference phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,6 +60,474 @@ impl Workload {
     }
 }
 
+/// How inter-arrival times are drawn.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalShape {
+    /// Memoryless arrivals at a constant mean rate (requests/second).
+    Poisson { rate_rps: f64 },
+    /// Two-state modulated Poisson process (on/off bursts): exponential
+    /// window lengths with the given means, Poisson arrivals at
+    /// `on_rate_rps` inside ON windows and `off_rate_rps` inside OFF
+    /// windows. Long-run mean rate is the duty-weighted average.
+    OnOff {
+        on_rate_rps: f64,
+        off_rate_rps: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    },
+    /// Replay an explicit, non-decreasing list of arrival cycles
+    /// verbatim (lengths still sampled from the mixtures).
+    Replay(Vec<u64>),
+}
+
+/// One weighted band of a length mixture: lengths are drawn
+/// log-uniformly in `[min, max]` (both inclusive).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LengthBand {
+    pub weight: f64,
+    pub min: usize,
+    pub max: usize,
+}
+
+/// A weighted mixture of log-uniform length bands — the long-tail
+/// prompt/generation distributions real chat traces exhibit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthMixture {
+    pub bands: Vec<LengthBand>,
+}
+
+impl LengthMixture {
+    /// Degenerate mixture: every draw is exactly `len`.
+    pub fn fixed(len: usize) -> LengthMixture {
+        assert!(len > 0);
+        LengthMixture {
+            bands: vec![LengthBand {
+                weight: 1.0,
+                min: len,
+                max: len,
+            }],
+        }
+    }
+
+    /// Chat-style prompt lengths: mostly short, a heavy tail of long
+    /// contexts (70% in 16..256, 25% in 256..2048, 5% in 2048..4096).
+    pub fn chat_prompts() -> LengthMixture {
+        LengthMixture {
+            bands: vec![
+                LengthBand {
+                    weight: 0.70,
+                    min: 16,
+                    max: 256,
+                },
+                LengthBand {
+                    weight: 0.25,
+                    min: 256,
+                    max: 2048,
+                },
+                LengthBand {
+                    weight: 0.05,
+                    min: 2048,
+                    max: 4096,
+                },
+            ],
+        }
+    }
+
+    /// Chat-style generation lengths: mostly short answers with a tail
+    /// of long completions (80% in 4..64, 20% in 64..512).
+    pub fn chat_generations() -> LengthMixture {
+        LengthMixture {
+            bands: vec![
+                LengthBand {
+                    weight: 0.80,
+                    min: 4,
+                    max: 64,
+                },
+                LengthBand {
+                    weight: 0.20,
+                    min: 64,
+                    max: 512,
+                },
+            ],
+        }
+    }
+
+    fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.bands.is_empty(), "length mixture has no bands");
+        for b in &self.bands {
+            anyhow::ensure!(
+                b.weight > 0.0 && b.weight.is_finite(),
+                "band weight must be positive and finite, got {}",
+                b.weight
+            );
+            anyhow::ensure!(
+                b.min > 0 && b.max >= b.min,
+                "band bounds must satisfy 0 < min <= max, got {}..{}",
+                b.min,
+                b.max
+            );
+        }
+        Ok(())
+    }
+
+    /// Draw one length: weighted band pick, then log-uniform inside it.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total: f64 = self.bands.iter().map(|b| b.weight).sum();
+        let mut u = rng.f64() * total;
+        let mut band = self.bands[self.bands.len() - 1];
+        for b in &self.bands {
+            if u < b.weight {
+                band = *b;
+                break;
+            }
+            u -= b.weight;
+        }
+        if band.min == band.max {
+            return band.min;
+        }
+        let ln_lo = (band.min as f64).ln();
+        let ln_hi = ((band.max + 1) as f64).ln();
+        let len = rng.range_f64(ln_lo, ln_hi).exp() as usize;
+        len.clamp(band.min, band.max)
+    }
+}
+
+/// Sinusoidal rate-of-day modulation applied by thinning: the
+/// instantaneous rate is `base * (1 + amplitude * sin(2πt/period))`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiurnalSchedule {
+    /// Full period of the modulation, in simulated seconds.
+    pub period_s: f64,
+    /// Peak-to-mean swing, in `[0, 1)`.
+    pub amplitude: f64,
+}
+
+/// A seeded open-loop traffic model. [`TrafficModel::stream`] yields an
+/// infinite, fully deterministic `(arrival_cycle, SubmitSpec)` iterator
+/// — the same seed always produces the byte-identical stream, so
+/// serving experiments are replayable from a single `u64`.
+///
+/// ```
+/// use picnic::models::TrafficModel;
+/// let m = TrafficModel::poisson(7, 1000.0);
+/// let a: Vec<_> = m.stream(1.0e9).take(4).collect();
+/// let b: Vec<_> = m.stream(1.0e9).take(4).collect();
+/// assert_eq!(a, b);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficModel {
+    pub seed: u64,
+    pub shape: ArrivalShape,
+    pub prompts: LengthMixture,
+    pub generations: LengthMixture,
+    /// Requests round-robin across this many tenant indices.
+    pub tenants: usize,
+    pub diurnal: Option<DiurnalSchedule>,
+}
+
+impl TrafficModel {
+    /// Memoryless arrivals at `rate_rps` with chat-style length
+    /// mixtures.
+    pub fn poisson(seed: u64, rate_rps: f64) -> TrafficModel {
+        TrafficModel {
+            seed,
+            shape: ArrivalShape::Poisson { rate_rps },
+            prompts: LengthMixture::chat_prompts(),
+            generations: LengthMixture::chat_generations(),
+            tenants: 1,
+            diurnal: None,
+        }
+    }
+
+    /// Bursty on/off arrivals with the same long-run mean as
+    /// `poisson(seed, rate_rps)`: 4x rate inside ON windows, silent OFF
+    /// windows, 25% duty cycle.
+    pub fn bursty(seed: u64, rate_rps: f64) -> TrafficModel {
+        TrafficModel {
+            shape: ArrivalShape::OnOff {
+                on_rate_rps: 4.0 * rate_rps,
+                off_rate_rps: 0.0,
+                mean_on_s: 8.0 / rate_rps,
+                mean_off_s: 24.0 / rate_rps,
+            },
+            ..TrafficModel::poisson(seed, rate_rps)
+        }
+    }
+
+    /// Replay an explicit arrival-cycle trace (must be non-decreasing);
+    /// lengths still come from the seeded mixtures.
+    pub fn replay(seed: u64, trace: Vec<u64>) -> crate::Result<TrafficModel> {
+        anyhow::ensure!(
+            trace.windows(2).all(|w| w[0] <= w[1]),
+            "replay trace must be non-decreasing"
+        );
+        Ok(TrafficModel {
+            shape: ArrivalShape::Replay(trace),
+            ..TrafficModel::poisson(seed, 0.0)
+        })
+    }
+
+    pub fn with_prompts(mut self, prompts: LengthMixture) -> TrafficModel {
+        self.prompts = prompts;
+        self
+    }
+
+    pub fn with_generations(mut self, generations: LengthMixture) -> TrafficModel {
+        self.generations = generations;
+        self
+    }
+
+    /// Round-robin the stream across `n` tenant indices.
+    pub fn across_tenants(mut self, n: usize) -> TrafficModel {
+        assert!(n > 0);
+        self.tenants = n;
+        self
+    }
+
+    pub fn with_diurnal(mut self, schedule: DiurnalSchedule) -> TrafficModel {
+        self.diurnal = Some(schedule);
+        self
+    }
+
+    /// Parse a CLI spec like `rate=2000,shape=bursty,seed=11`. All keys
+    /// optional; defaults are `rate=2000`, `shape=poisson`, `seed=7`.
+    pub fn parse_cli(spec: &str) -> crate::Result<TrafficModel> {
+        let mut rate = 2000.0;
+        let mut seed = 7u64;
+        let mut bursty = false;
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--open-loop: expected key=value, got {part:?}"))?;
+            match (k.trim(), v.trim()) {
+                ("rate", v) => {
+                    rate = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--open-loop: bad rate {v:?}"))?;
+                }
+                ("seed", v) => {
+                    seed = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--open-loop: bad seed {v:?}"))?;
+                }
+                ("shape", "poisson") => bursty = false,
+                ("shape", "bursty") => bursty = true,
+                ("shape", other) => {
+                    anyhow::bail!("--open-loop: unknown shape {other:?} (poisson|bursty)")
+                }
+                (other, _) => {
+                    anyhow::bail!("--open-loop: unknown key {other:?} (rate|shape|seed)")
+                }
+            }
+        }
+        anyhow::ensure!(
+            rate > 0.0 && rate.is_finite(),
+            "--open-loop: rate must be positive and finite"
+        );
+        Ok(if bursty {
+            TrafficModel::bursty(seed, rate)
+        } else {
+            TrafficModel::poisson(seed, rate)
+        })
+    }
+
+    fn validate(&self) -> crate::Result<()> {
+        match &self.shape {
+            ArrivalShape::Poisson { rate_rps } => {
+                anyhow::ensure!(
+                    *rate_rps > 0.0 && rate_rps.is_finite(),
+                    "poisson rate must be positive and finite, got {rate_rps}"
+                );
+            }
+            ArrivalShape::OnOff {
+                on_rate_rps,
+                off_rate_rps,
+                mean_on_s,
+                mean_off_s,
+            } => {
+                anyhow::ensure!(
+                    *on_rate_rps > 0.0 || *off_rate_rps > 0.0,
+                    "on/off rates cannot both be zero"
+                );
+                anyhow::ensure!(
+                    *on_rate_rps >= 0.0 && *off_rate_rps >= 0.0,
+                    "on/off rates must be non-negative"
+                );
+                anyhow::ensure!(
+                    *mean_on_s > 0.0 && *mean_off_s > 0.0,
+                    "on/off window means must be positive"
+                );
+            }
+            ArrivalShape::Replay(_) => {}
+        }
+        if let Some(d) = self.diurnal {
+            anyhow::ensure!(
+                d.period_s > 0.0 && (0.0..1.0).contains(&d.amplitude),
+                "diurnal schedule needs period_s > 0 and amplitude in [0, 1)"
+            );
+        }
+        self.prompts.validate()?;
+        self.generations.validate()?;
+        anyhow::ensure!(self.tenants > 0, "tenants must be >= 1");
+        Ok(())
+    }
+
+    /// Deterministic arrival stream at `freq_hz` simulated cycles per
+    /// second. Infinite for Poisson/OnOff (use `.take(n)`); ends with
+    /// the trace for [`ArrivalShape::Replay`].
+    ///
+    /// Panics if the model is malformed (non-positive rates, empty
+    /// mixtures, bad diurnal parameters).
+    pub fn stream(&self, freq_hz: f64) -> TrafficStream {
+        self.validate().expect("malformed TrafficModel");
+        assert!(freq_hz > 0.0 && freq_hz.is_finite());
+        TrafficStream {
+            rng: Rng::seed_from_u64(self.seed),
+            shape: self.shape.clone(),
+            prompts: self.prompts.clone(),
+            generations: self.generations.clone(),
+            tenants: self.tenants,
+            diurnal: self.diurnal,
+            freq_hz,
+            t_s: 0.0,
+            in_on: false,
+            window_left_s: 0.0,
+            replay_idx: 0,
+            emitted: 0,
+        }
+    }
+}
+
+/// Iterator over `(arrival_cycle, SubmitSpec)` pairs produced by
+/// [`TrafficModel::stream`].
+#[derive(Debug, Clone)]
+pub struct TrafficStream {
+    rng: Rng,
+    shape: ArrivalShape,
+    prompts: LengthMixture,
+    generations: LengthMixture,
+    tenants: usize,
+    diurnal: Option<DiurnalSchedule>,
+    freq_hz: f64,
+    t_s: f64,
+    in_on: bool,
+    window_left_s: f64,
+    replay_idx: usize,
+    emitted: u64,
+}
+
+fn exp_draw(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).max(1e-300).ln() / rate
+}
+
+impl TrafficStream {
+    /// The thinning factor at peak-rate candidate generation: divide
+    /// candidate rate by this to get the acceptance-scaled base rate.
+    fn peak_factor(&self) -> f64 {
+        1.0 + self.diurnal.map_or(0.0, |d| d.amplitude)
+    }
+
+    /// Accept/reject one candidate at time `t` for diurnal thinning.
+    /// Always accepts when no schedule is configured (and burns no
+    /// random draw, keeping non-diurnal streams byte-stable).
+    fn diurnal_accept(&mut self, t: f64) -> bool {
+        let Some(d) = self.diurnal else {
+            return true;
+        };
+        let scale = (1.0 + d.amplitude * (2.0 * std::f64::consts::PI * t / d.period_s).sin())
+            / (1.0 + d.amplitude);
+        self.rng.f64() < scale
+    }
+
+    /// Next arrival time (seconds) for a constant-rate Poisson process,
+    /// with diurnal thinning.
+    fn next_poisson(&mut self, rate_rps: f64) -> f64 {
+        let candidate_rate = rate_rps * self.peak_factor();
+        loop {
+            let dt = exp_draw(&mut self.rng, candidate_rate);
+            self.t_s += dt;
+            let t = self.t_s;
+            if self.diurnal_accept(t) {
+                return t;
+            }
+        }
+    }
+
+    /// Next arrival time (seconds) for the on/off modulated process.
+    /// A candidate whose wait crosses the window boundary advances the
+    /// clock to the boundary and redraws — valid because exponential
+    /// waits are memoryless.
+    fn next_onoff(
+        &mut self,
+        on_rate_rps: f64,
+        off_rate_rps: f64,
+        mean_on_s: f64,
+        mean_off_s: f64,
+    ) -> f64 {
+        let pf = self.peak_factor();
+        loop {
+            if self.window_left_s <= 0.0 {
+                self.in_on = !self.in_on;
+                let mean = if self.in_on { mean_on_s } else { mean_off_s };
+                self.window_left_s = exp_draw(&mut self.rng, 1.0 / mean);
+            }
+            let rate = if self.in_on { on_rate_rps } else { off_rate_rps } * pf;
+            if rate <= 0.0 {
+                self.t_s += self.window_left_s;
+                self.window_left_s = 0.0;
+                continue;
+            }
+            let dt = exp_draw(&mut self.rng, rate);
+            if dt >= self.window_left_s {
+                self.t_s += self.window_left_s;
+                self.window_left_s = 0.0;
+                continue;
+            }
+            self.t_s += dt;
+            self.window_left_s -= dt;
+            let t = self.t_s;
+            if self.diurnal_accept(t) {
+                return t;
+            }
+        }
+    }
+
+    fn next_arrival_cycle(&mut self) -> Option<u64> {
+        if let ArrivalShape::Replay(trace) = &self.shape {
+            let c = trace.get(self.replay_idx).copied()?;
+            self.replay_idx += 1;
+            return Some(c);
+        }
+        let t = match self.shape {
+            ArrivalShape::Poisson { rate_rps } => self.next_poisson(rate_rps),
+            ArrivalShape::OnOff {
+                on_rate_rps,
+                off_rate_rps,
+                mean_on_s,
+                mean_off_s,
+            } => self.next_onoff(on_rate_rps, off_rate_rps, mean_on_s, mean_off_s),
+            ArrivalShape::Replay(_) => unreachable!("handled above"),
+        };
+        Some((t * self.freq_hz) as u64)
+    }
+}
+
+impl Iterator for TrafficStream {
+    type Item = (u64, SubmitSpec);
+
+    fn next(&mut self) -> Option<(u64, SubmitSpec)> {
+        let arrival = self.next_arrival_cycle()?;
+        let prompt = self.prompts.sample(&mut self.rng);
+        let gen = self.generations.sample(&mut self.rng);
+        let tenant = (self.emitted % self.tenants as u64) as usize;
+        self.emitted += 1;
+        let spec = SubmitSpec::new(prompt, gen)
+            .tenant(tenant)
+            .arrives_at(arrival);
+        Some((arrival, spec))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +551,92 @@ mod tests {
     #[should_panic]
     fn zero_length_rejected() {
         Workload::new(0, 1);
+    }
+
+    #[test]
+    fn traffic_same_seed_is_byte_identical() {
+        let m = TrafficModel::bursty(42, 500.0);
+        let a: Vec<_> = m.stream(1.0e9).take(256).collect();
+        let b: Vec<_> = m.stream(1.0e9).take(256).collect();
+        assert_eq!(a, b);
+        let c: Vec<_> = TrafficModel::bursty(43, 500.0).stream(1.0e9).take(256).collect();
+        assert_ne!(a, c, "different seed must differ");
+    }
+
+    #[test]
+    fn traffic_arrivals_are_monotone() {
+        for m in [
+            TrafficModel::poisson(7, 2000.0),
+            TrafficModel::bursty(7, 2000.0),
+            TrafficModel::poisson(7, 2000.0).with_diurnal(DiurnalSchedule {
+                period_s: 0.01,
+                amplitude: 0.5,
+            }),
+        ] {
+            let mut last = 0u64;
+            for (arrival, spec) in m.stream(1.0e9).take(1024) {
+                assert!(arrival >= last, "arrivals must be non-decreasing");
+                assert_eq!(spec.arrival_cycle, Some(arrival));
+                last = arrival;
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_empirical_rate_close_to_nominal() {
+        let rate = 10_000.0;
+        let freq = 1.0e9;
+        let n = 20_000;
+        let last = TrafficModel::poisson(3, rate)
+            .stream(freq)
+            .take(n)
+            .last()
+            .unwrap()
+            .0;
+        let mean_gap = last as f64 / n as f64;
+        let expect = freq / rate;
+        assert!(
+            (mean_gap - expect).abs() / expect < 0.05,
+            "mean gap {mean_gap} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn lengths_stay_inside_mixture_bands() {
+        let m = TrafficModel::poisson(9, 1000.0);
+        for (_, spec) in m.stream(1.0e9).take(2048) {
+            assert!((16..=4096).contains(&spec.prompt_len));
+            assert!((4..=512).contains(&spec.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn replay_trace_replays_exactly() {
+        let trace = vec![0, 10, 10, 500];
+        let m = TrafficModel::replay(1, trace.clone()).unwrap();
+        let arrivals: Vec<u64> = m.stream(1.0e9).map(|(a, _)| a).collect();
+        assert_eq!(arrivals, trace);
+        assert!(TrafficModel::replay(1, vec![5, 4]).is_err());
+    }
+
+    #[test]
+    fn tenants_round_robin() {
+        let m = TrafficModel::poisson(5, 1000.0).across_tenants(3);
+        let tenants: Vec<usize> = m.stream(1.0e9).take(6).map(|(_, s)| s.tenant).collect();
+        assert_eq!(tenants, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn parse_cli_defaults_and_overrides() {
+        let d = TrafficModel::parse_cli("").unwrap();
+        assert_eq!(d.seed, 7);
+        assert!(matches!(d.shape, ArrivalShape::Poisson { rate_rps } if rate_rps == 2000.0));
+        let b = TrafficModel::parse_cli("rate=100,shape=bursty,seed=11").unwrap();
+        assert_eq!(b.seed, 11);
+        assert!(matches!(b.shape, ArrivalShape::OnOff { .. }));
+        assert!(TrafficModel::parse_cli("rate=nope").is_err());
+        assert!(TrafficModel::parse_cli("shape=square").is_err());
+        assert!(TrafficModel::parse_cli("bogus=1").is_err());
+        assert!(TrafficModel::parse_cli("rate=-5").is_err());
     }
 }

@@ -186,6 +186,34 @@ fn serve_with_tenants_reports_fairness() {
 }
 
 #[test]
+fn serve_open_loop_reports_latency_tails() {
+    let text = run_ok(&[
+        "serve",
+        "--model",
+        "tiny",
+        "--requests",
+        "16",
+        "--open-loop",
+        "rate=5000,shape=bursty,seed=3",
+    ]);
+    assert!(text.contains("served"), "summary line printed: {text}");
+    assert!(text.contains("shed"), "shed count printed: {text}");
+    assert!(text.contains("ttft"), "ttft percentiles printed: {text}");
+    assert!(text.contains("p99"), "tail latency printed: {text}");
+}
+
+#[test]
+fn serve_open_loop_bad_spec_is_a_clean_error() {
+    let out = picnic()
+        .args(["serve", "--model", "tiny", "--open-loop", "shape=square"])
+        .output()
+        .expect("spawn picnic");
+    assert!(!out.status.success(), "bad shape must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown shape"), "stderr: {err}");
+}
+
+#[test]
 fn unknown_model_is_a_clean_error() {
     let out = picnic()
         .args(["run", "--model", "70b"])

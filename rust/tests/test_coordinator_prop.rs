@@ -9,6 +9,8 @@
 //!    submitted request is served exactly once with consistent metrics;
 //!    decode-phase requests are not starved by prefill floods.
 
+#![allow(deprecated)] // exercises the pre-SubmitSpec submit API on purpose
+
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{
     serialized_workload_cycles, BatchPolicy, Batcher, Request, RequestState, Server, ServerConfig,

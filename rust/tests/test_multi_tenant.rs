@@ -16,6 +16,8 @@
 //!  * dedicated spans isolate: a tenant on its own chiplet range runs at
 //!    exactly its solo latency regardless of a neighbour's flood.
 
+#![allow(deprecated)] // exercises the pre-SubmitSpec submit API on purpose
+
 use picnic::config::{PicnicConfig, SpecDecodeConfig, TenantSpec, TenantsConfig};
 use picnic::coordinator::{
     jain_index, BatchPolicy, Batcher, Request, RequestState, Server, ServerConfig,
@@ -63,7 +65,7 @@ fn prop_tenant_kv_reservations_never_exceed_budget() {
                     name: format!("t{i}"),
                     weight: rng.range_usize(1, 4) as f64,
                     kv_budget: kv,
-                    dedicated: false,
+                    ..TenantSpec::solo()
                 })
                 .collect(),
         };

@@ -1,0 +1,215 @@
+//! Property and regression tests for the open-loop traffic machinery
+//! (seeded [`TrafficModel`] streams) and the SLO-aware serving loop:
+//!
+//!  * the stream is a pure function of its seed — same seed, byte-
+//!    identical stream; different seed, different stream;
+//!  * arrival cycles are monotone non-decreasing for every shape
+//!    (Poisson, bursty, diurnal-modulated, replay);
+//!  * the empirical Poisson arrival rate matches the nominal rate;
+//!  * no request occupies a pipeline stage before its arrival cycle, on
+//!    both the analytic and the engine backend;
+//!  * the rate→∞ open-loop limit (every arrival at cycle 0) reproduces
+//!    the closed-loop schedule exactly;
+//!  * a full open-loop serving run is deterministic end to end;
+//!  * requests whose TTFT SLO expires while queued are shed, and every
+//!    arrival resolves as either completed or shed.
+#![allow(deprecated)] // the closed-loop parity test drives the old submit API
+
+use std::collections::HashMap;
+
+use picnic::config::{PicnicConfig, TenantsConfig};
+use picnic::coordinator::{BatchPolicy, LatencyKind, Server, ServerConfig, SubmitSpec};
+use picnic::models::{DiurnalSchedule, LlamaConfig, TrafficModel};
+use picnic::sim::{EngineBackend, SimBackend};
+
+const FREQ: f64 = 1.0e9;
+
+fn server_cfg(max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        picnic: PicnicConfig::default(),
+        model: LlamaConfig::tiny(),
+        policy: BatchPolicy {
+            max_batch,
+            ..BatchPolicy::default()
+        },
+    }
+}
+
+#[test]
+fn prop_same_seed_stream_is_byte_identical() {
+    for seed in [0u64, 7, 12345] {
+        for model in [
+            TrafficModel::poisson(seed, 3000.0),
+            TrafficModel::bursty(seed, 3000.0),
+        ] {
+            let a: Vec<_> = model.stream(FREQ).take(512).collect();
+            let b: Vec<_> = model.stream(FREQ).take(512).collect();
+            assert_eq!(a, b, "seed {seed} must replay identically");
+        }
+    }
+    let a: Vec<_> = TrafficModel::poisson(1, 3000.0).stream(FREQ).take(512).collect();
+    let b: Vec<_> = TrafficModel::poisson(2, 3000.0).stream(FREQ).take(512).collect();
+    assert_ne!(a, b, "different seeds must diverge");
+}
+
+#[test]
+fn prop_arrivals_monotone_nondecreasing() {
+    let shapes = [
+        TrafficModel::poisson(17, 5000.0),
+        TrafficModel::bursty(17, 5000.0),
+        TrafficModel::poisson(17, 5000.0).with_diurnal(DiurnalSchedule {
+            period_s: 0.005,
+            amplitude: 0.8,
+        }),
+        TrafficModel::replay(17, vec![0, 5, 5, 900, 900, 900, 40_000]).unwrap(),
+    ];
+    for model in shapes {
+        let mut last = 0u64;
+        for (arrival, spec) in model.stream(FREQ).take(2048) {
+            assert!(
+                arrival >= last,
+                "arrival {arrival} after {last} in {:?}",
+                model.shape
+            );
+            assert_eq!(spec.arrival_cycle, Some(arrival));
+            last = arrival;
+        }
+    }
+}
+
+#[test]
+fn prop_poisson_empirical_rate_matches_nominal() {
+    let rate = 10_000.0;
+    let n = 20_000usize;
+    let last = TrafficModel::poisson(23, rate)
+        .stream(FREQ)
+        .take(n)
+        .last()
+        .unwrap()
+        .0;
+    let empirical_rate = n as f64 / (last as f64 / FREQ);
+    assert!(
+        (empirical_rate - rate).abs() / rate < 0.05,
+        "empirical {empirical_rate:.1} req/s vs nominal {rate:.1}"
+    );
+}
+
+/// Drive `n` open-loop requests through `server` with the stage trace
+/// on and assert no stage occupancy for a request starts before that
+/// request's stamped arrival cycle.
+fn assert_no_early_starts<B: SimBackend>(mut server: Server<B>, n: usize) {
+    let mut arrival_of: HashMap<u64, u64> = HashMap::new();
+    // fast arrivals so several requests overlap in flight
+    let model = TrafficModel::poisson(31, 50_000.0);
+    server.enable_stage_trace();
+    for (arrival, spec) in model.stream(FREQ).take(n) {
+        let id = server.enqueue(spec).expect("enqueue");
+        arrival_of.insert(id, arrival);
+    }
+    server.run_to_completion().expect("run");
+    let trace = server.stage_trace().expect("trace enabled");
+    assert!(!trace.is_empty());
+    for slot in trace {
+        let arrival = arrival_of[&slot.request];
+        assert!(
+            slot.start >= arrival,
+            "request {} started at {} before arrival {}",
+            slot.request,
+            slot.start,
+            arrival
+        );
+    }
+    assert_eq!(server.metrics.requests.len(), n, "all must complete");
+}
+
+#[test]
+fn no_request_starts_before_arrival_analytic() {
+    assert_no_early_starts(Server::new(server_cfg(4)), 24);
+}
+
+#[test]
+fn no_request_starts_before_arrival_engine() {
+    let cfg = server_cfg(4);
+    let backend = EngineBackend::calibrated(cfg.picnic.clone());
+    assert_no_early_starts(Server::with_backend(cfg, backend), 12);
+}
+
+#[test]
+fn open_loop_rate_to_infinity_matches_closed_loop() {
+    // Every arrival stamped at cycle 0 must reproduce the legacy
+    // closed-loop schedule exactly — same completion clock, same tails.
+    let mut closed = Server::new(server_cfg(8));
+    let mut open = Server::new(server_cfg(8));
+    for _ in 0..8 {
+        closed.submit(96, 12).expect("submit");
+        open.enqueue(SubmitSpec::new(96, 12).arrives_at(0)).expect("enqueue");
+    }
+    closed.run_to_completion().expect("run");
+    open.run_to_completion().expect("run");
+    assert_eq!(closed.now_cycle(), open.now_cycle());
+    assert_eq!(closed.metrics.total_tokens, open.metrics.total_tokens);
+    let c = closed.metrics.summary(LatencyKind::Total);
+    let o = open.metrics.summary(LatencyKind::Total);
+    assert_eq!(c, o, "latency summaries must coincide");
+}
+
+#[test]
+fn open_loop_serving_run_is_deterministic() {
+    let run = || {
+        let mut s = Server::new(server_cfg(4));
+        for (_, spec) in TrafficModel::bursty(5, 20_000.0).stream(FREQ).take(48) {
+            s.enqueue(spec).expect("enqueue");
+        }
+        s.run_to_completion().expect("run");
+        let totals: Vec<u64> = s.metrics.requests.iter().map(|r| r.id).collect();
+        (s.now_cycle(), s.metrics.total_tokens, totals)
+    };
+    assert_eq!(run(), run(), "same seed, same serving run");
+}
+
+#[test]
+fn overdue_requests_are_shed_and_all_arrivals_resolve() {
+    // One tenant with a 100-cycle TTFT budget and a serial (batch-1)
+    // server: the head request admits instantly; everything queued
+    // behind it expires long before the pipeline frees up.
+    let tenants = TenantsConfig::parse_cli("a:ttft=0.0000001").expect("tenants");
+    let picnic = PicnicConfig {
+        tenants,
+        ..PicnicConfig::default()
+    };
+    let mut s = Server::new(ServerConfig {
+        picnic,
+        model: LlamaConfig::tiny(),
+        policy: BatchPolicy {
+            max_batch: 1,
+            ..BatchPolicy::default()
+        },
+    });
+    let n = 8;
+    for _ in 0..n {
+        s.enqueue(SubmitSpec::new(64, 8).arrives_at(0)).expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+    let completed = s.metrics.requests.len();
+    let shed = s.metrics.shed_count();
+    assert_eq!(completed + shed, n, "every arrival resolves exactly once");
+    assert!(shed > 0, "queued requests must miss the 100-cycle budget");
+    assert!(completed >= 1, "the head request is admitted before expiry");
+    let ts = s.tenant_stats();
+    assert_eq!(ts[0].shed, shed);
+    assert_eq!(ts[0].requests, completed);
+    assert!((0.0..=1.0).contains(&ts[0].ttft_attainment));
+}
+
+#[test]
+fn deprecated_wrappers_agree_with_summary() {
+    let mut s = Server::new(server_cfg(4));
+    for _ in 0..4 {
+        s.enqueue(SubmitSpec::new(64, 8)).expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+    let m = &s.metrics;
+    assert_eq!(m.mean_ttft_s(), m.summary(LatencyKind::Ttft).mean_s);
+    assert_eq!(m.p50_total_s(), m.summary(LatencyKind::Total).p50_s);
+    assert_eq!(m.p99_total_s(), m.summary(LatencyKind::Total).p99_s);
+}

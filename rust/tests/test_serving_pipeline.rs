@@ -4,6 +4,8 @@
 //! serialized model within 1%, and the server must run unchanged over
 //! both `SimBackend` implementations.
 
+#![allow(deprecated)] // exercises the pre-SubmitSpec submit API on purpose
+
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{serialized_workload_cycles, BatchPolicy, Server, ServerConfig};
 use picnic::models::LlamaConfig;

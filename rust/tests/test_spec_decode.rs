@@ -15,6 +15,8 @@
 //!    verify pass's own token;
 //!  * both `SimBackend` implementations serve speculative schedules.
 
+#![allow(deprecated)] // exercises the pre-SubmitSpec submit API on purpose
+
 use picnic::config::{PicnicConfig, SpecDecodeConfig};
 use picnic::coordinator::{BatchPolicy, JobKind, Server, ServerConfig};
 use picnic::models::LlamaConfig;
