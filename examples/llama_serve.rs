@@ -23,11 +23,19 @@
 //! the scheduler, not workload luck; the open-loop driver round-robins
 //! the arrival stream.
 //!
+//! With `--faults` a seeded fault model is injected (transient photonic
+//! bit errors, bandwidth-derate windows, hard tile kills); the server
+//! remaps stage pipelines around dead tiles, replays lost in-flight
+//! work, and fails requests past the retry budget. The driver then
+//! asserts the conservation invariant — every request completes, is
+//! shed, or fails — and reports the degradation counters.
+//!
 //! Run: `cargo run --release --example llama_serve -- [--model 1b]
 //!       [--requests 64] [--backend analytic|engine]
 //!       [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
 //!       [--tenants a:w=1:kv=8192:ttft=0.05,b:w=1]
-//!       [--open-loop rate=2000,shape=bursty,seed=7] [--json]`
+//!       [--open-loop rate=2000,shape=bursty,seed=7]
+//!       [--faults seed=7,ber=1e-6,kill_tile=12@3ms] [--json]`
 
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{BatchPolicy, LatencyKind, Server, ServerConfig, SubmitSpec};
@@ -65,6 +73,7 @@ fn main() -> picnic::Result<()> {
     let mut picnic_cfg = PicnicConfig::default().with_ccpg(true);
     picnic_cfg.spec_decode.apply_cli(&args)?;
     picnic_cfg.tenants.apply_cli(&args)?;
+    picnic_cfg.faults.apply_cli(&args)?;
     let freq = picnic_cfg.system.frequency_hz;
     let cfg = ServerConfig {
         picnic: picnic_cfg,
@@ -145,16 +154,17 @@ fn drive<B: SimBackend>(
     let p = server.pipeline_stats();
     let tenants = server.tenant_stats();
     if open_loop {
-        // Every arrival is either served or explicitly shed — none lost.
+        // Conservation: every arrival is served, explicitly shed, or
+        // failed by injected hardware faults — none lost.
         assert_eq!(
-            m.requests.len() + m.shed_count(),
+            m.requests.len() + m.shed_count() + m.failed_count(),
             n_requests,
             "all arrivals must resolve"
         );
     } else {
         assert!(
-            m.requests.len() >= n_requests,
-            "all requests must complete"
+            m.requests.len() + m.failed_count() >= n_requests,
+            "all requests must reach a terminal state"
         );
     }
     let ttft = m.summary(LatencyKind::Ttft);
@@ -171,6 +181,9 @@ fn drive<B: SimBackend>(
                     ("dedicated", Json::Bool(t.dedicated)),
                     ("requests", json::num(t.requests as f64)),
                     ("shed", json::num(t.shed as f64)),
+                    ("failed", json::num(t.failed as f64)),
+                    ("fault_retries", json::num(t.fault_retries as f64)),
+                    ("availability", json::num(t.availability)),
                     ("tokens", json::num(t.tokens as f64)),
                     ("tokens_per_s", json::num(t.tokens_per_s)),
                     ("ttft", t.ttft.json()),
@@ -186,6 +199,7 @@ fn drive<B: SimBackend>(
             ("open_loop", Json::Bool(open_loop)),
             ("requests", json::num(m.requests.len() as f64)),
             ("shed", json::num(m.shed_count() as f64)),
+            ("failed", json::num(m.failed_count() as f64)),
             ("total_tokens", json::num(m.total_tokens as f64)),
             ("wall_s", json::num(m.wall_s)),
             ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
@@ -194,6 +208,15 @@ fn drive<B: SimBackend>(
             ("total", total.json()),
             ("stages", json::num(p.stages as f64)),
             ("stage_sets", json::num(p.stage_sets as f64)),
+            ("degraded", Json::Bool(p.degraded)),
+            ("dead_tiles", json::num(p.dead_tiles as f64)),
+            ("link_retransmissions", json::num(p.link_retransmissions as f64)),
+            (
+                "link_retransmit_cycles",
+                json::num(p.link_retransmit_cycles as f64),
+            ),
+            ("derate_stall_cycles", json::num(p.derate_stall_cycles as f64)),
+            ("job_replays", json::num(p.job_replays as f64)),
             ("jain_index", json::num(server.fairness_index())),
             ("tenants", Json::Arr(per_tenant)),
         ]);
@@ -208,6 +231,9 @@ fn drive<B: SimBackend>(
         println!("requests shed      : {}", m.shed_count());
     } else {
         println!("requests rejected  : {rejected} (retried under backpressure)");
+    }
+    if m.failed_count() > 0 {
+        println!("requests failed    : {} (hardware faults)", m.failed_count());
     }
     println!("total tokens       : {}", m.total_tokens);
     println!("wall time          : {:.3} s", m.wall_s);
@@ -252,6 +278,17 @@ fn drive<B: SimBackend>(
             100.0 * p.spec_accepted as f64 / p.spec_drafted.max(1) as f64,
             p.spec_rolled_back
         );
+    }
+    if p.degraded || m.failed_count() > 0 {
+        println!("---- faults (DEGRADED) ----");
+        println!("dead tiles         : {}", p.dead_tiles);
+        println!(
+            "retransmissions    : {} ({} cycles incl. backoff)",
+            p.link_retransmissions, p.link_retransmit_cycles
+        );
+        println!("derate stalls      : {} cycles", p.derate_stall_cycles);
+        println!("job replays        : {}", p.job_replays);
+        println!("requests failed    : {}", m.failed_count());
     }
     if tenants.len() > 1 {
         println!("---- tenants ----");

@@ -5,26 +5,34 @@
 //! sweep** (1 vs 2 vs 4 equal-weight tenants, shared vs dedicated
 //! spans, symmetric workload), plus an **open-loop traffic sweep**
 //! (Poisson and bursty arrivals at 30/60/90% of measured capacity,
-//! thousands of seeded chat-mixture requests per point). Dumps
-//! `BENCH_serving.json` (schema 4 — see EXPERIMENTS.md §BENCH_serving
-//! schema for the field-by-field contract): one `points` entry per
-//! batch size with simulated tokens/s, the serialized PR-2 reference,
-//! TTFT and p99; a `spec` block with one entry per acceptance rate next
-//! to the non-speculative batch-8 reference; a `tenancy` block with
-//! per-tenant throughputs and Jain's fairness index per configuration;
-//! and an `open_loop` block with a closed-loop parity check (every
-//! arrival at cycle 0 must match the batch-8 closed-loop run) and
+//! thousands of seeded chat-mixture requests per point), plus a
+//! **fault-injection sweep** (photonic bit-error rate × offered load,
+//! with zero-fault-identity, same-seed-determinism and tile-kill-storm
+//! probes). Dumps `BENCH_serving.json` (schema 5 — see EXPERIMENTS.md
+//! §BENCH_serving schema for the field-by-field contract): one `points`
+//! entry per batch size with simulated tokens/s, the serialized PR-2
+//! reference, TTFT and p99; a `spec` block with one entry per acceptance
+//! rate next to the non-speculative batch-8 reference; a `tenancy` block
+//! with per-tenant throughputs and Jain's fairness index per
+//! configuration; an `open_loop` block with a closed-loop parity check
+//! (every arrival at cycle 0 must match the batch-8 closed-loop run) and
 //! p50/p95/p99 TTFT / per-token / end-to-end latency per
-//! (shape × utilization) point. CI validates batch-8 > 2× batch-1, spec
-//! acceptance=1.0 ≥ the non-speculative reference, equal-weight
-//! 2-tenant fairness (Jain ≥ 0.9 on the symmetric workload), open/closed
-//! parity within 5%, and that p99 TTFT grows with offered load, then
-//! archives the file as the `BENCH_serving` artifact.
+//! (shape × utilization) point; and a `faults` block with the three
+//! probe verdicts, the storm's terminal-state accounting, and one entry
+//! per (bit-error rate × utilization) with degradation counters. CI
+//! validates batch-8 > 2× batch-1, spec acceptance=1.0 ≥ the
+//! non-speculative reference, equal-weight 2-tenant fairness
+//! (Jain ≥ 0.9 on the symmetric workload), open/closed parity within 5%,
+//! that p99 TTFT grows with offered load, and the faults-block probe
+//! verdicts plus storm conservation, then archives the file as the
+//! `BENCH_serving` artifact.
 //! Run: `cargo bench --bench serving`
 
 mod harness;
 
-use picnic::config::{PicnicConfig, SloSpec, SpecDecodeConfig, TenantSpec, TenantsConfig};
+use picnic::config::{
+    FaultConfig, KillSpec, PicnicConfig, SloSpec, SpecDecodeConfig, TenantSpec, TenantsConfig,
+};
 use picnic::coordinator::{
     serialized_workload_cycles, BatchPolicy, LatencyKind, Metrics, PipelineStats, Server,
     ServerConfig, SubmitSpec, TenantStats,
@@ -49,6 +57,12 @@ const TENANT_REQUESTS: usize = 8;
 const OPEN_SEED: u64 = 11;
 const OPEN_CAPACITY_REQUESTS: usize = 512;
 const OPEN_SWEEP_REQUESTS: usize = 2000;
+/// Fault sweep shape: the fault model's own seed, the tile-kill fan of
+/// the storm probe, and a lighter request count per sweep point (the
+/// degradation signal saturates well before the open-loop tails do).
+const FAULT_SEED: u64 = 13;
+const FAULT_STORM_TILES: u32 = 8;
+const FAULT_SWEEP_REQUESTS: usize = 500;
 
 fn policy(batch: usize) -> BatchPolicy {
     BatchPolicy {
@@ -182,6 +196,53 @@ fn run_open_loop(shape: &str, rate_rps: f64, n: usize, freq: f64) -> (Metrics, f
     s.run_to_completion().expect("run");
     let span_s = (last_arrival as f64 / freq).max(1e-12);
     (s.metrics.clone(), offered_tokens as f64 / span_s)
+}
+
+fn fault_cfg(ber: f64, kills: Vec<KillSpec>) -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        seed: FAULT_SEED,
+        link_ber: ber,
+        kills,
+        ..FaultConfig::default()
+    }
+}
+
+/// Closed-loop run with a fault model: the batch-8 fixed-shape workload
+/// of `run_once` under injected faults.
+fn run_fault_closed(batch: usize, faults: FaultConfig) -> (Metrics, PipelineStats) {
+    let mut s = Server::new(ServerConfig {
+        picnic: PicnicConfig {
+            faults,
+            ..PicnicConfig::default()
+        },
+        model: LlamaConfig::by_name(MODEL).expect("model"),
+        policy: policy(batch),
+    });
+    for _ in 0..batch {
+        s.enqueue(SubmitSpec::new(PROMPT, GEN)).expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+    (s.metrics.clone(), s.pipeline_stats())
+}
+
+/// One fault-sweep point: the seeded Poisson chat mixture at `rate_rps`
+/// with transient bit errors at `ber` on every chip-to-chip hop.
+fn run_fault_open(ber: f64, rate_rps: f64, n: usize, freq: f64) -> (Metrics, PipelineStats) {
+    let model = TrafficModel::poisson(OPEN_SEED, rate_rps);
+    let mut s = Server::new(ServerConfig {
+        picnic: PicnicConfig {
+            faults: fault_cfg(ber, Vec::new()),
+            ..PicnicConfig::default()
+        },
+        model: LlamaConfig::by_name(MODEL).expect("model"),
+        policy: policy(SPEC_BATCH),
+    });
+    for (_, spec) in model.stream(freq).take(n) {
+        s.enqueue(spec).expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+    (s.metrics.clone(), s.pipeline_stats())
 }
 
 fn main() {
@@ -357,12 +418,101 @@ fn main() {
         }
     }
 
+    harness::section("fault injection: degradation vs bit-error rate × offered load");
+    // Probe 1 — pay-for-use identity: an *enabled* fault model with every
+    // channel zeroed must reproduce the no-faults baseline bit for bit.
+    let (ident_m, ident_p) = run_fault_closed(SPEC_BATCH, fault_cfg(0.0, Vec::new()));
+    let identity_ok = ident_m.total_tokens == closed.total_tokens
+        && ident_m.wall_s.to_bits() == closed.wall_s.to_bits()
+        && !ident_p.degraded;
+    assert!(
+        identity_ok,
+        "zero-fault run must be byte-identical to the no-faults baseline"
+    );
+    // Probe 2 — determinism: same fault seed, same workload, same run.
+    let (det_a, _) = run_fault_closed(SPEC_BATCH, fault_cfg(1e-4, Vec::new()));
+    let (det_b, _) = run_fault_closed(SPEC_BATCH, fault_cfg(1e-4, Vec::new()));
+    let determinism_ok = det_a.wall_s.to_bits() == det_b.wall_s.to_bits()
+        && det_a.total_tokens == det_b.total_tokens
+        && det_a.failed_count() == det_b.failed_count();
+    assert!(determinism_ok, "same-seed fault runs must be byte-identical");
+    // Probe 3 — tile-kill storm: a fan of hard failures mid-run with a
+    // minimal retry budget. The gate is termination with full accounting,
+    // not survival.
+    let storm_cfg = FaultConfig {
+        enabled: true,
+        seed: FAULT_SEED,
+        max_retries: 1,
+        kills: (0..FAULT_STORM_TILES)
+            .map(|tile| KillSpec {
+                tile,
+                at_s: closed.wall_s / 2.0,
+            })
+            .collect(),
+        ..FaultConfig::default()
+    };
+    let (storm_m, storm_p) = run_fault_closed(SPEC_BATCH, storm_cfg);
+    let storm_conserved =
+        storm_m.requests.len() + storm_m.shed_count() + storm_m.failed_count() == SPEC_BATCH;
+    assert!(storm_conserved, "fault storm must account for every request");
+    println!(
+        "  identity ok: {identity_ok}   determinism ok: {determinism_ok}   \
+         storm ({FAULT_STORM_TILES} kills): {} completed / {} failed, {} dead tiles, \
+         {} replays",
+        storm_m.requests.len(),
+        storm_m.failed_count(),
+        storm_p.dead_tiles,
+        storm_p.job_replays,
+    );
+    let mut fault_points: Vec<Json> = Vec::new();
+    for &ber in &[1e-6f64, 1e-4] {
+        for &utilization in &[0.3f64, 0.9] {
+            let rate_rps = utilization * capacity_tps / mean_gen;
+            let (m, p) = run_fault_open(ber, rate_rps, FAULT_SWEEP_REQUESTS, freq);
+            assert_eq!(
+                m.requests.len() + m.shed_count() + m.failed_count(),
+                FAULT_SWEEP_REQUESTS,
+                "fault sweep point must conserve requests"
+            );
+            let ttft = m.summary(LatencyKind::Ttft);
+            let total = m.summary(LatencyKind::Total);
+            println!(
+                "  ber {ber:.0e} util {utilization:.1}: {:>8.1} tokens/s   \
+                 {} retransmissions ({} cycles)   {} failed   ttft p99 {:.3} ms",
+                m.throughput_tokens_per_s(),
+                p.link_retransmissions,
+                p.link_retransmit_cycles,
+                m.failed_count(),
+                1e3 * ttft.p99_s,
+            );
+            fault_points.push(json::obj(vec![
+                ("link_ber", json::num(ber)),
+                ("utilization", json::num(utilization)),
+                ("rate_rps", json::num(rate_rps)),
+                ("requests", json::num(FAULT_SWEEP_REQUESTS as f64)),
+                ("completed", json::num(m.requests.len() as f64)),
+                ("shed", json::num(m.shed_count() as f64)),
+                ("failed", json::num(m.failed_count() as f64)),
+                ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
+                ("link_retransmissions", json::num(p.link_retransmissions as f64)),
+                (
+                    "link_retransmit_cycles",
+                    json::num(p.link_retransmit_cycles as f64),
+                ),
+                ("job_replays", json::num(p.job_replays as f64)),
+                ("ttft", ttft.json()),
+                ("total", total.json()),
+            ]));
+        }
+    }
+
     let n_points = points.len();
     let n_spec = spec_points.len();
     let n_tenancy = tenancy_points.len();
     let n_open = open_points.len();
+    let n_faults = fault_points.len();
     let doc = json::obj(vec![
-        ("schema", json::num(4.0)),
+        ("schema", json::num(5.0)),
         ("model", json::s(MODEL)),
         ("prompt_len", json::num(PROMPT as f64)),
         ("gen_len", json::num(GEN as f64)),
@@ -402,10 +552,32 @@ fn main() {
                 ("points", Json::Arr(open_points)),
             ]),
         ),
+        (
+            "faults",
+            json::obj(vec![
+                ("seed", json::num(FAULT_SEED as f64)),
+                ("identity_ok", Json::Bool(identity_ok)),
+                ("determinism_ok", Json::Bool(determinism_ok)),
+                (
+                    "storm",
+                    json::obj(vec![
+                        ("kill_tiles", json::num(FAULT_STORM_TILES as f64)),
+                        ("enqueued", json::num(SPEC_BATCH as f64)),
+                        ("completed", json::num(storm_m.requests.len() as f64)),
+                        ("shed", json::num(storm_m.shed_count() as f64)),
+                        ("failed", json::num(storm_m.failed_count() as f64)),
+                        ("conserved", Json::Bool(storm_conserved)),
+                        ("dead_tiles", json::num(storm_p.dead_tiles as f64)),
+                        ("job_replays", json::num(storm_p.job_replays as f64)),
+                    ]),
+                ),
+                ("points", Json::Arr(fault_points)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serving.json", format!("{doc}\n")).expect("write serving report");
     println!(
         "\nwrote BENCH_serving.json ({n_points} batch points, {n_spec} spec points, \
-         {n_tenancy} tenancy points, {n_open} open-loop points)"
+         {n_tenancy} tenancy points, {n_open} open-loop points, {n_faults} fault points)"
     );
 }

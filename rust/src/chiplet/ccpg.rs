@@ -190,6 +190,10 @@ pub struct CcpgTimeline {
     cluster_of_tile: Vec<usize>,
     /// Per cluster: cycle its last occupancy ended; `None` = never woken.
     busy_until: Vec<Option<u64>>,
+    /// Hard-failed tiles (fault injection): occupancies on them are
+    /// no-ops — the power controller must never burn a wake on silicon
+    /// that can't run the stage anyway.
+    dead: Vec<bool>,
     pub stats: CcpgStats,
 }
 
@@ -198,10 +202,12 @@ impl CcpgTimeline {
         let cluster_of_tile: Vec<usize> =
             (0..n_tiles as u32).map(|t| topo.cluster_of(t) as usize).collect();
         let n_clusters = cluster_of_tile.iter().copied().max().map_or(0, |m| m + 1);
+        let n_tiles = cluster_of_tile.len();
         CcpgTimeline {
             cfg,
             cluster_of_tile,
             busy_until: vec![None; n_clusters],
+            dead: vec![false; n_tiles],
             stats: CcpgStats::default(),
         }
     }
@@ -210,13 +216,26 @@ impl CcpgTimeline {
         self.busy_until.len()
     }
 
+    /// Mark `tile` permanently failed: subsequent [`CcpgTimeline::occupy`]
+    /// calls on it are no-ops (no wake, no stall, no occupancy recorded).
+    pub fn kill_tile(&mut self, tile: u32) {
+        if let Some(d) = self.dead.get_mut(tile as usize) {
+            *d = true;
+        }
+    }
+
+    /// Whether `tile` was marked dead via [`CcpgTimeline::kill_tile`].
+    pub fn tile_is_dead(&self, tile: u32) -> bool {
+        self.dead.get(tile as usize).copied().unwrap_or(false)
+    }
+
     /// A pipeline stage on `tile` wants to run for `dur` cycles starting
     /// at `start`. Returns the wake stall to add before the work (0 when
     /// the cluster is still awake or CCPG is disabled) and records the
     /// occupancy. Callers must present occupancies per stage in
     /// nondecreasing `start` order (the event loop's dispatch order).
     pub fn occupy(&mut self, tile: u32, start: u64, dur: u64) -> u64 {
-        if !self.cfg.enabled {
+        if !self.cfg.enabled || self.dead[tile as usize] {
             return 0;
         }
         let c = self.cluster_of_tile[tile as usize];
@@ -369,6 +388,20 @@ mod tests {
         );
         assert_eq!(t.stats.wakes, 2);
         assert_eq!(t.stats.wake_stall_cycles, 2 * cfg.wake_latency_cycles);
+    }
+
+    #[test]
+    fn timeline_dead_tile_never_wakes() {
+        let mut t = timeline(16, true);
+        let wake = CcpgConfig::default().wake_latency_cycles;
+        t.kill_tile(0);
+        assert!(t.tile_is_dead(0));
+        assert_eq!(t.occupy(0, 0, 100), 0, "dead silicon never wakes");
+        assert_eq!(t.stats.wakes, 0);
+        // a live neighbour in the same cluster still pays its own wake —
+        // the kill removed the tile, not the cluster
+        assert_eq!(t.occupy(1, 0, 100), wake);
+        assert_eq!(t.stats.wakes, 1);
     }
 
     #[test]

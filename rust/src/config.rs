@@ -173,6 +173,35 @@ impl MacroArea {
     }
 }
 
+/// Typed construction-time validation error for configuration values
+/// that would otherwise surface far downstream as a silent div-by-zero
+/// (`transfer_cycles` with zero bandwidth), a hung event loop (zero
+/// frequency) or a nonsense admission decision (zero capacity). It
+/// implements `std::error::Error`, so it converts into `crate::Result`
+/// via `?` while staying matchable in unit tests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConfigError {
+    /// A field that must be strictly positive (and finite) was not.
+    NonPositive { field: &'static str, value: f64 },
+    /// A field that must be non-negative (and finite) was not.
+    Negative { field: &'static str, value: f64 },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NonPositive { field, value } => {
+                write!(f, "{field} must be positive and finite (got {value})")
+            }
+            ConfigError::Negative { field, value } => {
+                write!(f, "{field} must be non-negative and finite (got {value})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// Interconnect energy constants (paper §I and §II-D; Pasricha & Nikdast
 /// survey for the optical numbers).
 #[derive(Debug, Clone, PartialEq)]
@@ -207,6 +236,48 @@ impl Default for InterconnectConfig {
             optical_link_bps: 128.0e9,
             electrical_link_bps: 32.0e9,
         }
+    }
+}
+
+impl InterconnectConfig {
+    /// Reject bandwidths that are zero/negative (cycle counts divide by
+    /// them), negative per-bit energies, zero port counts — each with a
+    /// [`ConfigError`] naming the field.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let positive = [
+            ("interconnect.optical_link_bps", self.optical_link_bps),
+            ("interconnect.electrical_link_bps", self.electrical_link_bps),
+            (
+                "interconnect.optical_ports_per_tile",
+                self.optical_ports_per_tile as f64,
+            ),
+        ];
+        for (field, value) in positive {
+            if !(value > 0.0 && value.is_finite()) {
+                return Err(ConfigError::NonPositive { field, value });
+            }
+        }
+        let non_negative = [
+            (
+                "interconnect.electrical_c2c_j_per_bit",
+                self.electrical_c2c_j_per_bit,
+            ),
+            ("interconnect.dram_j_per_bit", self.dram_j_per_bit),
+            (
+                "interconnect.optical_c2c_j_per_bit",
+                self.optical_c2c_j_per_bit,
+            ),
+            (
+                "interconnect.laser_static_w_per_port",
+                self.laser_static_w_per_port,
+            ),
+        ];
+        for (field, value) in non_negative {
+            if !(value >= 0.0 && value.is_finite()) {
+                return Err(ConfigError::Negative { field, value });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -359,6 +430,236 @@ impl SpecDecodeConfig {
         c.validate()?;
         Ok(c)
     }
+}
+
+/// One scheduled hard failure: compute tile `tile` goes permanently
+/// dead `at_s` simulated seconds into the run (CLI `kill_tile=12@3ms`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KillSpec {
+    pub tile: u32,
+    pub at_s: f64,
+}
+
+/// Deterministic fault injection for the serving stack (ARCHITECTURE.md
+/// §Fault tolerance; driven by `sim::FaultModel`, consumed by
+/// `coordinator::Server`).
+///
+/// Three fault channels, all seeded and byte-deterministic:
+/// transient photonic link bit errors (`link_ber` per-bit probability →
+/// retransmission with capped exponential backoff), thermal-drift
+/// bandwidth derate windows (`derate_*` — a square wave on the cycle
+/// clock, no randomness), and scheduled hard tile failures (`kills`).
+/// Disabled (the default) the fault layer burns no random draws and adds
+/// no cycles — a zero-fault run is byte-identical to a no-faults run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Whether the fault layer is active at all.
+    pub enabled: bool,
+    /// Seed of the fault model's own PRNG stream (independent of the
+    /// traffic seed).
+    pub seed: u64,
+    /// Per-bit error probability on chip-to-chip transfers, in [0, 1).
+    /// 0 disables the transient-error channel (and burns no draws).
+    pub link_ber: f64,
+    /// Bounded retry budget: per-transfer retransmissions and per-request
+    /// replays after a tile death both stop here (≥ 1); a request that
+    /// exhausts it goes terminal `Failed`.
+    pub max_retries: u32,
+    /// Base retransmission/replay backoff, cycles; doubles per attempt,
+    /// capped at 64× the base.
+    pub backoff_base_cycles: u64,
+    /// Bandwidth multiplier inside derate windows, in (0, 1]. 1.0
+    /// disables the derate channel.
+    pub derate_factor: f64,
+    /// Period of the thermal-drift derate square wave, cycles. 0
+    /// disables the derate channel.
+    pub derate_period_cycles: u64,
+    /// Fraction of each period spent derated, in [0, 1].
+    pub derate_duty: f64,
+    /// Scheduled hard tile failures.
+    pub kills: Vec<KillSpec>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 7,
+            link_ber: 0.0,
+            max_retries: 3,
+            backoff_base_cycles: 64,
+            derate_factor: 1.0,
+            derate_period_cycles: 0,
+            derate_duty: 0.5,
+            kills: Vec::new(),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Reject out-of-range parameters with a message naming the field.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.link_ber),
+            "faults.link_ber must be in [0, 1) (got {})",
+            self.link_ber
+        );
+        anyhow::ensure!(
+            self.max_retries >= 1,
+            "faults.max_retries must be >= 1 (got {})",
+            self.max_retries
+        );
+        anyhow::ensure!(
+            self.backoff_base_cycles >= 1,
+            "faults.backoff_base_cycles must be >= 1 (got {})",
+            self.backoff_base_cycles
+        );
+        anyhow::ensure!(
+            self.derate_factor > 0.0 && self.derate_factor <= 1.0,
+            "faults.derate_factor must be in (0, 1] (got {})",
+            self.derate_factor
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.derate_duty),
+            "faults.derate_duty must be in [0, 1] (got {})",
+            self.derate_duty
+        );
+        for k in &self.kills {
+            anyhow::ensure!(
+                k.at_s >= 0.0 && k.at_s.is_finite(),
+                "faults.kills: kill time for tile {} must be finite and >= 0 (got {})",
+                k.tile,
+                k.at_s
+            );
+        }
+        Ok(())
+    }
+
+    /// Apply the `--faults` CLI surface onto an already-loaded config
+    /// (shared by `picnic` and `examples/llama_serve.rs`):
+    /// `--faults k=v,…` overrides only the named keys — values from a
+    /// `--config` file survive — and a bare `--faults` flag just enables
+    /// the fault layer with the loaded values. Either form sets
+    /// `enabled = true`.
+    pub fn apply_cli(&mut self, args: &crate::util::args::Args) -> crate::Result<()> {
+        if let Some(text) = args.opt("faults") {
+            *self = self.merge_cli(text)?;
+        } else if args.flag("faults") {
+            self.enabled = true;
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI shorthand `seed=7,link_ber=1e-6,kill_tile=12@3ms`
+    /// over the built-in defaults. Keys: `seed`, `link_ber`/`ber`,
+    /// `max_retries`/`retries`, `backoff`, `derate`, `derate_period`,
+    /// `derate_duty`/`duty`, `kill_tile` (repeatable, `TILE@TIME` with an
+    /// `s`/`ms`/`us`/`ns` suffix); omitted keys keep their defaults. The
+    /// returned config has `enabled = true` and is validated.
+    pub fn parse_cli(text: &str) -> crate::Result<FaultConfig> {
+        FaultConfig::default().merge_cli(text)
+    }
+
+    /// Parse the CLI shorthand onto `self` (typically the values a
+    /// `--config` file loaded): only the named keys change. The result
+    /// has `enabled = true` and is validated.
+    pub fn merge_cli(&self, text: &str) -> crate::Result<FaultConfig> {
+        let mut c = FaultConfig {
+            enabled: true,
+            ..self.clone()
+        };
+        let mut kills_replaced = false;
+        for part in text.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--faults: expected key=value, got {part:?}"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "seed" => {
+                    c.seed = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--faults seed {v:?}: {e}"))?
+                }
+                "link_ber" | "ber" => {
+                    c.link_ber = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--faults link_ber {v:?}: {e}"))?
+                }
+                "max_retries" | "retries" => {
+                    c.max_retries = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--faults max_retries {v:?}: {e}"))?
+                }
+                "backoff" | "backoff_base_cycles" => {
+                    c.backoff_base_cycles = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--faults backoff {v:?}: {e}"))?
+                }
+                "derate" | "derate_factor" => {
+                    c.derate_factor = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--faults derate {v:?}: {e}"))?
+                }
+                "derate_period" | "derate_period_cycles" => {
+                    c.derate_period_cycles = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--faults derate_period {v:?}: {e}"))?
+                }
+                "derate_duty" | "duty" => {
+                    c.derate_duty = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--faults derate_duty {v:?}: {e}"))?
+                }
+                "kill_tile" => {
+                    // the first kill in this CLI string replaces any
+                    // loaded schedule; further ones accumulate
+                    if !kills_replaced {
+                        c.kills.clear();
+                        kills_replaced = true;
+                    }
+                    c.kills.push(parse_kill_spec(v)?);
+                }
+                other => anyhow::bail!(
+                    "--faults: unknown key {other:?} \
+                     (seed|link_ber|max_retries|backoff|derate|derate_period|derate_duty|kill_tile)"
+                ),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+/// Parse one `kill_tile` value: `TILE@TIME` where TIME carries an
+/// `s`/`ms`/`us`/`ns` suffix (a bare number is seconds).
+fn parse_kill_spec(v: &str) -> crate::Result<KillSpec> {
+    let (tile, at) = v
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("--faults kill_tile: expected TILE@TIME, got {v:?}"))?;
+    let tile: u32 = tile
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--faults kill_tile tile {tile:?}: {e}"))?;
+    let at = at.trim();
+    let (digits, scale) = if let Some(p) = at.strip_suffix("ms") {
+        (p, 1e-3)
+    } else if let Some(p) = at.strip_suffix("us") {
+        (p, 1e-6)
+    } else if let Some(p) = at.strip_suffix("ns") {
+        (p, 1e-9)
+    } else if let Some(p) = at.strip_suffix('s') {
+        (p, 1.0)
+    } else {
+        (at, 1.0)
+    };
+    let at_s: f64 = digits
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("--faults kill_tile time {at:?}: {e}"))?;
+    Ok(KillSpec {
+        tile,
+        at_s: at_s * scale,
+    })
 }
 
 /// Tail-latency service-level objectives for one tenant (ARCHITECTURE.md
@@ -648,6 +949,7 @@ pub struct PicnicConfig {
     pub timing: TimingConfig,
     pub spec_decode: SpecDecodeConfig,
     pub tenants: TenantsConfig,
+    pub faults: FaultConfig,
 }
 
 impl PicnicConfig {
@@ -699,6 +1001,9 @@ impl PicnicConfig {
             c.interconnect.electrical_link_bps =
                 num(i, "electrical_link_bps", c.interconnect.electrical_link_bps);
         }
+        // Reject zero/negative bandwidths and negative energies at the
+        // config boundary (typed ConfigError converts via `?`).
+        c.interconnect.validate()?;
         if let Some(g) = j.get("ccpg") {
             c.ccpg.enabled = g.get("enabled").and_then(Json::as_bool).unwrap_or(c.ccpg.enabled);
             c.ccpg.tiles_per_cluster = int(g, "tiles_per_cluster", c.ccpg.tiles_per_cluster);
@@ -741,6 +1046,31 @@ impl PicnicConfig {
                 .collect();
         }
         c.tenants.validate()?;
+        if let Some(f) = j.get("faults") {
+            c.faults.enabled = f
+                .get("enabled")
+                .and_then(Json::as_bool)
+                .unwrap_or(c.faults.enabled);
+            c.faults.seed = int(f, "seed", c.faults.seed as usize) as u64;
+            c.faults.link_ber = num(f, "link_ber", c.faults.link_ber);
+            c.faults.max_retries = int(f, "max_retries", c.faults.max_retries as usize) as u32;
+            c.faults.backoff_base_cycles =
+                int(f, "backoff_base_cycles", c.faults.backoff_base_cycles as usize) as u64;
+            c.faults.derate_factor = num(f, "derate_factor", c.faults.derate_factor);
+            c.faults.derate_period_cycles =
+                int(f, "derate_period_cycles", c.faults.derate_period_cycles as usize) as u64;
+            c.faults.derate_duty = num(f, "derate_duty", c.faults.derate_duty);
+            if let Some(arr) = f.get("kills").and_then(Json::as_arr) {
+                c.faults.kills = arr
+                    .iter()
+                    .map(|e| KillSpec {
+                        tile: e.get("tile").and_then(Json::as_usize).unwrap_or(0) as u32,
+                        at_s: e.get("at_s").and_then(Json::as_f64).unwrap_or(0.0),
+                    })
+                    .collect();
+            }
+        }
+        c.faults.validate()?;
         if let Some(t) = j.get("timing") {
             c.timing.xbar_cycles = int(t, "xbar_cycles", c.timing.xbar_cycles as usize) as u64;
             c.timing.hop_cycles = int(t, "hop_cycles", c.timing.hop_cycles as usize) as u64;
@@ -770,8 +1100,14 @@ impl PicnicConfig {
                 )
             })
             .collect();
+        let kills: Vec<String> = self
+            .faults
+            .kills
+            .iter()
+            .map(|k| format!("{{\"tile\": {}, \"at_s\": {}}}", k.tile, k.at_s))
+            .collect();
         format!(
-            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}},\n  \"tenants\": [{}]\n}}\n",
+            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}},\n  \"tenants\": [{}],\n  \"faults\": {{\"enabled\": {}, \"seed\": {}, \"link_ber\": {}, \"max_retries\": {}, \"backoff_base_cycles\": {}, \"derate_factor\": {}, \"derate_period_cycles\": {}, \"derate_duty\": {}, \"kills\": [{}]}}\n}}\n",
             self.system.bit_width,
             self.system.frequency_hz,
             self.system.ipcn_dim,
@@ -807,6 +1143,15 @@ impl PicnicConfig {
             self.spec_decode.acceptance_rate,
             self.spec_decode.draft_cost_ratio,
             tenants.join(", "),
+            self.faults.enabled,
+            self.faults.seed,
+            self.faults.link_ber,
+            self.faults.max_retries,
+            self.faults.backoff_base_cycles,
+            self.faults.derate_factor,
+            self.faults.derate_period_cycles,
+            self.faults.derate_duty,
+            kills.join(", "),
         )
     }
 }
@@ -1031,5 +1376,161 @@ mod tests {
         assert_eq!(merged.draft_len, 8, "file values survive the merge");
         assert!((merged.acceptance_rate - 0.6).abs() < 1e-12);
         assert!((merged.draft_cost_ratio - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interconnect_default_validates() {
+        assert!(InterconnectConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn interconnect_rejects_zero_or_negative_bandwidth() {
+        for bps in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let c = InterconnectConfig {
+                optical_link_bps: bps,
+                ..InterconnectConfig::default()
+            };
+            let err = c.validate().unwrap_err();
+            assert!(
+                matches!(err, ConfigError::NonPositive { field, .. }
+                    if field == "interconnect.optical_link_bps"),
+                "bps {bps}: {err}"
+            );
+            assert!(err.to_string().contains("optical_link_bps"), "{err}");
+        }
+        let c = InterconnectConfig {
+            electrical_link_bps: -5.0,
+            ..InterconnectConfig::default()
+        };
+        assert!(matches!(
+            c.validate().unwrap_err(),
+            ConfigError::NonPositive { field, .. } if field == "interconnect.electrical_link_bps"
+        ));
+    }
+
+    #[test]
+    fn interconnect_rejects_zero_ports_and_negative_energy() {
+        let c = InterconnectConfig {
+            optical_ports_per_tile: 0,
+            ..InterconnectConfig::default()
+        };
+        assert!(matches!(
+            c.validate().unwrap_err(),
+            ConfigError::NonPositive { field, .. }
+                if field == "interconnect.optical_ports_per_tile"
+        ));
+        let c = InterconnectConfig {
+            optical_c2c_j_per_bit: -1e-12,
+            ..InterconnectConfig::default()
+        };
+        let err = c.validate().unwrap_err();
+        assert!(matches!(err, ConfigError::Negative { .. }), "{err}");
+        assert!(err.to_string().contains("optical_c2c_j_per_bit"));
+    }
+
+    #[test]
+    fn interconnect_invalid_values_rejected_from_json() {
+        let err = PicnicConfig::from_json(r#"{"interconnect": {"optical_link_bps": 0}}"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("optical_link_bps"), "{err}");
+    }
+
+    #[test]
+    fn faults_json_roundtrip() {
+        let c = PicnicConfig {
+            faults: FaultConfig {
+                enabled: true,
+                seed: 13,
+                link_ber: 1e-6,
+                max_retries: 5,
+                backoff_base_cycles: 128,
+                derate_factor: 0.5,
+                derate_period_cycles: 100_000,
+                derate_duty: 0.25,
+                kills: vec![
+                    KillSpec {
+                        tile: 12,
+                        at_s: 0.003,
+                    },
+                    KillSpec { tile: 3, at_s: 0.01 },
+                ],
+            },
+            ..PicnicConfig::default()
+        };
+        let back = PicnicConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.faults.kills.len(), 2);
+        assert_eq!(back.faults.kills[0].tile, 12);
+        // defaults round-trip to a disabled fault layer
+        let plain = PicnicConfig::from_json(&PicnicConfig::default().to_json()).unwrap();
+        assert!(!plain.faults.enabled);
+        assert!(plain.faults.kills.is_empty());
+    }
+
+    #[test]
+    fn faults_invalid_values_rejected() {
+        for (json, field) in [
+            (r#"{"faults": {"link_ber": 1.5}}"#, "link_ber"),
+            (r#"{"faults": {"link_ber": -0.1}}"#, "link_ber"),
+            (r#"{"faults": {"max_retries": 0}}"#, "max_retries"),
+            (r#"{"faults": {"backoff_base_cycles": 0}}"#, "backoff_base_cycles"),
+            (r#"{"faults": {"derate_factor": 0}}"#, "derate_factor"),
+            (r#"{"faults": {"derate_factor": 1.2}}"#, "derate_factor"),
+            (r#"{"faults": {"derate_duty": 2}}"#, "derate_duty"),
+        ] {
+            let err = PicnicConfig::from_json(json).unwrap_err();
+            assert!(
+                err.to_string().contains(field),
+                "error for {json} must name {field}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn faults_cli_shorthand() {
+        let c = FaultConfig::parse_cli("seed=9,link_ber=1e-6,kill_tile=12@3ms").unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.seed, 9);
+        assert!((c.link_ber - 1e-6).abs() < 1e-18);
+        assert_eq!(c.kills.len(), 1);
+        assert_eq!(c.kills[0].tile, 12);
+        assert!((c.kills[0].at_s - 0.003).abs() < 1e-12);
+        // repeatable kill_tile accumulates; suffixes us/ns/s and bare
+        // seconds all parse
+        let multi =
+            FaultConfig::parse_cli("kill_tile=1@500us,kill_tile=2@2s,kill_tile=3@0.5").unwrap();
+        assert_eq!(multi.kills.len(), 3);
+        assert!((multi.kills[0].at_s - 500e-6).abs() < 1e-12);
+        assert!((multi.kills[1].at_s - 2.0).abs() < 1e-12);
+        assert!((multi.kills[2].at_s - 0.5).abs() < 1e-12);
+        // empty string enables with defaults
+        let d = FaultConfig::parse_cli("").unwrap();
+        assert!(d.enabled);
+        assert_eq!(d.max_retries, FaultConfig::default().max_retries);
+        // malformed specs are clear errors
+        assert!(FaultConfig::parse_cli("link_ber=2").is_err());
+        assert!(FaultConfig::parse_cli("kill_tile=12").is_err());
+        assert!(FaultConfig::parse_cli("kill_tile=x@3ms").is_err());
+        assert!(FaultConfig::parse_cli("bogus=1").is_err());
+        assert!(FaultConfig::parse_cli("retries").is_err());
+    }
+
+    #[test]
+    fn faults_cli_merges_onto_loaded_config() {
+        // a --config file set these; --faults must only override the keys
+        // it names, and a CLI kill schedule replaces the loaded one
+        let from_file = FaultConfig {
+            enabled: false,
+            seed: 3,
+            link_ber: 1e-7,
+            kills: vec![KillSpec { tile: 9, at_s: 1.0 }],
+            ..FaultConfig::default()
+        };
+        let merged = from_file.merge_cli("kill_tile=2@1ms,kill_tile=4@2ms").unwrap();
+        assert!(merged.enabled);
+        assert_eq!(merged.seed, 3, "file values survive the merge");
+        assert!((merged.link_ber - 1e-7).abs() < 1e-18);
+        let tiles: Vec<u32> = merged.kills.iter().map(|k| k.tile).collect();
+        assert_eq!(tiles, vec![2, 4], "CLI kill schedule replaces the loaded one");
     }
 }

@@ -338,14 +338,17 @@ impl Batcher {
         Work::Idle
     }
 
-    /// Remove finished requests from the in-flight set, releasing their
-    /// KV reservations back to the owning tenants.
+    /// Remove terminal requests — served ([`RequestState::Done`]) or
+    /// fault-terminated ([`RequestState::Failed`]) — from the in-flight
+    /// set, releasing their KV reservations back to the owning tenants
+    /// either way: a request killed by hardware must not pin scratchpad
+    /// capacity it will never use.
     pub fn reap(&mut self) -> usize {
         let before = self.inflight.len();
         let (done, still): (Vec<Request>, Vec<Request>) = self
             .inflight
             .drain(..)
-            .partition(|r| r.state == RequestState::Done);
+            .partition(|r| matches!(r.state, RequestState::Done | RequestState::Failed));
         for r in &done {
             let lane = &mut self.lanes[r.tenant];
             lane.reserved_kv = lane.reserved_kv.saturating_sub(r.kv_reservation());
@@ -511,6 +514,21 @@ mod tests {
             Work::Prefill(r) => assert_eq!(r.id, 7),
             _ => panic!("expected prefill"),
         }
+    }
+
+    #[test]
+    fn reap_releases_failed_requests_too() {
+        let mut b = Batcher::with_tenants(BatchPolicy::default(), &two_tenants(1000, 1000));
+        b.submit(Request::new_for_tenant(0, 0, 50, 10, 0));
+        b.submit(Request::new_for_tenant(1, 1, 30, 10, 0));
+        b.admit();
+        b.inflight_by_id(0).unwrap().state = RequestState::Prefilling;
+        b.inflight_by_id(0).unwrap().fail(100);
+        assert_eq!(b.reap(), 1, "Failed is terminal like Done");
+        assert_eq!(b.tenant_reserved_kv(0), 0, "failed request frees its KV");
+        assert_eq!(b.tenant_reserved_kv(1), 40);
+        assert_eq!(b.done().len(), 1);
+        assert_eq!(b.done()[0].state, RequestState::Failed);
     }
 
     #[test]

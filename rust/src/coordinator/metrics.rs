@@ -86,12 +86,28 @@ pub struct ShedRecord {
     pub waited_s: f64,
 }
 
+/// One in-flight request terminated by hardware faults: a killed stage
+/// tile invalidated its job more times than the fault model's retry
+/// budget allows.
+#[derive(Debug, Clone)]
+pub struct FailRecord {
+    pub id: u64,
+    pub tenant: usize,
+    /// Replay attempts burned before the request was failed.
+    pub retries: u32,
+    /// Tokens the request had committed before failing (lost work).
+    pub tokens_lost: usize,
+}
+
 /// Run-level aggregates.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: Vec<RequestMetrics>,
     /// Requests shed by SLO admission control (terminal, never served).
     pub shed: Vec<ShedRecord>,
+    /// Requests terminated by hardware faults (terminal, never served;
+    /// distinct from `shed` — the blame is the fabric, not overload).
+    pub failed: Vec<FailRecord>,
     pub total_tokens: u64,
     pub wall_s: f64,
     /// Ids already recorded — makes `record` idempotent in O(1). The
@@ -144,6 +160,27 @@ impl Metrics {
     /// Number of requests shed by SLO admission control.
     pub fn shed_count(&self) -> usize {
         self.shed.len()
+    }
+
+    /// Record a request terminated by hardware faults once; repeat calls
+    /// for the same id are no-ops (shares the id space with
+    /// [`Metrics::record`] and [`Metrics::record_shed`], so a request
+    /// reaches exactly one terminal ledger).
+    pub fn record_failed(&mut self, r: &Request) {
+        if !self.recorded.insert(r.id) {
+            return;
+        }
+        self.failed.push(FailRecord {
+            id: r.id,
+            tenant: r.tenant,
+            retries: r.fault_retries,
+            tokens_lost: r.generated,
+        });
+    }
+
+    /// Number of requests terminated by hardware faults.
+    pub fn failed_count(&self) -> usize {
+        self.failed.len()
     }
 
     /// The raw series behind [`Metrics::summary`] (completed requests
@@ -232,7 +269,6 @@ pub fn jain_index(rates: &[f64]) -> f64 {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // the legacy accessors stay covered until removal
 mod tests {
     use super::*;
     use crate::coordinator::request::RequestState;
@@ -288,12 +324,14 @@ mod tests {
     fn p50_p99_of_single_request() {
         let mut m = Metrics::default();
         m.record(&done_request(1, 0, 10, 100, 4), 0, 1e9);
-        assert!(m.p99_total_s() > 0.0);
-        assert!((m.p50_total_s() - m.p99_total_s()).abs() < 1e-15);
-        assert!((m.mean_ttft_s() - 1e-8).abs() < 1e-15);
+        let total = m.summary(LatencyKind::Total);
+        assert!(total.p99_s > 0.0);
+        assert!((total.p50_s - total.p99_s).abs() < 1e-15);
+        assert!((m.summary(LatencyKind::Ttft).mean_s - 1e-8).abs() < 1e-15);
     }
 
     #[test]
+    #[allow(deprecated)] // the one test keeping the legacy wrappers honest
     fn summary_matches_legacy_accessors() {
         let mut m = Metrics::default();
         for (id, done) in [(1u64, 100u64), (2, 400), (3, 900), (4, 1600)] {
@@ -349,6 +387,28 @@ mod tests {
         assert_eq!(m.shed_count(), 1, "same id shed once");
         assert!((m.shed[0].waited_s - 1e-6).abs() < 1e-15);
         assert!(m.requests.is_empty(), "shed requests never complete");
+    }
+
+    #[test]
+    fn failed_records_are_idempotent_and_separate() {
+        let mut m = Metrics::default();
+        let mut r = Request::new_for_tenant(5, 1, 8, 4, 0);
+        r.state = RequestState::Decoding;
+        r.generated = 2;
+        r.fault_retries = 3;
+        r.fail(1_000);
+        m.record_failed(&r);
+        m.record_failed(&r);
+        assert_eq!(m.failed_count(), 1, "same id failed once");
+        assert_eq!(m.failed[0].tenant, 1);
+        assert_eq!(m.failed[0].retries, 3);
+        assert_eq!(m.failed[0].tokens_lost, 2);
+        assert!(m.requests.is_empty(), "failed requests never complete");
+        assert_eq!(m.total_tokens, 0, "lost tokens don't count as served");
+        // the shared id space keeps a request out of the served ledger
+        // even if a stale completion event replays it
+        m.record(&r, 0, 1e9);
+        assert!(m.requests.is_empty());
     }
 
     #[test]

@@ -75,6 +75,21 @@
 //! before weighted fairness. Latency tails surface through
 //! [`Metrics::summary`] as [`LatencySummary`] (mean/p50/p95/p99) per
 //! [`LatencyKind`].
+//!
+//! ## Fault injection and self-healing
+//!
+//! With [`crate::config::FaultConfig`] enabled, a seeded
+//! [`crate::sim::FaultModel`] injects transient photonic bit errors
+//! (hops re-send with capped exponential backoff, re-paying per-bit
+//! energy), bandwidth-derate windows, and scheduled tile kills. The
+//! server heals around kills: stage maps remap onto surviving tiles,
+//! in-flight work replays after backoff up to a retry budget, and
+//! beyond it requests terminate [`RequestState::Failed`] — a terminal
+//! state distinct from shedding, recorded in [`Metrics::failed`] as
+//! [`FailRecord`]s and reflected in [`TenantStats`] availability. The
+//! whole layer is pay-for-use: disabled (or zero-fault) configs run
+//! byte-identically to a server with no fault model. See
+//! ARCHITECTURE.md §Fault tolerance.
 
 mod batcher;
 mod metrics;
@@ -83,7 +98,8 @@ mod server;
 
 pub use batcher::{Admission, Batcher, BatchPolicy};
 pub use metrics::{
-    jain_index, percentile, LatencyKind, LatencySummary, Metrics, RequestMetrics, ShedRecord,
+    jain_index, percentile, FailRecord, LatencyKind, LatencySummary, Metrics, RequestMetrics,
+    ShedRecord,
 };
 pub use request::{Request, RequestId, RequestState, SubmitSpec};
 pub use server::{

@@ -5,8 +5,12 @@ use crate::config::SloSpec;
 pub type RequestId = u64;
 
 /// Request state machine: Queued → Prefilling → Decoding → Done.
-/// `Shed` is a terminal alternative to Done: admission dropped the
-/// request because its TTFT target expired before any work ran.
+/// Two terminal alternatives to Done exist: `Shed` — admission dropped
+/// the request because its TTFT target expired before any work ran —
+/// and `Failed` — hardware faults (a killed stage tile) exhausted the
+/// request's replay budget mid-flight. Both release the request's KV
+/// reservation; they differ in blame (overload vs hardware) and are
+/// counted separately ([`crate::coordinator::Metrics`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestState {
     Queued,
@@ -14,6 +18,7 @@ pub enum RequestState {
     Decoding,
     Done,
     Shed,
+    Failed,
 }
 
 /// Everything a caller says about one request, in builder form — the
@@ -114,6 +119,14 @@ pub struct Request {
     /// Resolved tail-latency targets (tenant default or per-request
     /// override; unconstrained unless the submitter set one).
     pub slo: SloSpec,
+    /// Times a hardware fault (killed stage tile) forced this request's
+    /// in-flight job to be replayed. Past the fault model's retry budget
+    /// the request goes [`RequestState::Failed`].
+    pub fault_retries: u32,
+    /// Set when a tile kill invalidated this request's in-flight job:
+    /// the event loop re-dispatches the same unit of work (on the
+    /// remapped stage set, after backoff) instead of advancing state.
+    pub pending_replay: bool,
 }
 
 impl Request {
@@ -144,7 +157,26 @@ impl Request {
             first_token_cycle: None,
             done_cycle: None,
             slo: SloSpec::default(),
+            fault_retries: 0,
+            pending_replay: false,
         }
+    }
+
+    /// Terminate the request as [`RequestState::Failed`] at `now`:
+    /// hardware faults exhausted its replay budget. Terminal like `Done`
+    /// (the batcher reaps it and releases its KV reservation), but the
+    /// request never counts as served.
+    pub fn fail(&mut self, now: u64) {
+        debug_assert!(
+            matches!(
+                self.state,
+                RequestState::Prefilling | RequestState::Decoding
+            ),
+            "only in-flight work can fail on hardware faults"
+        );
+        self.state = RequestState::Failed;
+        self.done_cycle = Some(now);
+        self.pending_replay = false;
     }
 
     /// Absolute cycle by which the first token must complete to meet the
@@ -274,6 +306,19 @@ mod tests {
     #[should_panic]
     fn empty_prompt_rejected() {
         Request::new(1, 0, 1, 0);
+    }
+
+    #[test]
+    fn fail_is_terminal_and_clears_replay() {
+        let mut r = Request::new(1, 16, 4, 100);
+        r.state = RequestState::Decoding;
+        r.fault_retries = 3;
+        r.pending_replay = true;
+        r.fail(500);
+        assert_eq!(r.state, RequestState::Failed);
+        assert_eq!(r.done_cycle, Some(500));
+        assert!(!r.pending_replay);
+        assert_eq!(r.fault_retries, 3, "retry count is preserved for metrics");
     }
 
     #[test]

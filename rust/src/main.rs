@@ -10,6 +10,7 @@
 //!              [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
 //!              [--tenants a:w=2:kv=8192:ttft=0.05,b:w=1]
 //!              [--open-loop rate=2000,shape=bursty,seed=7]
+//!              [--faults seed=7,ber=1e-6,kill_tile=12@3ms]
 //! picnic isa-demo
 //! picnic config-dump [--spec-decode …] [--tenants …]
 //! ```
@@ -33,6 +34,7 @@ USAGE:
                 [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
                 [--tenants a:w=2:kv=8192,b:w=1[:dedicated]]
                 [--open-loop [rate=2000,shape=poisson|bursty,seed=7]]
+                [--faults [seed=7,ber=1e-6,retries=3,backoff=64,derate=0.5,derate_period=100000,kill_tile=12@3ms]]
   picnic isa-demo
   picnic config-dump
 
@@ -57,6 +59,16 @@ clock whether or not the server keeps up) drawn from chat-style
 prompt/generation length mixtures. `--requests N` bounds the stream;
 latency percentiles (TTFT, per-token, end-to-end) are reported either
 way.
+
+`--faults [SPEC]` turns on seeded fault injection and graceful
+degradation: transient photonic bit errors (`ber`, per-bit; corrupted
+hops re-send with capped exponential backoff from `backoff` cycles and
+re-pay per-bit energy), bandwidth-derate windows (`derate` factor,
+`derate_period`/`derate_duty` square wave), and hard tile kills
+(`kill_tile=TILE@TIME`, repeatable; TIME takes s/ms/us/ns). The server
+remaps stage pipelines around dead tiles, replays lost in-flight work up
+to `retries` times, and fails requests past the budget (reported apart
+from shedding). Same `seed` → byte-identical run.
 ";
 
 fn main() {
@@ -78,6 +90,7 @@ fn run() -> picnic::Result<()> {
     // config-dump round-trips).
     cfg.spec_decode.apply_cli(&args)?;
     cfg.tenants.apply_cli(&args)?;
+    cfg.faults.apply_cli(&args)?;
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args, cfg),
         Some("report") => cmd_report(&args, cfg),
@@ -281,6 +294,17 @@ fn drive_serve<B: SimBackend>(
         println!(
             "spec-decode: {} rounds, {} drafted, {} accepted, {} committed, {} rolled back",
             p.spec_rounds, p.spec_drafted, p.spec_accepted, p.spec_committed, p.spec_rolled_back,
+        );
+    }
+    if p.degraded || server.metrics.failed_count() > 0 {
+        println!(
+            "faults: DEGRADED — {} dead tiles, {} retransmissions ({} cycles), {} derate stall cycles, {} replays, {} failed requests",
+            p.dead_tiles,
+            p.link_retransmissions,
+            p.link_retransmit_cycles,
+            p.derate_stall_cycles,
+            p.job_replays,
+            server.metrics.failed_count(),
         );
     }
     if server.n_tenants() > 1 {

@@ -33,4 +33,4 @@ pub use partition::{MatrixPartition, TileAssignment};
 pub use placement::{ChannelRegion, Placement};
 pub use plan_cache::{kv_bucket_bounds, PlanCache, PlanCacheStats};
 pub use schedule::{LayerPlan, PhaseOp, ScheduleBuilder};
-pub use stage_map::StageMap;
+pub use stage_map::{StageMap, TileSet};

@@ -26,6 +26,10 @@
 
 use super::schedule::LayerPlan;
 
+/// A set of dead (permanently failed) tile ids, ordered for
+/// deterministic iteration (ARCHITECTURE.md §Fault tolerance).
+pub type TileSet = std::collections::BTreeSet<u32>;
+
 /// The tile span of one stage pipeline on the chiplet chain: per-stage
 /// first-tile indices plus the contiguous range `[tile_offset, end_tile)`
 /// the whole pipeline occupies.
@@ -70,6 +74,38 @@ impl StageMap {
     /// disjoint span may begin.
     pub fn end_tile(&self) -> u32 {
         self.tile_offset + self.span_tiles
+    }
+
+    /// Whether `tile` lies inside this span's contiguous tile range.
+    pub fn contains_tile(&self, tile: u32) -> bool {
+        tile >= self.tile_offset && tile < self.end_tile()
+    }
+
+    /// Rebuild the stage→tile assignment onto the span's surviving tiles
+    /// after hard failures: stages spread round-robin across the live
+    /// tiles, so several stages may share one tile (degraded, but the
+    /// pipeline keeps serving). The span's bounds are unchanged — dead
+    /// tiles stay inside the range, they just host no stages. Returns
+    /// `None` when every tile in a non-empty span is dead; the caller
+    /// must fall back to another span or fail the in-flight work.
+    pub fn remap_excluding(&self, dead: &TileSet) -> Option<StageMap> {
+        if self.stage_tiles.is_empty() {
+            return Some(self.clone());
+        }
+        let survivors: Vec<u32> = (self.tile_offset..self.end_tile())
+            .filter(|t| !dead.contains(t))
+            .collect();
+        if survivors.is_empty() {
+            return None;
+        }
+        let stage_tiles = (0..self.stage_tiles.len())
+            .map(|i| survivors[i % survivors.len()])
+            .collect();
+        Some(StageMap {
+            tile_offset: self.tile_offset,
+            stage_tiles,
+            span_tiles: self.span_tiles,
+        })
     }
 }
 
@@ -120,5 +156,39 @@ mod tests {
         assert_eq!(m.n_stages(), 0);
         assert_eq!(m.span_tiles, 0);
         assert_eq!(m.end_tile(), 7);
+    }
+
+    #[test]
+    fn remap_excluding_avoids_dead_tiles() {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let plans = ScheduleBuilder::new(&cfg, &model).plan_all(1, 1).unwrap();
+        let m = StageMap::from_plans(&plans, 0);
+        let dead: TileSet = [m.stage_tiles[0]].into_iter().collect();
+        let r = m.remap_excluding(&dead).expect("survivors remain");
+        assert_eq!(r.n_stages(), m.n_stages(), "stage count survives remap");
+        assert_eq!(r.tile_offset, m.tile_offset);
+        assert_eq!(r.span_tiles, m.span_tiles, "span bounds unchanged");
+        for &t in &r.stage_tiles {
+            assert!(!dead.contains(&t), "no stage lands on a dead tile");
+            assert!(m.contains_tile(t), "stages stay inside the span");
+        }
+        // deterministic: the same inputs produce the same remap
+        let r2 = m.remap_excluding(&dead).unwrap();
+        assert_eq!(r.stage_tiles, r2.stage_tiles);
+    }
+
+    #[test]
+    fn remap_excluding_whole_span_dead_is_none() {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let plans = ScheduleBuilder::new(&cfg, &model).plan_all(1, 1).unwrap();
+        let m = StageMap::from_plans(&plans, 0);
+        let dead: TileSet = (m.tile_offset..m.end_tile()).collect();
+        assert!(m.remap_excluding(&dead).is_none());
+        // a disjoint span is untouched by those deaths
+        let b = StageMap::from_plans(&plans, m.end_tile());
+        let rb = b.remap_excluding(&dead).expect("disjoint span unaffected");
+        assert_eq!(rb.stage_tiles, b.stage_tiles);
     }
 }

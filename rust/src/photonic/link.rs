@@ -27,7 +27,37 @@ pub struct TransferRecord {
     pub dst: u32,
 }
 
-/// Interconnect accounting: energy + time-binned trace.
+/// Reliability view of one [`Interconnect`] (ARCHITECTURE.md §Fault
+/// tolerance): how much of its traffic was repeated or slowed by the
+/// fault layer. All zeros on a fault-free run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LinkHealth {
+    /// Completed transfers, including retransmissions.
+    pub transfers: u64,
+    /// Transfers that were repeats of a corrupted attempt.
+    pub retransmissions: u64,
+    /// Cycles spent re-sending corrupted payloads.
+    pub retransmit_cycles: u64,
+    /// Cycles spent waiting out exponential backoff before re-sends.
+    pub backoff_cycles: u64,
+    /// Transfers that ran inside a bandwidth-derate window.
+    pub derated_transfers: u64,
+}
+
+impl LinkHealth {
+    /// True when any fault ever touched this link.
+    pub fn degraded(&self) -> bool {
+        self.retransmissions > 0 || self.derated_transfers > 0
+    }
+}
+
+/// Capped exponential backoff before retransmission `attempt` (1-based):
+/// `base` doubles per attempt, saturating at 64× the base.
+pub fn backoff_cycles(base: u64, attempt: u32) -> u64 {
+    base << attempt.saturating_sub(1).min(6)
+}
+
+/// Interconnect accounting: energy + time-binned trace + link health.
 #[derive(Debug, Clone)]
 pub struct Interconnect {
     cfg: InterconnectConfig,
@@ -35,16 +65,28 @@ pub struct Interconnect {
     pub records: Vec<TransferRecord>,
     total_bits: u64,
     total_energy_j: f64,
+    retransmissions: u64,
+    retransmit_cycles: u64,
+    backoff_cycles: u64,
+    derated_transfers: u64,
 }
 
 impl Interconnect {
+    /// Build a link on a validated config. Panics if `cfg` carries a
+    /// zero/negative bandwidth or negative energy — rejecting at
+    /// construction beats a silent div-by-zero in `transfer_cycles`.
     pub fn new(cfg: InterconnectConfig, kind: LinkKind) -> Interconnect {
+        cfg.validate().expect("invalid InterconnectConfig");
         Interconnect {
             cfg,
             kind,
             records: Vec::new(),
             total_bits: 0,
             total_energy_j: 0.0,
+            retransmissions: 0,
+            retransmit_cycles: 0,
+            backoff_cycles: 0,
+            derated_transfers: 0,
         }
     }
 
@@ -97,6 +139,73 @@ impl Interconnect {
         self.total_bits += bits;
         self.total_energy_j += bits as f64 * self.j_per_bit();
         duration
+    }
+
+    /// Record one transfer inside a bandwidth-derate window (thermal
+    /// drift): the payload moves at `derate × bandwidth`. `derate = 1.0`
+    /// is byte-identical to [`Interconnect::transfer`] — the fault layer
+    /// is pay-for-use.
+    pub fn transfer_derated(
+        &mut self,
+        start_cycle: u64,
+        bits: u64,
+        src: u32,
+        dst: u32,
+        freq_hz: f64,
+        derate: f64,
+    ) -> u64 {
+        if derate >= 1.0 {
+            return self.transfer(start_cycle, bits, src, dst, freq_hz);
+        }
+        debug_assert!(derate > 0.0);
+        let seconds = bits as f64 / (self.bandwidth_bps() * derate);
+        let duration = ((seconds * freq_hz).ceil() as u64).max(1);
+        self.records.push(TransferRecord {
+            start_cycle,
+            duration_cycles: duration,
+            bits,
+            kind: self.kind,
+            src,
+            dst,
+        });
+        self.total_bits += bits;
+        self.total_energy_j += bits as f64 * self.j_per_bit();
+        self.derated_transfers += 1;
+        duration
+    }
+
+    /// Re-send a corrupted payload: wait out the capped exponential
+    /// backoff for `attempt` (1-based), then repeat the transfer (which
+    /// pays the full per-bit energy again — the retransmission energy the
+    /// fault layer charges to the owning job). Returns backoff + transfer
+    /// duration in cycles.
+    pub fn retransmit(
+        &mut self,
+        start_cycle: u64,
+        bits: u64,
+        src: u32,
+        dst: u32,
+        freq_hz: f64,
+        attempt: u32,
+        backoff_base_cycles: u64,
+    ) -> u64 {
+        let backoff = backoff_cycles(backoff_base_cycles, attempt);
+        let duration = self.transfer(start_cycle + backoff, bits, src, dst, freq_hz);
+        self.retransmissions += 1;
+        self.retransmit_cycles += duration;
+        self.backoff_cycles += backoff;
+        backoff + duration
+    }
+
+    /// Reliability counters for this link.
+    pub fn health(&self) -> LinkHealth {
+        LinkHealth {
+            transfers: self.records.len() as u64,
+            retransmissions: self.retransmissions,
+            retransmit_cycles: self.retransmit_cycles,
+            backoff_cycles: self.backoff_cycles,
+            derated_transfers: self.derated_transfers,
+        }
     }
 
     pub fn total_bits(&self) -> u64 {
@@ -220,5 +329,64 @@ mod tests {
         assert_eq!(bins.len(), 2);
         assert_eq!(bins[0], 64_000);
         assert_eq!(bins[1], 64_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid InterconnectConfig")]
+    fn zero_bandwidth_rejected_at_construction() {
+        let bad = InterconnectConfig {
+            optical_link_bps: 0.0,
+            ..InterconnectConfig::default()
+        };
+        Interconnect::new(bad, LinkKind::Optical);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff_cycles(64, 1), 64);
+        assert_eq!(backoff_cycles(64, 2), 128);
+        assert_eq!(backoff_cycles(64, 3), 256);
+        assert_eq!(backoff_cycles(64, 7), 64 * 64);
+        assert_eq!(backoff_cycles(64, 40), 64 * 64, "capped at 64x base");
+    }
+
+    #[test]
+    fn retransmit_accounts_health_and_energy() {
+        let mut o = Interconnect::new(cfg(), LinkKind::Optical);
+        o.transfer(0, 12800, 0, 1, 1e9);
+        let before = o.dynamic_energy_j();
+        let d = o.retransmit(100, 12800, 0, 1, 1e9, 1, 64);
+        assert_eq!(d, 64 + 100, "backoff + 100-cycle resend");
+        let h = o.health();
+        assert_eq!(h.transfers, 2);
+        assert_eq!(h.retransmissions, 1);
+        assert_eq!(h.retransmit_cycles, 100);
+        assert_eq!(h.backoff_cycles, 64);
+        assert!(h.degraded());
+        // the retransmission pays per-bit energy again
+        assert!((o.dynamic_energy_j() - 2.0 * before).abs() < 1e-18);
+    }
+
+    #[test]
+    fn derated_transfer_is_slower_and_counted() {
+        let mut o = Interconnect::new(cfg(), LinkKind::Optical);
+        let full = o.transfer(0, 12800, 0, 1, 1e9);
+        let half = o.transfer_derated(0, 12800, 0, 1, 1e9, 0.5);
+        assert_eq!(half, 2 * full, "half bandwidth, double duration");
+        assert_eq!(o.health().derated_transfers, 1);
+        // derate = 1.0 takes the plain-transfer path (pay-for-use)
+        let same = o.transfer_derated(0, 12800, 0, 1, 1e9, 1.0);
+        assert_eq!(same, full);
+        assert_eq!(o.health().derated_transfers, 1, "no derate counted");
+        assert_eq!(o.health().transfers, 3);
+    }
+
+    #[test]
+    fn clean_link_reports_healthy() {
+        let mut o = Interconnect::new(cfg(), LinkKind::Optical);
+        o.transfer(0, 128, 0, 1, 1e9);
+        let h = o.health();
+        assert!(!h.degraded());
+        assert_eq!(h, LinkHealth { transfers: 1, ..LinkHealth::default() });
     }
 }

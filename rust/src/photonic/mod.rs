@@ -11,5 +11,5 @@
 mod link;
 mod topology;
 
-pub use link::{Interconnect, LinkKind, TransferRecord};
+pub use link::{backoff_cycles, Interconnect, LinkHealth, LinkKind, TransferRecord};
 pub use topology::{OpticalTopology, TileId, DRAM_HUB};

@@ -1,0 +1,297 @@
+//! Deterministic fault injection (ARCHITECTURE.md §Fault tolerance):
+//! turns a [`FaultConfig`] into a replayable stream of fault events on
+//! the simulated cycle clock, the way `models::TrafficModel` turns a
+//! seed into a replayable arrival stream.
+//!
+//! Three channels, consumed by the serving coordinator:
+//!
+//! * **Transient link errors** — [`FaultModel::transfer_retries`] draws
+//!   how many times a chip-to-chip payload is corrupted (per-bit error
+//!   probability `link_ber`, geometric retry count capped at
+//!   `max_retries`). The coordinator re-sends each corrupted attempt
+//!   through `photonic::Interconnect::retransmit`, paying capped
+//!   exponential backoff plus the payload's transfer time and per-bit
+//!   energy again, charged to the owning job.
+//! * **Bandwidth derate windows** — [`FaultModel::derate_at`] is a pure
+//!   square wave on the cycle clock (thermal drift periodically derating
+//!   `bandwidth_bps`); it burns no random draws, so enabling it never
+//!   shifts the other channels' streams.
+//! * **Hard tile kills** — [`FaultModel::pop_kill_due`] surfaces
+//!   scheduled permanent tile deaths once the event loop's clock reaches
+//!   them; the coordinator remaps the affected stage spans and
+//!   retries/fails the in-flight jobs.
+//!
+//! Pay-for-use determinism: a disabled channel draws **nothing** from
+//! the PRNG, so a `FaultModel` with `link_ber = 0` and no kills leaves a
+//! run byte-identical to one with no fault model at all — CI gates on
+//! exactly that.
+//!
+//! ```
+//! use picnic::config::FaultConfig;
+//! use picnic::sim::FaultModel;
+//!
+//! let cfg = FaultConfig { enabled: true, link_ber: 1e-4, ..FaultConfig::default() };
+//! let mut a = FaultModel::new(&cfg, 1.0e9);
+//! let mut b = FaultModel::new(&cfg, 1.0e9);
+//! let draws_a: Vec<u32> = (0..64).map(|_| a.transfer_retries(65_536)).collect();
+//! let draws_b: Vec<u32> = (0..64).map(|_| b.transfer_retries(65_536)).collect();
+//! assert_eq!(draws_a, draws_b, "same seed, same fault stream");
+//!
+//! // a zero-BER model burns no draws at all
+//! let mut z = FaultModel::new(&FaultConfig { enabled: true, ..FaultConfig::default() }, 1.0e9);
+//! assert_eq!((0..1000).map(|_| z.transfer_retries(1 << 20)).sum::<u32>(), 0);
+//! ```
+
+use crate::config::FaultConfig;
+use crate::util::Rng;
+
+/// Counters over every fault the model injected.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Corrupted transfer attempts (each forces one retransmission).
+    pub transient_errors: u64,
+    /// Transfers that hit at least one corruption.
+    pub faulty_transfers: u64,
+    /// Tiles the model has killed so far.
+    pub tiles_killed: u64,
+}
+
+/// A seeded, byte-deterministic fault event source. See the module docs
+/// for the three channels and the pay-for-use contract.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    cfg: FaultConfig,
+    rng: Rng,
+    /// Scheduled kills as (cycle, tile), sorted — deterministic order
+    /// even when several tiles die in the same cycle.
+    kills: Vec<(u64, u32)>,
+    next_kill: usize,
+    pub stats: FaultStats,
+}
+
+impl FaultModel {
+    /// Build the model from a validated config; kill times convert from
+    /// seconds to cycles at `freq_hz`.
+    pub fn new(cfg: &FaultConfig, freq_hz: f64) -> FaultModel {
+        cfg.validate().expect("malformed FaultConfig");
+        assert!(freq_hz > 0.0 && freq_hz.is_finite());
+        let mut kills: Vec<(u64, u32)> = cfg
+            .kills
+            .iter()
+            .map(|k| ((k.at_s * freq_hz).round() as u64, k.tile))
+            .collect();
+        kills.sort_unstable();
+        FaultModel {
+            cfg: cfg.clone(),
+            rng: Rng::seed_from_u64(cfg.seed),
+            kills,
+            next_kill: 0,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// The config this model replays.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// How many times a `bits`-sized transfer is corrupted before it
+    /// lands (0 = clean first try), capped at `max_retries`. Burns no
+    /// PRNG draws when the transient channel is off (`link_ber = 0`).
+    pub fn transfer_retries(&mut self, bits: u64) -> u32 {
+        if !self.cfg.enabled || self.cfg.link_ber <= 0.0 {
+            return 0;
+        }
+        // P(transfer corrupted) = 1 - (1 - ber)^bits
+        let p_err = 1.0 - (bits as f64 * (1.0 - self.cfg.link_ber).ln()).exp();
+        let mut n = 0u32;
+        while n < self.cfg.max_retries && self.rng.f64() < p_err {
+            n += 1;
+        }
+        if n > 0 {
+            self.stats.transient_errors += n as u64;
+            self.stats.faulty_transfers += 1;
+        }
+        n
+    }
+
+    /// Bandwidth multiplier at `cycle`: `derate_factor` inside the
+    /// thermal-drift window, 1.0 outside. Pure — no randomness, so the
+    /// derate channel never perturbs the others' draw streams.
+    pub fn derate_at(&self, cycle: u64) -> f64 {
+        if !self.cfg.enabled
+            || self.cfg.derate_factor >= 1.0
+            || self.cfg.derate_period_cycles == 0
+        {
+            return 1.0;
+        }
+        let phase = cycle % self.cfg.derate_period_cycles;
+        let window = (self.cfg.derate_duty * self.cfg.derate_period_cycles as f64) as u64;
+        if phase < window {
+            self.cfg.derate_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// The cycle of the next scheduled kill still pending, if any.
+    pub fn next_kill_cycle(&self) -> Option<u64> {
+        self.kills.get(self.next_kill).map(|&(c, _)| c)
+    }
+
+    /// Pop the next scheduled kill whose cycle is `<= now` (call until
+    /// `None` — several tiles may die in one step).
+    pub fn pop_kill_due(&mut self, now: u64) -> Option<(u64, u32)> {
+        match self.kills.get(self.next_kill) {
+            Some(&(cycle, tile)) if cycle <= now => {
+                self.next_kill += 1;
+                self.stats.tiles_killed += 1;
+                Some((cycle, tile))
+            }
+            _ => None,
+        }
+    }
+
+    /// Bounded retry budget shared by retransmissions and job replays.
+    pub fn max_retries(&self) -> u32 {
+        self.cfg.max_retries
+    }
+
+    /// Base backoff for `photonic::backoff_cycles`.
+    pub fn backoff_base_cycles(&self) -> u64 {
+        self.cfg.backoff_base_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KillSpec;
+
+    fn cfg() -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_same_fault_stream() {
+        let c = FaultConfig {
+            link_ber: 1e-5,
+            ..cfg()
+        };
+        let mut a = FaultModel::new(&c, 1e9);
+        let mut b = FaultModel::new(&c, 1e9);
+        for _ in 0..512 {
+            assert_eq!(a.transfer_retries(100_000), b.transfer_retries(100_000));
+        }
+        assert_eq!(a.stats, b.stats);
+        let mut other = FaultModel::new(
+            &FaultConfig {
+                seed: 8,
+                link_ber: 1e-5,
+                ..cfg()
+            },
+            1e9,
+        );
+        let draws: Vec<u32> = (0..512).map(|_| other.transfer_retries(100_000)).collect();
+        let base: Vec<u32> = {
+            let mut m = FaultModel::new(&c, 1e9);
+            (0..512).map(|_| m.transfer_retries(100_000)).collect()
+        };
+        assert_ne!(draws, base, "different seed must differ");
+    }
+
+    #[test]
+    fn disabled_channels_burn_no_draws() {
+        // zero BER: the rng state never advances, so stats stay zero and
+        // any later channel would see the untouched stream
+        let mut m = FaultModel::new(&cfg(), 1e9);
+        for _ in 0..1000 {
+            assert_eq!(m.transfer_retries(1 << 30), 0);
+        }
+        assert_eq!(m.stats, FaultStats::default());
+        // disabled model: everything is a no-op
+        let mut off = FaultModel::new(&FaultConfig::default(), 1e9);
+        assert_eq!(off.transfer_retries(1 << 30), 0);
+        assert_eq!(off.derate_at(123), 1.0);
+        assert_eq!(off.pop_kill_due(u64::MAX), None);
+    }
+
+    #[test]
+    fn retries_bounded_and_grow_with_ber() {
+        let mut heavy = FaultModel::new(
+            &FaultConfig {
+                link_ber: 0.5,
+                max_retries: 3,
+                ..cfg()
+            },
+            1e9,
+        );
+        let mut light = FaultModel::new(
+            &FaultConfig {
+                link_ber: 1e-9,
+                max_retries: 3,
+                ..cfg()
+            },
+            1e9,
+        );
+        let (mut h, mut l) = (0u64, 0u64);
+        for _ in 0..2000 {
+            let r = heavy.transfer_retries(1 << 20);
+            assert!(r <= 3, "retry count respects max_retries");
+            h += r as u64;
+            l += light.transfer_retries(1 << 10) as u64;
+        }
+        assert!(h > l, "higher BER means more retries ({h} vs {l})");
+    }
+
+    #[test]
+    fn derate_square_wave() {
+        let m = FaultModel::new(
+            &FaultConfig {
+                derate_factor: 0.5,
+                derate_period_cycles: 1000,
+                derate_duty: 0.25,
+                ..cfg()
+            },
+            1e9,
+        );
+        assert_eq!(m.derate_at(0), 0.5, "window start is derated");
+        assert_eq!(m.derate_at(249), 0.5);
+        assert_eq!(m.derate_at(250), 1.0, "past the duty window");
+        assert_eq!(m.derate_at(999), 1.0);
+        assert_eq!(m.derate_at(1000), 0.5, "next period derates again");
+        // factor 1.0 disables the channel entirely
+        let off = FaultModel::new(
+            &FaultConfig {
+                derate_period_cycles: 1000,
+                ..cfg()
+            },
+            1e9,
+        );
+        assert_eq!(off.derate_at(0), 1.0);
+    }
+
+    #[test]
+    fn kills_surface_in_cycle_order() {
+        let m = FaultConfig {
+            kills: vec![
+                KillSpec { tile: 5, at_s: 2e-6 },
+                KillSpec { tile: 1, at_s: 1e-6 },
+                KillSpec { tile: 9, at_s: 1e-6 },
+            ],
+            ..cfg()
+        };
+        let mut f = FaultModel::new(&m, 1e9);
+        assert_eq!(f.next_kill_cycle(), Some(1000));
+        assert_eq!(f.pop_kill_due(999), None, "not due yet");
+        assert_eq!(f.pop_kill_due(1000), Some((1000, 1)));
+        assert_eq!(f.pop_kill_due(1000), Some((1000, 9)), "ties pop by tile id");
+        assert_eq!(f.pop_kill_due(1000), None);
+        assert_eq!(f.pop_kill_due(5000), Some((2000, 5)));
+        assert_eq!(f.next_kill_cycle(), None);
+        assert_eq!(f.stats.tiles_killed, 3);
+    }
+}

@@ -11,17 +11,22 @@
 //!   generic over, implemented by the analytic model and by
 //!   `EngineBackend`, a calibration-mode adapter that prices phases with
 //!   constants measured on the detailed engine;
+//! * [`faults`]   — seeded, byte-deterministic fault injection (link
+//!   bit errors, bandwidth derates, hard tile kills) for the serving
+//!   coordinator's graceful-degradation path;
 //! * [`trace`]    — time-binned C2C transfer traces (Fig 10);
 //! * [`stats`]    — run-level summary (tokens/s, W, tokens/J).
 
 pub mod analytic;
 pub mod backend;
 pub mod engine;
+pub mod faults;
 pub mod stats;
 pub mod trace;
 
 pub use analytic::{AnalyticSim, RunResult};
 pub use backend::{EngineBackend, MeasuredTiming, SimBackend};
 pub use engine::TileEngine;
+pub use faults::{FaultModel, FaultStats};
 pub use stats::RunStats;
 pub use trace::C2cTrace;

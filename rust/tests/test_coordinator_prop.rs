@@ -9,11 +9,10 @@
 //!    submitted request is served exactly once with consistent metrics;
 //!    decode-phase requests are not starved by prefill floods.
 
-#![allow(deprecated)] // exercises the pre-SubmitSpec submit API on purpose
-
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{
     serialized_workload_cycles, BatchPolicy, Batcher, Request, RequestState, Server, ServerConfig,
+    SubmitSpec,
 };
 use picnic::models::LlamaConfig;
 use picnic::sim::AnalyticSim;
@@ -126,7 +125,9 @@ fn prop_server_serves_everything_with_consistent_metrics() {
         for _ in 0..n {
             let gen = rng.range_usize(1, 8);
             expected_tokens += gen as u64;
-            server.submit(rng.range_usize(1, 64), gen).expect("submit");
+            server
+                .enqueue(SubmitSpec::new(rng.range_usize(1, 64), gen))
+                .expect("submit");
         }
         server.run_to_completion().expect("run");
         let m = &server.metrics;
@@ -150,7 +151,10 @@ fn prop_stage_intervals_never_overlap() {
         let n = rng.range_usize(1, 10);
         for _ in 0..n {
             server
-                .submit(rng.range_usize(1, 300), rng.range_usize(1, 6))
+                .enqueue(SubmitSpec::new(
+                    rng.range_usize(1, 300),
+                    rng.range_usize(1, 6),
+                ))
                 .expect("submit");
         }
         server.run_to_completion().expect("run");
@@ -189,7 +193,10 @@ fn prop_completions_monotone_per_request() {
         for _ in 0..n {
             ids.push(
                 server
-                    .submit(rng.range_usize(1, 300), rng.range_usize(1, 6))
+                    .enqueue(SubmitSpec::new(
+                        rng.range_usize(1, 300),
+                        rng.range_usize(1, 6),
+                    ))
                     .expect("submit"),
             );
         }
@@ -236,16 +243,16 @@ fn decode_not_starved_by_prefill_flood() {
     let freq = PicnicConfig::default().system.frequency_hz;
     // A: the request alone
     let mut alone = tiny_server(8, 1 << 20);
-    alone.submit(32, 4).unwrap();
+    alone.enqueue(SubmitSpec::new(32, 4)).unwrap();
     alone.run_to_completion().unwrap();
     let alone_cycles = alone.metrics.requests[0].total_s * freq;
 
     // B: same request, then 6 prefill arrivals flood the queue
     let mut srv = tiny_server(8, 1 << 20);
-    let first = srv.submit(32, 4).unwrap();
+    let first = srv.enqueue(SubmitSpec::new(32, 4)).unwrap();
     srv.step().unwrap(); // first chunk dispatched
     for _ in 0..6 {
-        srv.submit(32, 4).unwrap();
+        srv.enqueue(SubmitSpec::new(32, 4)).unwrap();
     }
     srv.run_to_completion().unwrap();
     let get = |id: u64| {

@@ -1,0 +1,238 @@
+//! Property tests on the fault-injection layer (hand-rolled
+//! quickcheck-style loops over a seeded PRNG — no proptest crate in the
+//! offline build).
+//!
+//! Invariants (ARCHITECTURE.md §Fault tolerance):
+//!  * conservation: under any mix of bit errors, derate windows and tile
+//!    kills, every enqueued request reaches exactly one terminal state —
+//!    `enqueued == completed + shed + failed` — no id appears in two
+//!    terminal records, and every tenant's KV reservations return to
+//!    zero at drain;
+//!  * dead tiles take no new work: any stage slot whose scheduling
+//!    dispatch happened at or after a kill runs on a surviving tile;
+//!  * determinism: same fault seed + same workload ⇒ byte-identical runs;
+//!  * pay-for-use: an *enabled* fault model with all channels zeroed is
+//!    byte-identical to a server with no fault model at all.
+
+use picnic::config::{FaultConfig, KillSpec, PicnicConfig};
+use picnic::coordinator::{BatchPolicy, Server, ServerConfig, SubmitSpec};
+use picnic::models::LlamaConfig;
+use picnic::util::Rng;
+
+fn build_server(faults: Option<FaultConfig>) -> Server {
+    let mut picnic = PicnicConfig::default();
+    if let Some(f) = faults {
+        picnic.faults = f;
+    }
+    Server::new(ServerConfig {
+        picnic,
+        model: LlamaConfig::tiny(),
+        policy: BatchPolicy {
+            max_batch: 4,
+            kv_budget: 4096,
+            ..BatchPolicy::default()
+        },
+    })
+}
+
+/// Submit `n` requests with shapes drawn from `rng` (same rng state ⇒
+/// same workload, so paired servers see identical streams).
+fn load(server: &mut Server, rng: &mut Rng, n: usize) {
+    for _ in 0..n {
+        let prompt = rng.range_usize(8, 64);
+        let gen = rng.range_usize(2, 10);
+        server
+            .enqueue(SubmitSpec::new(prompt, gen))
+            .expect("enqueue");
+    }
+}
+
+/// Everything observable that two byte-identical runs must agree on.
+fn fingerprint(s: &Server) -> (u64, u64, u64, Vec<(u64, u64, u64)>) {
+    let reqs = s
+        .metrics
+        .requests
+        .iter()
+        .map(|r| (r.id, r.ttft_s.to_bits(), r.total_s.to_bits()))
+        .collect();
+    (
+        s.now_cycle(),
+        s.horizon_cycle(),
+        s.ledger.total_j().to_bits(),
+        reqs,
+    )
+}
+
+#[test]
+fn prop_fault_storms_conserve_requests() {
+    let freq = PicnicConfig::default().system.frequency_hz;
+    let bers = [0.0, 1e-4, 1e-3];
+    for case in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(9000 + case);
+        let n = rng.range_usize(3, 10);
+
+        // A clean run with the same workload gives a horizon to place
+        // kills inside the busy window.
+        let mut clean = build_server(None);
+        load(&mut clean, &mut Rng::seed_from_u64(9000 + case), n);
+        clean.run_to_completion().expect("clean run");
+        let horizon = clean.horizon_cycle().max(4);
+
+        let n_kills = rng.range_usize(0, 3);
+        let kills = (0..n_kills)
+            .map(|_| KillSpec {
+                tile: rng.below(4) as u32,
+                at_s: (horizon * (1 + rng.below(3)) / 4) as f64 / freq,
+            })
+            .collect();
+        let faults = FaultConfig {
+            enabled: true,
+            seed: 100 + case,
+            link_ber: bers[rng.below(bers.len() as u64) as usize],
+            max_retries: 1 + rng.below(3) as u32,
+            kills,
+            ..FaultConfig::default()
+        };
+        let mut server = build_server(Some(faults));
+        load(&mut server, &mut Rng::seed_from_u64(9000 + case), n);
+        server.run_to_completion().expect("faulty run");
+
+        let m = &server.metrics;
+        assert_eq!(
+            m.requests.len() + m.shed_count() + m.failed_count(),
+            n,
+            "case {case}: every request must reach exactly one terminal state"
+        );
+        let mut ids: Vec<u64> = m
+            .requests
+            .iter()
+            .map(|r| r.id)
+            .chain(m.failed.iter().map(|f| f.id))
+            .collect();
+        ids.sort_unstable();
+        let before = ids.len();
+        ids.dedup();
+        assert_eq!(before, ids.len(), "case {case}: id in two terminal records");
+        for t in 0..server.n_tenants() {
+            assert_eq!(
+                server.tenant_reserved_kv(t),
+                0,
+                "case {case}: tenant {t} holds KV after drain"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dead_tiles_take_no_new_work() {
+    let freq = PicnicConfig::default().system.frequency_hz;
+    for case in 0..6u64 {
+        let mut rng = Rng::seed_from_u64(9500 + case);
+        let n = rng.range_usize(3, 8);
+
+        let mut clean = build_server(None);
+        clean.enable_stage_trace();
+        load(&mut clean, &mut Rng::seed_from_u64(9500 + case), n);
+        clean.run_to_completion().expect("clean run");
+        // Kill a tile the clean schedule actually used, mid-run.
+        let mut tiles: Vec<u32> = clean
+            .stage_trace()
+            .expect("trace")
+            .iter()
+            .map(|s| s.tile)
+            .collect();
+        tiles.sort_unstable();
+        tiles.dedup();
+        let victim = tiles[rng.below(tiles.len() as u64) as usize];
+        let kill_cycle = (clean.horizon_cycle() * (1 + rng.below(2)) / 3).max(1);
+
+        let faults = FaultConfig {
+            enabled: true,
+            seed: 200 + case,
+            kills: vec![KillSpec {
+                tile: victim,
+                at_s: kill_cycle as f64 / freq,
+            }],
+            ..FaultConfig::default()
+        };
+        let mut server = build_server(Some(faults));
+        server.enable_stage_trace();
+        load(&mut server, &mut Rng::seed_from_u64(9500 + case), n);
+        server.run_to_completion().expect("faulty run");
+
+        let m = &server.metrics;
+        assert_eq!(
+            m.requests.len() + m.shed_count() + m.failed_count(),
+            n,
+            "case {case}: conservation under a kill"
+        );
+        // Slots dispatched before the kill may legally extend past it on
+        // the then-live tile; work *scheduled* after it must avoid it.
+        for slot in server.stage_trace().expect("trace") {
+            if slot.dispatched >= kill_cycle {
+                assert_ne!(
+                    slot.tile, victim,
+                    "case {case}: dead tile {victim} scheduled at cycle {} \
+                     (killed at {kill_cycle})",
+                    slot.dispatched
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_same_seed_fault_runs_byte_identical() {
+    let freq = PicnicConfig::default().system.frequency_hz;
+    for case in 0..4u64 {
+        let run = |_: u32| {
+            let mut clean = build_server(None);
+            load(&mut clean, &mut Rng::seed_from_u64(9800 + case), 6);
+            clean.run_to_completion().expect("clean run");
+            let faults = FaultConfig {
+                enabled: true,
+                seed: 300 + case,
+                link_ber: 1e-3,
+                derate_factor: 0.5,
+                derate_period_cycles: 4096,
+                kills: vec![KillSpec {
+                    tile: 0,
+                    at_s: (clean.horizon_cycle() / 2) as f64 / freq,
+                }],
+                ..FaultConfig::default()
+            };
+            let mut server = build_server(Some(faults));
+            load(&mut server, &mut Rng::seed_from_u64(9800 + case), 6);
+            server.run_to_completion().expect("faulty run");
+            fingerprint(&server)
+        };
+        assert_eq!(run(0), run(1), "case {case}: same-seed runs diverged");
+    }
+}
+
+#[test]
+fn prop_zero_fault_model_identical_to_disabled() {
+    for case in 0..5u64 {
+        let mut plain = build_server(None);
+        load(&mut plain, &mut Rng::seed_from_u64(9900 + case), 6);
+        plain.run_to_completion().expect("plain run");
+
+        // Enabled fault layer, every channel zeroed: no bit errors, no
+        // derate windows, no kills. Must burn zero draws and zero cycles.
+        let faults = FaultConfig {
+            enabled: true,
+            seed: 400 + case,
+            ..FaultConfig::default()
+        };
+        let mut gated = build_server(Some(faults));
+        load(&mut gated, &mut Rng::seed_from_u64(9900 + case), 6);
+        gated.run_to_completion().expect("gated run");
+
+        assert_eq!(
+            fingerprint(&plain),
+            fingerprint(&gated),
+            "case {case}: zero-fault model not byte-identical to no model"
+        );
+        assert!(!gated.pipeline_stats().degraded, "case {case}");
+    }
+}
