@@ -31,7 +31,7 @@
 //! shed, or fails — and reports the degradation counters.
 //!
 //! Run: `cargo run --release --example llama_serve -- [--model 1b]
-//!       [--requests 64] [--backend analytic|engine]
+//!       [--requests 64] [--backend analytic|engine] [--threads N]
 //!       [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
 //!       [--tenants a:w=1:kv=8192:ttft=0.05,b:w=1]
 //!       [--open-loop rate=2000,shape=bursty,seed=7]
@@ -43,13 +43,14 @@ use picnic::models::{LlamaConfig, TrafficModel};
 use picnic::sim::{EngineBackend, SimBackend};
 use picnic::util::args::Args;
 use picnic::util::json::{self, Json};
-use picnic::util::Rng;
+use picnic::util::{Pool, Rng};
 
 fn main() -> picnic::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let model_name = args.opt_or("model", "1b");
     let n_requests = args.opt_usize("requests", 64)?;
     let backend_name = args.opt_or("backend", "analytic");
+    let threads = args.opt_usize("threads", 0)?;
     let as_json = args.flag("json");
     let traffic = match args.opt("open-loop") {
         Some(spec) => Some(TrafficModel::parse_cli(spec)?),
@@ -83,10 +84,12 @@ fn main() -> picnic::Result<()> {
             kv_budget: 64 * 1024,
             ..BatchPolicy::default()
         },
+        threads,
     };
     match backend_name.as_str() {
         "engine" => {
-            let backend = EngineBackend::calibrated(cfg.picnic.clone());
+            let backend =
+                EngineBackend::calibrated_with(cfg.picnic.clone(), Pool::new(cfg.threads));
             let s = Server::with_backend(cfg, backend);
             drive(s, n_requests, as_json, traffic, freq)
         }

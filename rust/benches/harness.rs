@@ -5,8 +5,10 @@
 //!
 //! Every `bench()` result is also recorded in-process; a bench binary can
 //! call [`write_json`] before exiting to dump a machine-readable
-//! `BENCH_<name>.json` report (name → mean/min/max seconds, iters) so the
-//! perf trajectory stays diffable across PRs (CI archives the artifact).
+//! `BENCH_<name>.json` report (name → mean/min/max seconds, iters, and —
+//! for benches declaring a work size via [`bench_elems`] — a derived
+//! `elems_per_sec` throughput) so the perf trajectory stays diffable
+//! across PRs (CI archives the artifact).
 
 // Included via `mod harness;` by every bench binary; not every bench uses
 // every helper, and the standalone compile-check target uses none of them.
@@ -24,6 +26,9 @@ struct Record {
     min_s: f64,
     max_s: f64,
     iters: usize,
+    /// Elements of work per iteration (0 = not declared; no throughput
+    /// row is derived).
+    elems: u64,
 }
 
 static RECORDS: Mutex<Vec<Record>> = Mutex::new(Vec::new());
@@ -31,7 +36,21 @@ static RECORDS: Mutex<Vec<Record>> = Mutex::new(Vec::new());
 /// Time `f` over `iters` iterations after `warmup` untimed ones; prints a
 /// criterion-style line, records the result for [`write_json`], and
 /// returns the mean seconds per iteration.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> f64 {
+    bench_elems(name, warmup, iters, 0, f)
+}
+
+/// [`bench`] with a declared per-iteration work size: `elems` is whatever
+/// unit makes the bench comparable across shapes (MAC slots, router-cycles,
+/// row elements). The JSON report derives `elems_per_sec = elems / mean_s`
+/// so throughput — not just latency — stays diffable across PRs.
+pub fn bench_elems<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    elems: u64,
+    mut f: F,
+) -> f64 {
     for _ in 0..warmup {
         f();
     }
@@ -58,6 +77,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f
         min_s: min,
         max_s: max,
         iters,
+        elems,
     });
     mean
 }
@@ -68,26 +88,35 @@ pub fn section(title: &str) {
 }
 
 /// Dump every recorded `bench()` result to `path` as JSON:
-/// `{"schema": 1, "benches": {name: {mean_s, min_s, max_s, iters}}}`.
-/// Called by a bench binary's `main` after its last bench.
+/// `{"schema": 2, "host_cpus": N, "benches": {name: {mean_s, min_s,
+/// max_s, iters[, elems, elems_per_sec]}}}`. `host_cpus` records the
+/// machine's available parallelism so downstream gates on parallel
+/// speedups can skip hosts too small to show one. Called by a bench
+/// binary's `main` after its last bench.
 pub fn write_json(path: &str) {
     let records = RECORDS.lock().unwrap();
     let benches: BTreeMap<String, Json> = records
         .iter()
         .map(|r| {
-            (
-                r.name.clone(),
-                json::obj(vec![
-                    ("mean_s", json::num(r.mean_s)),
-                    ("min_s", json::num(r.min_s)),
-                    ("max_s", json::num(r.max_s)),
-                    ("iters", json::num(r.iters as f64)),
-                ]),
-            )
+            let mut fields = vec![
+                ("mean_s", json::num(r.mean_s)),
+                ("min_s", json::num(r.min_s)),
+                ("max_s", json::num(r.max_s)),
+                ("iters", json::num(r.iters as f64)),
+            ];
+            if r.elems > 0 {
+                fields.push(("elems", json::num(r.elems as f64)));
+                // Floor the divisor: a sub-resolution mean would print as
+                // `inf`, which is not valid JSON.
+                fields.push(("elems_per_sec", json::num(r.elems as f64 / r.mean_s.max(1e-12))));
+            }
+            (r.name.clone(), json::obj(fields))
         })
         .collect();
+    let host_cpus = std::thread::available_parallelism().map_or(1, usize::from);
     let doc = json::obj(vec![
-        ("schema", json::num(1.0)),
+        ("schema", json::num(2.0)),
+        ("host_cpus", json::num(host_cpus as f64)),
         ("benches", Json::Obj(benches)),
     ]);
     std::fs::write(path, format!("{doc}\n")).expect("write bench report");

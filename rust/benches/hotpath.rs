@@ -1,5 +1,7 @@
 //! Bench: the L3 hot paths in isolation — detailed mesh cycle stepping,
-//! crossbar SMAC, SCU rows, plan building, and the analytic phase walker.
+//! crossbar SMAC, SCU rows, plan building, and the analytic phase walker —
+//! plus the deterministic parallel regions (multi-row SMAC, engine
+//! sweeps) at 1 vs 4 workers with byte-identity asserted between them.
 //! This is the profile target for the EXPERIMENTS.md §Perf iteration log
 //! (repo root); results are also dumped to `BENCH_hotpath.json` so every
 //! PR's numbers are machine-diffable (CI archives the file).
@@ -14,26 +16,32 @@ use picnic::models::LlamaConfig;
 use picnic::pe::{Crossbar, QuantSpec};
 use picnic::scu::Scu;
 use picnic::sim::{AnalyticSim, TileEngine};
-use picnic::util::Rng;
+use picnic::util::{Pool, Rng};
+
+/// Build the 16×16 pipeline engine used by the mesh benches.
+fn mesh16_engine() -> (TileEngine, picnic::isa::Program) {
+    let cfg = SystemConfig::tiny(16);
+    let mut eng = TileEngine::new(cfg, 128);
+    let mut asm = Assembler::new(16);
+    for r in 0..16 {
+        asm.pipeline_east(r, 1024);
+    }
+    let prog = asm.finish();
+    eng.load_program(&prog);
+    for r in 0..16 {
+        eng.mesh.inject(r * 16, picnic::isa::Port::West, 1.0);
+    }
+    (eng, prog)
+}
 
 fn main() {
     harness::section("L3 hot paths");
 
     // 1. Detailed mesh cycle stepping: 16×16 mesh, pipeline program.
     {
-        let cfg = SystemConfig::tiny(16);
-        let mut eng = TileEngine::new(cfg, 128);
-        let mut asm = Assembler::new(16);
-        for r in 0..16 {
-            asm.pipeline_east(r, 1024);
-        }
-        let prog = asm.finish();
-        eng.load_program(&prog);
-        for r in 0..16 {
-            eng.mesh.inject(r * 16, picnic::isa::Port::West, 1.0);
-        }
+        let (mut eng, prog) = mesh16_engine();
         let mut cycles_done = 0u64;
-        harness::bench("engine/mesh16_step_1k_cycles", 1, 10, || {
+        harness::bench_elems("engine/mesh16_step_1k_cycles", 1, 10, 1024 * 256, || {
             // re-load so every iteration does identical work
             eng.load_program(&prog);
             cycles_done += eng.run(1024);
@@ -53,7 +61,7 @@ fn main() {
         xb.calibrate(&cal);
         let x: Vec<f32> = (0..256).map(|_| rng.sym_f32(1.0)).collect();
         let mut y: Vec<f32> = Vec::with_capacity(256);
-        harness::bench("pe/smac_256x256", 10, 200, || {
+        harness::bench_elems("pe/smac_256x256", 10, 200, 256 * 256, || {
             xb.smac_into(&x, &mut y);
             assert_eq!(y.len(), 256);
         });
@@ -65,7 +73,7 @@ fn main() {
         let row: Vec<f32> = (0..2048).map(|_| rng.sym_f32(4.0)).collect();
         let mut scu = Scu::new();
         let mut out: Vec<f32> = Vec::with_capacity(2048);
-        harness::bench("scu/softmax_row_2048", 10, 200, || {
+        harness::bench_elems("scu/softmax_row_2048", 10, 200, 2048, || {
             scu.softmax_row_into(&row, &mut out);
             assert_eq!(out.len(), 2048);
         });
@@ -92,6 +100,68 @@ fn main() {
                 .run(&model, &picnic::models::Workload::new(512, 512))
                 .expect("run");
             assert!(r.stats.tokens_per_s > 0.0);
+        });
+    }
+
+    harness::section("parallel regions (1 vs 4 workers, byte-identical)");
+
+    // 6. Multi-row crossbar SMAC: 1024×2048 = 2M MAC slots — above the
+    //    PAR_MAC_MIN threshold, so the column-block parallel kernel
+    //    engages at >1 worker. The t1/t4 outputs are asserted
+    //    bit-identical before timing (the pool's determinism contract).
+    {
+        let (rows, cols) = (1024usize, 2048usize);
+        let mut rng = Rng::seed_from_u64(3);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.sym_f32(0.05)).collect();
+        let mut xb = Crossbar::program(&w, rows, cols, QuantSpec::default());
+        let cal: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..rows).map(|_| rng.sym_f32(1.0)).collect())
+            .collect();
+        xb.calibrate(&cal);
+        let x: Vec<f32> = (0..rows).map(|_| rng.sym_f32(1.0)).collect();
+        let (p1, p4) = (Pool::new(1), Pool::new(4));
+        let mut y1: Vec<f32> = Vec::with_capacity(cols);
+        let mut y4: Vec<f32> = Vec::with_capacity(cols);
+        xb.smac_into_with(p1, &x, &mut y1);
+        xb.smac_into_with(p4, &x, &mut y4);
+        assert!(
+            y1.iter().zip(y4.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "parallel SMAC must be byte-identical to sequential"
+        );
+        let elems = (rows * cols) as u64;
+        harness::bench_elems("pe/smac_1024x2048_t1", 3, 20, elems, || {
+            xb.smac_into_with(p1, &x, &mut y1);
+        });
+        harness::bench_elems("pe/smac_1024x2048_t4", 3, 20, elems, || {
+            xb.smac_into_with(p4, &x, &mut y4);
+        });
+    }
+
+    // 7. Engine sweep: 8 independent 16×16 engines, 256 cycles each —
+    //    the embarrassingly-parallel shape of the bench sweeps and
+    //    calibration probes. Per-point cycle counts are asserted equal
+    //    across pools (each engine itself runs sequentially; only the
+    //    sweep fans out).
+    {
+        let sweep = |pool: Pool| -> Vec<u64> {
+            pool.par_map_index(8, |_| {
+                let (eng, _) = mesh16_engine();
+                let mut eng = eng.with_pool(Pool::sequential());
+                eng.run(256)
+            })
+        };
+        let (p1, p4) = (Pool::new(1), Pool::new(4));
+        let c1 = sweep(p1);
+        let c4 = sweep(p4);
+        assert_eq!(c1, c4, "sweep cycle counts must be pool-invariant");
+        let elems = 8 * 256 * 256u64;
+        harness::bench_elems("engine/mesh16_sweep8_t1", 1, 10, elems, || {
+            let c = sweep(p1);
+            assert_eq!(c, c1);
+        });
+        harness::bench_elems("engine/mesh16_sweep8_t4", 1, 10, elems, || {
+            let c = sweep(p4);
+            assert_eq!(c, c4);
         });
     }
 

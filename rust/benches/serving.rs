@@ -26,6 +26,13 @@
 //! that p99 TTFT grows with offered load, and the faults-block probe
 //! verdicts plus storm conservation, then archives the file as the
 //! `BENCH_serving` artifact.
+//!
+//! Every sweep's points are independent simulations, so they fan out
+//! across a [`Pool`] sized by `PICNIC_THREADS` (wall-clock `bench` rows
+//! wrap each fan-out). The simulations themselves are seeded and
+//! single-threaded, and results are spliced back in fixed sweep order —
+//! `BENCH_serving.json` is **byte-identical at any thread count** (CI
+//! diffs a `PICNIC_THREADS=1` reference run against the parallel one).
 //! Run: `cargo bench --bench serving`
 
 mod harness;
@@ -40,6 +47,7 @@ use picnic::coordinator::{
 use picnic::models::{LlamaConfig, TrafficModel};
 use picnic::sim::AnalyticSim;
 use picnic::util::json::{self, Json};
+use picnic::util::Pool;
 
 const MODEL: &str = "1b";
 const PROMPT: usize = 256;
@@ -77,6 +85,7 @@ fn server(batch: usize) -> Server {
         picnic: PicnicConfig::default(),
         model: LlamaConfig::by_name(MODEL).expect("model"),
         policy: policy(batch),
+        threads: 0,
     })
 }
 
@@ -113,6 +122,7 @@ fn run_tenancy_once(n_tenants: usize, dedicated: bool) -> (Metrics, Vec<TenantSt
         picnic,
         model: LlamaConfig::by_name(MODEL).expect("model"),
         policy: policy(TENANT_REQUESTS),
+        threads: 0,
     });
     for i in 0..TENANT_REQUESTS {
         s.enqueue(SubmitSpec::new(PROMPT, GEN).tenant(i % n_tenants))
@@ -138,6 +148,7 @@ fn run_spec_once(batch: usize, acceptance: f64) -> (Metrics, PipelineStats) {
         picnic,
         model: LlamaConfig::by_name(MODEL).expect("model"),
         policy: policy(batch),
+        threads: 0,
     });
     for _ in 0..batch {
         s.enqueue(SubmitSpec::new(PROMPT, GEN)).expect("enqueue");
@@ -218,6 +229,7 @@ fn run_fault_closed(batch: usize, faults: FaultConfig) -> (Metrics, PipelineStat
         },
         model: LlamaConfig::by_name(MODEL).expect("model"),
         policy: policy(batch),
+        threads: 0,
     });
     for _ in 0..batch {
         s.enqueue(SubmitSpec::new(PROMPT, GEN)).expect("enqueue");
@@ -237,6 +249,7 @@ fn run_fault_open(ber: f64, rate_rps: f64, n: usize, freq: f64) -> (Metrics, Pip
         },
         model: LlamaConfig::by_name(MODEL).expect("model"),
         policy: policy(SPEC_BATCH),
+        threads: 0,
     });
     for (_, spec) in model.stream(freq).take(n) {
         s.enqueue(spec).expect("enqueue");
@@ -246,7 +259,9 @@ fn run_fault_open(ber: f64, rate_rps: f64, n: usize, freq: f64) -> (Metrics, Pip
 }
 
 fn main() {
+    let pool = Pool::from_env();
     harness::section("pipeline-parallel serving: throughput vs batch size");
+    println!("  sweep fan-out: {} worker(s)", pool.threads());
     let cfg = PicnicConfig::default();
     let model = LlamaConfig::by_name(MODEL).expect("model");
     let sim = AnalyticSim::new(cfg.clone());
@@ -254,14 +269,14 @@ fn main() {
     let chunk = BatchPolicy::default().prefill_chunk;
 
     let batches = [1usize, 2, 4, 8];
+    let mut batch_runs: Vec<Metrics> = Vec::new();
+    harness::bench("serve/batch_sweep_x4", 0, 1, || {
+        batch_runs = pool.par_map_index(batches.len(), |i| run_once(batches[i]));
+    });
     let mut points: Vec<Json> = Vec::new();
     let mut reference_tps = 0.0f64;
-    for &batch in &batches {
-        harness::bench(&format!("serve/{MODEL}_batch{batch}"), 1, 3, || {
-            let m = run_once(batch);
-            assert_eq!(m.requests.len(), batch);
-        });
-        let m = run_once(batch);
+    for (&batch, m) in batches.iter().zip(batch_runs.iter()) {
+        assert_eq!(m.requests.len(), batch);
 
         // serialized PR-2 reference: the same jobs, each monopolizing the
         // whole fabric back to back
@@ -297,9 +312,12 @@ fn main() {
          (non-speculative reference: {reference_tps:.1} tokens/s)"
     );
     let accepts = [0.0f64, 0.25, 0.5, 0.75, 1.0];
+    let mut spec_runs: Vec<(Metrics, PipelineStats)> = Vec::new();
+    harness::bench("serve/spec_sweep_x5", 0, 1, || {
+        spec_runs = pool.par_map_index(accepts.len(), |i| run_spec_once(SPEC_BATCH, accepts[i]));
+    });
     let mut spec_points: Vec<Json> = Vec::new();
-    for &acceptance in &accepts {
-        let (m, p) = run_spec_once(SPEC_BATCH, acceptance);
+    for (&acceptance, (m, p)) in accepts.iter().zip(spec_runs.iter()) {
         let ttft = m.summary(LatencyKind::Ttft);
         let total = m.summary(LatencyKind::Total);
         println!(
@@ -326,10 +344,23 @@ fn main() {
 
     harness::section("multi-tenant sharding: tenants × span mode (symmetric workload)");
     println!("  {TENANT_REQUESTS} identical requests round-robined across equal-weight tenants");
+    let tenancy_combos: Vec<(usize, bool)> = [1usize, 2, 4]
+        .iter()
+        .flat_map(|&n| [(n, false), (n, true)])
+        .collect();
+    let mut tenancy_runs: Vec<(Metrics, Vec<TenantStats>, f64)> = Vec::new();
+    harness::bench("serve/tenancy_sweep_x6", 0, 1, || {
+        tenancy_runs = pool.par_map_index(tenancy_combos.len(), |i| {
+            let (n_tenants, dedicated) = tenancy_combos[i];
+            run_tenancy_once(n_tenants, dedicated)
+        });
+    });
     let mut tenancy_points: Vec<Json> = Vec::new();
-    for &n_tenants in &[1usize, 2, 4] {
-        for &dedicated in &[false, true] {
-            let (m, stats, jain) = run_tenancy_once(n_tenants, dedicated);
+    {
+        for (&(n_tenants, dedicated), (m, stats, jain)) in
+            tenancy_combos.iter().zip(tenancy_runs.iter())
+        {
+            let jain = *jain;
             let mode = if dedicated { "dedicated" } else { "shared" };
             println!(
                 "  {n_tenants} tenant(s) {mode:<9}: {:>8.1} tokens/s aggregate   jain {jain:.4}   \
@@ -370,7 +401,13 @@ fn main() {
     }
 
     harness::section("open-loop traffic: latency tails vs offered load");
-    let closed = run_once(SPEC_BATCH);
+    // The closed-loop reference is the batch sweep's SPEC_BATCH row —
+    // already computed above, no re-run.
+    let closed_idx = batches
+        .iter()
+        .position(|&b| b == SPEC_BATCH)
+        .expect("batch sweep covers SPEC_BATCH");
+    let closed = batch_runs[closed_idx].clone();
     let parity = run_open_parity(SPEC_BATCH);
     let parity_ratio =
         parity.throughput_tokens_per_s() / closed.throughput_tokens_per_s().max(1e-12);
@@ -385,11 +422,23 @@ fn main() {
         "  capacity ({OPEN_CAPACITY_REQUESTS} chat-mixture requests at cycle 0): \
          {capacity_tps:.1} tokens/s, mean generation {mean_gen:.1} tokens"
     );
-    let mut open_points: Vec<Json> = Vec::new();
-    for shape in ["poisson", "bursty"] {
-        for &utilization in &[0.3f64, 0.6, 0.9] {
+    let open_combos: Vec<(&str, f64)> = ["poisson", "bursty"]
+        .iter()
+        .flat_map(|&shape| [0.3f64, 0.6, 0.9].map(|u| (shape, u)))
+        .collect();
+    let mut open_runs: Vec<(Metrics, f64)> = Vec::new();
+    harness::bench("serve/open_loop_sweep_x6", 0, 1, || {
+        open_runs = pool.par_map_index(open_combos.len(), |i| {
+            let (shape, utilization) = open_combos[i];
             let rate_rps = utilization * capacity_tps / mean_gen;
-            let (m, offered_tps) = run_open_loop(shape, rate_rps, OPEN_SWEEP_REQUESTS, freq);
+            run_open_loop(shape, rate_rps, OPEN_SWEEP_REQUESTS, freq)
+        });
+    });
+    let mut open_points: Vec<Json> = Vec::new();
+    {
+        for (&(shape, utilization), (m, offered_tps)) in open_combos.iter().zip(open_runs.iter()) {
+            let offered_tps = *offered_tps;
+            let rate_rps = utilization * capacity_tps / mean_gen;
             let ttft = m.summary(LatencyKind::Ttft);
             let tpot = m.summary(LatencyKind::PerToken);
             let total = m.summary(LatencyKind::Total);
@@ -419,26 +468,14 @@ fn main() {
     }
 
     harness::section("fault injection: degradation vs bit-error rate × offered load");
-    // Probe 1 — pay-for-use identity: an *enabled* fault model with every
-    // channel zeroed must reproduce the no-faults baseline bit for bit.
-    let (ident_m, ident_p) = run_fault_closed(SPEC_BATCH, fault_cfg(0.0, Vec::new()));
-    let identity_ok = ident_m.total_tokens == closed.total_tokens
-        && ident_m.wall_s.to_bits() == closed.wall_s.to_bits()
-        && !ident_p.degraded;
-    assert!(
-        identity_ok,
-        "zero-fault run must be byte-identical to the no-faults baseline"
-    );
-    // Probe 2 — determinism: same fault seed, same workload, same run.
-    let (det_a, _) = run_fault_closed(SPEC_BATCH, fault_cfg(1e-4, Vec::new()));
-    let (det_b, _) = run_fault_closed(SPEC_BATCH, fault_cfg(1e-4, Vec::new()));
-    let determinism_ok = det_a.wall_s.to_bits() == det_b.wall_s.to_bits()
-        && det_a.total_tokens == det_b.total_tokens
-        && det_a.failed_count() == det_b.failed_count();
-    assert!(determinism_ok, "same-seed fault runs must be byte-identical");
-    // Probe 3 — tile-kill storm: a fan of hard failures mid-run with a
-    // minimal retry budget. The gate is termination with full accounting,
-    // not survival.
+    // Four independent probes, fanned out together:
+    //   0 — pay-for-use identity: an *enabled* fault model with every
+    //       channel zeroed must reproduce the no-faults baseline bit for
+    //       bit;
+    //   1, 2 — determinism: same fault seed, same workload, same run;
+    //   3 — tile-kill storm: a fan of hard failures mid-run with a
+    //       minimal retry budget (the gate is termination with full
+    //       accounting, not survival).
     let storm_cfg = FaultConfig {
         enabled: true,
         seed: FAULT_SEED,
@@ -451,7 +488,28 @@ fn main() {
             .collect(),
         ..FaultConfig::default()
     };
-    let (storm_m, storm_p) = run_fault_closed(SPEC_BATCH, storm_cfg);
+    let mut probe_runs: Vec<(Metrics, PipelineStats)> = Vec::new();
+    harness::bench("serve/fault_probes_x4", 0, 1, || {
+        probe_runs = pool.par_map_index(4, |i| match i {
+            0 => run_fault_closed(SPEC_BATCH, fault_cfg(0.0, Vec::new())),
+            1 | 2 => run_fault_closed(SPEC_BATCH, fault_cfg(1e-4, Vec::new())),
+            _ => run_fault_closed(SPEC_BATCH, storm_cfg.clone()),
+        });
+    });
+    let (ident_m, ident_p) = (&probe_runs[0].0, &probe_runs[0].1);
+    let identity_ok = ident_m.total_tokens == closed.total_tokens
+        && ident_m.wall_s.to_bits() == closed.wall_s.to_bits()
+        && !ident_p.degraded;
+    assert!(
+        identity_ok,
+        "zero-fault run must be byte-identical to the no-faults baseline"
+    );
+    let (det_a, det_b) = (&probe_runs[1].0, &probe_runs[2].0);
+    let determinism_ok = det_a.wall_s.to_bits() == det_b.wall_s.to_bits()
+        && det_a.total_tokens == det_b.total_tokens
+        && det_a.failed_count() == det_b.failed_count();
+    assert!(determinism_ok, "same-seed fault runs must be byte-identical");
+    let (storm_m, storm_p) = (&probe_runs[3].0, &probe_runs[3].1);
     let storm_conserved =
         storm_m.requests.len() + storm_m.shed_count() + storm_m.failed_count() == SPEC_BATCH;
     assert!(storm_conserved, "fault storm must account for every request");
@@ -464,11 +522,22 @@ fn main() {
         storm_p.dead_tiles,
         storm_p.job_replays,
     );
-    let mut fault_points: Vec<Json> = Vec::new();
-    for &ber in &[1e-6f64, 1e-4] {
-        for &utilization in &[0.3f64, 0.9] {
+    let fault_combos: Vec<(f64, f64)> = [1e-6f64, 1e-4]
+        .iter()
+        .flat_map(|&ber| [0.3f64, 0.9].map(|u| (ber, u)))
+        .collect();
+    let mut fault_runs: Vec<(Metrics, PipelineStats)> = Vec::new();
+    harness::bench("serve/fault_sweep_x4", 0, 1, || {
+        fault_runs = pool.par_map_index(fault_combos.len(), |i| {
+            let (ber, utilization) = fault_combos[i];
             let rate_rps = utilization * capacity_tps / mean_gen;
-            let (m, p) = run_fault_open(ber, rate_rps, FAULT_SWEEP_REQUESTS, freq);
+            run_fault_open(ber, rate_rps, FAULT_SWEEP_REQUESTS, freq)
+        });
+    });
+    let mut fault_points: Vec<Json> = Vec::new();
+    {
+        for (&(ber, utilization), (m, p)) in fault_combos.iter().zip(fault_runs.iter()) {
+            let rate_rps = utilization * capacity_tps / mean_gen;
             assert_eq!(
                 m.requests.len() + m.shed_count() + m.failed_count(),
                 FAULT_SWEEP_REQUESTS,

@@ -109,6 +109,12 @@ pub struct ServerConfig {
     pub picnic: PicnicConfig,
     pub model: LlamaConfig,
     pub policy: BatchPolicy,
+    /// Worker threads for the deterministic parallel regions
+    /// ([`crate::util::Pool`]); `0` = auto (the `PICNIC_THREADS`
+    /// environment variable, then the host's available parallelism).
+    /// Results are byte-identical at any setting — this is a speed knob,
+    /// never a semantics knob.
+    pub threads: usize,
 }
 
 impl ServerConfig {
@@ -1689,6 +1695,7 @@ mod tests {
             picnic: PicnicConfig::default(),
             model: LlamaConfig::tiny(),
             policy: BatchPolicy::default(),
+            threads: 0,
         })
     }
 
@@ -1804,6 +1811,7 @@ mod tests {
             picnic,
             model: LlamaConfig::tiny(),
             policy: BatchPolicy::default(),
+            threads: 0,
         })
     }
 
@@ -1872,6 +1880,7 @@ mod tests {
             picnic,
             model: LlamaConfig::tiny(),
             policy: BatchPolicy::default(),
+            threads: 0,
         })
     }
 
@@ -1986,6 +1995,7 @@ mod tests {
             picnic,
             model: LlamaConfig::tiny(),
             policy: BatchPolicy::default(),
+            threads: 0,
         })
     }
 
@@ -2001,6 +2011,7 @@ mod tests {
             picnic: PicnicConfig::default(),
             model: LlamaConfig::tiny(),
             policy: BatchPolicy::default(),
+            threads: 0,
         };
         assert!(base().validate().is_ok());
         let mut c = base();
@@ -2028,6 +2039,7 @@ mod tests {
             picnic: PicnicConfig::default(),
             model: LlamaConfig::tiny(),
             policy: BatchPolicy::default(),
+            threads: 0,
         };
         cfg.policy.max_batch = 0;
         let _ = Server::new(cfg);

@@ -16,6 +16,14 @@ use super::router::{OutputIntent, Router};
 use super::Word;
 use crate::config::SystemConfig;
 use crate::isa::{Instruction, Port};
+use crate::util::pool::{self, Pool};
+
+/// Router count below which [`Mesh::step_into_with`] keeps phase 1
+/// sequential: one mesh cycle on a 16×16 mesh (256 routers) runs in ~10 µs,
+/// well under scoped-thread spawn cost, so per-cycle parallelism only pays
+/// off on meshes far larger than any default config. Tests lower it via
+/// [`Mesh::set_par_router_min`] to force the parallel path.
+const PAR_ROUTER_MIN: usize = 1024;
 
 /// Words that crossed a die or chip boundary this cycle, tagged by router.
 /// Reused across cycles via [`BoundaryTraffic::clear`] so steady-state
@@ -48,6 +56,48 @@ pub struct MeshStats {
     pub active_router_cycles: u64,
 }
 
+/// Per-worker phase-1 scratch: one contiguous router block's intents and
+/// span offsets, spliced into the mesh-level arena in router order after
+/// the fork-join. Mesh-owned so the parallel path reuses capacity across
+/// cycles instead of allocating per step.
+#[derive(Debug, Default)]
+struct WorkerSeg {
+    arena: Vec<OutputIntent>,
+    spans: Vec<u32>,
+    active: u64,
+}
+
+impl WorkerSeg {
+    /// Phase 1 for one contiguous router block, into this segment.
+    fn run(&mut self, routers: &mut [Router], instrs: &[Instruction]) {
+        self.arena.clear();
+        self.spans.clear();
+        self.active = compute_and_drain(routers, instrs, &mut self.arena, &mut self.spans);
+    }
+}
+
+/// Phase 1 over a router slice: compute each router's instruction against
+/// its current FIFOs and drain its output intents, recording span end
+/// offsets per router. Routers only touch their own state in phase 1 (that
+/// is what the two-phase split is for), so disjoint slices can run
+/// concurrently and produce the same bytes as one sequential walk.
+fn compute_and_drain(
+    routers: &mut [Router],
+    instrs: &[Instruction],
+    arena: &mut Vec<OutputIntent>,
+    spans: &mut Vec<u32>,
+) -> u64 {
+    let mut active = 0u64;
+    for (r, &instr) in routers.iter_mut().zip(instrs.iter()) {
+        if r.compute(instr) {
+            active += 1;
+        }
+        r.drain_intents_into(arena);
+        spans.push(arena.len() as u32);
+    }
+    active
+}
+
 /// The 2D mesh.
 pub struct Mesh {
     dim: usize,
@@ -63,6 +113,11 @@ pub struct Mesh {
     /// Arena span end offsets: router `i` produced
     /// `arena[spans[i-1]..spans[i]]` this cycle.
     spans: Vec<u32>,
+    /// Per-worker phase-1 segments for the parallel path (empty until the
+    /// parallel path first runs).
+    segs: Vec<WorkerSeg>,
+    /// Router count at which phase 1 goes parallel (see [`PAR_ROUTER_MIN`]).
+    par_router_min: usize,
     pub stats: MeshStats,
 }
 
@@ -103,8 +158,17 @@ impl Mesh {
             nbr,
             arena: Vec::with_capacity(2 * n),
             spans: Vec::with_capacity(n),
+            segs: Vec::new(),
+            par_router_min: PAR_ROUTER_MIN,
             stats: MeshStats::default(),
         }
+    }
+
+    /// Lower (or raise) the parallel-phase-1 threshold. Intended for tests
+    /// and benches that want to force the fork-join path on a small mesh;
+    /// the default ([`PAR_ROUTER_MIN`]) keeps every stock config sequential.
+    pub fn set_par_router_min(&mut self, min: usize) {
+        self.par_router_min = min.max(1);
     }
 
     pub fn dim(&self) -> usize {
@@ -157,17 +221,71 @@ impl Mesh {
     /// writing the boundary traffic into a caller-owned (reusable) buffer.
     /// `boundary` is cleared first; steady-state stepping allocates nothing.
     pub fn step_into(&mut self, instrs: &[Instruction], boundary: &mut BoundaryTraffic) {
+        self.step_into_with(pool::global(), instrs, boundary);
+    }
+
+    /// [`Mesh::step_into`] with an explicit worker [`Pool`].
+    ///
+    /// On a 1-thread pool, or below the `par_router_min` router threshold,
+    /// this is the sequential two-phase step unchanged (and allocates
+    /// nothing in steady state). Otherwise phase 1 forks: contiguous
+    /// router blocks compute and drain concurrently into per-worker
+    /// [`WorkerSeg`] arenas — legal because phase-1 routers touch only
+    /// their own state — and the segments are spliced back in router
+    /// order, so the arena/span layout phase 2 walks is byte-identical to
+    /// the sequential one. Phase 2 (delivery, with backpressure and
+    /// boundary pushes) stays sequential: it mutates neighbour FIFOs and
+    /// shared stats, and FIFO-full arbitration must stay in router order.
+    pub fn step_into_with(
+        &mut self,
+        pool: Pool,
+        instrs: &[Instruction],
+        boundary: &mut BoundaryTraffic,
+    ) {
         assert_eq!(instrs.len(), self.routers.len(), "instruction slice width");
         boundary.clear();
         // Phase 1: compute; drain every router's intents into the arena.
         self.arena.clear();
         self.spans.clear();
-        for (i, r) in self.routers.iter_mut().enumerate() {
-            if r.compute(instrs[i]) {
-                self.stats.active_router_cycles += 1;
+        let n = self.routers.len();
+        if pool.threads() == 1 || n < self.par_router_min {
+            self.stats.active_router_cycles +=
+                compute_and_drain(&mut self.routers, instrs, &mut self.arena, &mut self.spans);
+        } else {
+            let block = n.div_ceil(pool.threads().min(n));
+            let n_blocks = n.div_ceil(block);
+            if self.segs.len() < n_blocks {
+                self.segs.resize_with(n_blocks, WorkerSeg::default);
             }
-            r.drain_intents_into(&mut self.arena);
-            self.spans.push(self.arena.len() as u32);
+            std::thread::scope(|s| {
+                let mut own: Option<(&mut [Router], &[Instruction], &mut WorkerSeg)> = None;
+                for ((rs, is), seg) in self
+                    .routers
+                    .chunks_mut(block)
+                    .zip(instrs.chunks(block))
+                    .zip(self.segs[..n_blocks].iter_mut())
+                {
+                    match own {
+                        // First block runs on the calling thread…
+                        None => own = Some((rs, is, seg)),
+                        // …the rest on scoped workers.
+                        Some(_) => {
+                            s.spawn(move || seg.run(rs, is));
+                        }
+                    }
+                }
+                let (rs, is, seg) = own.expect("mesh has at least one router block");
+                seg.run(rs, is);
+            });
+            // Splice the segments in router (block) order: offsets shift
+            // by the arena base, totals sum — the result is exactly the
+            // sequential walk's layout.
+            for seg in &self.segs[..n_blocks] {
+                let base = self.arena.len() as u32;
+                self.arena.extend_from_slice(&seg.arena);
+                self.spans.extend(seg.spans.iter().map(|&e| base + e));
+                self.stats.active_router_cycles += seg.active;
+            }
         }
         // Phase 2: deliver.
         let mut start = 0usize;
@@ -205,6 +323,10 @@ impl Mesh {
 
     /// Convenience wrapper over [`Mesh::step_into`] that returns a fresh
     /// [`BoundaryTraffic`] (allocates; hot callers hold their own buffer).
+    #[deprecated(
+        note = "allocates a BoundaryTraffic per cycle — use Mesh::step_into \
+                (or step_into_with) with a caller-owned reusable buffer"
+    )]
     pub fn step(&mut self, instrs: &[Instruction]) -> BoundaryTraffic {
         let mut boundary = BoundaryTraffic::default();
         self.step_into(instrs, &mut boundary);
@@ -247,6 +369,13 @@ mod tests {
         vec![Instruction::IDLE; n]
     }
 
+    /// Test-local convenience: step via the non-deprecated `step_into`.
+    fn step(m: &mut Mesh, instrs: &[Instruction]) -> BoundaryTraffic {
+        let mut b = BoundaryTraffic::default();
+        m.step_into(instrs, &mut b);
+        b
+    }
+
     #[test]
     fn word_crosses_mesh_west_to_east() {
         let mut m = mesh4();
@@ -259,7 +388,7 @@ mod tests {
         // 4 cycles to traverse 4 routers; the last hop exits the tile east.
         let mut exited = Vec::new();
         for _ in 0..4 {
-            let b = m.step(&slice);
+            let b = step(&mut m, &slice);
             exited.extend(b.to_optical);
         }
         assert_eq!(exited, vec![(3usize, 42.0)], "word egressed at (0,3)");
@@ -291,7 +420,7 @@ mod tests {
         m.inject(centre, Port::Pe, 7.0);
         let mut slice = idle_slice(16);
         slice[centre] = Instruction::new(PortSet::single(Port::Pe), Mode::Route, PortSet::ALL);
-        let b = m.step(&slice);
+        let b = step(&mut m, &slice);
         // 4 planar neighbours received the word…
         assert_eq!(m.stats.words_delivered, 4);
         // …plus PE, SCU (up), optical (down) boundary crossings.
@@ -318,7 +447,7 @@ mod tests {
         m.inject(0, Port::West, 99.0);
         let mut slice = idle_slice(16);
         slice[0] = route(Port::West, Port::East);
-        m.step(&slice);
+        step(&mut m, &slice);
         assert_eq!(m.stats.deliveries_blocked, 1);
         assert_eq!(m.stats.words_delivered, 0);
     }
@@ -329,8 +458,71 @@ mod tests {
         m.inject(5, Port::West, 1.5);
         let mut slice = idle_slice(16);
         slice[5] = Instruction::new(PortSet::single(Port::West), Mode::PeTrigger, PortSet::EMPTY);
-        let b = m.step(&slice);
+        let b = step(&mut m, &slice);
         assert_eq!(b.to_pe, vec![(5, 1.5)]);
+    }
+
+    #[test]
+    fn parallel_phase1_is_byte_identical_to_sequential() {
+        // Two identical meshes under the same rolling traffic: one steps
+        // sequentially, the other with the threshold forced down so the
+        // 16-router mesh actually forks phase 1 across 8 workers. Every
+        // cycle's boundary traffic and the final stats must match exactly.
+        let build = || {
+            let mut m = mesh4();
+            for i in 0..16 {
+                m.inject(i, Port::West, (i as f64) + 0.5);
+                m.inject(i, Port::North, (i as f64) - 0.25);
+            }
+            m
+        };
+        let mut seq = build();
+        let mut par = build();
+        par.set_par_router_min(1);
+        let mut slice = idle_slice(16);
+        for (i, slot) in slice.iter_mut().enumerate() {
+            *slot = if i % 3 == 0 {
+                route(Port::West, Port::East)
+            } else if i % 3 == 1 {
+                route(Port::North, Port::South)
+            } else {
+                Instruction::new(PortSet::single(Port::West), Mode::Route, PortSet::ALL)
+            };
+        }
+        let pool = Pool::new(8);
+        let (mut bs, mut bp) = (BoundaryTraffic::default(), BoundaryTraffic::default());
+        for cycle in 0..12 {
+            seq.step_into_with(Pool::sequential(), &slice, &mut bs);
+            par.step_into_with(pool, &slice, &mut bp);
+            assert_eq!(bs.to_pe, bp.to_pe, "cycle {cycle} to_pe");
+            assert_eq!(bs.to_scu, bp.to_scu, "cycle {cycle} to_scu");
+            assert_eq!(bs.to_optical, bp.to_optical, "cycle {cycle} to_optical");
+        }
+        assert_eq!(seq.stats, par.stats);
+        for i in 0..16 {
+            for p in [Port::North, Port::East, Port::South, Port::West] {
+                assert_eq!(
+                    seq.router(i).fifo(p).len(),
+                    par.router(i).fifo(p).len(),
+                    "router {i} {p} fifo depth"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_step_wrapper_matches_step_into() {
+        let mut a = mesh4();
+        let mut b = mesh4();
+        a.inject(0, Port::West, 3.5);
+        b.inject(0, Port::West, 3.5);
+        let mut slice = idle_slice(16);
+        slice[0] = route(Port::West, Port::East);
+        let wa = a.step(&slice);
+        let wb = step(&mut b, &slice);
+        assert_eq!(wa.to_optical, wb.to_optical);
+        assert_eq!(a.stats, b.stats);
     }
 
     #[test]
@@ -339,7 +531,7 @@ mod tests {
         m.inject(0, Port::West, 1.0);
         let mut slice = idle_slice(16);
         slice[0] = route(Port::West, Port::East);
-        m.step(&slice);
+        step(&mut m, &slice);
         let s = m.total_router_stats();
         assert_eq!(s.words_routed, 1);
         assert_eq!(s.active_cycles, 1);

@@ -21,6 +21,7 @@ use picnic::models::{LlamaConfig, TrafficModel, Workload};
 use picnic::report;
 use picnic::sim::{AnalyticSim, EngineBackend, SimBackend};
 use picnic::util::args::Args;
+use picnic::util::Pool;
 use picnic::util::json;
 
 const USAGE: &str = "\
@@ -31,6 +32,7 @@ USAGE:
   picnic report <table2|table3|table4|fig8|fig9|fig10|all>
   picnic verify [--artifacts DIR]
   picnic serve  [--model NAME] [--requests N] [--prompt-len N] [--gen-len N] [--backend analytic|engine]
+                [--threads N]
                 [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
                 [--tenants a:w=2:kv=8192,b:w=1[:dedicated]]
                 [--open-loop [rate=2000,shape=poisson|bursty,seed=7]]
@@ -69,6 +71,11 @@ re-pay per-bit energy), bandwidth-derate windows (`derate` factor,
 remaps stage pipelines around dead tiles, replays lost in-flight work up
 to `retries` times, and fails requests past the budget (reported apart
 from shedding). Same `seed` → byte-identical run.
+
+`--threads N` sizes the worker pool for the deterministic parallel
+regions (engine-backend calibration probes, large MACs). 0 = auto:
+the PICNIC_THREADS environment variable, then the host's available
+parallelism. Results are byte-identical at any thread count.
 ";
 
 fn main() {
@@ -193,6 +200,7 @@ fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
     let prompt_len = args.opt_usize("prompt-len", 64)?;
     let gen_len = args.opt_usize("gen-len", 16)?;
     let backend = args.opt_or("backend", "analytic");
+    let threads = args.opt_usize("threads", 0)?;
     let traffic = match args.opt("open-loop") {
         Some(spec) => Some(TrafficModel::parse_cli(spec)?),
         None if args.flag("open-loop") => Some(TrafficModel::parse_cli("")?),
@@ -203,10 +211,14 @@ fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
         picnic: cfg,
         model: m,
         policy: BatchPolicy::default(),
+        threads,
     };
     match backend.as_str() {
         "engine" => {
-            let b = EngineBackend::calibrated(server_cfg.picnic.clone());
+            let b = EngineBackend::calibrated_with(
+                server_cfg.picnic.clone(),
+                Pool::new(server_cfg.threads),
+            );
             let s = Server::with_backend(server_cfg, b);
             drive_serve(s, requests, prompt_len, gen_len, traffic, freq)
         }

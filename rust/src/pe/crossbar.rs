@@ -6,6 +6,12 @@
 use super::adc::Adc;
 use super::calibration::Calibration;
 use super::rram::RramArray;
+use crate::util::pool::{self, Pool};
+
+/// Input length below which `quantize_into_with` stays sequential — the
+/// maxabs scan + code write on a few thousand elements is far cheaper
+/// than a scoped-thread spawn.
+const PAR_QUANT_MIN: usize = 1 << 15;
 
 /// Quantization parameters for one programmed crossbar.
 #[derive(Debug, Clone)]
@@ -53,6 +59,39 @@ fn quantize_into(x_bits: u32, x: &[f32], codes: &mut Vec<i32>) -> f32 {
     let scale = maxabs / qmax;
     codes.clear();
     codes.extend(x.iter().map(|v| (v / scale).round().clamp(-qmax, qmax) as i32));
+    scale
+}
+
+/// `quantize_into` with an explicit worker [`Pool`]: the maxabs scan folds
+/// per-worker chunk maxima (f32 `max` is exactly associative and
+/// commutative on the non-NaN inputs we feed it, and the `1e-8` floor is
+/// idempotent under `max` — so the chunked fold is bit-identical to the
+/// sequential one), and the code write is a disjoint `par_chunks_mut`.
+/// Below [`PAR_QUANT_MIN`] elements, or on a 1-thread pool, this is the
+/// sequential function unchanged.
+fn quantize_into_with(pool: Pool, x_bits: u32, x: &[f32], codes: &mut Vec<i32>) -> f32 {
+    if pool.threads() == 1 || x.len() < PAR_QUANT_MIN {
+        return quantize_into(x_bits, x, codes);
+    }
+    let qmax = (1i64 << (x_bits - 1)) as f32 - 1.0;
+    let chunk = x.len().div_ceil(pool.threads());
+    let maxabs = pool
+        .par_map_index(x.len().div_ceil(chunk), |i| {
+            let lo = i * chunk;
+            let hi = (lo + chunk).min(x.len());
+            x[lo..hi].iter().fold(1e-8f32, |m, v| m.max(v.abs()))
+        })
+        .into_iter()
+        .fold(1e-8f32, f32::max);
+    let scale = maxabs / qmax;
+    codes.clear();
+    codes.resize(x.len(), 0);
+    pool.par_chunks_mut(codes, chunk, |ci, block| {
+        let base = ci * chunk;
+        for (c, &v) in block.iter_mut().zip(x[base..].iter()) {
+            *c = (v / scale).round().clamp(-qmax, qmax) as i32;
+        }
+    });
     scale
 }
 
@@ -142,11 +181,22 @@ impl Crossbar {
     /// DAC-code scratch, so the steady-state path performs no allocation
     /// once `out` has reached `cols()` capacity.
     pub fn smac_into(&mut self, x: &[f32], out: &mut Vec<f32>) {
+        self.smac_into_with(pool::global(), x, out);
+    }
+
+    /// [`Crossbar::smac_into`] with an explicit worker [`Pool`], threaded
+    /// through both parallelizable phases: the DAC quantize
+    /// (`quantize_into_with`) and the column MAC
+    /// ([`RramArray::column_mac_with`]). The ADC convert and per-column
+    /// dequant scale stay sequential — they are O(cols) and far below any
+    /// useful spawn threshold. Byte-identical at any thread count; the
+    /// 1-thread pool path allocates nothing in steady state.
+    pub fn smac_into_with(&mut self, pool: Pool, x: &[f32], out: &mut Vec<f32>) {
         assert_eq!(x.len(), self.rows(), "input length = crossbar rows");
-        let x_scale = quantize_into(self.spec.x_bits, x, &mut self.code_buf);
+        let x_scale = quantize_into_with(pool, self.spec.x_bits, x, &mut self.code_buf);
         out.clear();
         out.resize(self.array.cols(), 0.0);
-        self.array.column_mac(&self.code_buf, out);
+        self.array.column_mac_with(pool, &self.code_buf, out);
         self.adc.convert(out);
         for (v, s) in out.iter_mut().zip(self.w_scale.iter()) {
             *v *= x_scale * s;
@@ -251,6 +301,28 @@ mod tests {
         xb.smac(&[1.0; 8]);
         xb.smac(&[0.5; 8]);
         assert_eq!(xb.smacs(), 2);
+    }
+
+    #[test]
+    fn smac_into_with_is_bit_identical_across_pools() {
+        // 32768×32 puts the input over PAR_QUANT_MIN and the MAC over
+        // PAR_MAC_MIN, so both parallel phases actually engage; the
+        // result must still match the sequential bytes exactly.
+        let (rows, cols) = (1usize << 15, 32usize);
+        let w = random_tile(rows, cols, 11, 0.05);
+        let x = random_tile(rows, 1, 12, 1.0);
+        let mut xb = Crossbar::program(&w, rows, cols, QuantSpec::default());
+        xb.calibrate(&[x.clone()]);
+        let mut seq = Vec::new();
+        xb.smac_into_with(Pool::sequential(), &x, &mut seq);
+        for threads in [2usize, 8] {
+            let mut par = Vec::new();
+            xb.smac_into_with(Pool::new(threads), &x, &mut par);
+            assert_eq!(seq.len(), par.len());
+            for (i, (a, b)) in seq.iter().zip(par.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "col {i} at {threads} threads");
+            }
+        }
     }
 
     #[test]

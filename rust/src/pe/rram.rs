@@ -8,7 +8,17 @@
 //! training + the calibration loop; we expose it so accuracy-vs-noise
 //! ablations can run).
 
+use crate::util::pool::{self, Pool};
 use crate::util::Rng;
+
+/// MAC-slot count (`rows × cols`) below which [`RramArray::column_mac_with`]
+/// stays sequential: a `pe/smac_256x256`-scale call (64K slots, ~tens of µs)
+/// would lose more to scoped-thread spawn than it gains, while a
+/// 2048×2048 call (4M slots) amortizes it easily.
+const PAR_MAC_MIN: usize = 1 << 20;
+
+/// Fixed accumulation width of the inner kernel (see `mac_columns`).
+const LANES: usize = 8;
 
 /// A programmed RRAM cell: signed conductance code in [-(L/2-1), L/2-1].
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -95,17 +105,54 @@ impl RramArray {
     /// follow-up from the PR-2 integer-code streaming change); the
     /// sub-`LANES` column remainder is handled by a scalar tail.
     pub fn column_mac(&self, input: &[i32], out: &mut [f32]) {
+        self.column_mac_with(pool::global(), input, out);
+    }
+
+    /// [`RramArray::column_mac`] with an explicit worker [`Pool`].
+    ///
+    /// Parallelism is over **column blocks** (bitline groups), not row
+    /// blocks: each worker owns a disjoint `out[c0..c1]` slice and walks
+    /// all rows in the same order the sequential kernel does, so every
+    /// column's f32 accumulation order — and therefore every output bit —
+    /// is identical at any thread count. (A row-block split would need
+    /// per-worker partial sums combined in a reduction, and f32 addition
+    /// is not associative: the merged sums would differ from the
+    /// sequential ones in the last ulp. Column blocks need zero scratch
+    /// and zero reduction.) Blocks are `LANES`-aligned so each worker
+    /// runs the same `chunks_exact` inner kernel.
+    ///
+    /// Calls below [`PAR_MAC_MIN`] MAC slots (or with a 1-thread pool)
+    /// take the sequential path: no scope, no spawn, no allocation.
+    pub fn column_mac_with(&self, pool: Pool, input: &[i32], out: &mut [f32]) {
         assert_eq!(input.len(), self.rows);
         assert_eq!(out.len(), self.cols);
-        const LANES: usize = 8;
-        let body = self.cols - self.cols % LANES;
+        if pool.threads() == 1 || self.rows * self.cols < PAR_MAC_MIN || self.cols < 2 * LANES {
+            self.mac_columns(input, 0, out);
+            return;
+        }
+        let chunk = self.cols.div_ceil(pool.threads()).next_multiple_of(LANES);
+        pool.par_chunks_mut(out, chunk, |ci, block| {
+            self.mac_columns(input, ci * chunk, block);
+        });
+    }
+
+    /// The sequential inner kernel on the column window starting at `c0`,
+    /// `out.len()` columns wide: fixed-width `LANES` chunks via
+    /// `chunks_exact` (no bounds checks, constant-trip-count loop for
+    /// autovectorization) plus a scalar tail. Column windows are
+    /// independent — the per-column arithmetic never crosses a window
+    /// boundary, which is what makes the block split above exact.
+    fn mac_columns(&self, input: &[i32], c0: usize, out: &mut [f32]) {
+        let width = out.len();
+        let body = width - width % LANES;
         out.iter_mut().for_each(|o| *o = 0.0);
         for (r, &code) in input.iter().enumerate() {
             if code == 0 {
                 continue;
             }
             let x = code as f32;
-            let row = &self.g[r * self.cols..(r + 1) * self.cols];
+            let start = r * self.cols + c0;
+            let row = &self.g[start..start + width];
             let (row_body, row_tail) = row.split_at(body);
             let (out_body, out_tail) = out.split_at_mut(body);
             for (o, g) in out_body
@@ -181,6 +228,33 @@ mod tests {
         for c in 0..cols {
             let want: f32 = (0..rows).map(|r| input[r] as f32 * a.g(r, c)).sum();
             assert_eq!(out[c], want, "col {c}");
+        }
+    }
+
+    #[test]
+    fn column_mac_parallel_is_bit_identical() {
+        // 64×16397 = ~1.05M MAC slots: above PAR_MAC_MIN, with a ragged
+        // column count so the last worker block is short and ends in a
+        // scalar tail. Every thread count must produce the exact bytes
+        // of the sequential kernel.
+        let (rows, cols) = (64usize, 16_397usize);
+        assert!(rows * cols >= super::PAR_MAC_MIN);
+        let mut a = RramArray::new(rows, cols, 256);
+        let codes: Vec<i32> = (0..rows * cols).map(|i| (i as i32 % 251) - 125).collect();
+        a.program(&codes);
+        let input: Vec<i32> = (0..rows as i32).map(|r| (r % 17) - 8).collect();
+        let mut seq = vec![0.0f32; cols];
+        a.column_mac_with(Pool::sequential(), &input, &mut seq);
+        for threads in [2usize, 4, 8] {
+            let mut par = vec![0.0f32; cols];
+            a.column_mac_with(Pool::new(threads), &input, &mut par);
+            for c in 0..cols {
+                assert_eq!(
+                    seq[c].to_bits(),
+                    par[c].to_bits(),
+                    "col {c} at {threads} threads"
+                );
+            }
         }
     }
 

@@ -5,14 +5,16 @@
 //! decouples it so the same event-driven scheduler can run against
 //! (a) the calibrated analytic model and (b) a **calibration-mode adapter
 //! over the detailed [`TileEngine`]**: [`EngineBackend`] measures the
-//! streaming and SCU cycle constants by running micro-probes on the cycle
-//! engine at construction and prices phases with the *measured* constants
-//! instead of the hand-calibrated `TimingConfig` defaults. Phases the
-//! detailed engine does not model at tile scale (the DMAC pool
-//! aggregation, C2C optical links, crossbar SMAC latency — the latter is
-//! an *input* to the engine) fall through to the analytic constants, the
-//! same split the calibration tests in rust/tests/test_calibration.rs
-//! exercise.
+//! streaming, SCU, DMAC-issue and C2C-launch cycle constants by running
+//! micro-probes on the cycle engine at construction (concurrently, on the
+//! worker pool — each probe owns its own engine) and prices phases with
+//! the *measured* constants instead of the hand-calibrated `TimingConfig`
+//! defaults. DMAC phases scale the analytic pool formula by the measured
+//! cycles-per-MAC-issue slope; C2C phases add the measured launch
+//! intercept to the analytic link cycles. Only the crossbar SMAC latency
+//! and the KV scratchpad still delegate outright (the former is an
+//! *input* to the engine), the same split the calibration tests in
+//! rust/tests/test_calibration.rs exercise.
 //!
 //! ## The contract
 //!
@@ -45,6 +47,7 @@ use crate::mapper::{LayerPlan, PhaseOp};
 use crate::power::EnergyLedger;
 use crate::sim::analytic::AnalyticSim;
 use crate::sim::engine::TileEngine;
+use crate::util::Pool;
 
 /// What the coordinator needs from a simulator: per-phase cycle costs and
 /// per-phase energy attribution. Everything else (per-layer plan costs,
@@ -112,6 +115,15 @@ pub struct MeasuredTiming {
     pub scu_cycles_per_elem: f64,
     /// SCU fixed per-row cost, cycles.
     pub scu_drain_cycles: f64,
+    /// Cycles per DMAC MAC-issue slot (two-point DMAC probe slope; the
+    /// router issues one operand pair per enabled-FIFO-pair per cycle, so
+    /// this lands at ~1.0 and scales the analytic pool formula).
+    pub dmac_cycles_per_mac: f64,
+    /// Fixed C2C launch cost, cycles: the streaming probe's intercept
+    /// after subtracting its hop and per-word components — what it costs
+    /// to get a transfer moving before the link's analytic bit rate
+    /// takes over.
+    pub c2c_launch_cycles: f64,
 }
 
 /// Calibration-mode backend: analytic formulas priced with constants
@@ -124,22 +136,44 @@ pub struct EngineBackend {
 impl EngineBackend {
     /// Build the adapter by running the measurement probes on the detailed
     /// engine (a few thousand simulated cycles; done once at construction).
+    /// Probes run concurrently on the process-default worker pool.
     pub fn calibrated(cfg: PicnicConfig) -> EngineBackend {
+        Self::calibrated_with(cfg, Pool::new(0))
+    }
+
+    /// [`EngineBackend::calibrated`] with an explicit worker [`Pool`]: the
+    /// seven probes are independent engines, so they fan out with
+    /// `par_map_index` (each probe engine itself pinned sequential — a
+    /// 4-wide tile is far below any useful intra-engine threshold). The
+    /// fitted constants are bit-identical at any worker count because
+    /// every probe is deterministic and results come back in index order.
+    pub fn calibrated_with(cfg: PicnicConfig, pool: Pool) -> EngineBackend {
         let xbar = cfg.timing.xbar_cycles;
-        // Streaming probe at two chain lengths and two word counts:
-        // c(L, W) = L·hop + W·cpw + const, so the differences isolate the
-        // per-hop and per-word slopes exactly.
-        let c_4_64 = Self::measure_stream(4, 64, xbar);
-        let c_8_64 = Self::measure_stream(8, 64, xbar);
-        let c_4_256 = Self::measure_stream(4, 256, xbar);
+        let probes = pool.par_map_index(7, |i| match i {
+            // Streaming probe at two chain lengths and two word counts:
+            // c(L, W) = L·hop + W·cpw + const, so the differences isolate
+            // the per-hop and per-word slopes exactly.
+            0 => Self::measure_stream(4, 64, xbar),
+            1 => Self::measure_stream(8, 64, xbar),
+            2 => Self::measure_stream(4, 256, xbar),
+            // SCU probe at two row lengths ≤ the router FIFO depth (32
+            // words — results return through the Up FIFO).
+            3 => Self::measure_scu_row(4, 8, xbar),
+            4 => Self::measure_scu_row(4, 24, xbar),
+            // DMAC probe at two pair counts ≤ the FIFO depth.
+            5 => Self::measure_dmac(8, xbar),
+            _ => Self::measure_dmac(24, xbar),
+        });
+        let (c_4_64, c_8_64, c_4_256) = (probes[0], probes[1], probes[2]);
+        let (s_8, s_24) = (probes[3], probes[4]);
+        let (d_8, d_24) = (probes[5], probes[6]);
         let cycles_per_word = (c_4_256.saturating_sub(c_4_64)) as f64 / 192.0;
         let hop_cycles = (c_8_64.saturating_sub(c_4_64)) as f64 / 4.0;
-        // SCU probe at two row lengths ≤ the router FIFO depth (32 words —
-        // results return through the Up FIFO).
-        let s_8 = Self::measure_scu_row(4, 8, xbar);
-        let s_24 = Self::measure_scu_row(4, 24, xbar);
         let scu_cycles_per_elem = (s_24.saturating_sub(s_8)) as f64 / 16.0;
         let scu_drain_cycles = (s_8 as f64 - 8.0 * scu_cycles_per_elem).max(0.0);
+        let dmac_cycles_per_mac = (d_24.saturating_sub(d_8)) as f64 / 16.0;
+        let c2c_launch_cycles =
+            (c_4_64 as f64 - 4.0 * hop_cycles - 64.0 * cycles_per_word).max(0.0);
         EngineBackend {
             inner: AnalyticSim::new(cfg),
             measured: MeasuredTiming {
@@ -147,6 +181,8 @@ impl EngineBackend {
                 cycles_per_word: cycles_per_word.max(1e-6),
                 scu_cycles_per_elem: scu_cycles_per_elem.max(0.0),
                 scu_drain_cycles,
+                dmac_cycles_per_mac: dmac_cycles_per_mac.max(1e-6),
+                c2c_launch_cycles,
             },
         }
     }
@@ -154,7 +190,8 @@ impl EngineBackend {
     /// Cycles the engine takes to stream `words` words down a west→east
     /// chain of `dim` routers and out the optical die.
     fn measure_stream(dim: usize, words: u64, xbar_latency: u64) -> u64 {
-        let mut eng = TileEngine::new(SystemConfig::tiny(dim), xbar_latency);
+        let mut eng =
+            TileEngine::new(SystemConfig::tiny(dim), xbar_latency).with_pool(Pool::sequential());
         let mut asm = Assembler::new(dim);
         let instr = Instruction::new(
             PortSet::single(Port::West),
@@ -194,7 +231,8 @@ impl EngineBackend {
     /// Cycles the engine takes to push one `row_len`-element row through an
     /// SCU and get every result back into the router's Up FIFO.
     fn measure_scu_row(dim: usize, row_len: usize, xbar_latency: u64) -> u64 {
-        let mut eng = TileEngine::new(SystemConfig::tiny(dim), xbar_latency);
+        let mut eng =
+            TileEngine::new(SystemConfig::tiny(dim), xbar_latency).with_pool(Pool::sequential());
         // router (1,1) of a dim-wide mesh
         let router = dim + 1;
         eng.attach_scu(router, row_len);
@@ -219,6 +257,48 @@ impl EngineBackend {
         );
         cycles
     }
+
+    /// Cycles the engine takes to issue `pairs` DMAC operand pairs at
+    /// router (0,0) — North and West FIFOs pre-filled with one operand
+    /// stream each, `Mode::Dmac` pairing them one MAC-issue per cycle —
+    /// and drain the accumulator out the East port. The two-point slope
+    /// over `pairs` isolates the per-MAC-issue cycle cost.
+    fn measure_dmac(pairs: u32, xbar_latency: u64) -> u64 {
+        let mut eng =
+            TileEngine::new(SystemConfig::tiny(4), xbar_latency).with_pool(Pool::sequential());
+        let mut asm = Assembler::new(4);
+        asm.emit(
+            FirmwareOp::at(
+                0,
+                0,
+                Instruction::new(
+                    PortSet::of(&[Port::North, Port::West]),
+                    Mode::Dmac,
+                    PortSet::EMPTY,
+                ),
+            )
+            .repeat(pairs),
+        );
+        asm.emit(FirmwareOp::at(
+            0,
+            0,
+            Instruction::new(PortSet::EMPTY, Mode::DmacDrain, PortSet::single(Port::East)),
+        ));
+        eng.load_program(&asm.finish());
+        for i in 0..pairs {
+            assert!(eng.mesh.inject(0, Port::North, i as f64));
+            assert!(eng.mesh.inject(0, Port::West, 1.0));
+        }
+        let cycles = eng.run(10_000);
+        // The drained dot product lands one hop east, in (0,1)'s West
+        // FIFO — its presence proves every pair actually issued.
+        assert_eq!(
+            eng.mesh.router(1).fifo(Port::West).len(),
+            1,
+            "DMAC probe did not drain ({pairs} pairs)"
+        );
+        cycles
+    }
 }
 
 impl SimBackend for EngineBackend {
@@ -239,9 +319,21 @@ impl SimBackend for EngineBackend {
                     .ceil() as u64;
                 rows.div_ceil((*scus).max(1)) * per_row
             }
-            // SMAC latency is an input to the engine (xbar_cycles), and the
-            // DMAC pool / KV scratchpad / C2C links are modeled analytically
-            // at tile scale — delegate.
+            // DMAC attention: the analytic pool formula scaled by the
+            // measured cycles-per-MAC-issue slope (≈1.0 — the router
+            // issues one operand pair per cycle in steady state).
+            PhaseOp::Dmac { .. } => {
+                let analytic = AnalyticSim::phase_cycles(&self.inner, phase);
+                ((analytic as f64 * m.dmac_cycles_per_mac).ceil() as u64).max(1)
+            }
+            // C2C: the analytic link bit rate plus the measured fixed
+            // launch cost (small, so large transfers converge on the
+            // analytic figure).
+            PhaseOp::C2c { .. } => {
+                AnalyticSim::phase_cycles(&self.inner, phase) + m.c2c_launch_cycles.round() as u64
+            }
+            // SMAC latency is an input to the engine (xbar_cycles) and the
+            // KV scratchpad is modeled analytically at tile scale — delegate.
             other => AnalyticSim::phase_cycles(&self.inner, other),
         }
     }
@@ -288,6 +380,39 @@ mod tests {
             m.scu_cycles_per_elem
         );
         assert!(m.scu_drain_cycles >= 0.0);
+        // the DMAC issues one operand pair per cycle in steady state, and
+        // the C2C launch intercept is a small fixed bootstrap cost
+        assert!(
+            (0.5..=2.0).contains(&m.dmac_cycles_per_mac),
+            "dmac/mac {}",
+            m.dmac_cycles_per_mac
+        );
+        assert!(
+            (0.0..=64.0).contains(&m.c2c_launch_cycles),
+            "c2c launch {}",
+            m.c2c_launch_cycles
+        );
+    }
+
+    #[test]
+    fn calibration_constants_are_pool_invariant() {
+        // The probe fan-out must not change the fitted constants: 1, 2 and
+        // 8 workers produce bit-identical MeasuredTiming.
+        let cfg = PicnicConfig::default();
+        let base = EngineBackend::calibrated_with(cfg.clone(), Pool::sequential()).measured;
+        for threads in [2usize, 8] {
+            let m = EngineBackend::calibrated_with(cfg.clone(), Pool::new(threads)).measured;
+            for (a, b) in [
+                (base.hop_cycles, m.hop_cycles),
+                (base.cycles_per_word, m.cycles_per_word),
+                (base.scu_cycles_per_elem, m.scu_cycles_per_elem),
+                (base.scu_drain_cycles, m.scu_drain_cycles),
+                (base.dmac_cycles_per_mac, m.dmac_cycles_per_mac),
+                (base.c2c_launch_cycles, m.c2c_launch_cycles),
+            ] {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} workers");
+            }
+        }
     }
 
     #[test]

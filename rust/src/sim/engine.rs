@@ -11,6 +11,7 @@ use crate::ipcn::{BoundaryTraffic, Mesh, Nmc, Npm};
 use crate::isa::{Instruction, Port, Program};
 use crate::pe::{Crossbar, QuantSpec};
 use crate::scu::Scu;
+use crate::util::pool::{self, Pool};
 use std::collections::VecDeque;
 
 /// A PE attachment: the crossbar plus its AXI input staging buffer and the
@@ -56,6 +57,10 @@ pub struct TileEngine {
     idle_slice: Vec<Instruction>,
     /// Reusable boundary-traffic buffer for mesh stepping.
     boundary: BoundaryTraffic,
+    /// Worker pool threaded through mesh phase-1 stepping and PE SMACs.
+    /// Results are byte-identical at any setting; `Pool::sequential()`
+    /// additionally guarantees the zero-alloc steady state.
+    pool: Pool,
 }
 
 impl TileEngine {
@@ -74,8 +79,22 @@ impl TileEngine {
             xbar_latency,
             idle_slice: vec![Instruction::IDLE; n],
             boundary: BoundaryTraffic::default(),
+            pool: pool::global(),
             cfg,
         }
+    }
+
+    /// Replace the worker [`Pool`] used for mesh stepping and PE SMACs
+    /// (builder style). The engine's outputs are byte-identical at any
+    /// worker count; this only changes how the work is scheduled.
+    pub fn with_pool(mut self, pool: Pool) -> TileEngine {
+        self.pool = pool;
+        self
+    }
+
+    /// The worker pool this engine threads through its hot paths.
+    pub fn pool(&self) -> Pool {
+        self.pool
     }
 
     /// Attach a programmed crossbar to router `idx`.
@@ -116,14 +135,15 @@ impl TileEngine {
         // Reuse the engine-owned boundary buffer (mem::take moves it out
         // without allocating; it is restored before returning).
         let mut boundary = std::mem::take(&mut self.boundary);
+        let pool = self.pool;
         let issued = match self.nmc.issue(&mut self.npm) {
             Some(slice) => {
-                self.mesh.step_into(&slice.instrs, &mut boundary);
+                self.mesh.step_into_with(pool, &slice.instrs, &mut boundary);
                 true
             }
             None => {
                 // drain-only cycle: keep the mesh idle but let PE/SCU finish
-                self.mesh.step_into(&self.idle_slice, &mut boundary);
+                self.mesh.step_into_with(pool, &self.idle_slice, &mut boundary);
                 false
             }
         };
@@ -133,7 +153,7 @@ impl TileEngine {
             if let Some(pe) = self.pes[r].as_mut() {
                 pe.staging.push(w as f32);
                 if pe.staging.len() == pe.xbar.rows() {
-                    pe.xbar.smac_into(&pe.staging, &mut pe.out_buf);
+                    pe.xbar.smac_into_with(pool, &pe.staging, &mut pe.out_buf);
                     pe.staging.clear();
                     pe.ready_at = self.cycle + self.xbar_latency;
                     pe.results.extend(pe.out_buf.iter().map(|&v| v as f64));

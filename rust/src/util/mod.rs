@@ -1,12 +1,15 @@
 //! Small self-contained utilities that replace crates.io dependencies in
 //! this offline build: a deterministic PRNG (replaces rand/rand_chacha),
 //! a minimal JSON parser/emitter (replaces serde_json — only what the
-//! artifact manifest and config dumps need), and a tiny argv parser
-//! (replaces clap).
+//! artifact manifest and config dumps need), a tiny argv parser
+//! (replaces clap), and a deterministic scoped-thread fork-join pool
+//! (replaces rayon).
 
 pub mod args;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 pub use json::Json;
+pub use pool::Pool;
 pub use rng::Rng;

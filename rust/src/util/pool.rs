@@ -1,0 +1,297 @@
+//! Deterministic scoped-thread fork-join pool (replaces rayon in this
+//! offline build — the workspace vendors no crates, so the executor is
+//! in-tree).
+//!
+//! A [`Pool`] is a *policy*, not a set of live threads: it records how many
+//! workers a parallel region may use, and every region spawns its workers
+//! with [`std::thread::scope`] (the calling thread doubles as worker 0, so
+//! a `w`-way region spawns `w − 1` OS threads and joins them before
+//! returning). There is no persistent state, no channels to leak and no
+//! `unsafe`; `&mut` borrows stay region-local and the borrow checker sees
+//! every split.
+//!
+//! ## Determinism contract
+//!
+//! Every API is **byte-identical regardless of thread count** as long as
+//! the job closure is itself deterministic per index:
+//!
+//! - [`Pool::par_chunks_mut`] partitions the output into *fixed* chunks
+//!   (the chunk grid depends only on `chunk_len`, never on the worker
+//!   count) and each worker writes only its own disjoint chunks — no
+//!   result ever depends on which worker ran which chunk.
+//! - [`Pool::par_map_index`] stores result `i` in slot `i`; the returned
+//!   `Vec` is in index order no matter the completion order.
+//! - [`Pool::for_each_index`] hands out indices dynamically (atomic
+//!   counter) for load balancing, so it must only be used for jobs whose
+//!   side effects are disjoint per index.
+//!
+//! `threads == 1` is a *pure sequential fallback*: no scope, no spawn, no
+//! allocation — the zero-alloc steady-state guarantee of the cycle engine
+//! holds on this path (rust/tests/test_alloc.rs pins it).
+//!
+//! Sizing: `PICNIC_THREADS` env var → `ServerConfig::threads` knob →
+//! [`std::thread::available_parallelism`]. Callers gate every hot parallel
+//! region on a work threshold so sub-millisecond calls never pay the
+//! ~10–30 µs scoped-spawn cost (ARCHITECTURE.md §Parallel engine).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Hard upper bound on workers — a typo'd `PICNIC_THREADS=10000` must not
+/// try to spawn ten thousand OS threads.
+const MAX_THREADS: usize = 256;
+
+/// Fork-join policy: how many workers a parallel region may use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with an explicit worker count. `0` means *auto*: resolve from
+    /// the `PICNIC_THREADS` env var, falling back to the machine's
+    /// available parallelism (the same resolution as [`Pool::from_env`]).
+    pub fn new(threads: usize) -> Pool {
+        if threads == 0 {
+            return Pool::from_env();
+        }
+        Pool {
+            threads: threads.min(MAX_THREADS),
+        }
+    }
+
+    /// The pure sequential policy (`threads == 1`): no scope, no spawn,
+    /// no allocation.
+    pub fn sequential() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    /// Resolve the worker count from the environment: `PICNIC_THREADS` if
+    /// set to a positive integer, else [`std::thread::available_parallelism`].
+    pub fn from_env() -> Pool {
+        let threads = std::env::var("PICNIC_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()));
+        Pool {
+            threads: threads.min(MAX_THREADS),
+        }
+    }
+
+    /// Worker count this policy allows (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `work(worker_index)` on `min(workers, threads)` workers
+    /// concurrently. Worker 0 is the calling thread; the rest are scoped
+    /// threads joined before this returns. With an effective count of 1
+    /// this is a plain call — no scope, no allocation.
+    pub fn run_workers<F: Fn(usize) + Sync>(&self, workers: usize, work: F) {
+        let w = workers.min(self.threads).max(1);
+        if w == 1 {
+            work(0);
+            return;
+        }
+        std::thread::scope(|s| {
+            let work = &work;
+            for k in 1..w {
+                s.spawn(move || work(k));
+            }
+            work(0);
+        });
+    }
+
+    /// Invoke `job(i)` exactly once for every `i in 0..n`, distributing
+    /// indices dynamically across workers (atomic work counter, so a slow
+    /// index does not stall the rest). `job` must keep its side effects
+    /// disjoint per index — then the aggregate result is independent of
+    /// the thread count.
+    pub fn for_each_index<F: Fn(usize) + Sync>(&self, n: usize, job: F) {
+        if self.threads == 1 || n <= 1 {
+            for i in 0..n {
+                job(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        self.run_workers(n, |_| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            job(i);
+        });
+    }
+
+    /// Indexed fork-join over disjoint output chunks: split `data` into
+    /// consecutive chunks of `chunk_len` (last may be short) and call
+    /// `f(chunk_index, chunk)` exactly once per chunk. The chunk grid is a
+    /// function of `chunk_len` alone — workers take fixed contiguous spans
+    /// of whole chunks, so each output element is written by exactly one
+    /// worker and the result is byte-identical at any thread count.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        let n_chunks = data.len().div_ceil(chunk_len);
+        let workers = self.threads.min(n_chunks);
+        if workers <= 1 {
+            for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                f(ci, chunk);
+            }
+            return;
+        }
+        // Every worker span is a whole number of chunks, so span
+        // boundaries coincide with chunk boundaries and the per-chunk
+        // callback sees exactly the chunks a sequential walk would.
+        let chunks_per_worker = n_chunks.div_ceil(workers);
+        let span_len = chunks_per_worker * chunk_len;
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut rest = data;
+            let mut base_chunk = 0usize;
+            let mut own: Option<(usize, &mut [T])> = None;
+            while !rest.is_empty() {
+                let take = span_len.min(rest.len());
+                let (span, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                rest = tail;
+                match own {
+                    // Keep the first span for the calling thread…
+                    None => own = Some((base_chunk, span)),
+                    // …and spawn the rest.
+                    Some(_) => {
+                        let base = base_chunk;
+                        s.spawn(move || {
+                            for (j, chunk) in span.chunks_mut(chunk_len).enumerate() {
+                                f(base + j, chunk);
+                            }
+                        });
+                    }
+                }
+                base_chunk += chunks_per_worker;
+            }
+            let (base, span) = own.expect("non-empty data has a first span");
+            for (j, chunk) in span.chunks_mut(chunk_len).enumerate() {
+                f(base + j, chunk);
+            }
+        });
+    }
+
+    /// Map `f` over `0..n` concurrently, returning results **in index
+    /// order** regardless of completion order. Indices are distributed
+    /// dynamically (good for heterogeneous sweep points); each result
+    /// lands in its own slot, so the output is deterministic whenever `f`
+    /// is deterministic per index.
+    pub fn par_map_index<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.threads == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.for_each_index(n, |i| {
+            // Each slot is locked exactly once (its own index) — the mutex
+            // is an ownership certificate, not a contention point.
+            *slots[i].lock().expect("slot lock") = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("slot lock")
+                    .expect("every index produced a result")
+            })
+            .collect()
+    }
+}
+
+/// The process-wide default pool, resolved once from the environment
+/// (`PICNIC_THREADS` → available parallelism). Hot paths that take no
+/// explicit [`Pool`] parameter use this; in-process tests that need a
+/// specific worker count pass their own `Pool` instead of mutating the
+/// (process-global, race-prone) environment.
+pub fn global() -> Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    *GLOBAL.get_or_init(Pool::from_env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn sequential_fallback_runs_inline() {
+        let pool = Pool::sequential();
+        assert_eq!(pool.threads(), 1);
+        let main_id = std::thread::current().id();
+        pool.run_workers(8, |k| {
+            assert_eq!(k, 0, "sequential pool uses exactly one worker");
+            assert_eq!(std::thread::current().id(), main_id, "no spawn");
+        });
+    }
+
+    #[test]
+    fn new_zero_resolves_and_clamps() {
+        assert!(Pool::new(0).threads() >= 1);
+        assert_eq!(Pool::new(3).threads(), 3);
+        assert_eq!(Pool::new(usize::MAX).threads(), MAX_THREADS);
+    }
+
+    #[test]
+    fn for_each_index_covers_every_index_once() {
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+            pool.for_each_index(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_grid_is_thread_count_invariant() {
+        // Each chunk stamps its elements with chunk_index*1000 + offset;
+        // any double-write, miss or mis-indexed chunk changes the bytes.
+        let stamp = |pool: &Pool| {
+            let mut data = vec![0u32; 103]; // 13 chunks of 8 + tail of 7
+            pool.par_chunks_mut(&mut data, 8, |ci, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (ci * 1000 + j) as u32;
+                }
+            });
+            data
+        };
+        let seq = stamp(&Pool::sequential());
+        for threads in [2usize, 3, 8, 64] {
+            assert_eq!(stamp(&Pool::new(threads)), seq, "{threads} threads");
+        }
+        assert_eq!(seq[0], 0);
+        assert_eq!(seq[8], 1000);
+        assert_eq!(seq[102], 12_006);
+    }
+
+    #[test]
+    fn par_map_index_returns_in_index_order() {
+        for threads in [1usize, 2, 8] {
+            let pool = Pool::new(threads);
+            let out = pool.par_map_index(23, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn global_pool_is_stable() {
+        assert_eq!(global(), global());
+        assert!(global().threads() >= 1);
+    }
+}

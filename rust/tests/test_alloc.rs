@@ -12,6 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use picnic::config::SystemConfig;
 use picnic::isa::{Assembler, FirmwareOp, Instruction, Mode, Port, PortSet};
 use picnic::sim::TileEngine;
+use picnic::util::Pool;
 
 /// Counts allocation events (alloc/realloc/alloc_zeroed) and delegates to
 /// the system allocator. Frees are not counted — a free implies a prior
@@ -47,7 +48,11 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 #[test]
 fn steady_state_step_is_allocation_free() {
     let dim = 8;
-    let mut eng = TileEngine::new(SystemConfig::tiny(dim), 4);
+    // Pin the sequential path explicitly: the zero-alloc guarantee is the
+    // `PICNIC_THREADS=1` contract (a parallel fork-join necessarily
+    // allocates its scope), and pinning keeps the audit independent of
+    // the environment the test harness runs under.
+    let mut eng = TileEngine::new(SystemConfig::tiny(dim), 4).with_pool(Pool::sequential());
     // Router 0 drives a 4×2 crossbar; a long pipeline row keeps the rest
     // of mesh row 0 routing words east so the measurement window exercises
     // FIFO traffic, intent delivery and boundary egress — not just idling.

@@ -29,6 +29,7 @@ fn tiny_server(max_batch: usize, kv_budget: usize) -> Server {
             kv_budget,
             ..BatchPolicy::default()
         },
+        threads: 0,
     })
 }
 

@@ -3,13 +3,18 @@
 //! mesh statistics and every router FIFO's contents. This locks in the
 //! dense-Vec attachment layout of `TileEngine` (PE results are injected in
 //! router-index order; the previous `HashMap<usize, PeSlot>` iterated in a
-//! nondeterministic order).
+//! nondeterministic order), and — via the worker-count matrix — the
+//! [`Pool`] contract that parallel execution is a speed knob, never a
+//! semantics knob: 1, 2 and 8 workers must produce the exact same bytes,
+//! including with the mesh's parallel phase-1 forced on.
 
-use picnic::config::SystemConfig;
+use picnic::config::{PicnicConfig, SystemConfig};
+use picnic::coordinator::{BatchPolicy, Server, ServerConfig, SubmitSpec};
 use picnic::ipcn::MeshStats;
 use picnic::isa::{Assembler, FirmwareOp, Instruction, Mode, Port, PortSet};
-use picnic::sim::TileEngine;
-use picnic::util::Rng;
+use picnic::models::LlamaConfig;
+use picnic::sim::{EngineBackend, TileEngine};
+use picnic::util::{Pool, Rng};
 
 const PE_ROUTERS: [usize; 3] = [0, 5, 10];
 const SCU_ROUTER: usize = 6;
@@ -24,8 +29,18 @@ struct Fingerprint {
 }
 
 fn run_seeded_workload() -> Fingerprint {
+    run_seeded_workload_with(Pool::sequential(), false)
+}
+
+/// The seeded workload on an explicit worker pool. `force_parallel_mesh`
+/// drops the mesh's router-count threshold to 1 so the fork-join phase-1
+/// path runs even on this 16-router mesh (with a >1-worker pool).
+fn run_seeded_workload_with(pool: Pool, force_parallel_mesh: bool) -> Fingerprint {
     let dim = 4;
-    let mut eng = TileEngine::new(SystemConfig::tiny(dim), 4);
+    let mut eng = TileEngine::new(SystemConfig::tiny(dim), 4).with_pool(pool);
+    if force_parallel_mesh {
+        eng.mesh.set_par_router_min(1);
+    }
     let mut rng = Rng::seed_from_u64(42);
 
     // Three PEs with seeded random 4×2 weight tiles, plus one SCU.
@@ -108,4 +123,60 @@ fn seeded_multi_pe_runs_are_byte_identical() {
         !a.fifo_words.is_empty(),
         "expected residual FIFO state (PE/SCU results)"
     );
+}
+
+/// The worker-count determinism matrix: the same workload at 1, 2 and 8
+/// workers — with and without the mesh's parallel phase 1 forced on —
+/// must fingerprint byte-identically against the sequential reference.
+#[test]
+fn worker_count_matrix_is_byte_identical() {
+    let reference = run_seeded_workload();
+    for threads in [1usize, 2, 8] {
+        for force_parallel_mesh in [false, true] {
+            let run = run_seeded_workload_with(Pool::new(threads), force_parallel_mesh);
+            assert_eq!(
+                reference, run,
+                "{threads} workers (forced mesh parallelism: {force_parallel_mesh}) \
+                 diverged from the sequential reference"
+            );
+        }
+    }
+}
+
+/// End-to-end serving determinism across worker counts: an engine-backend
+/// server (whose calibration probes fan out over the pool) must produce
+/// bit-identical metrics at 1, 2 and 8 workers. CI additionally diffs the
+/// full `llama_serve --json` document and `BENCH_serving.json` across
+/// `PICNIC_THREADS` settings; this is the in-tree fast check.
+#[test]
+fn engine_backend_serving_is_pool_invariant() {
+    let serve = |threads: usize| {
+        let cfg = ServerConfig {
+            picnic: PicnicConfig::default(),
+            model: LlamaConfig::tiny(),
+            policy: BatchPolicy::default(),
+            threads,
+        };
+        let backend = EngineBackend::calibrated_with(cfg.picnic.clone(), Pool::new(threads));
+        let mut s = Server::with_backend(cfg, backend);
+        for _ in 0..2 {
+            s.enqueue(SubmitSpec::new(32, 8)).expect("enqueue");
+        }
+        s.run_to_completion().expect("run");
+        let m = &s.metrics;
+        let latencies: Vec<(u64, u64, u64)> = m
+            .requests
+            .iter()
+            .map(|r| (r.ttft_s.to_bits(), r.tpot_s.to_bits(), r.total_s.to_bits()))
+            .collect();
+        (m.total_tokens, m.wall_s.to_bits(), latencies)
+    };
+    let reference = serve(1);
+    for threads in [2usize, 8] {
+        assert_eq!(
+            reference,
+            serve(threads),
+            "{threads}-worker serving run diverged from the 1-worker reference"
+        );
+    }
 }

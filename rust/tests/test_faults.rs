@@ -32,6 +32,7 @@ fn build_server(faults: Option<FaultConfig>) -> Server {
             kv_budget: 4096,
             ..BatchPolicy::default()
         },
+        threads: 0,
     })
 }
 

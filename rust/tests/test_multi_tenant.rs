@@ -42,6 +42,7 @@ fn tenant_server(specs: &str, max_batch: usize, kv_budget: usize) -> Server {
             kv_budget,
             ..BatchPolicy::default()
         },
+        threads: 0,
     })
 }
 
@@ -141,6 +142,7 @@ fn prop_spec_draft_budget_charges_owner() {
             picnic,
             model: LlamaConfig::tiny(),
             policy: BatchPolicy::default(),
+            threads: 0,
         });
         s.enable_spec_trace();
         let mut shape_of = std::collections::HashMap::new();

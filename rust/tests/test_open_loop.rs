@@ -32,6 +32,7 @@ fn server_cfg(max_batch: usize) -> ServerConfig {
             max_batch,
             ..BatchPolicy::default()
         },
+        threads: 0,
     }
 }
 
@@ -184,6 +185,7 @@ fn overdue_requests_are_shed_and_all_arrivals_resolve() {
             max_batch: 1,
             ..BatchPolicy::default()
         },
+        threads: 0,
     });
     let n = 8;
     for _ in 0..n {

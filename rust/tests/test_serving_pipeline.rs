@@ -20,6 +20,7 @@ fn server_cfg(model: LlamaConfig) -> ServerConfig {
             kv_budget: 1 << 20,
             ..BatchPolicy::default()
         },
+        threads: 0,
     }
 }
 

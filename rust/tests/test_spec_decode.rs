@@ -44,6 +44,7 @@ fn server_cfg(picnic: PicnicConfig, model: LlamaConfig, max_batch: usize) -> Ser
             kv_budget: 1 << 20,
             ..BatchPolicy::default()
         },
+        threads: 0,
     }
 }
 
