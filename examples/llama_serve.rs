@@ -30,16 +30,24 @@
 //! asserts the conservation invariant — every request completes, is
 //! shed, or fails — and reports the degradation counters.
 //!
+//! With `--kv-reuse` requests carry deterministic token ids sampled
+//! against a pool of shared prefixes, and the server runs the
+//! refcounted radix-trie KV cache: admission longest-prefix matches
+//! each prompt and prefill resumes from the hit boundary. The driver
+//! reports prefix hits, cached tokens and prefill cycles saved (both
+//! human and `--json` output).
+//!
 //! Run: `cargo run --release --example llama_serve -- [--model 1b]
 //!       [--requests 64] [--backend analytic|engine] [--threads N]
 //!       [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
 //!       [--tenants a:w=1:kv=8192:ttft=0.05,b:w=1]
 //!       [--open-loop rate=2000,shape=bursty,seed=7]
-//!       [--faults seed=7,ber=1e-6,kill_tile=12@3ms] [--json]`
+//!       [--faults seed=7,ber=1e-6,kill_tile=12@3ms]
+//!       [--kv-reuse pool=65536,prefixes=8,hit=0.9] [--json]`
 
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{BatchPolicy, LatencyKind, Server, ServerConfig, SubmitSpec};
-use picnic::models::{LlamaConfig, TrafficModel};
+use picnic::models::{LlamaConfig, PrefixPool, PrefixSpec, TrafficModel};
 use picnic::sim::{EngineBackend, SimBackend};
 use picnic::util::args::Args;
 use picnic::util::json::{self, Json};
@@ -75,7 +83,12 @@ fn main() -> picnic::Result<()> {
     picnic_cfg.spec_decode.apply_cli(&args)?;
     picnic_cfg.tenants.apply_cli(&args)?;
     picnic_cfg.faults.apply_cli(&args)?;
+    picnic_cfg.kv_reuse.apply_cli(&args)?;
     let freq = picnic_cfg.system.frequency_hz;
+    let prefix = picnic_cfg
+        .kv_reuse
+        .enabled
+        .then(|| PrefixSpec::from(&picnic_cfg.kv_reuse));
     let cfg = ServerConfig {
         picnic: picnic_cfg,
         model,
@@ -91,9 +104,9 @@ fn main() -> picnic::Result<()> {
             let backend =
                 EngineBackend::calibrated_with(cfg.picnic.clone(), Pool::new(cfg.threads));
             let s = Server::with_backend(cfg, backend);
-            drive(s, n_requests, as_json, traffic, freq)
+            drive(s, n_requests, as_json, traffic, prefix, freq)
         }
-        "analytic" => drive(Server::new(cfg), n_requests, as_json, traffic, freq),
+        "analytic" => drive(Server::new(cfg), n_requests, as_json, traffic, prefix, freq),
         other => anyhow::bail!("unknown backend {other} (analytic|engine)"),
     }
 }
@@ -103,6 +116,7 @@ fn drive<B: SimBackend>(
     n_requests: usize,
     as_json: bool,
     traffic: Option<TrafficModel>,
+    prefix: Option<PrefixSpec>,
     freq: f64,
 ) -> picnic::Result<()> {
     let n_tenants = server.n_tenants();
@@ -112,7 +126,11 @@ fn drive<B: SimBackend>(
         Some(model) => {
             // Open-loop: the seeded stream stamps arrival cycles; enqueue
             // never applies backpressure to explicit arrivals.
-            for (_, spec) in model.across_tenants(n_tenants).stream(freq).take(n_requests) {
+            let mut model = model.across_tenants(n_tenants);
+            if let Some(ps) = prefix {
+                model = model.with_shared_prefixes(ps);
+            }
+            for (_, spec) in model.stream(freq).take(n_requests) {
                 server
                     .enqueue(spec)
                     .ok_or_else(|| anyhow::anyhow!("enqueue failed"))?;
@@ -123,6 +141,7 @@ fn drive<B: SimBackend>(
             // request count rounds up to a whole number of rounds so no
             // tenant carries a truncated final round (a spurious fairness
             // skew otherwise).
+            let pool = prefix.map(PrefixPool::new);
             let mut rng = Rng::seed_from_u64(7);
             let n_requests = n_requests.div_ceil(n_tenants) * n_tenants;
             let mut submitted = 0usize;
@@ -133,8 +152,17 @@ fn drive<B: SimBackend>(
                     if submitted >= n_requests {
                         break;
                     }
+                    // Tokens are sampled once per request (outside the
+                    // backpressure retry loop) — a retried enqueue must
+                    // resubmit the *same* request, tokens included.
+                    let tokens = pool
+                        .as_ref()
+                        .map(|pl| pl.sample_prompt_at(submitted as u64, prompt));
                     loop {
-                        let spec = SubmitSpec::new(prompt, gen).tenant(tenant);
+                        let mut spec = SubmitSpec::new(prompt, gen).tenant(tenant);
+                        if let Some(t) = &tokens {
+                            spec = spec.with_tokens(t.clone());
+                        }
                         match server.enqueue(spec) {
                             Some(_) => {
                                 submitted += 1;
@@ -195,6 +223,12 @@ fn drive<B: SimBackend>(
                     ("ttft_attainment", json::num(t.ttft_attainment)),
                     ("tpot_attainment", json::num(t.tpot_attainment)),
                     ("energy_j", json::num(t.energy_j)),
+                    ("prefix_hits", json::num(t.prefix_hits as f64)),
+                    ("hit_tokens", json::num(t.hit_tokens as f64)),
+                    (
+                        "prefill_cycles_saved",
+                        json::num(t.prefill_cycles_saved as f64),
+                    ),
                 ])
             })
             .collect();
@@ -220,6 +254,22 @@ fn drive<B: SimBackend>(
             ),
             ("derate_stall_cycles", json::num(p.derate_stall_cycles as f64)),
             ("job_replays", json::num(p.job_replays as f64)),
+            // KV-reuse counters are emitted unconditionally (zeros when
+            // the layer is off) so off / hit=0 JSONs stay comparable.
+            ("prefix_hits", json::num(p.prefix_hits as f64)),
+            ("hit_tokens", json::num(p.hit_tokens as f64)),
+            (
+                "prefill_cycles_saved",
+                json::num(p.prefill_cycles_saved as f64),
+            ),
+            (
+                "kv_pool_used_tokens",
+                json::num(p.kv_pool_used_tokens as f64),
+            ),
+            (
+                "kv_pool_evicted_blocks",
+                json::num(p.kv_pool_evicted_blocks as f64),
+            ),
             ("jain_index", json::num(server.fairness_index())),
             ("tenants", Json::Arr(per_tenant)),
         ]);
@@ -280,6 +330,16 @@ fn drive<B: SimBackend>(
             p.spec_accepted,
             100.0 * p.spec_accepted as f64 / p.spec_drafted.max(1) as f64,
             p.spec_rolled_back
+        );
+    }
+    if server.kv_cache().is_some() {
+        println!("---- kv reuse ----");
+        println!("prefix hits        : {}", p.prefix_hits);
+        println!("cached tokens      : {}", p.hit_tokens);
+        println!("prefill cyc saved  : {}", p.prefill_cycles_saved);
+        println!(
+            "pool               : {} tokens live, {} blocks evicted",
+            p.kv_pool_used_tokens, p.kv_pool_evicted_blocks
         );
     }
     if p.degraded || m.failed_count() > 0 {

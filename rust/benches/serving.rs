@@ -8,23 +8,30 @@
 //! thousands of seeded chat-mixture requests per point), plus a
 //! **fault-injection sweep** (photonic bit-error rate × offered load,
 //! with zero-fault-identity, same-seed-determinism and tile-kill-storm
-//! probes). Dumps `BENCH_serving.json` (schema 5 — see EXPERIMENTS.md
-//! §BENCH_serving schema for the field-by-field contract): one `points`
-//! entry per batch size with simulated tokens/s, the serialized PR-2
-//! reference, TTFT and p99; a `spec` block with one entry per acceptance
-//! rate next to the non-speculative batch-8 reference; a `tenancy` block
-//! with per-tenant throughputs and Jain's fairness index per
-//! configuration; an `open_loop` block with a closed-loop parity check
-//! (every arrival at cycle 0 must match the batch-8 closed-loop run) and
-//! p50/p95/p99 TTFT / per-token / end-to-end latency per
-//! (shape × utilization) point; and a `faults` block with the three
-//! probe verdicts, the storm's terminal-state accounting, and one entry
-//! per (bit-error rate × utilization) with degradation counters. CI
-//! validates batch-8 > 2× batch-1, spec acceptance=1.0 ≥ the
+//! probes), plus a **KV-reuse sweep** (shared-prefix hit rate ×
+//! utilization with a reuse-off baseline per utilization). Dumps
+//! `BENCH_serving.json` (schema 6 — see EXPERIMENTS.md §BENCH_serving
+//! schema for the field-by-field contract): one `points` entry per
+//! batch size with simulated tokens/s, the serialized PR-2 reference,
+//! TTFT and p99; a `spec` block with one entry per acceptance rate next
+//! to the non-speculative batch-8 reference; a `tenancy` block with
+//! per-tenant throughputs and Jain's fairness index per configuration;
+//! an `open_loop` block with a closed-loop parity check (every arrival
+//! at cycle 0 must match the batch-8 closed-loop run) and p50/p95/p99
+//! TTFT / per-token / end-to-end latency per (shape × utilization)
+//! point; a `faults` block with the three probe verdicts, the storm's
+//! terminal-state accounting, and one entry per (bit-error rate ×
+//! utilization) with degradation counters; and a `kv_reuse` block — one
+//! entry per (hit rate × utilization) plus the reuse-off baselines,
+//! each nesting its schedule-derived output in a `metrics` sub-object
+//! so the hit=0 row can be compared byte-for-byte against the baseline.
+//! CI validates batch-8 > 2× batch-1, spec acceptance=1.0 ≥ the
 //! non-speculative reference, equal-weight 2-tenant fairness
 //! (Jain ≥ 0.9 on the symmetric workload), open/closed parity within 5%,
-//! that p99 TTFT grows with offered load, and the faults-block probe
-//! verdicts plus storm conservation, then archives the file as the
+//! that p99 TTFT grows with offered load, the faults-block probe
+//! verdicts plus storm conservation, and the kv_reuse identity verdict
+//! plus hit-rate monotonicity (prefill cycles saved strictly rising,
+//! p99 TTFT non-increasing), then archives the file as the
 //! `BENCH_serving` artifact.
 //!
 //! Every sweep's points are independent simulations, so they fan out
@@ -38,13 +45,14 @@
 mod harness;
 
 use picnic::config::{
-    FaultConfig, KillSpec, PicnicConfig, SloSpec, SpecDecodeConfig, TenantSpec, TenantsConfig,
+    FaultConfig, KillSpec, KvReuseConfig, PicnicConfig, SloSpec, SpecDecodeConfig, TenantSpec,
+    TenantsConfig,
 };
 use picnic::coordinator::{
     serialized_workload_cycles, BatchPolicy, LatencyKind, Metrics, PipelineStats, Server,
     ServerConfig, SubmitSpec, TenantStats,
 };
-use picnic::models::{LlamaConfig, TrafficModel};
+use picnic::models::{LlamaConfig, PrefixSpec, TrafficModel};
 use picnic::sim::AnalyticSim;
 use picnic::util::json::{self, Json};
 use picnic::util::Pool;
@@ -71,6 +79,13 @@ const OPEN_SWEEP_REQUESTS: usize = 2000;
 const FAULT_SEED: u64 = 13;
 const FAULT_STORM_TILES: u32 = 8;
 const FAULT_SWEEP_REQUESTS: usize = 500;
+/// KV-reuse sweep shape: shared-prefix hit rate × utilization over the
+/// seeded Poisson chat mixture, with a reuse-off baseline per
+/// utilization (the hit=0 row must reproduce it byte for byte).
+const KV_HIT_RATES: [f64; 4] = [0.0, 0.3, 0.6, 0.9];
+const KV_UTILIZATIONS: [f64; 2] = [0.4, 0.7];
+const KV_SWEEP_REQUESTS: usize = 600;
+const KV_POOL_TOKENS: usize = 1 << 16;
 
 fn policy(batch: usize) -> BatchPolicy {
     BatchPolicy {
@@ -245,6 +260,41 @@ fn run_fault_open(ber: f64, rate_rps: f64, n: usize, freq: f64) -> (Metrics, Pip
     let mut s = Server::new(ServerConfig {
         picnic: PicnicConfig {
             faults: fault_cfg(ber, Vec::new()),
+            ..PicnicConfig::default()
+        },
+        model: LlamaConfig::by_name(MODEL).expect("model"),
+        policy: policy(SPEC_BATCH),
+        threads: 0,
+    });
+    for (_, spec) in model.stream(freq).take(n) {
+        s.enqueue(spec).expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+    (s.metrics.clone(), s.pipeline_stats())
+}
+
+/// One KV-reuse sweep point: the seeded Poisson chat mixture at
+/// `rate_rps`. `hit_rate = Some(h)` enables the reuse layer and
+/// attaches pooled-prefix token ids at hit probability `h`; `None` is
+/// the reuse-off baseline (no cache, no tokens) the hit=0 row must
+/// reproduce byte for byte.
+fn run_kv_open(hit_rate: Option<f64>, rate_rps: f64, n: usize, freq: f64) -> (Metrics, PipelineStats) {
+    let kv_reuse = match hit_rate {
+        Some(hit) => KvReuseConfig {
+            enabled: true,
+            pool_tokens: KV_POOL_TOKENS,
+            hit_rate: hit,
+            ..KvReuseConfig::default()
+        },
+        None => KvReuseConfig::default(),
+    };
+    let mut model = TrafficModel::poisson(OPEN_SEED, rate_rps);
+    if kv_reuse.enabled {
+        model = model.with_shared_prefixes(PrefixSpec::from(&kv_reuse));
+    }
+    let mut s = Server::new(ServerConfig {
+        picnic: PicnicConfig {
+            kv_reuse,
             ..PicnicConfig::default()
         },
         model: LlamaConfig::by_name(MODEL).expect("model"),
@@ -575,13 +625,148 @@ fn main() {
         }
     }
 
+    harness::section("kv reuse: shared-prefix hit rate × offered load");
+    println!(
+        "  pool {KV_POOL_TOKENS} tokens, {KV_SWEEP_REQUESTS} requests per point; \
+         hit=0 must be byte-identical to reuse-off"
+    );
+    // Per utilization: the reuse-off baseline first, then the hit-rate
+    // rows in ascending order (the in-loop monotonicity asserts lean on
+    // this ordering).
+    let kv_combos: Vec<(Option<f64>, f64)> = KV_UTILIZATIONS
+        .iter()
+        .flat_map(|&u| {
+            std::iter::once((None, u)).chain(KV_HIT_RATES.iter().map(move |&h| (Some(h), u)))
+        })
+        .collect();
+    let mut kv_runs: Vec<(Metrics, PipelineStats)> = Vec::new();
+    harness::bench("serve/kv_reuse_sweep_x10", 0, 1, || {
+        kv_runs = pool.par_map_index(kv_combos.len(), |i| {
+            let (hit, utilization) = kv_combos[i];
+            let rate_rps = utilization * capacity_tps / mean_gen;
+            run_kv_open(hit, rate_rps, KV_SWEEP_REQUESTS, freq)
+        });
+    });
+    let mut kv_points: Vec<Json> = Vec::new();
+    let mut kv_identity_ok = true;
+    {
+        let mut off_metrics: Option<String> = None;
+        let mut base_p99: Option<f64> = None;
+        let mut prev: Option<(u64, f64)> = None; // (cycles saved, ttft p99)
+        for (&(hit, utilization), (m, p)) in kv_combos.iter().zip(kv_runs.iter()) {
+            let rate_rps = utilization * capacity_tps / mean_gen;
+            assert_eq!(
+                m.requests.len() + m.shed_count() + m.failed_count(),
+                KV_SWEEP_REQUESTS,
+                "kv sweep point must conserve requests"
+            );
+            let ttft = m.summary(LatencyKind::Ttft);
+            let tpot = m.summary(LatencyKind::PerToken);
+            let total = m.summary(LatencyKind::Total);
+            // Only schedule-derived output goes in here — the hit=0 row
+            // must reproduce the reuse-off baseline's sub-object byte
+            // for byte (reuse counters live outside, since the cache
+            // itself legitimately differs between off and hit=0).
+            let metrics_json = json::obj(vec![
+                ("completed", json::num(m.requests.len() as f64)),
+                ("shed", json::num(m.shed_count() as f64)),
+                ("failed", json::num(m.failed_count() as f64)),
+                ("total_tokens", json::num(m.total_tokens as f64)),
+                ("wall_s", json::num(m.wall_s)),
+                ("tokens_per_s", json::num(m.throughput_tokens_per_s())),
+                ("ttft", ttft.json()),
+                ("tpot", tpot.json()),
+                ("total", total.json()),
+            ]);
+            let rendered = metrics_json.to_string();
+            match hit {
+                None => {
+                    off_metrics = Some(rendered);
+                    base_p99 = None;
+                    prev = None;
+                    println!(
+                        "  util {utilization:.1} reuse off: {:>8.1} tokens/s   \
+                         ttft p99 {:.3} ms",
+                        m.throughput_tokens_per_s(),
+                        1e3 * ttft.p99_s,
+                    );
+                }
+                Some(h) => {
+                    if h == 0.0 {
+                        assert_eq!(p.prefix_hits, 0, "hit=0 must never match");
+                        assert_eq!(p.prefill_cycles_saved, 0, "hit=0 saves nothing");
+                        let same = off_metrics.as_deref() == Some(rendered.as_str());
+                        kv_identity_ok &= same;
+                        assert!(
+                            same,
+                            "hit=0 must be byte-identical to reuse-off at util {utilization}"
+                        );
+                        base_p99 = Some(ttft.p99_s);
+                    }
+                    if let Some((prev_saved, prev_p99)) = prev {
+                        assert!(
+                            p.prefill_cycles_saved > prev_saved,
+                            "prefill cycles saved must rise with hit rate \
+                             (util {utilization}, hit {h})"
+                        );
+                        assert!(
+                            ttft.p99_s <= prev_p99,
+                            "p99 TTFT must not rise with hit rate \
+                             (util {utilization}, hit {h})"
+                        );
+                    }
+                    if h == KV_HIT_RATES[KV_HIT_RATES.len() - 1] {
+                        assert!(
+                            ttft.p99_s < base_p99.expect("hit=0 row precedes"),
+                            "p99 TTFT at the top hit rate must beat hit=0 \
+                             (util {utilization})"
+                        );
+                    }
+                    prev = Some((p.prefill_cycles_saved, ttft.p99_s));
+                    println!(
+                        "  util {utilization:.1} hit {h:.1}  : {:>8.1} tokens/s   \
+                         {} hits, {} cached tokens, {} cycles saved   ttft p99 {:.3} ms",
+                        m.throughput_tokens_per_s(),
+                        p.prefix_hits,
+                        p.hit_tokens,
+                        p.prefill_cycles_saved,
+                        1e3 * ttft.p99_s,
+                    );
+                }
+            }
+            kv_points.push(json::obj(vec![
+                ("reuse", Json::Bool(hit.is_some())),
+                ("hit_rate", json::num(hit.unwrap_or(0.0))),
+                ("utilization", json::num(utilization)),
+                ("rate_rps", json::num(rate_rps)),
+                ("requests", json::num(KV_SWEEP_REQUESTS as f64)),
+                ("prefix_hits", json::num(p.prefix_hits as f64)),
+                ("hit_tokens", json::num(p.hit_tokens as f64)),
+                (
+                    "prefill_cycles_saved",
+                    json::num(p.prefill_cycles_saved as f64),
+                ),
+                (
+                    "kv_pool_used_tokens",
+                    json::num(p.kv_pool_used_tokens as f64),
+                ),
+                (
+                    "kv_pool_evicted_blocks",
+                    json::num(p.kv_pool_evicted_blocks as f64),
+                ),
+                ("metrics", metrics_json),
+            ]));
+        }
+    }
+
     let n_points = points.len();
     let n_spec = spec_points.len();
     let n_tenancy = tenancy_points.len();
     let n_open = open_points.len();
     let n_faults = fault_points.len();
+    let n_kv = kv_points.len();
     let doc = json::obj(vec![
-        ("schema", json::num(5.0)),
+        ("schema", json::num(6.0)),
         ("model", json::s(MODEL)),
         ("prompt_len", json::num(PROMPT as f64)),
         ("gen_len", json::num(GEN as f64)),
@@ -643,10 +828,32 @@ fn main() {
                 ("points", Json::Arr(fault_points)),
             ]),
         ),
+        (
+            "kv_reuse",
+            json::obj(vec![
+                ("pool_tokens", json::num(KV_POOL_TOKENS as f64)),
+                (
+                    "block_tokens",
+                    json::num(KvReuseConfig::default().block_tokens as f64),
+                ),
+                (
+                    "prefixes",
+                    json::num(KvReuseConfig::default().prefixes as f64),
+                ),
+                (
+                    "prefix_len",
+                    json::num(KvReuseConfig::default().prefix_len as f64),
+                ),
+                ("requests_per_point", json::num(KV_SWEEP_REQUESTS as f64)),
+                ("identity_ok", Json::Bool(kv_identity_ok)),
+                ("points", Json::Arr(kv_points)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serving.json", format!("{doc}\n")).expect("write serving report");
     println!(
         "\nwrote BENCH_serving.json ({n_points} batch points, {n_spec} spec points, \
-         {n_tenancy} tenancy points, {n_open} open-loop points, {n_faults} fault points)"
+         {n_tenancy} tenancy points, {n_open} open-loop points, {n_faults} fault points, \
+         {n_kv} kv-reuse points)"
     );
 }

@@ -662,6 +662,188 @@ fn parse_kill_spec(v: &str) -> crate::Result<KillSpec> {
     })
 }
 
+/// Shared-prefix KV-cache reuse for the serving stack (ARCHITECTURE.md
+/// §KV reuse; index kept by `coordinator::kv_cache`, consumed by
+/// `coordinator::Server` at admission).
+///
+/// Enabled, the traffic generators emit deterministic token ids (seeded
+/// vocab sampling over a pool of shared system-prompt prefixes) and the
+/// server runs longest-prefix matching against a refcounted radix trie
+/// of KV blocks at admission: matched tokens skip their prefill chunks
+/// (and the photonic stage traffic those chunks would have driven), and
+/// the tenant's KV budget is charged only for the un-cached suffix.
+/// Disabled (the default) the reuse layer holds no state, the traffic
+/// model burns no extra random draws, and a run is byte-identical to a
+/// build without the feature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvReuseConfig {
+    /// Whether the reuse layer is active at all.
+    pub enabled: bool,
+    /// Shared-prefix pool budget, in KV tokens: the sum of all live
+    /// cached blocks never exceeds this (refcount-0 blocks are LRU
+    /// evicted to make room; >= block_tokens).
+    pub pool_tokens: usize,
+    /// Number of distinct shared system-prompt/few-shot prefixes the
+    /// traffic model samples from (>= 1).
+    pub prefixes: usize,
+    /// Length of each shared prefix, tokens (>= 1).
+    pub prefix_len: usize,
+    /// Probability a generated request opens with a shared prefix, in
+    /// [0, 1]. Each request's draw is independent of every other
+    /// request's (per-request derived RNG), so raising the rate only
+    /// adds hits — it never reshuffles which requests already hit.
+    pub hit_rate: f64,
+    /// KV-block granularity, tokens (>= 1): matching, refcounting and
+    /// eviction all quantize to whole blocks.
+    pub block_tokens: usize,
+    /// Synthetic vocabulary size for token sampling (>= 2).
+    pub vocab: usize,
+    /// Seed of the token stream's own PRNG (independent of the traffic
+    /// arrival seed — token sampling never perturbs arrival times).
+    pub seed: u64,
+}
+
+impl Default for KvReuseConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            pool_tokens: 65536,
+            prefixes: 8,
+            prefix_len: 128,
+            hit_rate: 0.9,
+            block_tokens: 16,
+            vocab: 32000,
+            seed: 17,
+        }
+    }
+}
+
+impl KvReuseConfig {
+    /// Reject out-of-range parameters with a message naming the field.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.pool_tokens >= 1,
+            "kv_reuse.pool_tokens must be >= 1 (got {})",
+            self.pool_tokens
+        );
+        anyhow::ensure!(
+            self.block_tokens >= 1,
+            "kv_reuse.block_tokens must be >= 1 (got {})",
+            self.block_tokens
+        );
+        anyhow::ensure!(
+            self.pool_tokens >= self.block_tokens,
+            "kv_reuse.pool_tokens must hold at least one block of {} tokens (got {})",
+            self.block_tokens,
+            self.pool_tokens
+        );
+        anyhow::ensure!(
+            self.prefixes >= 1,
+            "kv_reuse.prefixes must be >= 1 (got {})",
+            self.prefixes
+        );
+        anyhow::ensure!(
+            self.prefix_len >= 1,
+            "kv_reuse.prefix_len must be >= 1 (got {})",
+            self.prefix_len
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.hit_rate),
+            "kv_reuse.hit_rate must be in [0, 1] (got {})",
+            self.hit_rate
+        );
+        anyhow::ensure!(
+            self.vocab >= 2,
+            "kv_reuse.vocab must be >= 2 (got {})",
+            self.vocab
+        );
+        Ok(())
+    }
+
+    /// Apply the `--kv-reuse` CLI surface onto an already-loaded config
+    /// (shared by `picnic` and `examples/llama_serve.rs`):
+    /// `--kv-reuse k=v,…` overrides only the named keys — values from a
+    /// `--config` file survive — and a bare `--kv-reuse` flag just
+    /// enables the reuse layer with the loaded values. Either form sets
+    /// `enabled = true`.
+    pub fn apply_cli(&mut self, args: &crate::util::args::Args) -> crate::Result<()> {
+        if let Some(text) = args.opt("kv-reuse") {
+            *self = self.merge_cli(text)?;
+        } else if args.flag("kv-reuse") {
+            self.enabled = true;
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI shorthand `pool=65536,prefixes=8,hit=0.9` over the
+    /// built-in defaults. Keys: `pool`/`pool_tokens`, `prefixes`,
+    /// `prefix_len`, `hit`/`hit_rate`, `block`/`block_tokens`, `vocab`,
+    /// `seed`; omitted keys keep their defaults. The returned config has
+    /// `enabled = true` and is validated.
+    pub fn parse_cli(text: &str) -> crate::Result<KvReuseConfig> {
+        KvReuseConfig::default().merge_cli(text)
+    }
+
+    /// Parse the CLI shorthand onto `self` (typically the values a
+    /// `--config` file loaded): only the named keys change. The result
+    /// has `enabled = true` and is validated.
+    pub fn merge_cli(&self, text: &str) -> crate::Result<KvReuseConfig> {
+        let mut c = KvReuseConfig {
+            enabled: true,
+            ..self.clone()
+        };
+        for part in text.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--kv-reuse: expected key=value, got {part:?}"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "pool" | "pool_tokens" => {
+                    c.pool_tokens = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--kv-reuse pool {v:?}: {e}"))?
+                }
+                "prefixes" => {
+                    c.prefixes = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--kv-reuse prefixes {v:?}: {e}"))?
+                }
+                "prefix_len" => {
+                    c.prefix_len = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--kv-reuse prefix_len {v:?}: {e}"))?
+                }
+                "hit" | "hit_rate" => {
+                    c.hit_rate = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--kv-reuse hit_rate {v:?}: {e}"))?
+                }
+                "block" | "block_tokens" => {
+                    c.block_tokens = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--kv-reuse block {v:?}: {e}"))?
+                }
+                "vocab" => {
+                    c.vocab = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--kv-reuse vocab {v:?}: {e}"))?
+                }
+                "seed" => {
+                    c.seed = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--kv-reuse seed {v:?}: {e}"))?
+                }
+                other => anyhow::bail!(
+                    "--kv-reuse: unknown key {other:?} \
+                     (pool|prefixes|prefix_len|hit|block|vocab|seed)"
+                ),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+}
+
 /// Tail-latency service-level objectives for one tenant (ARCHITECTURE.md
 /// §Open-loop serving; enforced by `coordinator::Server`).
 ///
@@ -950,6 +1132,7 @@ pub struct PicnicConfig {
     pub spec_decode: SpecDecodeConfig,
     pub tenants: TenantsConfig,
     pub faults: FaultConfig,
+    pub kv_reuse: KvReuseConfig,
 }
 
 impl PicnicConfig {
@@ -1071,6 +1254,20 @@ impl PicnicConfig {
             }
         }
         c.faults.validate()?;
+        if let Some(r) = j.get("kv_reuse") {
+            c.kv_reuse.enabled = r
+                .get("enabled")
+                .and_then(Json::as_bool)
+                .unwrap_or(c.kv_reuse.enabled);
+            c.kv_reuse.pool_tokens = int(r, "pool_tokens", c.kv_reuse.pool_tokens);
+            c.kv_reuse.prefixes = int(r, "prefixes", c.kv_reuse.prefixes);
+            c.kv_reuse.prefix_len = int(r, "prefix_len", c.kv_reuse.prefix_len);
+            c.kv_reuse.hit_rate = num(r, "hit_rate", c.kv_reuse.hit_rate);
+            c.kv_reuse.block_tokens = int(r, "block_tokens", c.kv_reuse.block_tokens);
+            c.kv_reuse.vocab = int(r, "vocab", c.kv_reuse.vocab);
+            c.kv_reuse.seed = int(r, "seed", c.kv_reuse.seed as usize) as u64;
+        }
+        c.kv_reuse.validate()?;
         if let Some(t) = j.get("timing") {
             c.timing.xbar_cycles = int(t, "xbar_cycles", c.timing.xbar_cycles as usize) as u64;
             c.timing.hop_cycles = int(t, "hop_cycles", c.timing.hop_cycles as usize) as u64;
@@ -1107,7 +1304,7 @@ impl PicnicConfig {
             .map(|k| format!("{{\"tile\": {}, \"at_s\": {}}}", k.tile, k.at_s))
             .collect();
         format!(
-            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}},\n  \"tenants\": [{}],\n  \"faults\": {{\"enabled\": {}, \"seed\": {}, \"link_ber\": {}, \"max_retries\": {}, \"backoff_base_cycles\": {}, \"derate_factor\": {}, \"derate_period_cycles\": {}, \"derate_duty\": {}, \"kills\": [{}]}}\n}}\n",
+            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}},\n  \"tenants\": [{}],\n  \"faults\": {{\"enabled\": {}, \"seed\": {}, \"link_ber\": {}, \"max_retries\": {}, \"backoff_base_cycles\": {}, \"derate_factor\": {}, \"derate_period_cycles\": {}, \"derate_duty\": {}, \"kills\": [{}]}},\n  \"kv_reuse\": {{\"enabled\": {}, \"pool_tokens\": {}, \"prefixes\": {}, \"prefix_len\": {}, \"hit_rate\": {}, \"block_tokens\": {}, \"vocab\": {}, \"seed\": {}}}\n}}\n",
             self.system.bit_width,
             self.system.frequency_hz,
             self.system.ipcn_dim,
@@ -1152,6 +1349,14 @@ impl PicnicConfig {
             self.faults.derate_period_cycles,
             self.faults.derate_duty,
             kills.join(", "),
+            self.kv_reuse.enabled,
+            self.kv_reuse.pool_tokens,
+            self.kv_reuse.prefixes,
+            self.kv_reuse.prefix_len,
+            self.kv_reuse.hit_rate,
+            self.kv_reuse.block_tokens,
+            self.kv_reuse.vocab,
+            self.kv_reuse.seed,
         )
     }
 }
@@ -1532,5 +1737,83 @@ mod tests {
         assert!((merged.link_ber - 1e-7).abs() < 1e-18);
         let tiles: Vec<u32> = merged.kills.iter().map(|k| k.tile).collect();
         assert_eq!(tiles, vec![2, 4], "CLI kill schedule replaces the loaded one");
+    }
+
+    #[test]
+    fn kv_reuse_json_roundtrip() {
+        let c = PicnicConfig {
+            kv_reuse: KvReuseConfig {
+                enabled: true,
+                pool_tokens: 4096,
+                prefixes: 3,
+                prefix_len: 64,
+                hit_rate: 0.5,
+                block_tokens: 8,
+                vocab: 1000,
+                seed: 42,
+            },
+            ..PicnicConfig::default()
+        };
+        let back = PicnicConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.kv_reuse.pool_tokens, 4096);
+    }
+
+    #[test]
+    fn kv_reuse_invalid_values_rejected() {
+        for (json, field) in [
+            (r#"{"kv_reuse": {"pool_tokens": 0}}"#, "pool_tokens"),
+            (r#"{"kv_reuse": {"block_tokens": 0}}"#, "block_tokens"),
+            (
+                r#"{"kv_reuse": {"pool_tokens": 4, "block_tokens": 16}}"#,
+                "pool_tokens",
+            ),
+            (r#"{"kv_reuse": {"prefixes": 0}}"#, "prefixes"),
+            (r#"{"kv_reuse": {"prefix_len": 0}}"#, "prefix_len"),
+            (r#"{"kv_reuse": {"hit_rate": 1.5}}"#, "hit_rate"),
+            (r#"{"kv_reuse": {"hit_rate": -0.1}}"#, "hit_rate"),
+            (r#"{"kv_reuse": {"vocab": 1}}"#, "vocab"),
+        ] {
+            let err = PicnicConfig::from_json(json).unwrap_err();
+            assert!(
+                err.to_string().contains(field),
+                "error for {json} must name {field}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn kv_reuse_cli_shorthand() {
+        let c = KvReuseConfig::parse_cli("pool=65536,prefixes=8").unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.pool_tokens, 65536);
+        assert_eq!(c.prefixes, 8);
+        assert_eq!(c.prefix_len, 128, "omitted keys keep defaults");
+        let c = KvReuseConfig::parse_cli("hit=0.25,block=32,vocab=500,seed=9,prefix_len=40")
+            .unwrap();
+        assert!((c.hit_rate - 0.25).abs() < 1e-12);
+        assert_eq!(c.block_tokens, 32);
+        assert_eq!(c.vocab, 500);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.prefix_len, 40);
+        assert!(KvReuseConfig::parse_cli("").unwrap().enabled, "bare spec enables");
+        assert!(KvReuseConfig::parse_cli("pool=0").is_err(), "zero pool rejected");
+        assert!(KvReuseConfig::parse_cli("nope=1").is_err(), "unknown key rejected");
+        assert!(KvReuseConfig::parse_cli("pool").is_err(), "malformed pair rejected");
+    }
+
+    #[test]
+    fn kv_reuse_cli_merges_onto_loaded_config() {
+        let from_file = KvReuseConfig {
+            enabled: false,
+            pool_tokens: 1024,
+            prefixes: 2,
+            ..KvReuseConfig::default()
+        };
+        let merged = from_file.merge_cli("hit=0.1").unwrap();
+        assert!(merged.enabled);
+        assert_eq!(merged.pool_tokens, 1024, "file values survive the merge");
+        assert_eq!(merged.prefixes, 2);
+        assert!((merged.hit_rate - 0.1).abs() < 1e-12);
     }
 }

@@ -11,8 +11,15 @@
 //! * each tenant's reserved KV never exceeds its own
 //!   [`TenantSpec::kv_budget`] (when set) — a tenant's oversized head
 //!   blocks only its own lane, never its neighbours';
-//! * decode-phase requests are scheduled before new prefills.
+//! * decode-phase requests are scheduled before new prefills;
+//! * with a [`KvPrefixCache`] attached ([`Batcher::admit_at_with`]), a
+//!   request is charged only for its un-cached suffix
+//!   (`kv_reservation` net of [`Request::prefix_hit_tokens`]), and the
+//!   reservation released at reap equals the one taken at admission —
+//!   `prefix_hit_tokens` is set once, before reserving, and never
+//!   changes.
 
+use super::kv_cache::KvPrefixCache;
 use super::request::{Request, RequestId, RequestState};
 use crate::config::{TenantSpec, TenantsConfig};
 use std::collections::{HashMap, VecDeque};
@@ -262,6 +269,29 @@ impl Batcher {
     /// SLO overrides deeper in a lane are shed when they reach the
     /// front).
     pub fn admit_at(&mut self, now_cycle: u64, freq_hz: f64) -> Admission {
+        self.admit_at_with(now_cycle, freq_hz, None)
+    }
+
+    /// [`Batcher::admit_at`] with an optional shared-prefix KV cache.
+    ///
+    /// For each head carrying token ids, the cache is probed read-only
+    /// *before* the budget checks: the matched prefix (capped at
+    /// `prompt_len - 1` so every request still prefills at least one
+    /// token) is subtracted from the head's KV reservation, since the
+    /// cached blocks live in the shared reuse pool, not the tenant's
+    /// scratchpad budget. Once a head passes the budget checks and pops,
+    /// the same prefix is acquired (refcounted) and the un-cached full
+    /// blocks are inserted for later requests; the request starts with
+    /// `prefilled = prefix_hit_tokens`, so prefill resumes from the hit
+    /// boundary. Probe-then-acquire keeps a budget-blocked head
+    /// lease-free — nothing to roll back — and the two agree exactly
+    /// because no cache mutation happens in between.
+    pub fn admit_at_with(
+        &mut self,
+        now_cycle: u64,
+        freq_hz: f64,
+        mut cache: Option<&mut KvPrefixCache>,
+    ) -> Admission {
         let mut out = Admission::default();
         for lane in self.lanes.iter_mut() {
             loop {
@@ -281,11 +311,12 @@ impl Batcher {
         let mut blocked = vec![false; self.lanes.len()];
         while self.inflight.len() < self.policy.max_batch {
             let Some(i) = self.pick_lane(&blocked) else { break };
-            let kv_needed = self.lanes[i]
-                .queue
-                .front()
-                .expect("picked lane has a head")
-                .kv_reservation();
+            let head = self.lanes[i].queue.front().expect("picked lane has a head");
+            let hit = match (cache.as_deref(), head.tokens.as_ref()) {
+                (Some(c), Some(t)) => c.probe(t).min(head.prompt_len.saturating_sub(1)),
+                _ => 0,
+            };
+            let kv_needed = head.kv_reservation() - hit;
             if !self.inflight.is_empty()
                 && self.inflight_kv_reserved() + kv_needed > self.policy.kv_budget
             {
@@ -301,6 +332,13 @@ impl Batcher {
             }
             let mut r = self.lanes[i].queue.pop_front().unwrap();
             r.state = RequestState::Prefilling;
+            if let (Some(c), Some(t)) = (cache.as_deref_mut(), r.tokens.as_ref()) {
+                let matched = c.acquire(r.id, t).min(r.prompt_len.saturating_sub(1));
+                debug_assert_eq!(matched, hit, "probe/acquire must agree");
+                r.prefix_hit_tokens = matched;
+                r.prefilled = matched;
+                debug_assert_eq!(r.kv_reservation(), kv_needed);
+            }
             self.lanes[i].reserved_kv += kv_needed;
             out.admitted.push(r.id);
             self.index.insert(r.id, self.inflight.len());
@@ -344,6 +382,15 @@ impl Batcher {
     /// either way: a request killed by hardware must not pin scratchpad
     /// capacity it will never use.
     pub fn reap(&mut self) -> usize {
+        self.reap_with(None)
+    }
+
+    /// [`Batcher::reap`] that also drops each reaped request's KV-cache
+    /// lease (its cached prefix blocks become LRU-evictable once no
+    /// other in-flight request references them). Shed requests never
+    /// acquired a lease — shedding happens before admission — so only
+    /// reaped (Done/Failed) requests release here.
+    pub fn reap_with(&mut self, mut cache: Option<&mut KvPrefixCache>) -> usize {
         let before = self.inflight.len();
         let (done, still): (Vec<Request>, Vec<Request>) = self
             .inflight
@@ -352,6 +399,9 @@ impl Batcher {
         for r in &done {
             let lane = &mut self.lanes[r.tenant];
             lane.reserved_kv = lane.reserved_kv.saturating_sub(r.kv_reservation());
+            if let Some(c) = cache.as_deref_mut() {
+                c.release(r.id);
+            }
         }
         self.done.extend(done);
         self.inflight = still;
@@ -529,6 +579,43 @@ mod tests {
         assert_eq!(b.tenant_reserved_kv(1), 40);
         assert_eq!(b.done().len(), 1);
         assert_eq!(b.done()[0].state, RequestState::Failed);
+    }
+
+    #[test]
+    fn prefix_hits_charge_only_the_suffix() {
+        use super::super::kv_cache::KvPrefixCache;
+        use crate::config::KvReuseConfig;
+        let mut cache = KvPrefixCache::new(&KvReuseConfig {
+            enabled: true,
+            pool_tokens: 1024,
+            block_tokens: 16,
+            ..KvReuseConfig::default()
+        });
+        let mut b = Batcher::with_tenants(BatchPolicy::default(), &two_tenants(1000, 1000));
+        let tokens: Vec<u32> = (0..64).collect();
+        let mut warm = Request::new_for_tenant(0, 0, 64, 8, 0);
+        warm.tokens = Some(tokens.clone());
+        b.enqueue(warm);
+        b.admit_at_with(0, 1e9, Some(&mut cache));
+        assert_eq!(b.tenant_reserved_kv(0), 72, "cold request pays in full");
+        b.inflight_by_id(0).unwrap().state = RequestState::Done;
+        b.reap_with(Some(&mut cache));
+        assert_eq!(b.tenant_reserved_kv(0), 0);
+        // same prompt again: all four blocks (64 tokens) match, capped
+        // at prompt_len - 1 = 63 so at least one prefill token runs
+        let mut reuse = Request::new_for_tenant(1, 0, 64, 8, 0);
+        reuse.tokens = Some(tokens);
+        b.enqueue(reuse);
+        b.admit_at_with(0, 1e9, Some(&mut cache));
+        let r = b.inflight_by_id(1).unwrap();
+        assert_eq!(r.prefix_hit_tokens, 63, "full-prompt hit capped");
+        assert_eq!(r.prefilled, 63, "prefill resumes at the boundary");
+        assert_eq!(b.tenant_reserved_kv(0), 64 + 8 - 63);
+        b.inflight_by_id(1).unwrap().state = RequestState::Done;
+        b.reap_with(Some(&mut cache));
+        assert_eq!(b.tenant_reserved_kv(0), 0, "suffix reservation released");
+        cache.check_invariants().unwrap();
+        assert_eq!(cache.total_refcount(), 0, "all leases released");
     }
 
     #[test]

@@ -1,0 +1,491 @@
+//! Shared-prefix KV cache: a refcounted radix trie over token ids
+//! (ARCHITECTURE.md §KV reuse).
+//!
+//! Millions of users share system prompts and few-shot prefixes, so
+//! prefill on the photonic pipeline is massively redundant. This module
+//! keeps the index that removes the redundancy: prompts are quantized
+//! into fixed-size token **blocks** ([`crate::config::KvReuseConfig`]
+//! `block_tokens`), and each cached block is one trie node whose edge is
+//! labelled by the block's token ids. At admission the server
+//! longest-prefix-matches a request's prompt against the trie
+//! ([`KvPrefixCache::acquire`]); matched tokens skip their prefill
+//! chunks entirely, and the un-matched full blocks are inserted so later
+//! requests can hit them.
+//!
+//! Invariants (property-checked in `rust/tests/test_kv_reuse.rs` via
+//! [`KvPrefixCache::check_invariants`]):
+//!
+//! * **Refcount conservation** — every live lease holds exactly one
+//!   reference on each node of its matched+inserted path, so the sum of
+//!   all refcounts equals the sum of live-lease path depths, and a fully
+//!   drained cache has every refcount at 0.
+//! * **Eviction safety** — only refcount-0 **leaf** nodes are evicted
+//!   (an interior node's children would dangle; a referenced node's KV
+//!   is in use by an in-flight request), least-recently-released first.
+//! * **Pool accounting** — `used_tokens` equals the sum of live block
+//!   sizes and never exceeds the configured pool budget; when the pool
+//!   is full of referenced blocks, insertion is refused (counted in
+//!   [`KvReuseStats::rejected_blocks`]) rather than over-committed.
+//!
+//! Everything is deterministic: no randomness, no clocks — the LRU
+//! ordering is a logical release counter, and ties break on the lower
+//! arena slot.
+
+use std::collections::HashMap;
+
+use super::request::RequestId;
+use crate::config::KvReuseConfig;
+
+/// Arena slot of the root node (empty prefix; never evicted, never
+/// refcounted).
+const ROOT: usize = 0;
+/// `parent` sentinel marking a free arena slot.
+const FREE: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// Token-id block labelling the edge from `parent` (empty only for
+    /// the root).
+    key: Vec<u32>,
+    parent: usize,
+    children: Vec<usize>,
+    /// Live leases whose path passes through this node.
+    refcount: usize,
+    /// Logical LRU stamp: set to the release counter each time a lease
+    /// holding this node releases. Refcount-0 nodes evict in ascending
+    /// `(last_used, slot)` order.
+    last_used: u64,
+}
+
+/// Counters the cache keeps about itself (raw trie-level view; the
+/// serving metrics count *effective* hits, capped so every request
+/// prefills at least one token).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvReuseStats {
+    /// `acquire` calls.
+    pub lookups: u64,
+    /// `acquire` calls that matched at least one block.
+    pub hits: u64,
+    /// Total tokens matched across all acquires (uncapped).
+    pub hit_tokens: u64,
+    /// Blocks newly inserted into the trie.
+    pub inserted_blocks: u64,
+    /// Refcount-0 blocks LRU-evicted to make room.
+    pub evicted_blocks: u64,
+    /// Blocks that could not be inserted because the pool was full of
+    /// referenced blocks (never over-committed instead).
+    pub rejected_blocks: u64,
+}
+
+/// The refcounted radix trie of shared-prefix KV blocks.
+///
+/// ```
+/// use picnic::config::KvReuseConfig;
+/// use picnic::coordinator::KvPrefixCache;
+///
+/// let cfg = KvReuseConfig { block_tokens: 4, pool_tokens: 64, ..KvReuseConfig::default() };
+/// let mut cache = KvPrefixCache::new(&cfg);
+/// let prompt: Vec<u32> = (0..10).collect();
+/// assert_eq!(cache.acquire(1, &prompt), 0, "cold: nothing cached yet");
+/// // the two full blocks (8 tokens) are now cached; the 2-token tail is not
+/// assert_eq!(cache.acquire(2, &prompt), 8, "warm: both blocks hit");
+/// cache.release(1);
+/// cache.release(2);
+/// assert_eq!(cache.used_tokens(), 8, "blocks stay cached after release");
+/// ```
+#[derive(Debug)]
+pub struct KvPrefixCache {
+    block_tokens: usize,
+    pool_tokens: usize,
+    nodes: Vec<Node>,
+    /// Recycled arena slots (their `parent` is [`FREE`]).
+    free: Vec<usize>,
+    /// request id → deepest node of the path it holds referenced.
+    leases: HashMap<RequestId, usize>,
+    /// Sum of live (non-root) block sizes, tokens.
+    used_tokens: usize,
+    /// Monotone release counter driving the LRU order.
+    clock: u64,
+    stats: KvReuseStats,
+}
+
+impl KvPrefixCache {
+    pub fn new(cfg: &KvReuseConfig) -> KvPrefixCache {
+        cfg.validate().expect("invalid KvReuseConfig");
+        KvPrefixCache {
+            block_tokens: cfg.block_tokens,
+            pool_tokens: cfg.pool_tokens,
+            nodes: vec![Node {
+                key: Vec::new(),
+                parent: ROOT,
+                children: Vec::new(),
+                refcount: 0,
+                last_used: 0,
+            }],
+            free: Vec::new(),
+            leases: HashMap::new(),
+            used_tokens: 0,
+            clock: 0,
+            stats: KvReuseStats::default(),
+        }
+    }
+
+    /// Longest-prefix match without touching refcounts or inserting:
+    /// returns the matched token count (a multiple of `block_tokens`).
+    /// Admission uses this to price a head-of-line request's KV
+    /// reservation before committing to admit it.
+    pub fn probe(&self, tokens: &[u32]) -> usize {
+        let mut cur = ROOT;
+        let mut matched = 0usize;
+        for block in tokens.chunks_exact(self.block_tokens) {
+            match self.child_with_key(cur, block) {
+                Some(c) => {
+                    cur = c;
+                    matched += block.len();
+                }
+                None => break,
+            }
+        }
+        matched
+    }
+
+    /// Admission-time lookup for request `id`: longest-prefix match the
+    /// prompt, take one reference on every matched node, then insert the
+    /// remaining full blocks (each born referenced by this lease) so
+    /// later requests can hit them — evicting refcount-0 LRU leaves if
+    /// the pool is full. Returns the **matched** token count (the reuse
+    /// boundary; insertion never counts as a hit). The trailing partial
+    /// block of a prompt is never cached.
+    ///
+    /// The result always equals what [`KvPrefixCache::probe`] returned
+    /// immediately before — acquire only adds blocks *after* the matched
+    /// path. Every acquire must be paired with exactly one
+    /// [`KvPrefixCache::release`] when the request reaches a terminal
+    /// state.
+    pub fn acquire(&mut self, id: RequestId, tokens: &[u32]) -> usize {
+        debug_assert!(
+            !self.leases.contains_key(&id),
+            "request {id} already holds a lease"
+        );
+        self.stats.lookups += 1;
+        let mut cur = ROOT;
+        let mut matched = 0usize;
+        let mut insert_from = 0usize;
+        for block in tokens.chunks_exact(self.block_tokens) {
+            match self.child_with_key(cur, block) {
+                Some(c) => {
+                    self.nodes[c].refcount += 1;
+                    cur = c;
+                    matched += block.len();
+                    insert_from += 1;
+                }
+                None => break,
+            }
+        }
+        if matched > 0 {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += matched as u64;
+        }
+        // Insert the un-matched full blocks, each held by this lease so
+        // eviction can't free them while the request is in flight.
+        for block in tokens.chunks_exact(self.block_tokens).skip(insert_from) {
+            if !self.make_room(block.len()) {
+                self.stats.rejected_blocks += 1;
+                break;
+            }
+            let node = Node {
+                key: block.to_vec(),
+                parent: cur,
+                children: Vec::new(),
+                refcount: 1,
+                last_used: self.clock,
+            };
+            let slot = match self.free.pop() {
+                Some(s) => {
+                    self.nodes[s] = node;
+                    s
+                }
+                None => {
+                    self.nodes.push(node);
+                    self.nodes.len() - 1
+                }
+            };
+            self.nodes[cur].children.push(slot);
+            self.used_tokens += block.len();
+            self.stats.inserted_blocks += 1;
+            cur = slot;
+        }
+        if cur != ROOT {
+            self.leases.insert(id, cur);
+        }
+        matched
+    }
+
+    /// Drop request `id`'s references: walk its held path leaf → root,
+    /// decrementing each refcount and stamping the LRU clock. The blocks
+    /// stay cached (that is the point — the next request with the same
+    /// prefix hits them); they only leave the pool when eviction needs
+    /// the room. No-op for requests that never acquired (shed before
+    /// admission, reuse disabled, or no token ids).
+    pub fn release(&mut self, id: RequestId) {
+        let Some(mut cur) = self.leases.remove(&id) else {
+            return;
+        };
+        self.clock += 1;
+        while cur != ROOT {
+            let n = &mut self.nodes[cur];
+            debug_assert!(n.refcount > 0, "release without matching acquire");
+            n.refcount -= 1;
+            n.last_used = self.clock;
+            cur = n.parent;
+        }
+    }
+
+    fn child_with_key(&self, node: usize, key: &[u32]) -> Option<usize> {
+        self.nodes[node]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].key == key)
+    }
+
+    /// Evict refcount-0 LRU leaves until `need` more tokens fit; false
+    /// if the pool is pinned full by referenced blocks.
+    fn make_room(&mut self, need: usize) -> bool {
+        while self.used_tokens + need > self.pool_tokens {
+            let Some(victim) = self.lru_victim() else {
+                return false;
+            };
+            self.evict(victim);
+        }
+        true
+    }
+
+    /// The childless refcount-0 node with the oldest `(last_used, slot)`
+    /// — deterministic LRU among evictable leaves.
+    fn lru_victim(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, n) in self.nodes.iter().enumerate().skip(1) {
+            if n.parent == FREE || n.refcount > 0 || !n.children.is_empty() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => (n.last_used, i) < (self.nodes[b].last_used, b),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    fn evict(&mut self, slot: usize) {
+        debug_assert_ne!(slot, ROOT);
+        debug_assert_eq!(self.nodes[slot].refcount, 0);
+        debug_assert!(self.nodes[slot].children.is_empty());
+        let parent = self.nodes[slot].parent;
+        self.nodes[parent].children.retain(|&c| c != slot);
+        self.used_tokens -= self.nodes[slot].key.len();
+        self.nodes[slot].parent = FREE;
+        self.nodes[slot].key = Vec::new();
+        self.free.push(slot);
+        self.stats.evicted_blocks += 1;
+    }
+
+    pub fn stats(&self) -> KvReuseStats {
+        self.stats
+    }
+
+    /// Tokens held by live cached blocks (≤ the pool budget).
+    pub fn used_tokens(&self) -> usize {
+        self.used_tokens
+    }
+
+    pub fn pool_tokens(&self) -> usize {
+        self.pool_tokens
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Live (non-root, non-free) trie nodes == cached blocks.
+    pub fn live_blocks(&self) -> usize {
+        self.nodes.len() - 1 - self.free.len()
+    }
+
+    /// Requests currently holding references.
+    pub fn live_leases(&self) -> usize {
+        self.leases.len()
+    }
+
+    /// Sum of all node refcounts (== sum of live-lease path depths; 0
+    /// once every request has released).
+    pub fn total_refcount(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.parent != FREE)
+            .map(|n| n.refcount)
+            .sum()
+    }
+
+    /// Structural self-check, used by the property suite after every
+    /// operation: pool accounting, parent/child consistency, refcount
+    /// conservation against the live lease set, and the budget bound.
+    pub fn check_invariants(&self) -> crate::Result<()> {
+        let mut live_tokens = 0usize;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if i == ROOT {
+                anyhow::ensure!(n.key.is_empty() && n.refcount == 0, "root must stay empty");
+                continue;
+            }
+            if n.parent == FREE {
+                anyhow::ensure!(
+                    self.free.contains(&i),
+                    "free-marked node {i} missing from the free list"
+                );
+                continue;
+            }
+            live_tokens += n.key.len();
+            anyhow::ensure!(
+                n.key.len() == self.block_tokens,
+                "live node {i} holds a partial block"
+            );
+            anyhow::ensure!(
+                self.nodes[n.parent].children.contains(&i),
+                "node {i} missing from parent {}'s children",
+                n.parent
+            );
+        }
+        anyhow::ensure!(
+            live_tokens == self.used_tokens,
+            "used_tokens {} != sum of live blocks {live_tokens}",
+            self.used_tokens
+        );
+        anyhow::ensure!(
+            self.used_tokens <= self.pool_tokens,
+            "pool over budget: {} > {}",
+            self.used_tokens,
+            self.pool_tokens
+        );
+        // Refcount conservation: replay every live lease's path.
+        let mut expected = vec![0usize; self.nodes.len()];
+        for (&id, &leaf) in &self.leases {
+            let mut cur = leaf;
+            let mut depth = 0usize;
+            while cur != ROOT {
+                anyhow::ensure!(
+                    self.nodes[cur].parent != FREE,
+                    "lease of request {id} passes through freed node {cur}"
+                );
+                expected[cur] += 1;
+                cur = self.nodes[cur].parent;
+                depth += 1;
+                anyhow::ensure!(depth <= self.nodes.len(), "cycle in trie parents");
+            }
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if i == ROOT || n.parent == FREE {
+                continue;
+            }
+            anyhow::ensure!(
+                n.refcount == expected[i],
+                "node {i} refcount {} != {} live-lease references",
+                n.refcount,
+                expected[i]
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pool: usize, block: usize) -> KvReuseConfig {
+        KvReuseConfig {
+            enabled: true,
+            pool_tokens: pool,
+            block_tokens: block,
+            ..KvReuseConfig::default()
+        }
+    }
+
+    #[test]
+    fn cold_then_warm_hits_whole_blocks_only() {
+        let mut c = KvPrefixCache::new(&cfg(1024, 4));
+        let prompt: Vec<u32> = (100..110).collect(); // 2.5 blocks
+        assert_eq!(c.probe(&prompt), 0);
+        assert_eq!(c.acquire(1, &prompt), 0);
+        assert_eq!(c.used_tokens(), 8, "only full blocks cached");
+        assert_eq!(c.probe(&prompt), 8);
+        assert_eq!(c.acquire(2, &prompt), 8);
+        c.check_invariants().unwrap();
+        c.release(1);
+        c.release(2);
+        c.check_invariants().unwrap();
+        assert_eq!(c.total_refcount(), 0);
+        assert_eq!(c.used_tokens(), 8, "released blocks stay cached");
+    }
+
+    #[test]
+    fn diverging_prompts_share_the_common_prefix() {
+        let mut c = KvPrefixCache::new(&cfg(1024, 2));
+        c.acquire(1, &[1, 2, 3, 4, 5, 6]);
+        // same first block, diverges at the second
+        assert_eq!(c.acquire(2, &[1, 2, 9, 9]), 2);
+        c.check_invariants().unwrap();
+        assert_eq!(c.used_tokens(), 8, "3 + 1 distinct blocks");
+        c.release(1);
+        c.release(2);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_only_touches_unreferenced_leaves() {
+        // pool of exactly 2 blocks
+        let mut c = KvPrefixCache::new(&cfg(4, 2));
+        c.acquire(1, &[1, 2, 3, 4]); // fills the pool, both blocks held
+        let got = c.acquire(2, &[9, 9]); // pool pinned: insertion refused
+        assert_eq!(got, 0);
+        assert_eq!(c.stats().rejected_blocks, 1);
+        assert_eq!(c.used_tokens(), 4, "referenced blocks never evicted");
+        c.check_invariants().unwrap();
+        c.release(1);
+        // now the leaf [3,4] is evictable; the interior [1,2] only after
+        c.acquire(3, &[9, 9]);
+        c.check_invariants().unwrap();
+        assert_eq!(c.stats().evicted_blocks, 1);
+        assert_eq!(c.probe(&[1, 2]), 2, "interior block survives");
+        assert_eq!(c.probe(&[1, 2, 3, 4]), 2, "old leaf evicted");
+        c.release(3);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_prefers_the_longest_released() {
+        let mut c = KvPrefixCache::new(&cfg(4, 2));
+        c.acquire(1, &[1, 1]);
+        c.acquire(2, &[2, 2]);
+        c.release(1); // [1,1] released first → older stamp
+        c.release(2);
+        c.acquire(3, &[3, 3]); // needs room: [1,1] must go
+        assert_eq!(c.probe(&[1, 1]), 0, "LRU victim");
+        assert_eq!(c.probe(&[2, 2]), 2, "younger block survives");
+        c.release(3);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_without_lease_is_a_noop() {
+        let mut c = KvPrefixCache::new(&cfg(64, 4));
+        c.release(42);
+        // short prompt: no full block, no lease
+        assert_eq!(c.acquire(1, &[7]), 0);
+        assert_eq!(c.live_leases(), 0);
+        c.release(1);
+        c.check_invariants().unwrap();
+    }
+}

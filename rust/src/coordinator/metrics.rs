@@ -110,6 +110,13 @@ pub struct Metrics {
     pub failed: Vec<FailRecord>,
     pub total_tokens: u64,
     pub wall_s: f64,
+    /// Admitted requests whose prompt matched a cached KV prefix (0
+    /// unless KV reuse is enabled).
+    pub prefix_hits: u64,
+    /// Prompt tokens served from cached prefixes across those hits.
+    pub hit_tokens: u64,
+    /// Prefill cycles the cached prefixes saved across the run.
+    pub prefill_cycles_saved: u64,
     /// Ids already recorded — makes `record` idempotent in O(1). The
     /// server passes each finished request exactly once (the newly reaped
     /// tail), so this is defense in depth for other callers that replay
@@ -183,6 +190,17 @@ impl Metrics {
         self.failed.len()
     }
 
+    /// Record one admission-time prefix hit: `tokens` prompt tokens
+    /// served from the KV cache, saving `cycles_saved` prefill cycles.
+    /// Unlike the terminal-state recorders this is a plain tally — a
+    /// request has exactly one admission, so there is no replay to
+    /// guard against.
+    pub fn record_prefix_hit(&mut self, tokens: usize, cycles_saved: u64) {
+        self.prefix_hits += 1;
+        self.hit_tokens += tokens as u64;
+        self.prefill_cycles_saved += cycles_saved;
+    }
+
     /// The raw series behind [`Metrics::summary`] (completed requests
     /// only, in completion-record order).
     pub fn series(&self, kind: LatencyKind) -> Vec<f64> {
@@ -213,20 +231,6 @@ impl Metrics {
         }
     }
 
-    #[deprecated(note = "use Metrics::summary(LatencyKind::Ttft).mean_s")]
-    pub fn mean_ttft_s(&self) -> f64 {
-        self.summary(LatencyKind::Ttft).mean_s
-    }
-
-    #[deprecated(note = "use Metrics::summary(LatencyKind::Total).p50_s")]
-    pub fn p50_total_s(&self) -> f64 {
-        self.summary(LatencyKind::Total).p50_s
-    }
-
-    #[deprecated(note = "use Metrics::summary(LatencyKind::Total).p99_s")]
-    pub fn p99_total_s(&self) -> f64 {
-        self.summary(LatencyKind::Total).p99_s
-    }
 }
 
 /// The `q`-th percentile (0 < q ≤ 1) of `values` by the nearest-rank
@@ -331,17 +335,13 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)] // the one test keeping the legacy wrappers honest
-    fn summary_matches_legacy_accessors() {
+    fn summary_orders_percentiles_on_monotone_series() {
         let mut m = Metrics::default();
         for (id, done) in [(1u64, 100u64), (2, 400), (3, 900), (4, 1600)] {
             m.record(&done_request(id, 0, done / 2, done, 4), 0, 1e9);
         }
         let total = m.summary(LatencyKind::Total);
         assert_eq!(total.n, 4);
-        assert!((total.p50_s - m.p50_total_s()).abs() < 1e-18);
-        assert!((total.p99_s - m.p99_total_s()).abs() < 1e-18);
-        assert!((m.summary(LatencyKind::Ttft).mean_s - m.mean_ttft_s()).abs() < 1e-18);
         // p95 sits between p50 and p99 on a monotone series
         assert!(total.p50_s <= total.p95_s && total.p95_s <= total.p99_s);
     }
@@ -426,5 +426,81 @@ mod tests {
         let skewed = jain_index(&[100.0, 1.0, 1.0, 1.0]);
         assert!(skewed > 0.25 && skewed < 0.5, "monopoly approaches 1/n");
         assert_eq!(jain_index(&[0.0, 0.0]), 1.0, "no traffic = trivially fair");
+    }
+
+    // Edge-case pins: the exact behavior of the helpers on degenerate
+    // inputs is part of the public contract (CLIs and the bench lean on
+    // these being total, never panicking).
+
+    #[test]
+    fn percentile_empty_input_is_zero_for_every_q() {
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile(&[], q), 0.0, "empty series pins to 0.0");
+        }
+    }
+
+    #[test]
+    fn percentile_single_element_is_that_element() {
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&[42.5], q), 42.5, "q = {q}");
+        }
+    }
+
+    #[test]
+    fn percentile_all_equal_input_is_that_value() {
+        let v = [7.25; 9];
+        for q in [0.01, 0.5, 0.99] {
+            assert_eq!(percentile(&v, q), 7.25, "q = {q}");
+        }
+    }
+
+    #[test]
+    fn percentile_tiny_q_clamps_to_smallest_element() {
+        // nearest-rank with ceil(n·q) = 1 → the minimum, never an
+        // out-of-range index
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 0.0001), 1.0);
+    }
+
+    #[test]
+    fn jain_index_degenerate_inputs_are_fair() {
+        assert_eq!(jain_index(&[]), 1.0, "no tenants: nobody shorted");
+        assert_eq!(jain_index(&[123.0]), 1.0, "one tenant is always fair");
+        assert_eq!(jain_index(&[0.0]), 1.0, "single idle tenant");
+    }
+
+    #[test]
+    fn latency_summary_single_element() {
+        let s = LatencySummary::of(&[0.25]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean_s, 0.25);
+        assert_eq!(s.p50_s, 0.25);
+        assert_eq!(s.p95_s, 0.25);
+        assert_eq!(s.p99_s, 0.25, "every percentile is the lone sample");
+    }
+
+    #[test]
+    fn latency_summary_all_equal_collapses() {
+        let s = LatencySummary::of(&[2.0; 16]);
+        assert_eq!(s.n, 16);
+        assert_eq!(s.mean_s, 2.0);
+        assert_eq!((s.p50_s, s.p95_s, s.p99_s), (2.0, 2.0, 2.0));
+    }
+
+    #[test]
+    fn latency_summary_empty_is_all_zero() {
+        let s = LatencySummary::of(&[]);
+        assert_eq!(s, LatencySummary::default());
+        assert_eq!(s.json().get("n").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn prefix_hit_tally_accumulates() {
+        let mut m = Metrics::default();
+        assert_eq!((m.prefix_hits, m.hit_tokens, m.prefill_cycles_saved), (0, 0, 0));
+        m.record_prefix_hit(48, 1000);
+        m.record_prefix_hit(16, 250);
+        assert_eq!(m.prefix_hits, 2);
+        assert_eq!(m.hit_tokens, 64);
+        assert_eq!(m.prefill_cycles_saved, 1250);
     }
 }

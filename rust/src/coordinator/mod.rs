@@ -90,13 +90,31 @@
 //! whole layer is pay-for-use: disabled (or zero-fault) configs run
 //! byte-identically to a server with no fault model. See
 //! ARCHITECTURE.md §Fault tolerance.
+//!
+//! ## KV reuse
+//!
+//! With [`crate::config::KvReuseConfig`] enabled, requests carry real
+//! token ids ([`SubmitSpec::with_tokens`], generated deterministically
+//! by [`crate::models::TrafficModel::with_shared_prefixes`]) and the
+//! server keeps a [`KvPrefixCache`]: a refcounted radix trie over
+//! fixed-size token blocks with LRU eviction of unreferenced leaves
+//! under a shared pool budget. At admission the batcher longest-prefix
+//! matches the prompt, charges the tenant's KV budget only for the
+//! un-cached suffix, and prefill resumes from the hit boundary —
+//! skipping those chunks' pipeline cycles and photonic stage traffic.
+//! Per-tenant `prefix_hits` / `hit_tokens` / `prefill_cycles_saved`
+//! surface in [`TenantStats`] and [`Metrics`]. Like the fault layer,
+//! reuse is pay-for-use: disabled (or zero-hit) runs are byte-identical
+//! to a server without the cache. See ARCHITECTURE.md §KV reuse.
 
 mod batcher;
+mod kv_cache;
 mod metrics;
 mod request;
 mod server;
 
 pub use batcher::{Admission, Batcher, BatchPolicy};
+pub use kv_cache::{KvPrefixCache, KvReuseStats};
 pub use metrics::{
     jain_index, percentile, FailRecord, LatencyKind, LatencySummary, Metrics, RequestMetrics,
     ShedRecord,

@@ -41,7 +41,7 @@ pub enum RequestState {
 /// way real traffic doesn't wait for the server's permission to exist.
 /// Without it the request arrives "now" and the classic closed-loop
 /// backpressure (bounded admission queue) applies.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SubmitSpec {
     /// Prompt length in tokens (> 0).
     pub prompt_len: usize,
@@ -55,6 +55,13 @@ pub struct SubmitSpec {
     /// Per-request SLO override; `None` inherits the owning tenant's
     /// [`SloSpec`].
     pub slo: Option<SloSpec>,
+    /// Prompt token ids (length == `prompt_len` when present). Only
+    /// consulted by the shared-prefix KV-reuse layer
+    /// ([`crate::config::KvReuseConfig`]): with reuse enabled, admission
+    /// longest-prefix-matches these against the cached-block trie and
+    /// prefill resumes from the hit boundary. Without token ids (or with
+    /// reuse disabled) the request always prefills from scratch.
+    pub tokens: Option<Vec<u32>>,
 }
 
 impl SubmitSpec {
@@ -66,6 +73,7 @@ impl SubmitSpec {
             tenant: 0,
             arrival_cycle: None,
             slo: None,
+            tokens: None,
         }
     }
 
@@ -85,6 +93,18 @@ impl SubmitSpec {
     /// Override the owning tenant's SLO for this request alone.
     pub fn with_slo(mut self, slo: SloSpec) -> SubmitSpec {
         self.slo = Some(slo);
+        self
+    }
+
+    /// Attach the prompt's token ids (must match `prompt_len`), making
+    /// the request eligible for shared-prefix KV reuse.
+    pub fn with_tokens(mut self, tokens: Vec<u32>) -> SubmitSpec {
+        debug_assert_eq!(
+            tokens.len(),
+            self.prompt_len,
+            "token ids must cover exactly the prompt"
+        );
+        self.tokens = Some(tokens);
         self
     }
 }
@@ -127,6 +147,15 @@ pub struct Request {
     /// the event loop re-dispatches the same unit of work (on the
     /// remapped stage set, after backoff) instead of advancing state.
     pub pending_replay: bool,
+    /// Prompt token ids, when the submitter provided them (KV reuse).
+    pub tokens: Option<Vec<u32>>,
+    /// Prompt tokens served from the shared-prefix KV cache at admission
+    /// (< `prompt_len`; 0 without reuse). Prefill starts from this
+    /// boundary — the matched tokens' prefill chunks and their photonic
+    /// stage traffic are skipped — and the tenant's KV reservation covers
+    /// only the un-cached suffix (the cached prefix lives in, and is
+    /// charged to, the shared pool).
+    pub prefix_hit_tokens: usize,
 }
 
 impl Request {
@@ -159,6 +188,8 @@ impl Request {
             slo: SloSpec::default(),
             fault_retries: 0,
             pending_replay: false,
+            tokens: None,
+            prefix_hit_tokens: 0,
         }
     }
 
@@ -227,12 +258,18 @@ impl Request {
         self.max_new_tokens.saturating_sub(self.generated)
     }
 
-    /// KV tokens admission reserves for this request: the worst-case
-    /// growth `prompt + max_new_tokens`. Speculative decoding stays
-    /// inside it too — a round's tentative KV peaks at
+    /// KV tokens admission reserves for this request against its
+    /// tenant's budget: the worst-case growth `prompt + max_new_tokens`,
+    /// minus any shared-prefix hit (those tokens' KV lives in the shared
+    /// pool, refcounted until this request reaps — the reuse layer's
+    /// budget composition with per-tenant KV budgets). Speculative
+    /// decoding stays inside it too — a round's tentative KV peaks at
     /// `kv_len + draft_budget + 1 ≤ prompt_len + max_new_tokens`.
+    /// Admission sets `prefix_hit_tokens` before reserving and it never
+    /// changes afterwards, so reap releases exactly what was reserved.
     pub fn kv_reservation(&self) -> usize {
-        self.prompt_len + self.max_new_tokens
+        debug_assert!(self.prefix_hit_tokens < self.prompt_len || self.prefix_hit_tokens == 0);
+        self.prompt_len + self.max_new_tokens - self.prefix_hit_tokens
     }
 
     /// Largest **useful** draft burst for one speculation round. The
@@ -358,6 +395,20 @@ mod tests {
         assert_eq!(plain.tenant, 0);
         assert_eq!(plain.arrival_cycle, None);
         assert!(plain.slo.is_none());
+        assert!(plain.tokens.is_none());
+        let with_tokens = SubmitSpec::new(3, 1).with_tokens(vec![5, 6, 7]);
+        assert_eq!(with_tokens.tokens.as_deref(), Some(&[5u32, 6, 7][..]));
+    }
+
+    #[test]
+    fn prefix_hit_shrinks_reservation() {
+        let mut r = Request::new(1, 64, 16, 0);
+        assert_eq!(r.kv_reservation(), 80);
+        r.prefix_hit_tokens = 48;
+        assert_eq!(r.kv_reservation(), 32, "cached prefix charged to the pool");
+        assert_eq!(r.prefill_remaining(), 64, "prefilled set separately");
+        r.prefilled = 48;
+        assert_eq!(r.prefill_remaining(), 16, "prefill resumes at the boundary");
     }
 
     #[test]

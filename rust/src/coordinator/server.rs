@@ -87,8 +87,27 @@
 //! reservation released, counted apart from `Shed`. Everything is
 //! pay-for-use: with faults disabled (or a zero-fault `FaultConfig`) the
 //! event loop runs byte-identically to a server with no fault model.
+//!
+//! ## Shared-prefix KV reuse
+//!
+//! With [`crate::config::KvReuseConfig`] enabled, the server carries a
+//! [`KvPrefixCache`] — a refcounted radix trie of KV blocks over token
+//! ids (ARCHITECTURE.md §KV reuse). Requests that arrive with token ids
+//! ([`SubmitSpec::with_tokens`](super::SubmitSpec::with_tokens)) are
+//! longest-prefix matched at admission: the matched prefix (capped at
+//! `prompt_len − 1`) is charged to the shared reuse pool instead of the
+//! tenant's KV budget, prefill resumes from the hit boundary (the
+//! skipped chunks never walk the stage pipeline — no cycles, no energy,
+//! no photonic hops), and the un-cached blocks are inserted for later
+//! requests. The cycles the skipped chunks would have cost are priced
+//! through the same memoized plan machinery and surface as
+//! `prefill_cycles_saved` in [`TenantStats`], [`PipelineStats`] and
+//! [`Metrics`]. Reuse is pay-for-use like the fault layer: disabled —
+//! or enabled with zero hits — runs are byte-identical in every serving
+//! metric to a server with no cache.
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::kv_cache::KvPrefixCache;
 use super::metrics::{jain_index, LatencySummary, Metrics};
 use super::request::{Request, RequestId, RequestState, SubmitSpec};
 use crate::chiplet::{CcpgStats, CcpgTimeline};
@@ -242,6 +261,18 @@ pub struct PipelineStats {
     pub derate_stall_cycles: u64,
     /// In-flight jobs replayed after a tile kill invalidated their work.
     pub job_replays: u64,
+    /// Admitted requests whose prompt matched a cached prefix (0 unless
+    /// KV reuse is enabled).
+    pub prefix_hits: u64,
+    /// Prompt tokens served from cached prefixes across all hits.
+    pub hit_tokens: u64,
+    /// Pipeline cycles the skipped prefill chunks would have cost,
+    /// priced through the same plan machinery as real dispatches.
+    pub prefill_cycles_saved: u64,
+    /// Tokens currently held by live blocks in the reuse pool.
+    pub kv_pool_used_tokens: u64,
+    /// Blocks LRU-evicted from the reuse pool over the run.
+    pub kv_pool_evicted_blocks: u64,
 }
 
 /// Private tally behind the `spec_*` fields of [`PipelineStats`].
@@ -281,6 +312,12 @@ struct TenantCounters {
     fault_retries: u64,
     /// Requests that terminated [`RequestState::Failed`].
     failed: u64,
+    /// Admitted requests whose prompt matched a cached prefix.
+    prefix_hits: u64,
+    /// Prompt tokens served from cached prefixes.
+    hit_tokens: u64,
+    /// Prefill cycles the cached prefixes saved this tenant.
+    prefill_cycles_saved: u64,
 }
 
 /// Per-tenant serving stats ([`Server::tenant_stats`]): the per-tenant
@@ -333,6 +370,15 @@ pub struct TenantStats {
     /// resolved (shed requests were never served, so they count against
     /// admission, not availability).
     pub availability: f64,
+    /// Admitted requests whose prompt matched a cached KV prefix (0
+    /// unless KV reuse is enabled).
+    pub prefix_hits: u64,
+    /// Prompt tokens served from cached prefixes across those hits.
+    pub hit_tokens: u64,
+    /// Prefill cycles the cached prefixes saved this tenant — the
+    /// skipped chunks' stage costs, priced by the same plan machinery
+    /// as real dispatches.
+    pub prefill_cycles_saved: u64,
 }
 
 impl TenantStats {
@@ -473,6 +519,9 @@ pub struct Server<B: SimBackend = AnalyticSim> {
     /// Fault injection state; `None` (faults disabled) keeps the event
     /// loop byte-identical to a server with no fault model at all.
     faults: Option<Box<FaultPlumb>>,
+    /// Shared-prefix KV cache; `None` (reuse disabled) keeps admission
+    /// and reaping byte-identical to a server with no cache at all.
+    reuse: Option<Box<KvPrefixCache>>,
     stage_trace: Option<Vec<StageSlot>>,
     spec_trace: Option<Vec<SpecRound>>,
 }
@@ -507,6 +556,11 @@ impl<B: SimBackend> Server<B> {
                 synced_energy_j: 0.0,
             })
         });
+        let reuse = cfg
+            .picnic
+            .kv_reuse
+            .enabled
+            .then(|| Box::new(KvPrefixCache::new(&cfg.picnic.kv_reuse)));
         Server {
             batcher: Batcher::with_tenants(cfg.policy.clone(), &cfg.picnic.tenants),
             ccpg: CcpgTimeline::new(0, cfg.picnic.ccpg.clone(), &OpticalTopology::new(0)),
@@ -535,6 +589,7 @@ impl<B: SimBackend> Server<B> {
             spec: SpecCounters::default(),
             fair_scratch: Vec::new(),
             faults,
+            reuse,
             stage_trace: None,
             spec_trace: None,
         }
@@ -572,10 +627,20 @@ impl<B: SimBackend> Server<B> {
         self.spec_trace.as_deref()
     }
 
+    /// The shared-prefix KV cache, when reuse is enabled (the property
+    /// suite checks its invariants and drain state through this).
+    pub fn kv_cache(&self) -> Option<&KvPrefixCache> {
+        self.reuse.as_deref()
+    }
+
     pub fn pipeline_stats(&self) -> PipelineStats {
         let (lh, dead_tiles, derate_stall, replays) = match &self.faults {
             Some(f) => (f.noc.health(), f.dead.len(), f.derate_stall_cycles, f.replays),
             None => (LinkHealth::default(), 0, 0, 0),
+        };
+        let (pool_used, pool_evicted) = match &self.reuse {
+            Some(c) => (c.used_tokens() as u64, c.stats().evicted_blocks),
+            None => (0, 0),
         };
         PipelineStats {
             stages: self.stage_sets.first().map_or(0, |s| s.busy.len()),
@@ -595,6 +660,15 @@ impl<B: SimBackend> Server<B> {
             link_retransmit_cycles: lh.retransmit_cycles + lh.backoff_cycles,
             derate_stall_cycles: derate_stall,
             job_replays: replays,
+            prefix_hits: self.tenant_counters.iter().map(|c| c.prefix_hits).sum(),
+            hit_tokens: self.tenant_counters.iter().map(|c| c.hit_tokens).sum(),
+            prefill_cycles_saved: self
+                .tenant_counters
+                .iter()
+                .map(|c| c.prefill_cycles_saved)
+                .sum(),
+            kv_pool_used_tokens: pool_used,
+            kv_pool_evicted_blocks: pool_evicted,
         }
     }
 
@@ -618,7 +692,10 @@ impl<B: SimBackend> Server<B> {
             self.slo_active = true;
         }
         let id = self.next_id;
-        let make = |id: u64, arrived: u64| {
+        // `tokens` moves out of the spec (the remaining fields are Copy);
+        // the closure takes it on its single call across the three arms.
+        let mut tokens = spec.tokens;
+        let mut make = |id: u64, arrived: u64| {
             let mut r = Request::new_for_tenant(
                 id,
                 spec.tenant,
@@ -627,6 +704,7 @@ impl<B: SimBackend> Server<B> {
                 arrived,
             );
             r.slo = slo;
+            r.tokens = tokens.take();
             r
         };
         match spec.arrival_cycle {
@@ -656,25 +734,6 @@ impl<B: SimBackend> Server<B> {
                 }
             }
         }
-    }
-
-    /// Submit a request arriving *now* for the default tenant 0; returns
-    /// its id, or None on backpressure.
-    #[deprecated(note = "use Server::enqueue(SubmitSpec::new(prompt_len, max_new_tokens))")]
-    pub fn submit(&mut self, prompt_len: usize, max_new_tokens: usize) -> Option<u64> {
-        self.enqueue(SubmitSpec::new(prompt_len, max_new_tokens))
-    }
-
-    /// Submit a request arriving *now* for `tenant` (index into the
-    /// effective tenant list); returns its id, or None on backpressure.
-    #[deprecated(note = "use Server::enqueue(SubmitSpec::new(…).tenant(tenant))")]
-    pub fn submit_for(
-        &mut self,
-        tenant: usize,
-        prompt_len: usize,
-        max_new_tokens: usize,
-    ) -> Option<u64> {
-        self.enqueue(SubmitSpec::new(prompt_len, max_new_tokens).tenant(tenant))
     }
 
     /// Requests accepted onto the open-loop calendar whose arrival cycle
@@ -757,6 +816,9 @@ impl<B: SimBackend> Server<B> {
                     failed,
                     fault_retries: c.fault_retries,
                     availability,
+                    prefix_hits: c.prefix_hits,
+                    hit_tokens: c.hit_tokens,
+                    prefill_cycles_saved: c.prefill_cycles_saved,
                 }
             })
             .collect()
@@ -1419,7 +1481,7 @@ impl<B: SimBackend> Server<B> {
     /// counters. Their still-queued heap events become stale and are
     /// dropped by `dispatch`'s miss path.
     fn reap_failed(&mut self) {
-        let reaped = self.batcher.reap();
+        let reaped = self.batcher.reap_with(self.reuse.as_deref_mut());
         if reaped == 0 {
             return;
         }
@@ -1451,9 +1513,29 @@ impl<B: SimBackend> Server<B> {
         }
     }
 
+    /// Pipeline cycles prefilling the first `upto` prompt tokens would
+    /// cost: the same chunking and KV-interpolated per-stage pricing as
+    /// real prefill dispatches, summed without walking any stage. This is
+    /// how a prefix hit's `prefill_cycles_saved` is valued — it runs only
+    /// on hits, so zero-hit runs never touch it (the byte-identity
+    /// contract). Clobbers `interp_buf`, which every dispatch refills
+    /// before use.
+    fn prefill_cycles_for_span(&mut self, upto: usize) -> crate::Result<u64> {
+        let chunk = self.cfg.policy.prefill_chunk.max(1);
+        let mut done = 0usize;
+        let mut total = 0u64;
+        while done < upto {
+            let q = chunk.min(upto - done);
+            self.fill_job_costs(q, done + q)?;
+            total += self.interp_buf.iter().sum::<u64>();
+            done += q;
+        }
+        Ok(total)
+    }
+
     /// One SLO-aware admission round at the current clock: admitted
     /// requests become prefill events, shed requests are recorded.
-    fn admit_new(&mut self) {
+    fn admit_new(&mut self) -> crate::Result<()> {
         let freq = self.cfg.picnic.system.frequency_hz;
         // With every pipeline's span dead there is nothing to dispatch
         // onto: admitted requests fail immediately instead of walking
@@ -1463,15 +1545,23 @@ impl<B: SimBackend> Server<B> {
         // state.
         let fabric_dead = self.faults.as_ref().is_some_and(|f| f.fabric_dead);
         loop {
-            let adm = self.batcher.admit_at(self.now_cycle, freq);
+            let adm = self
+                .batcher
+                .admit_at_with(self.now_cycle, freq, self.reuse.as_deref_mut());
             for r in &adm.shed {
                 self.metrics.record_shed(r, self.now_cycle, freq);
             }
             let progressed = !adm.admitted.is_empty() || !adm.shed.is_empty();
             let mut failed_any = false;
+            // (tenant, hit tokens) of this round's prefix hits — empty
+            // (never populated, never iterated) unless reuse found one.
+            let mut hits: Vec<(usize, usize)> = Vec::new();
             for id in adm.admitted {
                 let now = self.now_cycle;
                 if let Some(r) = self.batcher.inflight_by_id(id) {
+                    if r.prefix_hit_tokens > 0 {
+                        hits.push((r.tenant, r.prefix_hit_tokens));
+                    }
                     if fabric_dead {
                         r.fail(now);
                         failed_any = true;
@@ -1481,6 +1571,14 @@ impl<B: SimBackend> Server<B> {
                     }
                 }
             }
+            for (tenant, hit) in hits {
+                let saved = self.prefill_cycles_for_span(hit)?;
+                let c = &mut self.tenant_counters[tenant];
+                c.prefix_hits += 1;
+                c.hit_tokens += hit as u64;
+                c.prefill_cycles_saved += saved;
+                self.metrics.record_prefix_hit(hit, saved);
+            }
             if failed_any {
                 self.reap_failed();
             }
@@ -1488,6 +1586,7 @@ impl<B: SimBackend> Server<B> {
                 break;
             }
         }
+        Ok(())
     }
 
     /// Earliest arrival still waiting on the open-loop calendar.
@@ -1505,7 +1604,7 @@ impl<B: SimBackend> Server<B> {
         // it and let it surface and admit before dispatching anything.
         loop {
             self.surface_arrivals();
-            self.admit_new();
+            self.admit_new()?;
             match (self.events.peek().copied(), self.next_pending_arrival()) {
                 (Some(Reverse((release, _, _))), Some(a)) if a < release => {
                     self.now_cycle = a;
@@ -1535,7 +1634,7 @@ impl<B: SimBackend> Server<B> {
         // Reap only when this event actually finished a request — the
         // steady-state decode path stays free of per-event O(B) drains.
         if self.dispatch(id, release)? {
-            let reaped = self.batcher.reap();
+            let reaped = self.batcher.reap_with(self.reuse.as_deref_mut());
             let freq = self.cfg.picnic.system.frequency_hz;
             let done = self.batcher.done();
             let new = &done[done.len() - reaped..];
@@ -1971,21 +2070,6 @@ mod tests {
         assert!(s.now_cycle() >= late);
     }
 
-    #[test]
-    #[allow(deprecated)] // the one test keeping the legacy wrappers honest
-    fn enqueue_parity_with_deprecated_submit() {
-        let mut a = server();
-        let mut b = server();
-        for _ in 0..4 {
-            a.submit(32, 4).unwrap();
-            b.enqueue(SubmitSpec::new(32, 4)).unwrap();
-        }
-        a.run_to_completion().unwrap();
-        b.run_to_completion().unwrap();
-        assert_eq!(a.now_cycle(), b.now_cycle());
-        assert_eq!(a.metrics.total_tokens, b.metrics.total_tokens);
-    }
-
     fn fault_server(spec: &str) -> Server {
         let picnic = PicnicConfig {
             faults: crate::config::FaultConfig::parse_cli(spec).unwrap(),
@@ -2173,5 +2257,118 @@ mod tests {
         let ts = s.tenant_stats();
         assert!(ts[0].availability < 1.0);
         assert_eq!(ts[0].failed, s.metrics.failed_count());
+    }
+
+    fn kv_server(spec: &str) -> Server {
+        let picnic = PicnicConfig {
+            kv_reuse: crate::config::KvReuseConfig::parse_cli(spec).unwrap(),
+            ..PicnicConfig::default()
+        };
+        Server::new(ServerConfig {
+            picnic,
+            model: LlamaConfig::tiny(),
+            policy: BatchPolicy::default(),
+            threads: 0,
+        })
+    }
+
+    #[test]
+    fn identical_prompts_hit_the_prefix_cache() {
+        let mut s = kv_server("pool=4096,block=16");
+        let tokens: Vec<u32> = (0..64).collect();
+        // serialize the two requests so the first finishes (and caches
+        // its blocks) before the second is admitted
+        s.enqueue(SubmitSpec::new(64, 4).with_tokens(tokens.clone()))
+            .unwrap();
+        s.run_to_completion().unwrap();
+        assert_eq!(s.pipeline_stats().prefix_hits, 0, "cold run: no hits");
+        s.enqueue(SubmitSpec::new(64, 4).with_tokens(tokens))
+            .unwrap();
+        s.run_to_completion().unwrap();
+        let p = s.pipeline_stats();
+        assert_eq!(p.prefix_hits, 1);
+        assert_eq!(p.hit_tokens, 63, "4 matched blocks capped at 64 - 1");
+        assert!(p.prefill_cycles_saved > 0);
+        assert_eq!(p.kv_pool_used_tokens, 64, "both prompts share 4 blocks");
+        let cache = s.kv_cache().unwrap();
+        cache.check_invariants().unwrap();
+        assert_eq!(cache.total_refcount(), 0, "drained server holds no leases");
+        let ts = s.tenant_stats();
+        assert_eq!(ts[0].prefix_hits, 1);
+        assert_eq!(ts[0].hit_tokens, 63);
+        assert_eq!(ts[0].prefill_cycles_saved, p.prefill_cycles_saved);
+        assert_eq!(s.metrics.prefix_hits, 1);
+        assert_eq!(s.metrics.hit_tokens, 63);
+    }
+
+    #[test]
+    fn prefix_hit_cuts_ttft() {
+        let tokens: Vec<u32> = (1000..1512).collect();
+        let run = |warm: bool| {
+            let mut s = kv_server("pool=8192,block=16");
+            if warm {
+                s.enqueue(SubmitSpec::new(512, 2).with_tokens(tokens.clone()))
+                    .unwrap();
+                s.run_to_completion().unwrap();
+            }
+            s.enqueue(SubmitSpec::new(512, 2).with_tokens(tokens.clone()))
+                .unwrap();
+            s.run_to_completion().unwrap();
+            s.metrics.requests.last().unwrap().ttft_s
+        };
+        let cold = run(false);
+        let warm = run(true);
+        assert!(
+            warm < cold / 2.0,
+            "a 511/512-token hit must slash TTFT: warm {warm} vs cold {cold}"
+        );
+    }
+
+    #[test]
+    fn reuse_disabled_ignores_tokens_byte_identically() {
+        let tokens: Vec<u32> = (0..32).collect();
+        let mut plain = server();
+        let mut with_tokens = server();
+        for _ in 0..4 {
+            plain.enqueue(SubmitSpec::new(32, 4)).unwrap();
+            with_tokens
+                .enqueue(SubmitSpec::new(32, 4).with_tokens(tokens.clone()))
+                .unwrap();
+        }
+        plain.run_to_completion().unwrap();
+        with_tokens.run_to_completion().unwrap();
+        assert_eq!(plain.now_cycle(), with_tokens.now_cycle());
+        assert_eq!(plain.horizon_cycle(), with_tokens.horizon_cycle());
+        assert_eq!(
+            plain.ledger.total_j().to_bits(),
+            with_tokens.ledger.total_j().to_bits()
+        );
+        assert!(with_tokens.kv_cache().is_none());
+    }
+
+    #[test]
+    fn zero_hit_reuse_runs_byte_identical_to_disabled() {
+        // enabled cache, but every prompt distinct at block granularity:
+        // no hits, so every serving metric matches the disabled run
+        let mut off = server();
+        let mut on = kv_server("pool=4096,block=16");
+        for i in 0..4u32 {
+            let tokens: Vec<u32> = (0..32).map(|j| i * 1000 + j).collect();
+            off.enqueue(SubmitSpec::new(32, 4)).unwrap();
+            on.enqueue(SubmitSpec::new(32, 4).with_tokens(tokens))
+                .unwrap();
+        }
+        off.run_to_completion().unwrap();
+        on.run_to_completion().unwrap();
+        assert_eq!(off.now_cycle(), on.now_cycle());
+        assert_eq!(off.horizon_cycle(), on.horizon_cycle());
+        assert_eq!(
+            off.ledger.total_j().to_bits(),
+            on.ledger.total_j().to_bits()
+        );
+        let p = on.pipeline_stats();
+        assert_eq!(p.prefix_hits, 0);
+        assert_eq!(p.prefill_cycles_saved, 0);
+        assert!(p.kv_pool_used_tokens > 0, "misses still populate the pool");
     }
 }

@@ -321,18 +321,6 @@ impl Mesh {
         self.stats.cycles += 1;
     }
 
-    /// Convenience wrapper over [`Mesh::step_into`] that returns a fresh
-    /// [`BoundaryTraffic`] (allocates; hot callers hold their own buffer).
-    #[deprecated(
-        note = "allocates a BoundaryTraffic per cycle — use Mesh::step_into \
-                (or step_into_with) with a caller-owned reusable buffer"
-    )]
-    pub fn step(&mut self, instrs: &[Instruction]) -> BoundaryTraffic {
-        let mut boundary = BoundaryTraffic::default();
-        self.step_into(instrs, &mut boundary);
-        boundary
-    }
-
     /// Sum of router-level statistics, for power accounting.
     pub fn total_router_stats(&self) -> crate::ipcn::router::RouterStats {
         let mut acc = crate::ipcn::router::RouterStats::default();
@@ -508,21 +496,6 @@ mod tests {
                 );
             }
         }
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_step_wrapper_matches_step_into() {
-        let mut a = mesh4();
-        let mut b = mesh4();
-        a.inject(0, Port::West, 3.5);
-        b.inject(0, Port::West, 3.5);
-        let mut slice = idle_slice(16);
-        slice[0] = route(Port::West, Port::East);
-        let wa = a.step(&slice);
-        let wb = step(&mut b, &slice);
-        assert_eq!(wa.to_optical, wb.to_optical);
-        assert_eq!(a.stats, b.stats);
     }
 
     #[test]

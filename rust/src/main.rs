@@ -11,13 +11,14 @@
 //!              [--tenants a:w=2:kv=8192:ttft=0.05,b:w=1]
 //!              [--open-loop rate=2000,shape=bursty,seed=7]
 //!              [--faults seed=7,ber=1e-6,kill_tile=12@3ms]
+//!              [--kv-reuse pool=65536,prefixes=8,hit=0.9]
 //! picnic isa-demo
 //! picnic config-dump [--spec-decode …] [--tenants …]
 //! ```
 
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{BatchPolicy, LatencyKind, Server, ServerConfig, SubmitSpec};
-use picnic::models::{LlamaConfig, TrafficModel, Workload};
+use picnic::models::{LlamaConfig, PrefixPool, PrefixSpec, TrafficModel, Workload};
 use picnic::report;
 use picnic::sim::{AnalyticSim, EngineBackend, SimBackend};
 use picnic::util::args::Args;
@@ -37,6 +38,7 @@ USAGE:
                 [--tenants a:w=2:kv=8192,b:w=1[:dedicated]]
                 [--open-loop [rate=2000,shape=poisson|bursty,seed=7]]
                 [--faults [seed=7,ber=1e-6,retries=3,backoff=64,derate=0.5,derate_period=100000,kill_tile=12@3ms]]
+                [--kv-reuse [pool=65536,prefixes=8,prefix_len=128,hit=0.9,block=16,vocab=32000,seed=17]]
   picnic isa-demo
   picnic config-dump
 
@@ -72,6 +74,17 @@ remaps stage pipelines around dead tiles, replays lost in-flight work up
 to `retries` times, and fails requests past the budget (reported apart
 from shedding). Same `seed` → byte-identical run.
 
+`--kv-reuse [SPEC]` enables shared-prefix KV-cache reuse: requests carry
+deterministic token ids (a seeded pool of `prefixes` shared prefixes,
+each request opening with one at probability `hit`), and the server
+keeps a refcounted radix trie of KV blocks under a `pool`-token budget.
+Admission longest-prefix matches each prompt and prefill resumes from
+the hit boundary — matched chunks' pipeline cycles and photonic stage
+traffic are skipped, and the tenant's KV budget is charged only for the
+un-cached suffix. Reported as prefix hits / cached tokens / prefill
+cycles saved. Same seeds → byte-identical run; `hit=0` runs
+byte-identically to leaving the flag off.
+
 `--threads N` sizes the worker pool for the deterministic parallel
 regions (engine-backend calibration probes, large MACs). 0 = auto:
 the PICNIC_THREADS environment variable, then the host's available
@@ -98,6 +111,7 @@ fn run() -> picnic::Result<()> {
     cfg.spec_decode.apply_cli(&args)?;
     cfg.tenants.apply_cli(&args)?;
     cfg.faults.apply_cli(&args)?;
+    cfg.kv_reuse.apply_cli(&args)?;
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args, cfg),
         Some("report") => cmd_report(&args, cfg),
@@ -207,6 +221,9 @@ fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
         None => None,
     };
     let freq = cfg.system.frequency_hz;
+    // Token ids only exist when the reuse layer is on — a token-free
+    // run stays byte-identical to pre-reuse builds.
+    let prefix = cfg.kv_reuse.enabled.then(|| PrefixSpec::from(&cfg.kv_reuse));
     let server_cfg = ServerConfig {
         picnic: cfg,
         model: m,
@@ -220,11 +237,11 @@ fn cmd_serve(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
                 Pool::new(server_cfg.threads),
             );
             let s = Server::with_backend(server_cfg, b);
-            drive_serve(s, requests, prompt_len, gen_len, traffic, freq)
+            drive_serve(s, requests, prompt_len, gen_len, traffic, prefix, freq)
         }
         "analytic" => {
             let s = Server::new(server_cfg);
-            drive_serve(s, requests, prompt_len, gen_len, traffic, freq)
+            drive_serve(s, requests, prompt_len, gen_len, traffic, prefix, freq)
         }
         other => anyhow::bail!("unknown backend {other} (analytic|engine)"),
     }
@@ -236,6 +253,7 @@ fn drive_serve<B: SimBackend>(
     prompt_len: usize,
     gen_len: usize,
     traffic: Option<TrafficModel>,
+    prefix: Option<PrefixSpec>,
     freq: f64,
 ) -> picnic::Result<()> {
     // Round-robin the synthetic requests across the effective tenants —
@@ -246,15 +264,23 @@ fn drive_serve<B: SimBackend>(
         Some(model) => {
             // Open-loop: arrivals land on the simulated clock from the
             // seeded traffic model; the generator never waits.
-            for (_, spec) in model.across_tenants(n_tenants).stream(freq).take(requests) {
+            let mut model = model.across_tenants(n_tenants);
+            if let Some(ps) = prefix {
+                model = model.with_shared_prefixes(ps);
+            }
+            for (_, spec) in model.stream(freq).take(requests) {
                 server
                     .enqueue(spec)
                     .ok_or_else(|| anyhow::anyhow!("queue full"))?;
             }
         }
         None => {
+            let pool = prefix.map(PrefixPool::new);
             for i in 0..requests {
-                let spec = SubmitSpec::new(prompt_len, gen_len).tenant(i % n_tenants);
+                let mut spec = SubmitSpec::new(prompt_len, gen_len).tenant(i % n_tenants);
+                if let Some(pool) = &pool {
+                    spec = spec.with_tokens(pool.sample_prompt_at(i as u64, prompt_len));
+                }
                 server
                     .enqueue(spec)
                     .ok_or_else(|| anyhow::anyhow!("queue full"))?;
@@ -306,6 +332,16 @@ fn drive_serve<B: SimBackend>(
         println!(
             "spec-decode: {} rounds, {} drafted, {} accepted, {} committed, {} rolled back",
             p.spec_rounds, p.spec_drafted, p.spec_accepted, p.spec_committed, p.spec_rolled_back,
+        );
+    }
+    if server.kv_cache().is_some() {
+        println!(
+            "kv-reuse: {} prefix hits, {} cached tokens, {} prefill cycles saved, pool {} tokens live, {} blocks evicted",
+            p.prefix_hits,
+            p.hit_tokens,
+            p.prefill_cycles_saved,
+            p.kv_pool_used_tokens,
+            p.kv_pool_evicted_blocks,
         );
     }
     if p.degraded || server.metrics.failed_count() > 0 {

@@ -6,6 +6,6 @@ mod workload;
 
 pub use llama::{LayerKind, LlamaConfig, ModelLayer};
 pub use workload::{
-    ArrivalShape, DiurnalSchedule, LengthBand, LengthMixture, Phase, TrafficModel, TrafficStream,
-    Workload,
+    ArrivalShape, DiurnalSchedule, LengthBand, LengthMixture, Phase, PrefixPool, PrefixSpec,
+    TrafficModel, TrafficStream, Workload,
 };

@@ -5,8 +5,16 @@
 //! serving experiments (Poisson / bursty arrivals, long-tail length
 //! mixtures, optional diurnal rate modulation, explicit trace replay).
 
+use crate::config::KvReuseConfig;
 use crate::coordinator::SubmitSpec;
 use crate::util::Rng;
+
+/// 2^64 / φ — the Weyl increment SplitMix64 itself uses; here it both
+/// decorrelates the prefix-pool seed from the per-request seeds and
+/// spreads request indices across seed space.
+const SEED_GOLDEN: u64 = 0x9e37_79b9_7f4a_7c15;
+/// Domain separator for per-request token RNGs (vs the pool RNG).
+const SEED_REQUEST: u64 = 0x5851_f42d_4c95_7f2d;
 
 /// Inference phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -202,6 +210,130 @@ pub struct DiurnalSchedule {
     pub amplitude: f64,
 }
 
+/// Parameters for deterministic token-id generation with a pool of
+/// shared system-prompt/few-shot prefixes — the workload side of the
+/// KV-reuse layer ([`crate::coordinator::KvPrefixCache`]).
+///
+/// Token draws are fully decoupled from arrival draws: the pool and
+/// every request's tokens come from RNGs derived from `seed` and the
+/// request's stream index, never from the arrival stream's RNG, so
+/// attaching tokens leaves arrival cycles, lengths and tenant
+/// assignment byte-identical. Each request's hit decision uses its own
+/// derived RNG's *first* draw against `hit_rate`, which makes hit sets
+/// nested: every request that hits at rate 0.3 also hits at 0.6 and
+/// 0.9 — the property the bench's monotonicity gate leans on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixSpec {
+    /// Synthetic vocabulary size; token ids are uniform in `0..vocab`.
+    pub vocab: usize,
+    /// Number of distinct shared prefixes in the pool (>= 1).
+    pub prefixes: usize,
+    /// Length of each shared prefix, tokens (>= 1).
+    pub prefix_len: usize,
+    /// Probability a request opens with a pooled prefix, in [0, 1].
+    pub hit_rate: f64,
+    /// Seed for the pool and per-request draws (independent of the
+    /// traffic model's arrival seed).
+    pub seed: u64,
+}
+
+impl From<&KvReuseConfig> for PrefixSpec {
+    fn from(cfg: &KvReuseConfig) -> PrefixSpec {
+        PrefixSpec {
+            vocab: cfg.vocab,
+            prefixes: cfg.prefixes,
+            prefix_len: cfg.prefix_len,
+            hit_rate: cfg.hit_rate,
+            seed: cfg.seed,
+        }
+    }
+}
+
+impl PrefixSpec {
+    fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.vocab >= 2, "prefix vocab must be >= 2");
+        anyhow::ensure!(
+            self.prefixes >= 1 && self.prefix_len >= 1,
+            "prefix pool needs >= 1 prefixes of >= 1 tokens"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.hit_rate),
+            "hit_rate must be in [0, 1], got {}",
+            self.hit_rate
+        );
+        Ok(())
+    }
+}
+
+/// A materialized [`PrefixSpec`]: the pooled prefixes plus per-request
+/// prompt sampling. Built once per [`TrafficStream`]; also usable
+/// standalone (the CLIs use it for closed-loop token generation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixPool {
+    spec: PrefixSpec,
+    prefixes: Vec<Vec<u32>>,
+}
+
+impl PrefixPool {
+    /// Materialize the pool. Panics on a malformed spec (the stream
+    /// path validates earlier and reports an error instead).
+    pub fn new(spec: PrefixSpec) -> PrefixPool {
+        spec.validate().expect("malformed PrefixSpec");
+        let mut rng = Rng::seed_from_u64(spec.seed ^ SEED_GOLDEN);
+        let prefixes = (0..spec.prefixes)
+            .map(|_| {
+                (0..spec.prefix_len)
+                    .map(|_| rng.below(spec.vocab as u64) as u32)
+                    .collect()
+            })
+            .collect();
+        PrefixPool { spec, prefixes }
+    }
+
+    fn request_rng(&self, index: u64) -> Rng {
+        Rng::seed_from_u64(
+            self.spec
+                .seed
+                .wrapping_add(index.wrapping_mul(SEED_GOLDEN))
+                ^ SEED_REQUEST,
+        )
+    }
+
+    /// Whether the `index`-th request of the stream opens with a pooled
+    /// prefix. Depends only on `(seed, index, hit_rate)` — and because
+    /// the underlying uniform draw is rate-independent, the hit set at
+    /// a lower rate is a subset of the hit set at any higher rate.
+    pub fn hit_at(&self, index: u64) -> bool {
+        self.request_rng(index).f64() < self.spec.hit_rate
+    }
+
+    /// Deterministic token ids for the `index`-th request: on a hit,
+    /// the first `min(prefix_len, prompt_len)` tokens are a pooled
+    /// prefix (chosen uniformly) and the rest are fresh random tokens;
+    /// on a miss the whole prompt is random. Pure in `(self, index,
+    /// prompt_len)` — resampling never disturbs any other request.
+    pub fn sample_prompt_at(&self, index: u64, prompt_len: usize) -> Vec<u32> {
+        let mut rng = self.request_rng(index);
+        let hit = rng.f64() < self.spec.hit_rate;
+        let mut tokens = Vec::with_capacity(prompt_len);
+        if hit {
+            let k = rng.below(self.prefixes.len() as u64) as usize;
+            let take = self.spec.prefix_len.min(prompt_len);
+            tokens.extend_from_slice(&self.prefixes[k][..take]);
+        }
+        while tokens.len() < prompt_len {
+            tokens.push(rng.below(self.spec.vocab as u64) as u32);
+        }
+        tokens
+    }
+
+    /// The pooled prefixes themselves (tests match prompts against
+    /// them).
+    pub fn prefixes(&self) -> &[Vec<u32>] {
+        &self.prefixes
+    }
+}
+
 /// A seeded open-loop traffic model. [`TrafficModel::stream`] yields an
 /// infinite, fully deterministic `(arrival_cycle, SubmitSpec)` iterator
 /// — the same seed always produces the byte-identical stream, so
@@ -223,6 +355,10 @@ pub struct TrafficModel {
     /// Requests round-robin across this many tenant indices.
     pub tenants: usize,
     pub diurnal: Option<DiurnalSchedule>,
+    /// When set, every emitted spec carries deterministic token ids
+    /// drawn against this shared-prefix pool
+    /// ([`TrafficModel::with_shared_prefixes`]).
+    pub prefix: Option<PrefixSpec>,
 }
 
 impl TrafficModel {
@@ -236,6 +372,7 @@ impl TrafficModel {
             generations: LengthMixture::chat_generations(),
             tenants: 1,
             diurnal: None,
+            prefix: None,
         }
     }
 
@@ -286,6 +423,16 @@ impl TrafficModel {
 
     pub fn with_diurnal(mut self, schedule: DiurnalSchedule) -> TrafficModel {
         self.diurnal = Some(schedule);
+        self
+    }
+
+    /// Attach deterministic token ids to every emitted spec, sampled
+    /// against a pool of shared prefixes. Token draws come from RNGs
+    /// derived from `spec.seed` and the request index — never from the
+    /// arrival RNG — so the stream's arrival cycles, lengths and tenant
+    /// round-robin stay byte-identical to the token-free stream.
+    pub fn with_shared_prefixes(mut self, spec: PrefixSpec) -> TrafficModel {
+        self.prefix = Some(spec);
         self
     }
 
@@ -369,6 +516,9 @@ impl TrafficModel {
         self.prompts.validate()?;
         self.generations.validate()?;
         anyhow::ensure!(self.tenants > 0, "tenants must be >= 1");
+        if let Some(p) = &self.prefix {
+            p.validate()?;
+        }
         Ok(())
     }
 
@@ -388,6 +538,7 @@ impl TrafficModel {
             generations: self.generations.clone(),
             tenants: self.tenants,
             diurnal: self.diurnal,
+            pool: self.prefix.map(PrefixPool::new),
             freq_hz,
             t_s: 0.0,
             in_on: false,
@@ -408,6 +559,7 @@ pub struct TrafficStream {
     generations: LengthMixture,
     tenants: usize,
     diurnal: Option<DiurnalSchedule>,
+    pool: Option<PrefixPool>,
     freq_hz: f64,
     t_s: f64,
     in_on: bool,
@@ -519,11 +671,15 @@ impl Iterator for TrafficStream {
         let arrival = self.next_arrival_cycle()?;
         let prompt = self.prompts.sample(&mut self.rng);
         let gen = self.generations.sample(&mut self.rng);
-        let tenant = (self.emitted % self.tenants as u64) as usize;
+        let index = self.emitted;
+        let tenant = (index % self.tenants as u64) as usize;
         self.emitted += 1;
-        let spec = SubmitSpec::new(prompt, gen)
+        let mut spec = SubmitSpec::new(prompt, gen)
             .tenant(tenant)
             .arrives_at(arrival);
+        if let Some(pool) = &self.pool {
+            spec = spec.with_tokens(pool.sample_prompt_at(index, prompt));
+        }
         Some((arrival, spec))
     }
 }
@@ -624,6 +780,103 @@ mod tests {
         let m = TrafficModel::poisson(5, 1000.0).across_tenants(3);
         let tenants: Vec<usize> = m.stream(1.0e9).take(6).map(|(_, s)| s.tenant).collect();
         assert_eq!(tenants, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    fn prefix_spec(hit_rate: f64) -> PrefixSpec {
+        PrefixSpec {
+            vocab: 32000,
+            prefixes: 4,
+            prefix_len: 32,
+            hit_rate,
+            seed: 17,
+        }
+    }
+
+    #[test]
+    fn tokens_never_perturb_arrivals_lengths_or_tenants() {
+        let base = TrafficModel::bursty(42, 1000.0).across_tenants(3);
+        let plain: Vec<_> = base.clone().stream(1.0e9).take(128).collect();
+        let tokened: Vec<_> = base
+            .with_shared_prefixes(prefix_spec(0.5))
+            .stream(1.0e9)
+            .take(128)
+            .collect();
+        for ((a, p), (b, t)) in plain.iter().zip(&tokened) {
+            assert_eq!(a, b, "arrival cycles must be byte-identical");
+            assert_eq!(p.prompt_len, t.prompt_len);
+            assert_eq!(p.max_new_tokens, t.max_new_tokens);
+            assert_eq!(p.tenant, t.tenant);
+            assert!(p.tokens.is_none());
+            let tok = t.tokens.as_ref().expect("tokened stream carries ids");
+            assert_eq!(tok.len(), t.prompt_len, "ids cover exactly the prompt");
+            assert!(tok.iter().all(|&id| (id as usize) < 32000));
+        }
+    }
+
+    #[test]
+    fn shared_prefix_sampling_is_deterministic_and_pool_backed() {
+        let pool = PrefixPool::new(prefix_spec(1.0));
+        assert_eq!(
+            pool.sample_prompt_at(9, 100),
+            pool.sample_prompt_at(9, 100),
+            "pure in (seed, index, prompt_len)"
+        );
+        // hit_rate 1.0: every prompt opens with one of the pooled
+        // prefixes (truncated to the prompt when shorter)
+        for index in 0..32u64 {
+            assert!(pool.hit_at(index));
+            let long = pool.sample_prompt_at(index, 100);
+            assert!(
+                pool.prefixes().iter().any(|p| long[..32] == p[..]),
+                "request {index} must open with a pooled prefix"
+            );
+            let short = pool.sample_prompt_at(index, 8);
+            assert!(
+                pool.prefixes().iter().any(|p| short[..] == p[..8]),
+                "short prompts take a prefix of the prefix"
+            );
+        }
+        // hit_rate 0.0: nobody hits
+        let cold = PrefixPool::new(prefix_spec(0.0));
+        assert!((0..32u64).all(|i| !cold.hit_at(i)));
+    }
+
+    #[test]
+    fn hit_sets_nest_as_hit_rate_rises() {
+        let lo = PrefixPool::new(prefix_spec(0.3));
+        let hi = PrefixPool::new(prefix_spec(0.6));
+        let mut lo_hits = 0;
+        let mut hi_hits = 0;
+        for i in 0..512u64 {
+            if lo.hit_at(i) {
+                lo_hits += 1;
+                assert!(hi.hit_at(i), "raising the rate only adds hits");
+            }
+            if hi.hit_at(i) {
+                hi_hits += 1;
+            }
+        }
+        assert!(lo_hits > 100 && lo_hits < 210, "~0.3 of 512, got {lo_hits}");
+        assert!(hi_hits > 250 && hi_hits < 370, "~0.6 of 512, got {hi_hits}");
+    }
+
+    #[test]
+    fn malformed_prefix_specs_are_rejected_by_validate() {
+        for bad in [
+            PrefixSpec { vocab: 1, ..prefix_spec(0.5) },
+            PrefixSpec { prefixes: 0, ..prefix_spec(0.5) },
+            PrefixSpec { prefix_len: 0, ..prefix_spec(0.5) },
+            prefix_spec(1.5),
+            prefix_spec(-0.1),
+        ] {
+            assert!(
+                TrafficModel::poisson(1, 100.0)
+                    .with_shared_prefixes(bad)
+                    .validate()
+                    .is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
     }
 
     #[test]

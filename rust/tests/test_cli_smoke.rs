@@ -186,6 +186,75 @@ fn serve_with_tenants_reports_fairness() {
 }
 
 #[test]
+fn kv_reuse_round_trips_through_config_dump() {
+    let text = run_ok(&[
+        "config-dump",
+        "--kv-reuse",
+        "pool=4096,prefixes=2,prefix_len=32,hit=0.5,block=8,vocab=500,seed=9",
+    ]);
+    let j = Json::parse(&text).expect("config-dump output parses");
+    let kv = j.get("kv_reuse").expect("kv_reuse section");
+    assert_eq!(kv.get("enabled").and_then(Json::as_bool), Some(true));
+    assert_eq!(kv.get("pool_tokens").and_then(Json::as_usize), Some(4096));
+    assert_eq!(kv.get("prefixes").and_then(Json::as_usize), Some(2));
+    assert_eq!(kv.get("prefix_len").and_then(Json::as_usize), Some(32));
+    assert_eq!(kv.get("hit_rate").and_then(Json::as_f64), Some(0.5));
+    assert_eq!(kv.get("block_tokens").and_then(Json::as_usize), Some(8));
+    assert_eq!(kv.get("vocab").and_then(Json::as_usize), Some(500));
+    assert_eq!(kv.get("seed").and_then(Json::as_usize), Some(9));
+    // the dump parses back into the same config (full round trip)
+    let back = picnic::config::PicnicConfig::from_json(&text).expect("round trip");
+    assert!(back.kv_reuse.enabled);
+    assert_eq!(back.kv_reuse.pool_tokens, 4096);
+    assert_eq!(back.kv_reuse.block_tokens, 8);
+    assert!((back.kv_reuse.hit_rate - 0.5).abs() < 1e-12);
+}
+
+#[test]
+fn kv_reuse_invalid_specs_are_clean_errors() {
+    for (arg, needle) in [
+        ("nope=1", "unknown key"),
+        ("pool=0", "pool_tokens"),
+        ("pool", "expected key=value"),
+        ("hit=1.5", "hit_rate"),
+        ("block=0", "block_tokens"),
+        ("pool=8,block=16", "at least one block"),
+        ("vocab=1", "vocab"),
+    ] {
+        let out = picnic()
+            .args(["config-dump", "--kv-reuse", arg])
+            .output()
+            .expect("spawn picnic");
+        assert!(!out.status.success(), "--kv-reuse {arg} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(needle), "stderr for {arg:?}: {err}");
+    }
+}
+
+#[test]
+fn serve_with_kv_reuse_reports_hits() {
+    let text = run_ok(&[
+        "serve",
+        "--model",
+        "tiny",
+        "--requests",
+        "6",
+        "--prompt-len",
+        "48",
+        "--gen-len",
+        "4",
+        "--kv-reuse",
+        "pool=4096,prefixes=1,prefix_len=48,hit=1.0,block=8",
+    ]);
+    assert!(text.contains("kv-reuse"), "reuse line printed: {text}");
+    assert!(text.contains("prefix hits"), "hit counter printed: {text}");
+    assert!(
+        text.contains("prefill cycles saved"),
+        "savings printed: {text}"
+    );
+}
+
+#[test]
 fn serve_open_loop_reports_latency_tails() {
     let text = run_ok(&[
         "serve",

@@ -1,0 +1,340 @@
+//! Property tests on the shared-prefix KV-reuse layer (hand-rolled
+//! quickcheck-style loops over a seeded PRNG — no proptest crate in the
+//! offline build).
+//!
+//! Invariants (ARCHITECTURE.md §KV reuse):
+//!  * refcount conservation: across any interleaving of acquisitions
+//!    and releases, every node's refcount equals the number of live
+//!    leases whose path crosses it ([`KvPrefixCache::check_invariants`]
+//!    replays all leases against the trie) — which also proves eviction
+//!    never frees a block a live request references, since a freed
+//!    node on a lease path would break the replay;
+//!  * pool accounting: used tokens == live blocks × block size, never
+//!    above the budget, and pinned paths stay probe-able for as long as
+//!    their lease lives;
+//!  * pay-for-use: zero-hit traffic through an enabled cache runs
+//!    byte-identically to a server with no cache at all;
+//!  * determinism: same seeds ⇒ byte-identical runs on the analytic and
+//!    the engine backend alike (CI repeats this file at
+//!    `PICNIC_THREADS` 1 and 2);
+//!  * conservation: with reuse on under the PR-7 fault matrix (bit
+//!    errors × derate × tile kills), every enqueued request reaches
+//!    exactly one terminal state and every lease returns to the pool.
+
+use picnic::config::{FaultConfig, KillSpec, KvReuseConfig, PicnicConfig};
+use picnic::coordinator::{BatchPolicy, KvPrefixCache, Server, ServerConfig, SubmitSpec};
+use picnic::models::{LengthBand, LengthMixture, LlamaConfig, PrefixPool, PrefixSpec, TrafficModel};
+use picnic::sim::{EngineBackend, SimBackend};
+use picnic::util::Rng;
+
+fn kv_cfg(hit_rate: f64) -> KvReuseConfig {
+    KvReuseConfig {
+        enabled: true,
+        pool_tokens: 4096,
+        prefixes: 3,
+        prefix_len: 48,
+        hit_rate,
+        block_tokens: 16,
+        vocab: 1000,
+        seed: 21,
+    }
+}
+
+fn build_server(kv: Option<KvReuseConfig>, faults: Option<FaultConfig>) -> Server {
+    let mut picnic = PicnicConfig::default();
+    if let Some(k) = kv {
+        picnic.kv_reuse = k;
+    }
+    if let Some(f) = faults {
+        picnic.faults = f;
+    }
+    Server::new(ServerConfig {
+        picnic,
+        model: LlamaConfig::tiny(),
+        policy: BatchPolicy {
+            max_batch: 4,
+            kv_budget: 4096,
+            ..BatchPolicy::default()
+        },
+        threads: 0,
+    })
+}
+
+/// Short chat-like lengths that fit the tiny test budget.
+fn short_lengths(model: TrafficModel) -> TrafficModel {
+    model
+        .with_prompts(LengthMixture {
+            bands: vec![LengthBand {
+                weight: 1.0,
+                min: 16,
+                max: 64,
+            }],
+        })
+        .with_generations(LengthMixture {
+            bands: vec![LengthBand {
+                weight: 1.0,
+                min: 2,
+                max: 8,
+            }],
+        })
+}
+
+/// Everything observable that two byte-identical runs must agree on,
+/// including the reuse counters.
+fn fingerprint<B: SimBackend>(s: &Server<B>) -> (u64, u64, u64, u64, u64, u64, Vec<(u64, u64, u64)>) {
+    let p = s.pipeline_stats();
+    let reqs = s
+        .metrics
+        .requests
+        .iter()
+        .map(|r| (r.id, r.ttft_s.to_bits(), r.total_s.to_bits()))
+        .collect();
+    (
+        s.now_cycle(),
+        s.horizon_cycle(),
+        s.ledger.total_j().to_bits(),
+        p.prefix_hits,
+        p.hit_tokens,
+        p.prefill_cycles_saved,
+        reqs,
+    )
+}
+
+#[test]
+fn prop_trie_refcounts_conserved_under_random_interleavings() {
+    for case in 0..12u64 {
+        let mut rng = Rng::seed_from_u64(7000 + case);
+        let block = 1 + rng.below(4) as usize; // 1..=4
+        let pool_blocks = 4 + rng.below(12) as usize; // tight pools force eviction
+        let cfg = KvReuseConfig {
+            enabled: true,
+            pool_tokens: block * pool_blocks,
+            block_tokens: block,
+            ..KvReuseConfig::default()
+        };
+        let mut cache = KvPrefixCache::new(&cfg);
+        // A handful of shared stems so prompts actually collide; cutting
+        // a stem at a random point plus a random fresh tail exercises
+        // partial matches, divergence, and brand-new paths alike.
+        let stems: Vec<Vec<u32>> = (0..3)
+            .map(|_| (0..block * 6).map(|_| rng.below(50) as u32).collect())
+            .collect();
+        let mut live: Vec<(u64, Vec<u32>, usize)> = Vec::new();
+        let mut next_id = 0u64;
+        for step in 0..300 {
+            if live.is_empty() || rng.f64() < 0.55 {
+                let stem = &stems[rng.below(stems.len() as u64) as usize];
+                let cut = rng.range_usize(0, stem.len());
+                let mut toks: Vec<u32> = stem[..cut].to_vec();
+                let extra = rng.below(3 * block as u64 + 1) as usize;
+                toks.extend((0..extra).map(|_| 100 + rng.below(50) as u32));
+                let id = next_id;
+                next_id += 1;
+                let matched = cache.acquire(id, &toks);
+                assert!(matched <= toks.len(), "case {case} step {step}");
+                assert_eq!(
+                    matched % block,
+                    0,
+                    "case {case} step {step}: matches quantize to whole blocks"
+                );
+                live.push((id, toks, matched));
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let (id, _, _) = live.swap_remove(idx);
+                cache.release(id);
+            }
+            cache
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} step {step}: {e}"));
+            assert!(
+                cache.used_tokens() <= cache.pool_tokens(),
+                "case {case} step {step}: pool budget exceeded"
+            );
+            assert_eq!(
+                cache.used_tokens(),
+                cache.live_blocks() * block,
+                "case {case} step {step}: every live block is exactly full"
+            );
+            assert!(cache.live_leases() <= live.len(), "case {case} step {step}");
+            // A pinned path can never lose blocks to eviction: whatever a
+            // live lease matched at acquisition must still probe at least
+            // as long now.
+            if !live.is_empty() {
+                let (_, toks, matched) = &live[rng.below(live.len() as u64) as usize];
+                assert!(
+                    cache.probe(toks) >= *matched,
+                    "case {case} step {step}: eviction shortened a pinned path"
+                );
+            }
+        }
+        for (id, _, _) in live.drain(..) {
+            cache.release(id);
+        }
+        cache.check_invariants().expect("post-drain invariants");
+        assert_eq!(
+            cache.total_refcount(),
+            0,
+            "case {case}: refcounts must return to zero at drain"
+        );
+    }
+}
+
+#[test]
+fn prop_zero_hit_reuse_identical_to_disabled() {
+    let freq = PicnicConfig::default().system.frequency_hz;
+    for case in 0..4u64 {
+        // hit_rate 0: token ids attach but never open with a pooled
+        // prefix, so the cache only ever cold-inserts — the schedule
+        // must be bit-for-bit the schedule of a server with no cache.
+        let run = |kv: Option<KvReuseConfig>| {
+            let mut s = build_server(kv.clone(), None);
+            let mut model = short_lengths(TrafficModel::poisson(500 + case, 5000.0));
+            if let Some(k) = &kv {
+                model = model.with_shared_prefixes(PrefixSpec::from(k));
+            }
+            for (_, spec) in model.stream(freq).take(12) {
+                s.enqueue(spec).expect("enqueue");
+            }
+            s.run_to_completion().expect("run");
+            fingerprint(&s)
+        };
+        let plain = run(None);
+        let zero_hit = run(Some(kv_cfg(0.0)));
+        assert_eq!(
+            plain, zero_hit,
+            "case {case}: zero-hit reuse not byte-identical to no cache"
+        );
+        assert_eq!(plain.3, 0, "case {case}: no prefix hits without a cache");
+    }
+}
+
+fn submit_tokened<B: SimBackend>(s: &mut Server<B>, kv: &KvReuseConfig, freq: f64) {
+    let model = short_lengths(TrafficModel::poisson(610, 5000.0))
+        .with_shared_prefixes(PrefixSpec::from(kv));
+    for (_, spec) in model.stream(freq).take(8) {
+        s.enqueue(spec).expect("enqueue");
+    }
+    s.run_to_completion().expect("run");
+}
+
+#[test]
+fn prop_same_seed_reuse_runs_byte_identical_on_both_backends() {
+    let freq = PicnicConfig::default().system.frequency_hz;
+    let kv = kv_cfg(0.8);
+    let analytic = || {
+        let mut s = build_server(Some(kv.clone()), None);
+        submit_tokened(&mut s, &kv, freq);
+        fingerprint(&s)
+    };
+    assert_eq!(analytic(), analytic(), "analytic same-seed runs diverged");
+
+    let engine = || {
+        let mut picnic = PicnicConfig::default();
+        picnic.kv_reuse = kv.clone();
+        let backend = EngineBackend::calibrated(picnic.clone());
+        let mut s = Server::with_backend(
+            ServerConfig {
+                picnic,
+                model: LlamaConfig::tiny(),
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    kv_budget: 4096,
+                    ..BatchPolicy::default()
+                },
+                threads: 0,
+            },
+            backend,
+        );
+        submit_tokened(&mut s, &kv, freq);
+        fingerprint(&s)
+    };
+    let e1 = engine();
+    assert_eq!(e1, engine(), "engine same-seed runs diverged");
+    // The two backends price stages differently (measured vs analytic),
+    // so schedules legitimately differ — but the *hit pattern* is a
+    // function of the token stream alone and must agree.
+    let a = analytic();
+    assert_eq!((a.3, a.4), (e1.3, e1.4), "hit pattern must be backend-independent");
+}
+
+#[test]
+fn prop_reuse_on_conserves_requests_under_fault_matrix() {
+    let freq = PicnicConfig::default().system.frequency_hz;
+    let bers = [0.0, 1e-4, 1e-3];
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(7700 + case);
+        let n = rng.range_usize(4, 10);
+        let kv = kv_cfg(0.8);
+        let pool = PrefixPool::new(PrefixSpec::from(&kv));
+        let load = |s: &mut Server| {
+            let mut wl = Rng::seed_from_u64(7700 + case);
+            for i in 0..n {
+                let prompt = wl.range_usize(8, 64);
+                let gen = wl.range_usize(2, 10);
+                let spec = SubmitSpec::new(prompt, gen)
+                    .with_tokens(pool.sample_prompt_at(i as u64, prompt));
+                s.enqueue(spec).expect("enqueue");
+            }
+        };
+
+        // A clean run with the same workload gives a horizon to place
+        // kills inside the busy window.
+        let mut clean = build_server(Some(kv.clone()), None);
+        load(&mut clean);
+        clean.run_to_completion().expect("clean run");
+        let horizon = clean.horizon_cycle().max(4);
+
+        let n_kills = rng.range_usize(0, 3);
+        let kills = (0..n_kills)
+            .map(|_| KillSpec {
+                tile: rng.below(4) as u32,
+                at_s: (horizon * (1 + rng.below(3)) / 4) as f64 / freq,
+            })
+            .collect();
+        let faults = FaultConfig {
+            enabled: true,
+            seed: 170 + case,
+            link_ber: bers[rng.below(bers.len() as u64) as usize],
+            max_retries: 1 + rng.below(3) as u32,
+            kills,
+            ..FaultConfig::default()
+        };
+        let mut server = build_server(Some(kv.clone()), Some(faults));
+        load(&mut server);
+        server.run_to_completion().expect("faulty run");
+
+        let m = &server.metrics;
+        assert_eq!(
+            m.requests.len() + m.shed_count() + m.failed_count(),
+            n,
+            "case {case}: every request must reach exactly one terminal state"
+        );
+        let mut ids: Vec<u64> = m
+            .requests
+            .iter()
+            .map(|r| r.id)
+            .chain(m.failed.iter().map(|f| f.id))
+            .collect();
+        ids.sort_unstable();
+        let before = ids.len();
+        ids.dedup();
+        assert_eq!(before, ids.len(), "case {case}: id in two terminal records");
+        for t in 0..server.n_tenants() {
+            assert_eq!(
+                server.tenant_reserved_kv(t),
+                0,
+                "case {case}: tenant {t} holds KV after drain"
+            );
+        }
+        // Every lease came back: completed AND failed requests release
+        // through the reaper; shed requests never acquired one.
+        let cache = server.kv_cache().expect("reuse enabled");
+        cache.check_invariants().expect("post-drain trie invariants");
+        assert_eq!(
+            cache.total_refcount(),
+            0,
+            "case {case}: a terminal request still pins KV blocks"
+        );
+        assert_eq!(cache.live_leases(), 0, "case {case}: leaked lease");
+    }
+}

@@ -16,11 +16,9 @@
 //!  * dedicated spans isolate: a tenant on its own chiplet range runs at
 //!    exactly its solo latency regardless of a neighbour's flood.
 
-#![allow(deprecated)] // exercises the pre-SubmitSpec submit API on purpose
-
 use picnic::config::{PicnicConfig, SpecDecodeConfig, TenantSpec, TenantsConfig};
 use picnic::coordinator::{
-    jain_index, BatchPolicy, Batcher, Request, RequestState, Server, ServerConfig,
+    jain_index, BatchPolicy, Batcher, Request, RequestState, Server, ServerConfig, SubmitSpec,
 };
 use picnic::models::LlamaConfig;
 use picnic::util::Rng;
@@ -151,7 +149,9 @@ fn prop_spec_draft_budget_charges_owner() {
             for t in 0..2 {
                 let prompt = rng.range_usize(8, 64);
                 let gen = rng.range_usize(2, 12);
-                let id = s.submit_for(t, prompt, gen).expect("submit");
+                let id = s
+                    .enqueue(SubmitSpec::new(prompt, gen).tenant(t))
+                    .expect("submit");
                 shape_of.insert(id, (t, prompt + gen));
                 expected_tokens[t] += gen as u64;
             }
@@ -195,10 +195,10 @@ fn weighted_ties_do_not_starve_light_tenants() {
     let mut s = tenant_server("heavy:w=8,light:w=1", 8, 1 << 20);
     // the heavy tenant floods; the light one sends two modest requests
     for _ in 0..6 {
-        s.submit_for(0, 64, 8).expect("submit heavy");
+        s.enqueue(SubmitSpec::new(64, 8).tenant(0)).expect("submit heavy");
     }
     for _ in 0..2 {
-        s.submit_for(1, 64, 8).expect("submit light");
+        s.enqueue(SubmitSpec::new(64, 8).tenant(1)).expect("submit light");
     }
     s.run_to_completion().expect("run");
     let ts = s.tenant_stats();
@@ -218,10 +218,10 @@ fn weighted_ties_do_not_starve_light_tenants() {
 fn underserved_tenant_wins_release_ties() {
     let mut s = tenant_server("small:w=1,big:w=1", 8, 1 << 20);
     for _ in 0..2 {
-        s.submit_for(0, 32, 4).expect("submit small");
+        s.enqueue(SubmitSpec::new(32, 4).tenant(0)).expect("submit small");
     }
     for _ in 0..6 {
-        s.submit_for(1, 32, 4).expect("submit big");
+        s.enqueue(SubmitSpec::new(32, 4).tenant(1)).expect("submit big");
     }
     s.run_to_completion().expect("run");
     let mean = |t: usize| {
@@ -255,7 +255,7 @@ fn equal_weight_symmetric_workload_is_fair() {
         let mut s = tenant_server(&spec, 8, 1 << 20);
         for round in 0..4 {
             for t in 0..n_tenants {
-                s.submit_for(t, 64 + round, 6).expect("submit");
+                s.enqueue(SubmitSpec::new(64 + round, 6).tenant(t)).expect("submit");
             }
         }
         s.run_to_completion().expect("run");
@@ -284,15 +284,15 @@ fn equal_weight_symmetric_workload_is_fair() {
 fn dedicated_span_isolates_from_neighbour_flood() {
     // solo reference: single-tenant server, one request
     let mut solo = tenant_server("only", 8, 1 << 20);
-    solo.submit_for(0, 48, 6).expect("submit");
+    solo.enqueue(SubmitSpec::new(48, 6).tenant(0)).expect("submit");
     solo.run_to_completion().expect("run");
     let solo_total = solo.metrics.requests[0].total_s;
 
     // same request on a dedicated span next to a flooding neighbour
     let mut s = tenant_server("a:dedicated,b:dedicated", 8, 1 << 20);
-    let id = s.submit_for(0, 48, 6).expect("submit a");
+    let id = s.enqueue(SubmitSpec::new(48, 6).tenant(0)).expect("submit a");
     for _ in 0..6 {
-        s.submit_for(1, 48, 6).expect("submit b");
+        s.enqueue(SubmitSpec::new(48, 6).tenant(1)).expect("submit b");
     }
     s.run_to_completion().expect("run");
     let with_flood = s
@@ -311,9 +311,9 @@ fn dedicated_span_isolates_from_neighbour_flood() {
     // the shared-span control: the same flood must visibly delay the
     // request (otherwise the isolation assertion above proves nothing)
     let mut shared = tenant_server("a,b", 8, 1 << 20);
-    let id = shared.submit_for(0, 48, 6).expect("submit a");
+    let id = shared.enqueue(SubmitSpec::new(48, 6).tenant(0)).expect("submit a");
     for _ in 0..6 {
-        shared.submit_for(1, 48, 6).expect("submit b");
+        shared.enqueue(SubmitSpec::new(48, 6).tenant(1)).expect("submit b");
     }
     shared.run_to_completion().expect("run");
     let shared_total = shared
@@ -341,7 +341,9 @@ fn prop_stage_sets_stay_disjoint_under_load() {
         for _ in 0..rng.range_usize(3, 10) {
             let t = rng.below(3) as usize;
             let id = s
-                .submit_for(t, rng.range_usize(1, 200), rng.range_usize(1, 6))
+                .enqueue(
+                    SubmitSpec::new(rng.range_usize(1, 200), rng.range_usize(1, 6)).tenant(t),
+                )
                 .expect("submit");
             owner.insert(id, t);
         }

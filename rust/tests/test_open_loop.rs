@@ -13,7 +13,6 @@
 //!  * a full open-loop serving run is deterministic end to end;
 //!  * requests whose TTFT SLO expires while queued are shed, and every
 //!    arrival resolves as either completed or shed.
-#![allow(deprecated)] // the closed-loop parity test drives the old submit API
 
 use std::collections::HashMap;
 
@@ -142,7 +141,7 @@ fn open_loop_rate_to_infinity_matches_closed_loop() {
     let mut closed = Server::new(server_cfg(8));
     let mut open = Server::new(server_cfg(8));
     for _ in 0..8 {
-        closed.submit(96, 12).expect("submit");
+        closed.enqueue(SubmitSpec::new(96, 12)).expect("submit");
         open.enqueue(SubmitSpec::new(96, 12).arrives_at(0)).expect("enqueue");
     }
     closed.run_to_completion().expect("run");
@@ -201,17 +200,4 @@ fn overdue_requests_are_shed_and_all_arrivals_resolve() {
     assert_eq!(ts[0].shed, shed);
     assert_eq!(ts[0].requests, completed);
     assert!((0.0..=1.0).contains(&ts[0].ttft_attainment));
-}
-
-#[test]
-fn deprecated_wrappers_agree_with_summary() {
-    let mut s = Server::new(server_cfg(4));
-    for _ in 0..4 {
-        s.enqueue(SubmitSpec::new(64, 8)).expect("enqueue");
-    }
-    s.run_to_completion().expect("run");
-    let m = &s.metrics;
-    assert_eq!(m.mean_ttft_s(), m.summary(LatencyKind::Ttft).mean_s);
-    assert_eq!(m.p50_total_s(), m.summary(LatencyKind::Total).p50_s);
-    assert_eq!(m.p99_total_s(), m.summary(LatencyKind::Total).p99_s);
 }

@@ -4,10 +4,10 @@
 //! serialized model within 1%, and the server must run unchanged over
 //! both `SimBackend` implementations.
 
-#![allow(deprecated)] // exercises the pre-SubmitSpec submit API on purpose
-
 use picnic::config::PicnicConfig;
-use picnic::coordinator::{serialized_workload_cycles, BatchPolicy, Server, ServerConfig};
+use picnic::coordinator::{
+    serialized_workload_cycles, BatchPolicy, Server, ServerConfig, SubmitSpec,
+};
 use picnic::models::LlamaConfig;
 use picnic::sim::{AnalyticSim, EngineBackend, SimBackend};
 
@@ -41,7 +41,7 @@ fn serialized_total_cycles<B: SimBackend>(
 fn run_batch(model: LlamaConfig, batch: usize, prompt: usize, gen: usize) -> Server {
     let mut s = Server::new(server_cfg(model));
     for _ in 0..batch {
-        s.submit(prompt, gen).expect("submit");
+        s.enqueue(SubmitSpec::new(prompt, gen)).expect("submit");
     }
     s.run_to_completion().expect("run");
     s
@@ -126,7 +126,7 @@ fn engine_backend_serves_same_workload() {
     let backend = EngineBackend::calibrated(PicnicConfig::default());
     let mut s = Server::with_backend(server_cfg(model()), backend);
     for _ in 0..batch {
-        s.submit(prompt, gen).expect("submit");
+        s.enqueue(SubmitSpec::new(prompt, gen)).expect("submit");
     }
     s.run_to_completion().expect("run");
 
@@ -150,7 +150,7 @@ fn ccpg_wakes_are_per_stage_events() {
     let mut cfg = server_cfg(LlamaConfig::llama32_1b());
     cfg.picnic = cfg.picnic.with_ccpg(true);
     let mut s = Server::new(cfg);
-    s.submit(32, 4).unwrap();
+    s.enqueue(SubmitSpec::new(32, 4)).unwrap();
     s.run_to_completion().unwrap();
     let stats = s.pipeline_stats();
     assert!(stats.ccpg_wakes > 0, "pipeline never woke a cluster");

@@ -15,10 +15,8 @@
 //!    verify pass's own token;
 //!  * both `SimBackend` implementations serve speculative schedules.
 
-#![allow(deprecated)] // exercises the pre-SubmitSpec submit API on purpose
-
 use picnic::config::{PicnicConfig, SpecDecodeConfig};
-use picnic::coordinator::{BatchPolicy, JobKind, Server, ServerConfig};
+use picnic::coordinator::{BatchPolicy, JobKind, Server, ServerConfig, SubmitSpec};
 use picnic::models::LlamaConfig;
 use picnic::sim::EngineBackend;
 use picnic::util::Rng;
@@ -71,8 +69,11 @@ fn prop_spec_stage_intervals_never_overlap() {
         for _ in 0..n {
             // gen ≥ 2 so every request runs at least one speculation round
             // (a request's last token always plain-decodes)
-            s.submit(rng.range_usize(1, 300), rng.range_usize(2, 8))
-                .expect("submit");
+            s.enqueue(SubmitSpec::new(
+                rng.range_usize(1, 300),
+                rng.range_usize(2, 8),
+            ))
+            .expect("submit");
         }
         s.run_to_completion().expect("run");
         let trace = s.stage_trace().expect("trace enabled");
@@ -116,7 +117,9 @@ fn prop_spec_commits_strictly_monotone() {
         let mut gen_of = std::collections::HashMap::new();
         for _ in 0..n {
             let gen = rng.range_usize(2, 12);
-            let id = s.submit(rng.range_usize(1, 128), gen).expect("submit");
+            let id = s
+                .enqueue(SubmitSpec::new(rng.range_usize(1, 128), gen))
+                .expect("submit");
             gen_of.insert(id, gen);
         }
         s.run_to_completion().expect("run");
@@ -172,7 +175,7 @@ fn prop_spec_commits_strictly_monotone() {
 fn rollback_never_double_charges_energy() {
     let mut s = spec_server(0.4, 4, 1);
     s.enable_spec_trace();
-    s.submit(64, 12).expect("submit");
+    s.enqueue(SubmitSpec::new(64, 12)).expect("submit");
     let mut rounds_seen = 0usize;
     loop {
         let before_j = s.ledger.total_j();
@@ -215,7 +218,7 @@ fn accept1_throughput_at_least_nonspec() {
     let run = |picnic: PicnicConfig| {
         let mut s = Server::new(server_cfg(picnic, model(), batch));
         for _ in 0..batch {
-            s.submit(prompt, gen).expect("submit");
+            s.enqueue(SubmitSpec::new(prompt, gen)).expect("submit");
         }
         s.run_to_completion().expect("run");
         s.metrics.throughput_tokens_per_s()
@@ -234,7 +237,7 @@ fn accept1_throughput_at_least_nonspec() {
 fn accept0_terminates_without_deadlock() {
     let mut s = spec_server(0.0, 4, 4);
     for _ in 0..4 {
-        s.submit(48, 6).expect("submit");
+        s.enqueue(SubmitSpec::new(48, 6)).expect("submit");
     }
     s.run_to_completion().expect("run");
     assert_eq!(s.metrics.requests.len(), 4);
@@ -257,7 +260,7 @@ fn engine_backend_serves_speculative_schedules() {
     let mut s = Server::with_backend(cfg, backend);
     s.enable_stage_trace();
     for _ in 0..4 {
-        s.submit(48, 8).expect("submit");
+        s.enqueue(SubmitSpec::new(48, 8)).expect("submit");
     }
     s.run_to_completion().expect("run");
     assert_eq!(s.metrics.requests.len(), 4);
