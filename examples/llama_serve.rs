@@ -37,13 +37,23 @@
 //! reports prefix hits, cached tokens and prefill cycles saved (both
 //! human and `--json` output).
 //!
+//! With `--packages N` / `--fabric SPEC` the deployment scales out over
+//! a switched photonic fabric of chiplet packages: models that outgrow
+//! one package (70b) pipeline across consecutive packages, models that
+//! fit replicate across all of them, and cross-package stage hops pay
+//! switch latency plus fabric link transfer. `--packages 1` is
+//! byte-identical to leaving the fabric off — the JSON emits the
+//! `packages` / `fabric_hops` / `fabric_hop_cycles` counters
+//! unconditionally so the two runs `cmp` equal.
+//!
 //! Run: `cargo run --release --example llama_serve -- [--model 1b]
 //!       [--requests 64] [--backend analytic|engine] [--threads N]
 //!       [--spec-decode draft_len=4,accept=0.7,ratio=0.2]
 //!       [--tenants a:w=1:kv=8192:ttft=0.05,b:w=1]
 //!       [--open-loop rate=2000,shape=bursty,seed=7]
 //!       [--faults seed=7,ber=1e-6,kill_tile=12@3ms]
-//!       [--kv-reuse pool=65536,prefixes=8,hit=0.9] [--json]`
+//!       [--kv-reuse pool=65536,prefixes=8,hit=0.9]
+//!       [--packages 2] [--fabric packages=2,tiles=640,hop=200] [--json]`
 
 use picnic::config::PicnicConfig;
 use picnic::coordinator::{BatchPolicy, LatencyKind, Server, ServerConfig, SubmitSpec};
@@ -84,6 +94,7 @@ fn main() -> picnic::Result<()> {
     picnic_cfg.tenants.apply_cli(&args)?;
     picnic_cfg.faults.apply_cli(&args)?;
     picnic_cfg.kv_reuse.apply_cli(&args)?;
+    picnic_cfg.fabric.apply_cli(&args)?;
     let freq = picnic_cfg.system.frequency_hz;
     let prefix = picnic_cfg
         .kv_reuse
@@ -229,6 +240,11 @@ fn drive<B: SimBackend>(
                         "prefill_cycles_saved",
                         json::num(t.prefill_cycles_saved as f64),
                     ),
+                    ("fabric_hops", json::num(t.fabric_hops as f64)),
+                    (
+                        "fabric_hop_cycles",
+                        json::num(t.fabric_hop_cycles as f64),
+                    ),
                 ])
             })
             .collect();
@@ -245,6 +261,12 @@ fn drive<B: SimBackend>(
             ("total", total.json()),
             ("stages", json::num(p.stages as f64)),
             ("stage_sets", json::num(p.stage_sets as f64)),
+            // Fabric counters are emitted unconditionally (packages=1,
+            // zero hops when the fabric is off) so a --packages 1 run
+            // stays byte-identical to a fabric-free one.
+            ("packages", json::num(p.packages as f64)),
+            ("fabric_hops", json::num(p.fabric_hops as f64)),
+            ("fabric_hop_cycles", json::num(p.fabric_hop_cycles as f64)),
             ("degraded", Json::Bool(p.degraded)),
             ("dead_tiles", json::num(p.dead_tiles as f64)),
             ("link_retransmissions", json::num(p.link_retransmissions as f64)),
@@ -340,6 +362,17 @@ fn drive<B: SimBackend>(
         println!(
             "pool               : {} tokens live, {} blocks evicted",
             p.kv_pool_used_tokens, p.kv_pool_evicted_blocks
+        );
+    }
+    // >1 package only: a 1-package fabric run prints the exact
+    // pre-fabric report (the differential identity the CI gate checks).
+    if p.packages > 1 {
+        println!("---- fabric ----");
+        println!("packages           : {}", p.packages);
+        println!("stage sets         : {}", p.stage_sets);
+        println!(
+            "cross-package hops : {} ({} cycles)",
+            p.fabric_hops, p.fabric_hop_cycles
         );
     }
     if p.degraded || m.failed_count() > 0 {

@@ -9,8 +9,11 @@
 //! **fault-injection sweep** (photonic bit-error rate × offered load,
 //! with zero-fault-identity, same-seed-determinism and tile-kill-storm
 //! probes), plus a **KV-reuse sweep** (shared-prefix hit rate ×
-//! utilization with a reuse-off baseline per utilization). Dumps
-//! `BENCH_serving.json` (schema 6 — see EXPERIMENTS.md §BENCH_serving
+//! utilization with a reuse-off baseline per utilization), plus a
+//! **scale-out sweep** (8B and 70B × 1/2/4 chiplet packages on the
+//! switched photonic fabric, rate→∞ open-loop, with a fabric-off
+//! baseline per model). Dumps
+//! `BENCH_serving.json` (schema 7 — see EXPERIMENTS.md §BENCH_serving
 //! schema for the field-by-field contract): one `points` entry per
 //! batch size with simulated tokens/s, the serialized PR-2 reference,
 //! TTFT and p99; a `spec` block with one entry per acceptance rate next
@@ -24,14 +27,22 @@
 //! utilization) with degradation counters; and a `kv_reuse` block — one
 //! entry per (hit rate × utilization) plus the reuse-off baselines,
 //! each nesting its schedule-derived output in a `metrics` sub-object
-//! so the hit=0 row can be compared byte-for-byte against the baseline.
+//! so the hit=0 row can be compared byte-for-byte against the baseline;
+//! and a `scale_out` block — one entry per (model × package count) plus
+//! a fabric-off baseline per model, each fitting row nesting the same
+//! `metrics` sub-object so the packages=1 row can be compared
+//! byte-for-byte against the fabric-off baseline (the 70B preset's
+//! 1-package row instead records `fits = false` with the mapper's
+//! error).
 //! CI validates batch-8 > 2× batch-1, spec acceptance=1.0 ≥ the
 //! non-speculative reference, equal-weight 2-tenant fairness
 //! (Jain ≥ 0.9 on the symmetric workload), open/closed parity within 5%,
 //! that p99 TTFT grows with offered load, the faults-block probe
 //! verdicts plus storm conservation, and the kv_reuse identity verdict
 //! plus hit-rate monotonicity (prefill cycles saved strictly rising,
-//! p99 TTFT non-increasing), then archives the file as the
+//! p99 TTFT non-increasing), the scale_out identity verdict plus
+//! package-count throughput monotonicity (strictly rising, each step
+//! ≥ 1.5× on the fitting rows), then archives the file as the
 //! `BENCH_serving` artifact.
 //!
 //! Every sweep's points are independent simulations, so they fan out
@@ -45,8 +56,8 @@
 mod harness;
 
 use picnic::config::{
-    FaultConfig, KillSpec, KvReuseConfig, PicnicConfig, SloSpec, SpecDecodeConfig, TenantSpec,
-    TenantsConfig,
+    FabricConfig, FaultConfig, KillSpec, KvReuseConfig, PicnicConfig, SloSpec, SpecDecodeConfig,
+    TenantSpec, TenantsConfig,
 };
 use picnic::coordinator::{
     serialized_workload_cycles, BatchPolicy, LatencyKind, Metrics, PipelineStats, Server,
@@ -86,6 +97,17 @@ const KV_HIT_RATES: [f64; 4] = [0.0, 0.3, 0.6, 0.9];
 const KV_UTILIZATIONS: [f64; 2] = [0.4, 0.7];
 const KV_SWEEP_REQUESTS: usize = 600;
 const KV_POOL_TOKENS: usize = 1 << 16;
+/// Scale-out sweep shape: a package-fitting model (8B replicates
+/// data-parallel across packages) and a package-outgrowing one (the 70B
+/// preset pipelines across two), at 1/2/4 packages plus a fabric-off
+/// baseline per model. Every request arrives at cycle 0 (rate→∞ open
+/// loop) and the batch ceiling exceeds the deepest pipeline, so each
+/// replica's bottleneck stage saturates and replication is visible as
+/// aggregate throughput — not a queueing artifact.
+const SCALE_MODELS: [&str; 2] = ["8b", "70b"];
+const SCALE_PACKAGE_COUNTS: [usize; 3] = [1, 2, 4];
+const SCALE_REQUESTS: usize = 768;
+const SCALE_MAX_BATCH: usize = 1 << 10;
 
 fn policy(batch: usize) -> BatchPolicy {
     BatchPolicy {
@@ -306,6 +328,41 @@ fn run_kv_open(hit_rate: Option<f64>, rate_rps: f64, n: usize, freq: f64) -> (Me
     }
     s.run_to_completion().expect("run");
     (s.metrics.clone(), s.pipeline_stats())
+}
+
+/// One scale-out sweep point: `n` fixed-shape requests all arriving at
+/// cycle 0 on `model` over a `packages`-package fabric (`packages = 0`
+/// is the fabric-off baseline). Errs when the model does not fit the
+/// fabric — the 70B preset's expected 1-package outcome.
+fn run_scale_out(
+    model: &str,
+    packages: usize,
+    n: usize,
+) -> picnic::Result<(Metrics, PipelineStats)> {
+    let mut picnic = PicnicConfig::default();
+    if packages > 0 {
+        picnic.fabric = FabricConfig {
+            enabled: true,
+            packages,
+            ..FabricConfig::default()
+        };
+    }
+    let mut s = Server::new(ServerConfig {
+        picnic,
+        model: LlamaConfig::by_name(model).expect("model"),
+        policy: BatchPolicy {
+            max_batch: SCALE_MAX_BATCH,
+            kv_budget: 1 << 22,
+            ..BatchPolicy::default()
+        },
+        threads: 0,
+    });
+    for _ in 0..n {
+        s.enqueue(SubmitSpec::new(PROMPT, GEN).arrives_at(0))
+            .expect("enqueue");
+    }
+    s.run_to_completion()?;
+    Ok((s.metrics.clone(), s.pipeline_stats()))
 }
 
 fn main() {
@@ -759,14 +816,147 @@ fn main() {
         }
     }
 
+    harness::section("scale-out: throughput vs package count (switched photonic fabric)");
+    println!(
+        "  {SCALE_REQUESTS} fixed-shape requests at cycle 0 (rate→∞), batch ceiling \
+         {SCALE_MAX_BATCH}; packages=1 must be byte-identical to fabric-off"
+    );
+    let scale_combos: Vec<(&str, usize)> = SCALE_MODELS
+        .iter()
+        .flat_map(|&m| {
+            std::iter::once((m, 0usize)).chain(SCALE_PACKAGE_COUNTS.iter().map(move |&p| (m, p)))
+        })
+        .collect();
+    let mut scale_runs: Vec<std::result::Result<(Metrics, PipelineStats), String>> = Vec::new();
+    harness::bench("serve/scale_out_sweep_x8", 0, 1, || {
+        scale_runs = pool.par_map_index(scale_combos.len(), |i| {
+            let (model, packages) = scale_combos[i];
+            run_scale_out(model, packages, SCALE_REQUESTS).map_err(|e| format!("{e:#}"))
+        });
+    });
+    let mut scale_points: Vec<Json> = Vec::new();
+    let mut scale_identity_ok = true;
+    {
+        let mut baseline: Option<String> = None; // fabric-off metrics, per model
+        let mut prev_tps: Option<f64> = None; // previous package row, per model
+        for (&(model, packages), run) in scale_combos.iter().zip(scale_runs.iter()) {
+            if packages == 0 {
+                baseline = None;
+                prev_tps = None;
+            }
+            match run {
+                Err(e) => {
+                    // The only legitimate miss: the 70B preset outgrows a
+                    // single default package (1200 tiles > 640).
+                    assert!(
+                        model == "70b" && packages == 1,
+                        "unexpected scale-out failure ({model}, {packages} packages): {e}"
+                    );
+                    assert!(
+                        e.contains("raise --packages"),
+                        "capacity error must point at --packages: {e}"
+                    );
+                    println!("  {model:>3} packages 1  : does not fit (needs >= 2 packages)");
+                    prev_tps = Some(0.0);
+                    scale_points.push(json::obj(vec![
+                        ("model", json::s(model)),
+                        ("packages", json::num(packages as f64)),
+                        ("fits", Json::Bool(false)),
+                        ("error", json::s(e)),
+                        ("tokens_per_s", json::num(0.0)),
+                    ]));
+                }
+                Ok((m, p)) => {
+                    assert_eq!(
+                        m.requests.len() + m.shed_count() + m.failed_count(),
+                        SCALE_REQUESTS,
+                        "scale-out point must conserve requests ({model}, {packages})"
+                    );
+                    let tps = m.throughput_tokens_per_s();
+                    let ttft = m.summary(LatencyKind::Ttft);
+                    let tpot = m.summary(LatencyKind::PerToken);
+                    let total = m.summary(LatencyKind::Total);
+                    // Schedule-derived output only — the packages=1 row
+                    // must reproduce the fabric-off baseline's sub-object
+                    // byte for byte.
+                    let metrics_json = json::obj(vec![
+                        ("completed", json::num(m.requests.len() as f64)),
+                        ("shed", json::num(m.shed_count() as f64)),
+                        ("failed", json::num(m.failed_count() as f64)),
+                        ("total_tokens", json::num(m.total_tokens as f64)),
+                        ("wall_s", json::num(m.wall_s)),
+                        ("tokens_per_s", json::num(tps)),
+                        ("ttft", ttft.json()),
+                        ("tpot", tpot.json()),
+                        ("total", total.json()),
+                    ]);
+                    let rendered = metrics_json.to_string();
+                    match packages {
+                        0 => {
+                            baseline = Some(rendered);
+                            println!(
+                                "  {model:>3} fabric off  : {tps:>8.1} tokens/s   \
+                                 {} stage set(s)",
+                                p.stage_sets,
+                            );
+                        }
+                        1 => {
+                            let same = baseline.as_deref() == Some(rendered.as_str());
+                            scale_identity_ok &= same;
+                            assert!(
+                                same,
+                                "{model}: packages=1 must be byte-identical to fabric-off"
+                            );
+                            prev_tps = Some(tps);
+                            println!(
+                                "  {model:>3} packages 1  : {tps:>8.1} tokens/s   \
+                                 identical to fabric-off"
+                            );
+                        }
+                        _ => {
+                            let pt = prev_tps.expect("package rows ascend from 1");
+                            assert!(
+                                tps > pt,
+                                "{model}: throughput must rise with packages \
+                                 ({packages}: {tps:.1} vs {pt:.1})"
+                            );
+                            assert!(
+                                tps >= 1.5 * pt,
+                                "{model}: each package doubling must scale >= 1.5x \
+                                 ({packages}: {tps:.1} vs {pt:.1})"
+                            );
+                            prev_tps = Some(tps);
+                            println!(
+                                "  {model:>3} packages {packages}  : {tps:>8.1} tokens/s   \
+                                 {} stage set(s), {} fabric hops ({} cycles)",
+                                p.stage_sets, p.fabric_hops, p.fabric_hop_cycles,
+                            );
+                        }
+                    }
+                    scale_points.push(json::obj(vec![
+                        ("model", json::s(model)),
+                        ("packages", json::num(packages as f64)),
+                        ("fits", Json::Bool(true)),
+                        ("stage_sets", json::num(p.stage_sets as f64)),
+                        ("fabric_hops", json::num(p.fabric_hops as f64)),
+                        ("fabric_hop_cycles", json::num(p.fabric_hop_cycles as f64)),
+                        ("tokens_per_s", json::num(tps)),
+                        ("metrics", metrics_json),
+                    ]));
+                }
+            }
+        }
+    }
+
     let n_points = points.len();
     let n_spec = spec_points.len();
     let n_tenancy = tenancy_points.len();
     let n_open = open_points.len();
     let n_faults = fault_points.len();
     let n_kv = kv_points.len();
+    let n_scale = scale_points.len();
     let doc = json::obj(vec![
-        ("schema", json::num(6.0)),
+        ("schema", json::num(7.0)),
         ("model", json::s(MODEL)),
         ("prompt_len", json::num(PROMPT as f64)),
         ("gen_len", json::num(GEN as f64)),
@@ -849,11 +1039,24 @@ fn main() {
                 ("points", Json::Arr(kv_points)),
             ]),
         ),
+        (
+            "scale_out",
+            json::obj(vec![
+                ("requests_per_point", json::num(SCALE_REQUESTS as f64)),
+                ("max_batch", json::num(SCALE_MAX_BATCH as f64)),
+                (
+                    "package_tiles",
+                    json::num(FabricConfig::default().package.tiles as f64),
+                ),
+                ("identity_ok", Json::Bool(scale_identity_ok)),
+                ("points", Json::Arr(scale_points)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serving.json", format!("{doc}\n")).expect("write serving report");
     println!(
         "\nwrote BENCH_serving.json ({n_points} batch points, {n_spec} spec points, \
          {n_tenancy} tenancy points, {n_open} open-loop points, {n_faults} fault points, \
-         {n_kv} kv-reuse points)"
+         {n_kv} kv-reuse points, {n_scale} scale-out points)"
     );
 }

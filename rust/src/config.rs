@@ -844,6 +844,209 @@ impl KvReuseConfig {
     }
 }
 
+/// One chiplet package on the switched photonic fabric — the scale-out
+/// unit (ARCHITECTURE.md §Scale-out). A package bounds how many compute
+/// tiles a single pipeline stage span can draw from contiguously; the
+/// mapper never lets a stage straddle a package boundary, so every
+/// stage→stage transition is either an intra-package NoC hop or one
+/// switched fabric hop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PackageSpec {
+    /// Compute tiles one package provides. At the default
+    /// `SystemConfig::weights_per_tile()` (64 Mi params/tile), 640 tiles
+    /// hold ~42 B parameters — an 8B model (128 tiles) fits in one
+    /// package many times over, while the 70B preset (1200 tiles) needs
+    /// exactly two.
+    pub tiles: usize,
+}
+
+impl Default for PackageSpec {
+    fn default() -> Self {
+        Self { tiles: 640 }
+    }
+}
+
+/// Switched photonic fabric interconnecting chiplet packages
+/// (ARCHITECTURE.md §Scale-out; modeled by `photonic::fabric::Fabric`).
+///
+/// Mirrors the Photonic Fabric Platform tier from PAPERS.md: packages
+/// hang off a photonic switch, each cross-package pipeline transition
+/// pays one switch traversal (`hop_latency_cycles`) plus the activation
+/// transfer at `link_bps`/`j_per_bit`, and an optional fabric-attached
+/// memory pool extends the KV-reuse budget by `kv_spill_tokens`
+/// (Sangam-style spill for cold prefixes). Disabled (the default) the
+/// serving stack is byte-identical to the single-package system — the
+/// pay-for-use contract every feature config here honors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    /// Master switch; `false` (default) keeps the pre-fabric topology.
+    pub enabled: bool,
+    /// Packages on the fabric (>= 1). `1` is differentially tested to be
+    /// byte-identical to `enabled = false`.
+    pub packages: usize,
+    /// Per-package capacity.
+    pub package: PackageSpec,
+    /// Switch port count; must accommodate every package (>= packages).
+    pub switch_radix: usize,
+    /// Switch traversal latency charged per cross-package hop, cycles.
+    pub hop_latency_cycles: u64,
+    /// Per-direction fabric link bandwidth, bits/s (default half the
+    /// intra-package optical link).
+    pub link_bps: f64,
+    /// Fabric transfer energy, J/bit (default 2x the intra-package
+    /// optical link — the switch traversal is not free).
+    pub j_per_bit: f64,
+    /// Extra KV tokens the fabric-attached memory pool adds to the
+    /// KV-reuse budget (0 = no pool). Only meaningful with
+    /// `kv_reuse.enabled`.
+    pub kv_spill_tokens: usize,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            packages: 1,
+            package: PackageSpec::default(),
+            switch_radix: 8,
+            hop_latency_cycles: 200,
+            link_bps: 64e9,
+            j_per_bit: 1.0e-12,
+            kv_spill_tokens: 0,
+        }
+    }
+}
+
+impl FabricConfig {
+    /// Total compute tiles the fabric provides across all packages.
+    pub fn total_tiles(&self) -> usize {
+        self.packages * self.package.tiles
+    }
+
+    /// Reject out-of-range parameters with a message naming the field.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.packages >= 1,
+            "fabric.packages must be >= 1 (got {})",
+            self.packages
+        );
+        anyhow::ensure!(
+            self.package.tiles >= 1,
+            "fabric.package_tiles must be >= 1 (got {})",
+            self.package.tiles
+        );
+        anyhow::ensure!(
+            self.switch_radix >= self.packages,
+            "fabric.switch_radix must be >= packages ({} ports for {} packages)",
+            self.switch_radix,
+            self.packages
+        );
+        anyhow::ensure!(
+            self.link_bps > 0.0 && self.link_bps.is_finite(),
+            "fabric.link_bps must be > 0 (got {})",
+            self.link_bps
+        );
+        anyhow::ensure!(
+            self.j_per_bit >= 0.0 && self.j_per_bit.is_finite(),
+            "fabric.j_per_bit must be finite and >= 0 (got {})",
+            self.j_per_bit
+        );
+        Ok(())
+    }
+
+    /// Apply the `--fabric`/`--packages` CLI surface onto an
+    /// already-loaded config (shared by `picnic` and
+    /// `examples/llama_serve.rs`): `--fabric k=v,…` overrides only the
+    /// named keys, a bare `--fabric` flag enables the fabric with the
+    /// loaded values, and `--packages N` is shorthand for
+    /// `--fabric packages=N` (applied last, so it wins).
+    pub fn apply_cli(&mut self, args: &crate::util::args::Args) -> crate::Result<()> {
+        if let Some(text) = args.opt("fabric") {
+            *self = self.merge_cli(text)?;
+        } else if args.flag("fabric") {
+            self.enabled = true;
+            self.validate()?;
+        }
+        if let Some(n) = args.opt("packages") {
+            self.packages = n
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--packages {n:?}: {e}"))?;
+            self.enabled = true;
+            self.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI shorthand `packages=2,tiles=512,hop=200` over the
+    /// built-in defaults. Keys: `packages`, `tiles`/`package_tiles`,
+    /// `radix`/`switch_radix`, `hop`/`hop_latency`, `bw`/`link_bps`,
+    /// `energy`/`j_per_bit`, `spill`/`kv_spill`; omitted keys keep their
+    /// defaults. The returned config has `enabled = true` and is
+    /// validated.
+    pub fn parse_cli(text: &str) -> crate::Result<FabricConfig> {
+        FabricConfig::default().merge_cli(text)
+    }
+
+    /// Parse the CLI shorthand onto `self` (typically the values a
+    /// `--config` file loaded): only the named keys change. The result
+    /// has `enabled = true` and is validated.
+    pub fn merge_cli(&self, text: &str) -> crate::Result<FabricConfig> {
+        let mut c = FabricConfig {
+            enabled: true,
+            ..self.clone()
+        };
+        for part in text.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--fabric: expected key=value, got {part:?}"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "packages" => {
+                    c.packages = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--fabric packages {v:?}: {e}"))?
+                }
+                "tiles" | "package_tiles" => {
+                    c.package.tiles = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--fabric tiles {v:?}: {e}"))?
+                }
+                "radix" | "switch_radix" => {
+                    c.switch_radix = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--fabric radix {v:?}: {e}"))?
+                }
+                "hop" | "hop_latency" => {
+                    c.hop_latency_cycles = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--fabric hop {v:?}: {e}"))?
+                }
+                "bw" | "link_bps" => {
+                    c.link_bps = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--fabric bw {v:?}: {e}"))?
+                }
+                "energy" | "j_per_bit" => {
+                    c.j_per_bit = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--fabric energy {v:?}: {e}"))?
+                }
+                "spill" | "kv_spill" => {
+                    c.kv_spill_tokens = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--fabric spill {v:?}: {e}"))?
+                }
+                other => anyhow::bail!(
+                    "--fabric: unknown key {other:?} \
+                     (packages|tiles|radix|hop|bw|energy|spill)"
+                ),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+}
+
 /// Tail-latency service-level objectives for one tenant (ARCHITECTURE.md
 /// §Open-loop serving; enforced by `coordinator::Server`).
 ///
@@ -1133,6 +1336,7 @@ pub struct PicnicConfig {
     pub tenants: TenantsConfig,
     pub faults: FaultConfig,
     pub kv_reuse: KvReuseConfig,
+    pub fabric: FabricConfig,
 }
 
 impl PicnicConfig {
@@ -1268,6 +1472,21 @@ impl PicnicConfig {
             c.kv_reuse.seed = int(r, "seed", c.kv_reuse.seed as usize) as u64;
         }
         c.kv_reuse.validate()?;
+        if let Some(f) = j.get("fabric") {
+            c.fabric.enabled = f
+                .get("enabled")
+                .and_then(Json::as_bool)
+                .unwrap_or(c.fabric.enabled);
+            c.fabric.packages = int(f, "packages", c.fabric.packages);
+            c.fabric.package.tiles = int(f, "package_tiles", c.fabric.package.tiles);
+            c.fabric.switch_radix = int(f, "switch_radix", c.fabric.switch_radix);
+            c.fabric.hop_latency_cycles =
+                int(f, "hop_latency_cycles", c.fabric.hop_latency_cycles as usize) as u64;
+            c.fabric.link_bps = num(f, "link_bps", c.fabric.link_bps);
+            c.fabric.j_per_bit = num(f, "j_per_bit", c.fabric.j_per_bit);
+            c.fabric.kv_spill_tokens = int(f, "kv_spill_tokens", c.fabric.kv_spill_tokens);
+        }
+        c.fabric.validate()?;
         if let Some(t) = j.get("timing") {
             c.timing.xbar_cycles = int(t, "xbar_cycles", c.timing.xbar_cycles as usize) as u64;
             c.timing.hop_cycles = int(t, "hop_cycles", c.timing.hop_cycles as usize) as u64;
@@ -1304,7 +1523,7 @@ impl PicnicConfig {
             .map(|k| format!("{{\"tile\": {}, \"at_s\": {}}}", k.tile, k.at_s))
             .collect();
         format!(
-            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}},\n  \"tenants\": [{}],\n  \"faults\": {{\"enabled\": {}, \"seed\": {}, \"link_ber\": {}, \"max_retries\": {}, \"backoff_base_cycles\": {}, \"derate_factor\": {}, \"derate_period_cycles\": {}, \"derate_duty\": {}, \"kills\": [{}]}},\n  \"kv_reuse\": {{\"enabled\": {}, \"pool_tokens\": {}, \"prefixes\": {}, \"prefix_len\": {}, \"hit_rate\": {}, \"block_tokens\": {}, \"vocab\": {}, \"seed\": {}}}\n}}\n",
+            "{{\n  \"system\": {{\"bit_width\": {}, \"frequency_hz\": {}, \"ipcn_dim\": {}, \"scu_per_tile\": {}, \"pe_array_dim\": {}, \"dmac_per_router\": {}, \"scratchpad_bytes\": {}, \"fifo_bytes\": {}}},\n  \"power\": {{\"pe_w\": {}, \"scratchpad_w\": {}, \"router_w\": {}, \"softmax_w\": {}, \"sleep_leak_frac\": {}}},\n  \"interconnect\": {{\"electrical_c2c_j_per_bit\": {}, \"optical_c2c_j_per_bit\": {}, \"dram_j_per_bit\": {}, \"laser_static_w_per_port\": {}, \"optical_link_bps\": {}, \"electrical_link_bps\": {}}},\n  \"ccpg\": {{\"enabled\": {}, \"tiles_per_cluster\": {}, \"wake_latency_cycles\": {}, \"idle_sleep_cycles\": {}}},\n  \"timing\": {{\"xbar_cycles\": {}, \"hop_cycles\": {}, \"words_per_cycle\": {}, \"scu_cycles_per_elem\": {}, \"scu_drain_cycles\": {}, \"npm_flip_cycles\": {}, \"dram_latency_cycles\": {}}},\n  \"spec_decode\": {{\"enabled\": {}, \"draft_len\": {}, \"acceptance_rate\": {}, \"draft_cost_ratio\": {}}},\n  \"tenants\": [{}],\n  \"faults\": {{\"enabled\": {}, \"seed\": {}, \"link_ber\": {}, \"max_retries\": {}, \"backoff_base_cycles\": {}, \"derate_factor\": {}, \"derate_period_cycles\": {}, \"derate_duty\": {}, \"kills\": [{}]}},\n  \"kv_reuse\": {{\"enabled\": {}, \"pool_tokens\": {}, \"prefixes\": {}, \"prefix_len\": {}, \"hit_rate\": {}, \"block_tokens\": {}, \"vocab\": {}, \"seed\": {}}},\n  \"fabric\": {{\"enabled\": {}, \"packages\": {}, \"package_tiles\": {}, \"switch_radix\": {}, \"hop_latency_cycles\": {}, \"link_bps\": {}, \"j_per_bit\": {}, \"kv_spill_tokens\": {}}}\n}}\n",
             self.system.bit_width,
             self.system.frequency_hz,
             self.system.ipcn_dim,
@@ -1357,6 +1576,14 @@ impl PicnicConfig {
             self.kv_reuse.block_tokens,
             self.kv_reuse.vocab,
             self.kv_reuse.seed,
+            self.fabric.enabled,
+            self.fabric.packages,
+            self.fabric.package.tiles,
+            self.fabric.switch_radix,
+            self.fabric.hop_latency_cycles,
+            self.fabric.link_bps,
+            self.fabric.j_per_bit,
+            self.fabric.kv_spill_tokens,
         )
     }
 }
@@ -1815,5 +2042,87 @@ mod tests {
         assert_eq!(merged.pool_tokens, 1024, "file values survive the merge");
         assert_eq!(merged.prefixes, 2);
         assert!((merged.hit_rate - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fabric_json_roundtrip() {
+        let c = PicnicConfig {
+            fabric: FabricConfig {
+                enabled: true,
+                packages: 4,
+                package: PackageSpec { tiles: 256 },
+                switch_radix: 16,
+                hop_latency_cycles: 350,
+                link_bps: 32e9,
+                j_per_bit: 2e-12,
+                kv_spill_tokens: 8192,
+            },
+            ..PicnicConfig::default()
+        };
+        let back = PicnicConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.fabric.packages, 4);
+        assert_eq!(back.fabric.package.tiles, 256);
+        assert_eq!(back.fabric.total_tiles(), 1024);
+        // defaults round-trip to a disabled single-package fabric
+        let plain = PicnicConfig::from_json(&PicnicConfig::default().to_json()).unwrap();
+        assert!(!plain.fabric.enabled);
+        assert_eq!(plain.fabric.packages, 1);
+    }
+
+    #[test]
+    fn fabric_invalid_values_rejected() {
+        for (json, field) in [
+            (r#"{"fabric": {"packages": 0}}"#, "packages"),
+            (r#"{"fabric": {"package_tiles": 0}}"#, "package_tiles"),
+            (r#"{"fabric": {"packages": 16, "switch_radix": 8}}"#, "switch_radix"),
+            (r#"{"fabric": {"link_bps": 0}}"#, "link_bps"),
+            (r#"{"fabric": {"link_bps": -1}}"#, "link_bps"),
+            (r#"{"fabric": {"j_per_bit": -1e-12}}"#, "j_per_bit"),
+        ] {
+            let err = PicnicConfig::from_json(json).unwrap_err();
+            assert!(
+                err.to_string().contains(field),
+                "error for {json} must name {field}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn fabric_cli_shorthand() {
+        let c = FabricConfig::parse_cli("packages=2,tiles=256,hop=300").unwrap();
+        assert!(c.enabled);
+        assert_eq!(c.packages, 2);
+        assert_eq!(c.package.tiles, 256);
+        assert_eq!(c.hop_latency_cycles, 300);
+        assert_eq!(
+            c.switch_radix,
+            FabricConfig::default().switch_radix,
+            "omitted keys keep defaults"
+        );
+        let c = FabricConfig::parse_cli("radix=16,bw=1e10,energy=3e-12,spill=4096").unwrap();
+        assert_eq!(c.switch_radix, 16);
+        assert!((c.link_bps - 1e10).abs() < 1e-3);
+        assert!((c.j_per_bit - 3e-12).abs() < 1e-24);
+        assert_eq!(c.kv_spill_tokens, 4096);
+        assert!(FabricConfig::parse_cli("").unwrap().enabled, "bare spec enables");
+        assert!(FabricConfig::parse_cli("packages=0").is_err(), "zero packages rejected");
+        assert!(FabricConfig::parse_cli("bw=0").is_err(), "zero bandwidth rejected");
+        assert!(FabricConfig::parse_cli("nope=1").is_err(), "unknown key rejected");
+        assert!(FabricConfig::parse_cli("packages").is_err(), "malformed pair rejected");
+    }
+
+    #[test]
+    fn fabric_cli_merges_onto_loaded_config() {
+        let from_file = FabricConfig {
+            enabled: false,
+            packages: 2,
+            package: PackageSpec { tiles: 128 },
+            ..FabricConfig::default()
+        };
+        let merged = from_file.merge_cli("packages=4").unwrap();
+        assert!(merged.enabled);
+        assert_eq!(merged.packages, 4);
+        assert_eq!(merged.package.tiles, 128, "file values survive the merge");
     }
 }

@@ -105,6 +105,24 @@
 //! [`Metrics`]. Reuse is pay-for-use like the fault layer: disabled —
 //! or enabled with zero hits — runs are byte-identical in every serving
 //! metric to a server with no cache.
+//!
+//! ## Multi-package scale-out
+//!
+//! With [`crate::config::FabricConfig`] enabled, the chiplet chain spans
+//! several packages on a switched photonic fabric
+//! ([`crate::photonic::Fabric`]; ARCHITECTURE.md §Scale-out). The mapper
+//! lays every stage span package-aligned
+//! ([`StageMap::from_plans_packed`] — no stage straddles a package), and
+//! the stage walk charges each cross-package transition one switch
+//! traversal plus the activation transfer on the fabric link, with the
+//! fault channels acting on whichever link carried the hop — so PR-7
+//! faults compose with scale-out. When the whole model fits in fewer
+//! packages than the fabric provides, the shared pipeline **replicates**
+//! data-parallel across the spare package slots and requests round-robin
+//! over the replicas by id ([`Server::pick_set`]). A `packages = 1`
+//! fabric degenerates to singleton replica groups and zero crossings:
+//! byte-identical to the pre-fabric topology (the differential gate in
+//! rust/tests/test_scale_out.rs).
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::kv_cache::KvPrefixCache;
@@ -114,7 +132,9 @@ use crate::chiplet::{CcpgStats, CcpgTimeline};
 use crate::config::{ConfigError, PicnicConfig, SloSpec};
 use crate::mapper::{kv_bucket_bounds, PlanCache, ScheduleBuilder, StageMap, TileSet};
 use crate::models::LlamaConfig;
-use crate::photonic::{backoff_cycles, Interconnect, LinkHealth, LinkKind, OpticalTopology, DRAM_HUB};
+use crate::photonic::{
+    backoff_cycles, Fabric, Interconnect, LinkHealth, LinkKind, OpticalTopology, DRAM_HUB,
+};
 use crate::power::{EnergyCategory, EnergyLedger};
 use crate::sim::{AnalyticSim, FaultModel, SimBackend};
 use crate::util::Rng;
@@ -273,6 +293,14 @@ pub struct PipelineStats {
     pub kv_pool_used_tokens: u64,
     /// Blocks LRU-evicted from the reuse pool over the run.
     pub kv_pool_evicted_blocks: u64,
+    /// Chiplet packages the deployment runs on (1 without a fabric).
+    pub packages: usize,
+    /// Cross-package stage transitions charged over the run (0 without a
+    /// fabric, and 0 on a 1-package fabric — the differential identity).
+    pub fabric_hops: u64,
+    /// Cycles those hops cost: switch traversals + fabric link transfers
+    /// + fabric-side retransmissions.
+    pub fabric_hop_cycles: u64,
 }
 
 /// Private tally behind the `spec_*` fields of [`PipelineStats`].
@@ -318,6 +346,9 @@ struct TenantCounters {
     hit_tokens: u64,
     /// Prefill cycles the cached prefixes saved this tenant.
     prefill_cycles_saved: u64,
+    /// Cross-package hops this tenant's jobs paid for.
+    fabric_hops: u64,
+    fabric_hop_cycles: u64,
 }
 
 /// Per-tenant serving stats ([`Server::tenant_stats`]): the per-tenant
@@ -379,6 +410,11 @@ pub struct TenantStats {
     /// skipped chunks' stage costs, priced by the same plan machinery
     /// as real dispatches.
     pub prefill_cycles_saved: u64,
+    /// Cross-package fabric hops this tenant's jobs paid for (0 without
+    /// a fabric — the per-tenant cut of `PipelineStats::fabric_hops`).
+    pub fabric_hops: u64,
+    /// Cycles those hops cost this tenant.
+    pub fabric_hop_cycles: u64,
 }
 
 impl TenantStats {
@@ -465,6 +501,27 @@ struct FaultPlumb {
     synced_energy_j: f64,
 }
 
+/// Server-side scale-out state, present only when
+/// [`crate::config::FabricConfig`] is enabled — a single-package server
+/// carries `None` and its event loop never touches any of this
+/// (pay-for-use, like `FaultPlumb`).
+struct FabricPlumb {
+    /// The switched inter-package fabric: package geometry, switch
+    /// latency, and the fabric link that prices cross-package transfers.
+    fab: Fabric,
+    /// Payload of one inter-stage activation hop, bits (one token's
+    /// `d_model` activation vector at 16-bit precision — the same
+    /// payload the fault layer retransmits).
+    hop_bits: u64,
+    /// Cross-package hops charged so far.
+    hops: u64,
+    /// Cycles those hops cost (switch + transfer + retransmissions).
+    hop_cycles: u64,
+    /// Fabric transfer energy already moved into the serving ledger
+    /// (`sync_fabric_energy` charges only the delta).
+    synced_energy_j: f64,
+}
+
 /// The coordinator server, generic over the simulation backend.
 pub struct Server<B: SimBackend = AnalyticSim> {
     cfg: ServerConfig,
@@ -477,11 +534,17 @@ pub struct Server<B: SimBackend = AnalyticSim> {
     /// Latest completion across all stages (wall-clock horizon).
     horizon: u64,
     next_id: u64,
-    /// Stage pipelines: index 0 is the shared span, then one per
-    /// dedicated tenant, laid out on disjoint tile ranges.
+    /// Stage pipelines: index 0 is the shared span (plus one per shared
+    /// replica on a multi-package fabric), then one per dedicated
+    /// tenant, laid out on disjoint tile ranges.
     stage_sets: Vec<StageSet>,
-    /// tenant → index into `stage_sets`.
+    /// tenant → index into `set_replicas` (its replica group).
     tenant_set: Vec<usize>,
+    /// Replica groups: group → the `stage_sets` indices serving it.
+    /// Without a fabric every group is a singleton whose index equals
+    /// its set index, so `pick_set` degenerates to the pre-fabric
+    /// tenant→set lookup (`id % 1 = 0`).
+    set_replicas: Vec<Vec<usize>>,
     /// Per-tenant service/energy/wake attribution (same indexing).
     tenant_counters: Vec<TenantCounters>,
     /// Cached tenant weights (weighted-fair tie-breaking).
@@ -522,6 +585,9 @@ pub struct Server<B: SimBackend = AnalyticSim> {
     /// Shared-prefix KV cache; `None` (reuse disabled) keeps admission
     /// and reaping byte-identical to a server with no cache at all.
     reuse: Option<Box<KvPrefixCache>>,
+    /// Scale-out state; `None` (fabric disabled) keeps the event loop
+    /// byte-identical to a single-package server.
+    fabric: Option<Box<FabricPlumb>>,
     stage_trace: Option<Vec<StageSlot>>,
     spec_trace: Option<Vec<SpecRound>>,
 }
@@ -556,11 +622,31 @@ impl<B: SimBackend> Server<B> {
                 synced_energy_j: 0.0,
             })
         });
-        let reuse = cfg
-            .picnic
-            .kv_reuse
-            .enabled
-            .then(|| Box::new(KvPrefixCache::new(&cfg.picnic.kv_reuse)));
+        let reuse = cfg.picnic.kv_reuse.enabled.then(|| {
+            // the fabric-attached memory pool extends the reuse budget
+            // (FabricConfig::kv_spill_tokens; 0 leaves it untouched)
+            let mut kr = cfg.picnic.kv_reuse.clone();
+            if cfg.picnic.fabric.enabled {
+                kr.pool_tokens += cfg.picnic.fabric.kv_spill_tokens;
+            }
+            Box::new(KvPrefixCache::new(&kr))
+        });
+        let fabric = cfg.picnic.fabric.enabled.then(|| {
+            Box::new(FabricPlumb {
+                fab: Fabric::new(&cfg.picnic.fabric, &cfg.picnic.interconnect),
+                hop_bits: 16 * cfg.model.d_model as u64,
+                hops: 0,
+                hop_cycles: 0,
+                synced_energy_j: 0.0,
+            })
+        });
+        // plan-cache keys carry the package count so a cache never
+        // aliases plan sets across fabric topologies
+        let plan_cache = if cfg.picnic.fabric.enabled {
+            PlanCache::for_packages(cfg.picnic.fabric.packages)
+        } else {
+            PlanCache::new()
+        };
         Server {
             batcher: Batcher::with_tenants(cfg.policy.clone(), &cfg.picnic.tenants),
             ccpg: CcpgTimeline::new(0, cfg.picnic.ccpg.clone(), &OpticalTopology::new(0)),
@@ -577,9 +663,10 @@ impl<B: SimBackend> Server<B> {
             next_id: 0,
             stage_sets: Vec::new(),
             tenant_set: Vec::new(),
+            set_replicas: Vec::new(),
             events: BinaryHeap::new(),
             pending: BinaryHeap::new(),
-            plan_cache: PlanCache::new(),
+            plan_cache,
             cost_cache: HashMap::new(),
             draft_cost_cache: HashMap::new(),
             energy_cache: HashMap::new(),
@@ -590,6 +677,7 @@ impl<B: SimBackend> Server<B> {
             fair_scratch: Vec::new(),
             faults,
             reuse,
+            fabric,
             stage_trace: None,
             spec_trace: None,
         }
@@ -642,6 +730,10 @@ impl<B: SimBackend> Server<B> {
             Some(c) => (c.used_tokens() as u64, c.stats().evicted_blocks),
             None => (0, 0),
         };
+        let (fh, packages, fabric_hops, fabric_hop_cycles) = match &self.fabric {
+            Some(fb) => (fb.fab.health(), fb.fab.packages(), fb.hops, fb.hop_cycles),
+            None => (LinkHealth::default(), 1, 0, 0),
+        };
         PipelineStats {
             stages: self.stage_sets.first().map_or(0, |s| s.busy.len()),
             stage_sets: self.stage_sets.len(),
@@ -654,10 +746,13 @@ impl<B: SimBackend> Server<B> {
             spec_accepted: self.spec.accepted,
             spec_committed: self.spec.committed,
             spec_rolled_back: self.spec.rolled_back,
-            degraded: dead_tiles > 0 || lh.degraded() || derate_stall > 0,
+            degraded: dead_tiles > 0 || lh.degraded() || fh.degraded() || derate_stall > 0,
             dead_tiles,
-            link_retransmissions: lh.retransmissions,
-            link_retransmit_cycles: lh.retransmit_cycles + lh.backoff_cycles,
+            link_retransmissions: lh.retransmissions + fh.retransmissions,
+            link_retransmit_cycles: lh.retransmit_cycles
+                + lh.backoff_cycles
+                + fh.retransmit_cycles
+                + fh.backoff_cycles,
             derate_stall_cycles: derate_stall,
             job_replays: replays,
             prefix_hits: self.tenant_counters.iter().map(|c| c.prefix_hits).sum(),
@@ -669,6 +764,9 @@ impl<B: SimBackend> Server<B> {
                 .sum(),
             kv_pool_used_tokens: pool_used,
             kv_pool_evicted_blocks: pool_evicted,
+            packages,
+            fabric_hops,
+            fabric_hop_cycles,
         }
     }
 
@@ -819,6 +917,8 @@ impl<B: SimBackend> Server<B> {
                     prefix_hits: c.prefix_hits,
                     hit_tokens: c.hit_tokens,
                     prefill_cycles_saved: c.prefill_cycles_saved,
+                    fabric_hops: c.fabric_hops,
+                    fabric_hop_cycles: c.fabric_hop_cycles,
                 }
             })
             .collect()
@@ -843,6 +943,13 @@ impl<B: SimBackend> Server<B> {
     /// every non-dedicated tenant) comes first; each dedicated tenant
     /// then gets a private pipeline on its own disjoint tile range, and
     /// one [`CcpgTimeline`] covers the whole deployment.
+    ///
+    /// On a multi-package fabric every span is laid package-aligned
+    /// ([`StageMap::from_plans_packed`]), the shared pipeline replicates
+    /// data-parallel across the spare package slots (requests
+    /// round-robin over the replicas by id), and the whole deployment
+    /// must fit the fabric's tile budget — a model whose span outgrows
+    /// the package count errors here with the package math spelled out.
     fn ensure_stages(&mut self) -> crate::Result<()> {
         if !self.stage_sets.is_empty() {
             return Ok(());
@@ -850,40 +957,98 @@ impl<B: SimBackend> Server<B> {
         let builder = ScheduleBuilder::new(&self.cfg.picnic, &self.cfg.model);
         let plans = self.plan_cache.plans(&builder, 1, 1)?;
         let tenants = self.cfg.picnic.tenants.effective();
+        let fcfg = self.cfg.picnic.fabric.clone();
+        let pkg_tiles = if fcfg.enabled { fcfg.package.tiles as u32 } else { 0 };
         let mut sets: Vec<StageSet> = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
         let mut cursor = 0u32;
-        let shared_idx = if tenants.iter().any(|t| !t.dedicated) {
-            let map = StageMap::from_plans(&plans, cursor);
-            cursor = map.end_tile();
-            sets.push(StageSet {
-                busy: vec![0u64; map.n_stages()],
-                map,
-            });
+        let shared_group = if tenants.iter().any(|t| !t.dedicated) {
+            let map = StageMap::from_plans_packed(&plans, cursor, pkg_tiles)?;
+            let span_pkgs = map.packages_spanned() as usize;
+            let replicas = if fcfg.enabled {
+                anyhow::ensure!(
+                    span_pkgs <= fcfg.packages,
+                    "{} needs {span_pkgs} packages ({} tiles at {} tiles/package) but the \
+                     fabric has only {} — raise --packages",
+                    self.cfg.model.name,
+                    map.span_tiles,
+                    fcfg.package.tiles,
+                    fcfg.packages,
+                );
+                fcfg.packages / span_pkgs
+            } else {
+                1
+            };
+            let mut members = Vec::with_capacity(replicas);
+            for r in 0..replicas {
+                let m = if r == 0 {
+                    map.clone()
+                } else {
+                    // a pure translation of the base span: the offset is
+                    // a package multiple, so the packed layout repeats
+                    let at = (r * span_pkgs) as u32 * pkg_tiles;
+                    StageMap::from_plans_packed(&plans, at, pkg_tiles)?
+                };
+                cursor = m.end_tile();
+                members.push(sets.len());
+                sets.push(StageSet {
+                    busy: vec![0u64; m.n_stages()],
+                    map: m,
+                });
+            }
+            groups.push(members);
             Some(0)
         } else {
             None
         };
-        self.tenant_set = tenants
-            .iter()
-            .map(|t| {
-                if t.dedicated {
-                    let map = StageMap::from_plans(&plans, cursor);
-                    cursor = map.end_tile();
-                    sets.push(StageSet {
-                        busy: vec![0u64; map.n_stages()],
-                        map,
-                    });
-                    sets.len() - 1
-                } else {
-                    shared_idx.expect("a non-dedicated tenant implies a shared span")
-                }
-            })
-            .collect();
+        let mut tenant_set = Vec::with_capacity(tenants.len());
+        for t in tenants.iter() {
+            if t.dedicated {
+                let map = StageMap::from_plans_packed(&plans, cursor, pkg_tiles)?;
+                cursor = map.end_tile();
+                sets.push(StageSet {
+                    busy: vec![0u64; map.n_stages()],
+                    map,
+                });
+                groups.push(vec![sets.len() - 1]);
+                tenant_set.push(groups.len() - 1);
+            } else {
+                tenant_set
+                    .push(shared_group.expect("a non-dedicated tenant implies a shared span"));
+            }
+        }
+        if fcfg.enabled {
+            anyhow::ensure!(
+                cursor as usize <= fcfg.total_tiles(),
+                "deployment needs {cursor} tiles but {} packages of {} provide only {} — \
+                 raise --packages",
+                fcfg.packages,
+                fcfg.package.tiles,
+                fcfg.total_tiles(),
+            );
+        }
+        self.tenant_set = tenant_set;
         self.stage_sets = sets;
+        self.set_replicas = groups;
         let n_tiles = (cursor as usize).max(1);
         let topo = OpticalTopology::new(n_tiles);
         self.ccpg = CcpgTimeline::new(n_tiles, self.cfg.picnic.ccpg.clone(), &topo);
         Ok(())
+    }
+
+    /// The stage set serving request `id` of `tenant`: its tenant's
+    /// replica group, round-robin by request id. Singleton groups —
+    /// every group without a fabric — make this exactly the pre-fabric
+    /// tenant→set lookup.
+    fn pick_set(&self, tenant: usize, id: RequestId) -> usize {
+        let reps = &self.set_replicas[self.tenant_set[tenant]];
+        reps[(id % reps.len() as u64) as usize]
+    }
+
+    /// `(hops, hop_cycles)` snapshot for per-tenant fabric attribution
+    /// (the dispatch bracket charges the delta to the owning tenant).
+    fn fabric_snapshot(&self) -> (u64, u64) {
+        self.fabric.as_ref().map_or((0, 0), |fb| (fb.hops, fb.hop_cycles))
     }
 
     /// Per-stage cycles at an exact plan point, memoized.
@@ -1014,12 +1179,14 @@ impl<B: SimBackend> Server<B> {
         for s in 0..self.stage_sets[set].busy.len() {
             let tile = self.stage_sets[set].map.stage_tiles[s];
             let mut start = t.max(self.stage_sets[set].busy[s]);
-            // fault channels act on the inter-stage activation hop:
-            // retransmissions and derate windows delay the stage start.
-            // Guarded on the Option so a fault-free server never pays —
-            // and a zero-fault FaultModel adds structurally zero cycles.
-            if self.faults.is_some() {
-                start += self.hop_fault_stall(prev_tile, tile, start);
+            // fabric and fault channels act on the inter-stage
+            // activation hop: cross-package traversals, retransmissions
+            // and derate windows delay the stage start. Guarded on the
+            // Options so a single-package fault-free server never pays —
+            // and a 1-package fabric or zero-fault FaultModel adds
+            // structurally zero cycles.
+            if self.faults.is_some() || self.fabric.is_some() {
+                start += self.hop_stall(prev_tile, tile, start);
             }
             if s == 0 {
                 first_stage_start = start;
@@ -1052,39 +1219,72 @@ impl<B: SimBackend> Server<B> {
         (first_stage_start, t)
     }
 
-    /// Extra cycles the fault channels add to one inter-stage hop before
-    /// a stage may start. Two channels compose:
+    /// Extra cycles the scale-out and fault channels add to one
+    /// inter-stage hop before a stage may start. Three channels compose:
     ///
+    /// * **Cross-package traversal**: a hop whose endpoints live in
+    ///   different packages pays the switch latency plus the activation
+    ///   transfer on the fabric link ([`Fabric::traverse`], which
+    ///   accrues the fabric's per-bit energy —
+    ///   `sync_fabric_energy` moves it into the serving ledger).
     /// * **Derate window**: inside a bandwidth-derate window the hop
     ///   moves at `derate × bandwidth` — same bits, no extra energy, so
     ///   the stall is pure arithmetic (no link call, no PRNG draw).
     /// * **Transient bit errors**: each corrupted attempt re-sends the
-    ///   payload through the fault NoC — capped exponential backoff plus
-    ///   the full transfer time, paying the per-bit energy again
-    ///   (`sync_fault_energy` moves it into the serving ledger).
+    ///   payload — capped exponential backoff plus the full transfer
+    ///   time, paying the per-bit energy again.
     ///
-    /// Returns 0 on a clean hop; a zero-fault config returns 0 without a
-    /// single PRNG draw (the byte-identity gate in rust/tests/test_faults.rs).
-    fn hop_fault_stall(&mut self, src: u32, dst: u32, start: u64) -> u64 {
+    /// The fault channels act on **whichever link carried the hop**: the
+    /// fabric link on a crossing (a corrupted cross-package hop
+    /// retransmits at fabric bandwidth), the intra-package NoC
+    /// otherwise — so PR-7 faults compose with scale-out. Returns 0 on a
+    /// clean intra-package hop; a zero-fault config adds 0 without a
+    /// single PRNG draw (the byte-identity gate in
+    /// rust/tests/test_faults.rs) and a 1-package fabric never crosses.
+    fn hop_stall(&mut self, src: u32, dst: u32, start: u64) -> u64 {
         let freq = self.cfg.picnic.system.frequency_hz;
-        let Some(f) = self.faults.as_mut() else {
-            return 0;
-        };
         let mut extra = 0u64;
-        let derate = f.model.derate_at(start);
+        let mut crossing = false;
+        if let Some(fb) = self.fabric.as_mut() {
+            if fb.fab.crossing(src, dst) {
+                let d = fb.fab.traverse(start, fb.hop_bits, src, dst, freq);
+                fb.hops += 1;
+                fb.hop_cycles += d;
+                extra += d;
+                crossing = true;
+            }
+        }
+        let Some(f) = self.faults.as_mut() else {
+            return extra;
+        };
+        let FaultPlumb {
+            model,
+            noc,
+            hop_bits,
+            derate_stall_cycles,
+            ..
+        } = f.as_mut();
+        let link: &mut Interconnect = if crossing {
+            self.fabric
+                .as_mut()
+                .expect("crossing implies a fabric")
+                .fab
+                .link_mut()
+        } else {
+            noc
+        };
+        let derate = model.derate_at(start);
         if derate < 1.0 {
-            let nominal = f.noc.transfer_cycles(f.hop_bits, freq).max(1);
+            let nominal = link.transfer_cycles(*hop_bits, freq).max(1);
             let slowed = ((nominal as f64 / derate).ceil() as u64).max(nominal);
             let stall = slowed - nominal;
             extra += stall;
-            f.derate_stall_cycles += stall;
+            *derate_stall_cycles += stall;
         }
-        let retries = f.model.transfer_retries(f.hop_bits);
+        let retries = model.transfer_retries(*hop_bits);
         for attempt in 1..=retries {
-            let base = f.model.backoff_base_cycles();
-            extra += f
-                .noc
-                .retransmit(start + extra, f.hop_bits, src, dst, freq, attempt, base);
+            let base = model.backoff_base_cycles();
+            extra += link.retransmit(start + extra, *hop_bits, src, dst, freq, attempt, base);
         }
         extra
     }
@@ -1105,22 +1305,46 @@ impl<B: SimBackend> Server<B> {
         }
     }
 
+    /// Move fabric transfer energy accrued since the last sync into the
+    /// serving ledger as C2C energy — called inside each dispatch's
+    /// energy bracket so cross-package activation traffic bills to the
+    /// tenant that generated it (mirrors `sync_fault_energy`).
+    fn sync_fabric_energy(&mut self) {
+        let Some(fb) = self.fabric.as_mut() else {
+            return;
+        };
+        let e = fb.fab.dynamic_energy_j();
+        let delta = e - fb.synced_energy_j;
+        if delta > 0.0 {
+            self.ledger.charge(EnergyCategory::C2c, delta);
+            fb.synced_energy_j = e;
+        }
+    }
+
     /// Fold one job's attribution into the owning tenant's counters:
-    /// `service_cycles` of stage time, `energy_j` of dynamic energy, and
-    /// whatever CCPG wakes accrued since the `ccpg_before` snapshot.
+    /// `service_cycles` of stage time, `energy_j` of dynamic energy,
+    /// whatever CCPG wakes accrued since the `ccpg_before` snapshot, and
+    /// the cross-package hops since the `fabric_before` snapshot.
     fn credit_tenant(
         &mut self,
         tenant: usize,
         service_cycles: u64,
         energy_j: f64,
         ccpg_before: CcpgStats,
+        fabric_before: (u64, u64),
     ) {
         let d = self.ccpg.stats.since(&ccpg_before);
+        let (hops, hop_cycles) = self
+            .fabric
+            .as_ref()
+            .map_or((0, 0), |fb| (fb.hops - fabric_before.0, fb.hop_cycles - fabric_before.1));
         let c = &mut self.tenant_counters[tenant];
         c.service_cycles += service_cycles;
         c.energy_j += energy_j;
         c.ccpg_wakes += d.wakes;
         c.ccpg_wake_stall_cycles += d.wake_stall_cycles;
+        c.fabric_hops += hops;
+        c.fabric_hop_cycles += hop_cycles;
     }
 
     /// Dispatch one job (prefill chunk, decode token, or speculation
@@ -1180,11 +1404,13 @@ impl<B: SimBackend> Server<B> {
         self.charge_job_energy(seq_q, kv)?;
         let job_cycles: u64 = self.interp_buf.iter().sum();
         let ccpg_before = self.ccpg.stats;
-        let set = self.tenant_set[tenant];
+        let fabric_before = self.fabric_snapshot();
+        let set = self.pick_set(tenant, id);
         let (first_stage_start, completion) = self.walk_stages(set, id, release, kind, 0);
         self.sync_fault_energy();
+        self.sync_fabric_energy();
         let energy_j = self.ledger.total_j() - e_before;
-        self.credit_tenant(tenant, job_cycles, energy_j, ccpg_before);
+        self.credit_tenant(tenant, job_cycles, energy_j, ccpg_before, fabric_before);
 
         let r = self
             .batcher
@@ -1253,11 +1479,13 @@ impl<B: SimBackend> Server<B> {
         let job_cycles: u64 = self.interp_buf.iter().sum::<u64>()
             + draft_reps * self.draft_interp_buf.iter().sum::<u64>();
         let ccpg_before = self.ccpg.stats;
-        let set = self.tenant_set[tenant];
+        let fabric_before = self.fabric_snapshot();
+        let set = self.pick_set(tenant, id);
         let (_, completion) = self.walk_stages(set, id, release + backoff, kind, draft_reps);
         self.sync_fault_energy();
+        self.sync_fabric_energy();
         let energy_j = self.ledger.total_j() - e_before;
-        self.credit_tenant(tenant, job_cycles, energy_j, ccpg_before);
+        self.credit_tenant(tenant, job_cycles, energy_j, ccpg_before, fabric_before);
         if let Some(f) = self.faults.as_mut() {
             f.replays += 1;
         }
@@ -1314,13 +1542,15 @@ impl<B: SimBackend> Server<B> {
         let job_cycles: u64 = self.interp_buf.iter().sum::<u64>()
             + k as u64 * self.draft_interp_buf.iter().sum::<u64>();
         let ccpg_before = self.ccpg.stats;
-        let set = self.tenant_set[tenant];
+        let fabric_before = self.fabric_snapshot();
+        let set = self.pick_set(tenant, id);
         let (_, completion) = self.walk_stages(set, id, release, JobKind::SpecVerify, k as u64);
-        // the bracket closes after the stage walk so retransmission
-        // energy on this round's hops bills to the owning tenant too
+        // the bracket closes after the stage walk so retransmission and
+        // fabric energy on this round's hops bills to the owning tenant too
         self.sync_fault_energy();
+        self.sync_fabric_energy();
         let energy_j = self.ledger.total_j() - e_before;
-        self.credit_tenant(tenant, job_cycles, energy_j, ccpg_before);
+        self.credit_tenant(tenant, job_cycles, energy_j, ccpg_before, fabric_before);
 
         // Leading-prefix acceptance: i.i.d. Bernoulli per draft token on
         // the server's seeded PRNG (runs are reproducible).
@@ -1432,19 +1662,25 @@ impl<B: SimBackend> Server<B> {
         if affected.is_empty() && doomed.is_empty() {
             return; // a spare tile outside every span
         }
-        // Which tenants lost in-flight work (their pipeline's map just
-        // changed under them), and which lost their pipeline outright.
-        let hit: Vec<bool> = self
-            .tenant_set
-            .iter()
-            .map(|s| affected.contains(s) || doomed.contains(s))
-            .collect();
-        let fallback = (0..self.stage_sets.len()).find(|i| !doomed.contains(i));
+        // Snapshot the pre-kill routing: a request's pinned set comes
+        // from its tenant's replica group *before* the doomed sets are
+        // pruned, so the hit test below sees the set its in-flight work
+        // actually ran on.
+        let groups = self.set_replicas.clone();
+        let tenant_group = self.tenant_set.clone();
+        // Prune doomed sets from every replica group; tenants whose
+        // whole group died retarget at the first group with a live set
+        // (a dedicated tenant degrades to time-multiplexing), or — with
+        // nowhere left to run — the fabric is declared dead.
+        for g in &mut self.set_replicas {
+            g.retain(|s| !doomed.contains(s));
+        }
+        let fallback = (0..self.set_replicas.len()).find(|&g| !self.set_replicas[g].is_empty());
         let mut must_fail = vec![false; self.tenant_set.len()];
-        for (t, s) in self.tenant_set.iter_mut().enumerate() {
-            if doomed.contains(s) {
+        for (t, g) in self.tenant_set.iter_mut().enumerate() {
+            if self.set_replicas[*g].is_empty() {
                 match fallback {
-                    Some(fb) => *s = fb,
+                    Some(fb) => *g = fb,
                     None => must_fail[t] = true,
                 }
             }
@@ -1460,7 +1696,17 @@ impl<B: SimBackend> Server<B> {
             .max_retries();
         let mut failed_any = false;
         for r in self.batcher.inflight_mut() {
-            if !hit.get(r.tenant).copied().unwrap_or(false) {
+            // the request is hit only when *its own* pinned set's map
+            // just changed (or died) under its in-flight work
+            let Some(&g) = tenant_group.get(r.tenant) else {
+                continue;
+            };
+            let reps = &groups[g];
+            if reps.is_empty() {
+                continue; // group emptied by an earlier kill: already failed
+            }
+            let set = reps[(r.id % reps.len() as u64) as usize];
+            if !(affected.contains(&set) || doomed.contains(&set)) {
                 continue;
             }
             if must_fail[r.tenant] || r.fault_retries >= max_retries {

@@ -12,6 +12,7 @@
 //!              [--open-loop rate=2000,shape=bursty,seed=7]
 //!              [--faults seed=7,ber=1e-6,kill_tile=12@3ms]
 //!              [--kv-reuse pool=65536,prefixes=8,hit=0.9]
+//!              [--packages 2] [--fabric packages=2,tiles=640,hop=200]
 //! picnic isa-demo
 //! picnic config-dump [--spec-decode …] [--tenants …]
 //! ```
@@ -29,7 +30,7 @@ const USAGE: &str = "\
 picnic — PICNIC LLM inference accelerator, full-system simulator
 
 USAGE:
-  picnic run    [--model tiny|1b|8b|13b] [--input N] [--output N] [--ccpg] [--electrical] [--json]
+  picnic run    [--model tiny|1b|8b|13b|70b] [--input N] [--output N] [--ccpg] [--electrical] [--json]
   picnic report <table2|table3|table4|fig8|fig9|fig10|all>
   picnic verify [--artifacts DIR]
   picnic serve  [--model NAME] [--requests N] [--prompt-len N] [--gen-len N] [--backend analytic|engine]
@@ -39,6 +40,7 @@ USAGE:
                 [--open-loop [rate=2000,shape=poisson|bursty,seed=7]]
                 [--faults [seed=7,ber=1e-6,retries=3,backoff=64,derate=0.5,derate_period=100000,kill_tile=12@3ms]]
                 [--kv-reuse [pool=65536,prefixes=8,prefix_len=128,hit=0.9,block=16,vocab=32000,seed=17]]
+                [--packages N] [--fabric [packages=2,tiles=640,radix=8,hop=200,bw=6.4e10,energy=1e-12,spill=0]]
   picnic isa-demo
   picnic config-dump
 
@@ -85,6 +87,16 @@ un-cached suffix. Reported as prefix hits / cached tokens / prefill
 cycles saved. Same seeds → byte-identical run; `hit=0` runs
 byte-identically to leaving the flag off.
 
+`--packages N` / `--fabric [SPEC]` scale the deployment out over a
+switched photonic fabric of chiplet packages: a model whose pipeline
+outgrows one package (the 70b preset) lays its stages across
+consecutive packages, and a model that fits one package is replicated
+across all of them (requests round-robin over the replicas by id).
+Cross-package stage transitions pay the switch hop latency and fabric
+link transfer (retransmit-capable, so `--faults` composes);
+`spill=TOKENS` adds fabric-attached memory to the KV-reuse pool.
+`--packages 1` runs byte-identically to leaving the fabric off.
+
 `--threads N` sizes the worker pool for the deterministic parallel
 regions (engine-backend calibration probes, large MACs). 0 = auto:
 the PICNIC_THREADS environment variable, then the host's available
@@ -112,6 +124,7 @@ fn run() -> picnic::Result<()> {
     cfg.tenants.apply_cli(&args)?;
     cfg.faults.apply_cli(&args)?;
     cfg.kv_reuse.apply_cli(&args)?;
+    cfg.fabric.apply_cli(&args)?;
     match args.positional.first().map(String::as_str) {
         Some("run") => cmd_run(&args, cfg),
         Some("report") => cmd_report(&args, cfg),
@@ -141,7 +154,7 @@ fn run() -> picnic::Result<()> {
 fn cmd_run(args: &Args, cfg: PicnicConfig) -> picnic::Result<()> {
     let model = args.opt_or("model", "8b");
     let m = LlamaConfig::by_name(&model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model} (tiny|1b|8b|13b)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model} (tiny|1b|8b|13b|70b)"))?;
     let input = args.opt_usize("input", 1024)?;
     let output = args.opt_usize("output", 1024)?;
     let mut sim = AnalyticSim::new(cfg.with_ccpg(args.flag("ccpg")));
@@ -332,6 +345,14 @@ fn drive_serve<B: SimBackend>(
         println!(
             "spec-decode: {} rounds, {} drafted, {} accepted, {} committed, {} rolled back",
             p.spec_rounds, p.spec_drafted, p.spec_accepted, p.spec_committed, p.spec_rolled_back,
+        );
+    }
+    // Only a >1-package fabric prints — a 1-package fabric run stays
+    // line-identical to the pre-fabric topology (the identity contract).
+    if p.packages > 1 {
+        println!(
+            "fabric: {} packages, {} stage set(s), {} cross-package hops ({} cycles)",
+            p.packages, p.stage_sets, p.fabric_hops, p.fabric_hop_cycles,
         );
     }
     if server.kv_cache().is_some() {

@@ -77,13 +77,24 @@ pub struct PlanCacheStats {
 /// the same config/model for the cache's lifetime.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    entries: HashMap<(usize, usize), Rc<Vec<LayerPlan>>>,
+    entries: HashMap<(usize, usize, usize), Rc<Vec<LayerPlan>>>,
+    /// Fabric package count the cached plans were priced for. Part of
+    /// every cache key, so one cache never aliases plan sets across
+    /// fabric topologies (a plan set laid for 1 package is not a plan
+    /// set laid for 4, even when the per-layer tile math agrees).
+    packages: usize,
     pub stats: PlanCacheStats,
 }
 
 impl PlanCache {
+    /// A cache for the pre-fabric single-package topology.
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// A cache whose keys carry `packages`, for multi-package fabrics.
+    pub fn for_packages(packages: usize) -> PlanCache {
+        PlanCache { packages, ..PlanCache::default() }
     }
 
     /// Plans for every layer at `(seq_q, kv_point)`, building and caching
@@ -95,13 +106,14 @@ impl PlanCache {
         seq_q: usize,
         kv_point: usize,
     ) -> crate::Result<Rc<Vec<LayerPlan>>> {
-        if let Some(p) = self.entries.get(&(seq_q, kv_point)) {
+        let key = (seq_q, kv_point, self.packages);
+        if let Some(p) = self.entries.get(&key) {
             self.stats.hits += 1;
             return Ok(p.clone());
         }
         let built = Rc::new(builder.plan_all(seq_q, kv_point)?);
         self.stats.builds += 1;
-        self.entries.insert((seq_q, kv_point), built.clone());
+        self.entries.insert(key, built.clone());
         Ok(built)
     }
 
@@ -169,5 +181,21 @@ mod tests {
             assert_eq!(c.tiles_needed, f.tiles_needed);
             assert_eq!(c.pairs_used, f.pairs_used);
         }
+    }
+
+    #[test]
+    fn package_count_is_part_of_the_key() {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let b = ScheduleBuilder::new(&cfg, &model);
+        let mut one = PlanCache::for_packages(1);
+        let mut four = PlanCache::for_packages(4);
+        let _ = one.plans(&b, 1, 512).unwrap();
+        let _ = four.plans(&b, 1, 512).unwrap();
+        assert_eq!(one.stats.builds, 1);
+        assert_eq!(four.stats.builds, 1, "packages=4 never hits packages=1 entries");
+        // the default cache is the packages-0 (pre-fabric) namespace
+        let d = PlanCache::new();
+        assert!(d.is_empty());
     }
 }

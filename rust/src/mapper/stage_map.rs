@@ -43,6 +43,13 @@ pub struct StageMap {
     pub stage_tiles: Vec<u32>,
     /// Total tiles the pipeline spans.
     pub span_tiles: u32,
+    /// Tiles per chiplet package when this span was laid on a multi-
+    /// package fabric (ARCHITECTURE.md §Scale-out): no stage straddles a
+    /// `package_tiles` boundary, and `remap_excluding` keeps each stage
+    /// inside its home package while any tile of it survives. `0` (the
+    /// default and the [`StageMap::from_plans`] value) means the
+    /// pre-fabric single-package topology.
+    pub package_tiles: u32,
 }
 
 impl StageMap {
@@ -62,7 +69,64 @@ impl StageMap {
             tile_offset,
             stage_tiles,
             span_tiles: cursor - tile_offset,
+            package_tiles: 0,
         }
+    }
+
+    /// Lay the plans out contiguously starting at `tile_offset` on a
+    /// fabric of `package_tiles`-tile packages: a stage whose tiles
+    /// would straddle a package boundary skips ahead to the next
+    /// boundary instead (the skipped tiles host no stages but stay
+    /// inside the span). `package_tiles = 0` is exactly
+    /// [`StageMap::from_plans`]. Errors when one stage alone outgrows a
+    /// package — no layout can satisfy the no-straddle invariant then.
+    pub fn from_plans_packed(
+        plans: &[LayerPlan],
+        tile_offset: u32,
+        package_tiles: u32,
+    ) -> crate::Result<StageMap> {
+        if package_tiles == 0 {
+            return Ok(StageMap::from_plans(plans, tile_offset));
+        }
+        let mut cursor = tile_offset;
+        let mut stage_tiles = Vec::with_capacity(plans.len());
+        for (i, p) in plans.iter().enumerate() {
+            let need = p.tiles_needed as u32;
+            anyhow::ensure!(
+                need <= package_tiles,
+                "stage {i} needs {need} tiles but a package holds only {package_tiles} \
+                 — raise fabric.package_tiles"
+            );
+            let used_in_package = cursor % package_tiles;
+            if used_in_package + need > package_tiles {
+                cursor += package_tiles - used_in_package;
+            }
+            stage_tiles.push(cursor);
+            cursor += need;
+        }
+        Ok(StageMap {
+            tile_offset,
+            stage_tiles,
+            span_tiles: cursor - tile_offset,
+            package_tiles,
+        })
+    }
+
+    /// Which package owns `tile` (0 when the span is not packaged).
+    pub fn package_of(&self, tile: u32) -> u32 {
+        if self.package_tiles == 0 {
+            0
+        } else {
+            tile / self.package_tiles
+        }
+    }
+
+    /// Packages this span touches (1 for an empty or unpackaged span).
+    pub fn packages_spanned(&self) -> u32 {
+        if self.package_tiles == 0 || self.span_tiles == 0 {
+            return 1;
+        }
+        self.package_of(self.end_tile() - 1) - self.package_of(self.tile_offset) + 1
     }
 
     /// Pipeline stages (= mapped layers).
@@ -85,9 +149,14 @@ impl StageMap {
     /// after hard failures: stages spread round-robin across the live
     /// tiles, so several stages may share one tile (degraded, but the
     /// pipeline keeps serving). The span's bounds are unchanged — dead
-    /// tiles stay inside the range, they just host no stages. Returns
-    /// `None` when every tile in a non-empty span is dead; the caller
-    /// must fall back to another span or fail the in-flight work.
+    /// tiles stay inside the range, they just host no stages. On a
+    /// packaged span (`package_tiles > 0`) a stage round-robins over the
+    /// survivors of its **home package** and only migrates across the
+    /// fabric when that package has no live tile left in the span —
+    /// remaps never silently turn an intra-package hop into a switch
+    /// traversal. Returns `None` when every tile in a non-empty span is
+    /// dead; the caller must fall back to another span or fail the
+    /// in-flight work.
     pub fn remap_excluding(&self, dead: &TileSet) -> Option<StageMap> {
         if self.stage_tiles.is_empty() {
             return Some(self.clone());
@@ -98,13 +167,42 @@ impl StageMap {
         if survivors.is_empty() {
             return None;
         }
-        let stage_tiles = (0..self.stage_tiles.len())
-            .map(|i| survivors[i % survivors.len()])
-            .collect();
+        let stage_tiles = if self.package_tiles == 0 {
+            (0..self.stage_tiles.len())
+                .map(|i| survivors[i % survivors.len()])
+                .collect()
+        } else {
+            // Per-package survivor pools, with a per-package round-robin
+            // counter so co-resident stages still spread out.
+            let mut per_pkg_next: std::collections::BTreeMap<u32, usize> =
+                std::collections::BTreeMap::new();
+            self.stage_tiles
+                .iter()
+                .enumerate()
+                .map(|(i, &home)| {
+                    let pkg = self.package_of(home);
+                    let local: Vec<u32> = survivors
+                        .iter()
+                        .copied()
+                        .filter(|&t| self.package_of(t) == pkg)
+                        .collect();
+                    if local.is_empty() {
+                        // home package dead: the stage may cross the fabric
+                        survivors[i % survivors.len()]
+                    } else {
+                        let k = per_pkg_next.entry(pkg).or_insert(0);
+                        let t = local[*k % local.len()];
+                        *k += 1;
+                        t
+                    }
+                })
+                .collect()
+        };
         Some(StageMap {
             tile_offset: self.tile_offset,
             stage_tiles,
             span_tiles: self.span_tiles,
+            package_tiles: self.package_tiles,
         })
     }
 }
@@ -176,6 +274,117 @@ mod tests {
         // deterministic: the same inputs produce the same remap
         let r2 = m.remap_excluding(&dead).unwrap();
         assert_eq!(r.stage_tiles, r2.stage_tiles);
+    }
+
+    /// Real tiny-model plans with their `tiles_needed` overridden, so the
+    /// packed layout can be exercised with exact multi-tile stage sizes.
+    fn plans_with_needs(needs: &[usize]) -> Vec<LayerPlan> {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let base = ScheduleBuilder::new(&cfg, &model).plan_all(1, 1).unwrap();
+        needs
+            .iter()
+            .map(|&n| {
+                let mut p = base[0].clone();
+                p.tiles_needed = n;
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn packed_with_zero_package_tiles_is_from_plans() {
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let plans = ScheduleBuilder::new(&cfg, &model).plan_all(1, 1).unwrap();
+        let flat = StageMap::from_plans(&plans, 3);
+        let packed = StageMap::from_plans_packed(&plans, 3, 0).unwrap();
+        assert_eq!(packed.stage_tiles, flat.stage_tiles);
+        assert_eq!(packed.span_tiles, flat.span_tiles);
+        assert_eq!(packed.package_tiles, 0);
+    }
+
+    #[test]
+    fn packed_stages_never_straddle_a_package_boundary() {
+        // 3-tile packages; the 2-tile stages force boundary skips.
+        let plans = plans_with_needs(&[2, 2, 1, 2, 3, 1]);
+        let m = StageMap::from_plans_packed(&plans, 0, 3).unwrap();
+        assert_eq!(m.n_stages(), plans.len(), "every layer stays mapped");
+        for (p, &t) in plans.iter().zip(m.stage_tiles.iter()) {
+            let last = t + p.tiles_needed as u32 - 1;
+            assert_eq!(
+                m.package_of(t),
+                m.package_of(last),
+                "stage at {t}..={last} straddles a package"
+            );
+        }
+        // spans stay pairwise-disjoint and monotone despite the skips
+        for (w, (p, &t)) in m.stage_tiles.windows(2).zip(plans.iter().zip(m.stage_tiles.iter())) {
+            assert!(w[1] >= t + p.tiles_needed as u32, "stages overlap");
+        }
+        // skipped boundary tiles stay inside the span
+        assert!(m.span_tiles >= plans.iter().map(|p| p.tiles_needed as u32).sum::<u32>());
+        assert_eq!(m.end_tile(), *m.stage_tiles.last().unwrap() + 1);
+    }
+
+    #[test]
+    fn packed_rejects_a_stage_bigger_than_a_package() {
+        let plans = plans_with_needs(&[1, 4]);
+        let err = StageMap::from_plans_packed(&plans, 0, 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stage 1 needs 4 tiles"), "got: {msg}");
+        assert!(msg.contains("fabric.package_tiles"), "got: {msg}");
+    }
+
+    #[test]
+    fn packed_remap_keeps_stages_in_their_home_package() {
+        // two packages of 3 tiles: stages at 0,1,2 (pkg 0) and 3,4 (pkg 1)
+        let plans = plans_with_needs(&[1, 1, 1, 1, 1]);
+        let m = StageMap::from_plans_packed(&plans, 0, 3).unwrap();
+        assert_eq!(m.stage_tiles, vec![0, 1, 2, 3, 4]);
+        assert_eq!(m.packages_spanned(), 2);
+        // kill one tile in package 0: its stages shuffle within pkg 0 only
+        let dead: TileSet = [1u32].into_iter().collect();
+        let r = m.remap_excluding(&dead).expect("survivors remain");
+        for (&home, &now) in m.stage_tiles.iter().zip(r.stage_tiles.iter()) {
+            assert!(!dead.contains(&now));
+            assert_eq!(
+                m.package_of(home),
+                r.package_of(now),
+                "stage migrated across packages while its home package lives"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_remap_crosses_only_when_home_package_is_dead() {
+        let plans = plans_with_needs(&[1, 1, 1, 1, 1]);
+        let m = StageMap::from_plans_packed(&plans, 0, 3).unwrap();
+        // kill all of package 1 (tiles 3,4 are in-span)
+        let dead: TileSet = [3u32, 4].into_iter().collect();
+        let r = m.remap_excluding(&dead).expect("package 0 survives");
+        for &t in &r.stage_tiles {
+            assert_eq!(r.package_of(t), 0, "orphans land on the live package");
+            assert!(!dead.contains(&t));
+        }
+        // stage count and span bounds survive the migration
+        assert_eq!(r.n_stages(), m.n_stages());
+        assert_eq!(r.span_tiles, m.span_tiles);
+    }
+
+    #[test]
+    fn packed_remap_matches_flat_remap_on_one_package() {
+        // all tiles in one package: packaged remap must equal the flat one
+        let cfg = PicnicConfig::default();
+        let model = LlamaConfig::tiny();
+        let plans = ScheduleBuilder::new(&cfg, &model).plan_all(1, 1).unwrap();
+        let flat = StageMap::from_plans(&plans, 0);
+        let packed = StageMap::from_plans_packed(&plans, 0, flat.span_tiles.max(1)).unwrap();
+        assert_eq!(packed.stage_tiles, flat.stage_tiles);
+        let dead: TileSet = [flat.stage_tiles[0], flat.stage_tiles[1]].into_iter().collect();
+        let rf = flat.remap_excluding(&dead).unwrap();
+        let rp = packed.remap_excluding(&dead).unwrap();
+        assert_eq!(rf.stage_tiles, rp.stage_tiles, "one-package remap is identical");
     }
 
     #[test]

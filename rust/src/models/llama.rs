@@ -93,6 +93,21 @@ impl LlamaConfig {
         }
     }
 
+    /// Llama 3-70B: 80 decoders, d=8192, 64 heads / 8 KV heads, ffn 28672.
+    /// Its decoder stack (~68B params) outgrows one default chiplet
+    /// package — it only fits on a ≥2-package fabric
+    /// (ARCHITECTURE.md §Scale-out).
+    pub fn llama3_70b() -> LlamaConfig {
+        LlamaConfig {
+            name: "Llama 3-70B".into(),
+            n_decoders: 80,
+            d_model: 8192,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_ff: 28672,
+        }
+    }
+
     /// A tiny config used by cycle-level tests and the functional oracle —
     /// matches python/compile/model.py::TINY.
     pub fn tiny() -> LlamaConfig {
@@ -111,6 +126,7 @@ impl LlamaConfig {
             "1b" | "llama1b" | "llama3.2-1b" => Some(Self::llama32_1b()),
             "8b" | "llama8b" | "llama3-8b" => Some(Self::llama3_8b()),
             "13b" | "llama13b" | "llama2-13b" => Some(Self::llama2_13b()),
+            "70b" | "llama70b" | "llama3-70b" => Some(Self::llama3_70b()),
             "tiny" => Some(Self::tiny()),
             _ => None,
         }
@@ -170,6 +186,8 @@ mod tests {
         assert!((6.5e9..7.5e9).contains(&(p8 as f64)), "8B: {p8}");
         let p13 = LlamaConfig::llama2_13b().decoder_params();
         assert!((12.0e9..13.5e9).contains(&(p13 as f64)), "13B: {p13}");
+        let p70 = LlamaConfig::llama3_70b().decoder_params();
+        assert!((65.0e9..72.0e9).contains(&(p70 as f64)), "70B: {p70}");
     }
 
     #[test]
@@ -197,7 +215,8 @@ mod tests {
     fn lookup_by_name() {
         assert_eq!(LlamaConfig::by_name("8b").unwrap().n_decoders, 32);
         assert_eq!(LlamaConfig::by_name("LLAMA2-13B").unwrap().n_heads, 40);
-        assert!(LlamaConfig::by_name("70b").is_none());
+        assert_eq!(LlamaConfig::by_name("70b").unwrap().n_decoders, 80);
+        assert!(LlamaConfig::by_name("999b").is_none());
     }
 
     #[test]

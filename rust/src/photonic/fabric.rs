@@ -1,0 +1,174 @@
+//! Switched inter-package photonic fabric (ARCHITECTURE.md §Scale-out).
+//!
+//! The intra-package interconnect ([`Interconnect`]) models the optical
+//! network-on-chip between chiplets of one package. This module adds
+//! the tier above it — the Photonic Fabric Platform of PAPERS.md: a
+//! photonic switch interconnecting whole chiplet packages. A pipeline
+//! stage transition whose tiles live in different packages pays one
+//! switch traversal (`hop_latency_cycles`) plus the activation transfer
+//! on a fabric link with its own bandwidth and per-bit energy.
+//!
+//! The fabric link **is** an [`Interconnect`] (built from the base
+//! interconnect config with the fabric's bandwidth/energy spliced in),
+//! so the PR-7 fault machinery — [`Interconnect::retransmit`], derated
+//! transfers, [`LinkHealth`] accounting — composes with scale-out for
+//! free: a bit error on a cross-package hop retransmits over the fabric
+//! link at fabric bandwidth, not the intra-package NoC.
+
+use crate::config::{FabricConfig, InterconnectConfig};
+
+use super::link::{Interconnect, LinkHealth, LinkKind};
+use super::topology::DRAM_HUB;
+
+/// The switched fabric: package geometry + the shared switch link.
+///
+/// Tile ids are global across the fabric; package `p` owns the
+/// contiguous range `[p * tiles, (p + 1) * tiles)`. The DRAM hub
+/// (`DRAM_HUB`) is fabric-attached — co-located with every package — so
+/// hub transfers never count as cross-package hops.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    cfg: FabricConfig,
+    link: Interconnect,
+}
+
+impl Fabric {
+    /// Build the fabric from its config and the base interconnect config
+    /// (the fabric link inherits everything except bandwidth and per-bit
+    /// energy, which the fabric overrides).
+    pub fn new(cfg: &FabricConfig, base: &InterconnectConfig) -> Fabric {
+        let mut link_cfg = base.clone();
+        link_cfg.optical_link_bps = cfg.link_bps;
+        link_cfg.optical_c2c_j_per_bit = cfg.j_per_bit;
+        Fabric {
+            cfg: cfg.clone(),
+            link: Interconnect::new(link_cfg, LinkKind::Optical),
+        }
+    }
+
+    pub fn packages(&self) -> usize {
+        self.cfg.packages
+    }
+
+    /// Tiles per package (the stage-span boundary the mapper honors).
+    pub fn package_tiles(&self) -> u32 {
+        self.cfg.package.tiles as u32
+    }
+
+    /// Switch traversal latency per cross-package hop, cycles.
+    pub fn hop_latency_cycles(&self) -> u64 {
+        self.cfg.hop_latency_cycles
+    }
+
+    /// Which package owns `tile`. The DRAM hub maps to package 0 (it is
+    /// reachable from every package without a fabric hop — use
+    /// [`Fabric::crossing`] for hop decisions, not raw package ids).
+    pub fn package_of(&self, tile: u32) -> u32 {
+        if tile == DRAM_HUB {
+            return 0;
+        }
+        tile / self.package_tiles()
+    }
+
+    /// True when a `src → dst` transition traverses the switch: both
+    /// endpoints are real tiles and live in different packages.
+    pub fn crossing(&self, src: u32, dst: u32) -> bool {
+        src != DRAM_HUB && dst != DRAM_HUB && self.package_of(src) != self.package_of(dst)
+    }
+
+    /// Charge one cross-package hop starting at `start_cycle`: the
+    /// switch traversal plus the payload transfer on the fabric link
+    /// (which accrues per-bit energy). Returns the total duration in
+    /// cycles.
+    pub fn traverse(
+        &mut self,
+        start_cycle: u64,
+        bits: u64,
+        src: u32,
+        dst: u32,
+        freq_hz: f64,
+    ) -> u64 {
+        let switch = self.cfg.hop_latency_cycles;
+        switch + self.link.transfer(start_cycle + switch, bits, src, dst, freq_hz)
+    }
+
+    /// The underlying switch link (for the fault layer's retransmit path).
+    pub fn link_mut(&mut self) -> &mut Interconnect {
+        &mut self.link
+    }
+
+    /// Reliability counters of the switch link.
+    pub fn health(&self) -> LinkHealth {
+        self.link.health()
+    }
+
+    /// Dynamic (per-bit) energy moved over the fabric so far.
+    pub fn dynamic_energy_j(&self) -> f64 {
+        self.link.dynamic_energy_j()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(packages: usize, tiles: usize) -> Fabric {
+        let cfg = FabricConfig {
+            enabled: true,
+            packages,
+            package: crate::config::PackageSpec { tiles },
+            ..FabricConfig::default()
+        };
+        Fabric::new(&cfg, &InterconnectConfig::default())
+    }
+
+    #[test]
+    fn package_ownership_is_contiguous() {
+        let f = fabric(4, 100);
+        assert_eq!(f.package_of(0), 0);
+        assert_eq!(f.package_of(99), 0);
+        assert_eq!(f.package_of(100), 1);
+        assert_eq!(f.package_of(399), 3);
+    }
+
+    #[test]
+    fn dram_hub_never_crosses() {
+        let f = fabric(2, 100);
+        assert!(!f.crossing(DRAM_HUB, 150), "hub is fabric-attached");
+        assert!(!f.crossing(50, DRAM_HUB));
+        assert!(f.crossing(50, 150));
+        assert!(!f.crossing(50, 99), "same package");
+    }
+
+    #[test]
+    fn single_package_never_crosses() {
+        let f = fabric(1, 100);
+        for (s, d) in [(0u32, 99u32), (99, 0), (13, 13)] {
+            assert!(!f.crossing(s, d), "{s}->{d}");
+        }
+    }
+
+    #[test]
+    fn traverse_charges_switch_latency_and_link_transfer() {
+        let mut f = fabric(2, 100);
+        // default fabric: 200-cycle switch + 64 Gb/s at 1 GHz = 64 b/cycle
+        let d = f.traverse(0, 6400, 10, 110, 1e9);
+        assert_eq!(d, 200 + 100);
+        let want = 6400.0 * 1.0e-12;
+        assert!((f.dynamic_energy_j() - want).abs() < 1e-18, "fabric j/bit");
+        assert_eq!(f.health().transfers, 1);
+    }
+
+    #[test]
+    fn fabric_link_retransmit_composes_with_faults() {
+        let mut f = fabric(2, 100);
+        f.traverse(0, 6400, 10, 110, 1e9);
+        let e1 = f.dynamic_energy_j();
+        let d = f.link_mut().retransmit(300, 6400, 10, 110, 1e9, 1, 64);
+        assert_eq!(d, 64 + 100, "backoff + fabric-bandwidth resend");
+        let h = f.health();
+        assert_eq!(h.retransmissions, 1);
+        assert!(h.degraded());
+        assert!((f.dynamic_energy_j() - 2.0 * e1).abs() < 1e-18);
+    }
+}

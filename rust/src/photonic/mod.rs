@@ -8,8 +8,10 @@
 //! 30 pJ/bit DRAM path), static laser/tuning power while links are lit,
 //! link bandwidth for latency, and a time-binned transfer trace.
 
+mod fabric;
 mod link;
 mod topology;
 
+pub use fabric::Fabric;
 pub use link::{backoff_cycles, Interconnect, LinkHealth, LinkKind, TransferRecord};
 pub use topology::{OpticalTopology, TileId, DRAM_HUB};

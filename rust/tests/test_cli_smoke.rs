@@ -283,9 +283,99 @@ fn serve_open_loop_bad_spec_is_a_clean_error() {
 }
 
 #[test]
+fn fabric_round_trips_through_config_dump() {
+    let text = run_ok(&[
+        "config-dump",
+        "--fabric",
+        "packages=2,tiles=320,radix=16,hop=150,bw=3.2e10,energy=2e-12,spill=1024",
+    ]);
+    let j = Json::parse(&text).expect("config-dump output parses");
+    let f = j.get("fabric").expect("fabric section");
+    assert_eq!(f.get("enabled").and_then(Json::as_bool), Some(true));
+    assert_eq!(f.get("packages").and_then(Json::as_usize), Some(2));
+    assert_eq!(f.get("package_tiles").and_then(Json::as_usize), Some(320));
+    assert_eq!(f.get("switch_radix").and_then(Json::as_usize), Some(16));
+    assert_eq!(
+        f.get("hop_latency_cycles").and_then(Json::as_usize),
+        Some(150)
+    );
+    assert_eq!(f.get("link_bps").and_then(Json::as_f64), Some(3.2e10));
+    assert_eq!(f.get("j_per_bit").and_then(Json::as_f64), Some(2e-12));
+    assert_eq!(f.get("kv_spill_tokens").and_then(Json::as_usize), Some(1024));
+    // the dump parses back into the same config (full round trip)
+    let back = picnic::config::PicnicConfig::from_json(&text).expect("round trip");
+    assert!(back.fabric.enabled);
+    assert_eq!(back.fabric.packages, 2);
+    assert_eq!(back.fabric.package.tiles, 320);
+    assert_eq!(back.fabric.hop_latency_cycles, 150);
+    assert!((back.fabric.j_per_bit - 2e-12).abs() < 1e-24);
+}
+
+#[test]
+fn packages_shorthand_enables_the_fabric() {
+    let text = run_ok(&["config-dump", "--packages", "4"]);
+    let j = Json::parse(&text).expect("config-dump output parses");
+    let f = j.get("fabric").expect("fabric section");
+    assert_eq!(f.get("enabled").and_then(Json::as_bool), Some(true));
+    assert_eq!(f.get("packages").and_then(Json::as_usize), Some(4));
+    // the shorthand composes with --fabric and wins on the package count
+    let text = run_ok(&["config-dump", "--fabric", "packages=2,tiles=64", "--packages", "4"]);
+    let j = Json::parse(&text).expect("config-dump output parses");
+    let f = j.get("fabric").expect("fabric section");
+    assert_eq!(f.get("packages").and_then(Json::as_usize), Some(4));
+    assert_eq!(f.get("package_tiles").and_then(Json::as_usize), Some(64));
+}
+
+#[test]
+fn fabric_invalid_specs_are_clean_errors() {
+    for (arg, needle) in [
+        ("packages=0", "fabric.packages"),
+        ("tiles=0", "fabric.package_tiles"),
+        ("bw=0", "fabric.link_bps"),
+        ("packages=9", "fabric.switch_radix"),
+        ("packages", "expected key=value"),
+        ("nope=1", "unknown key"),
+    ] {
+        let out = picnic()
+            .args(["config-dump", "--fabric", arg])
+            .output()
+            .expect("spawn picnic");
+        assert!(!out.status.success(), "--fabric {arg} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(needle), "stderr for {arg:?}: {err}");
+    }
+    let out = picnic()
+        .args(["config-dump", "--packages", "0"])
+        .output()
+        .expect("spawn picnic");
+    assert!(!out.status.success(), "--packages 0 must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("fabric.packages"), "stderr: {err}");
+}
+
+#[test]
+fn serve_with_packages_reports_fabric() {
+    let text = run_ok(&[
+        "serve",
+        "--model",
+        "tiny",
+        "--requests",
+        "4",
+        "--prompt-len",
+        "16",
+        "--gen-len",
+        "4",
+        "--packages",
+        "2",
+    ]);
+    assert!(text.contains("fabric:"), "fabric line printed: {text}");
+    assert!(text.contains("2 packages"), "package count printed: {text}");
+}
+
+#[test]
 fn unknown_model_is_a_clean_error() {
     let out = picnic()
-        .args(["run", "--model", "70b"])
+        .args(["run", "--model", "999b"])
         .output()
         .expect("spawn picnic");
     assert!(!out.status.success(), "unknown model must fail");

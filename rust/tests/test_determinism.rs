@@ -6,7 +6,9 @@
 //! nondeterministic order), and — via the worker-count matrix — the
 //! [`Pool`] contract that parallel execution is a speed knob, never a
 //! semantics knob: 1, 2 and 8 workers must produce the exact same bytes,
-//! including with the mesh's parallel phase-1 forced on.
+//! including with the mesh's parallel phase-1 forced on. The package
+//! matrix crosses the same worker counts with 1/2/4-package photonic
+//! fabrics and pins the 1-package fabric to the fabric-off reference.
 
 use picnic::config::{PicnicConfig, SystemConfig};
 use picnic::coordinator::{BatchPolicy, Server, ServerConfig, SubmitSpec};
@@ -178,5 +180,64 @@ fn engine_backend_serving_is_pool_invariant() {
             serve(threads),
             "{threads}-worker serving run diverged from the 1-worker reference"
         );
+    }
+}
+
+/// The worker matrix crossed with the scale-out fabric: at every package
+/// count (1, 2, 4), 1/2/8-worker engine-backend serving runs must
+/// fingerprint byte-identically — and the 1-package fabric must
+/// fingerprint byte-identically to the fabric-off reference at every
+/// thread count (the differential identity the fabric's pay-for-use
+/// contract promises).
+#[test]
+fn package_matrix_serving_is_pool_invariant() {
+    let serve = |threads: usize, packages: usize| {
+        let mut picnic = PicnicConfig::default();
+        if packages > 0 {
+            picnic.fabric.enabled = true;
+            picnic.fabric.packages = packages;
+        }
+        let cfg = ServerConfig {
+            picnic,
+            model: LlamaConfig::tiny(),
+            policy: BatchPolicy::default(),
+            threads,
+        };
+        let backend = EngineBackend::calibrated_with(cfg.picnic.clone(), Pool::new(threads));
+        let mut s = Server::with_backend(cfg, backend);
+        for _ in 0..2 {
+            s.enqueue(SubmitSpec::new(32, 8)).expect("enqueue");
+        }
+        s.run_to_completion().expect("run");
+        let m = &s.metrics;
+        let latencies: Vec<(u64, u64, u64)> = m
+            .requests
+            .iter()
+            .map(|r| (r.ttft_s.to_bits(), r.tpot_s.to_bits(), r.total_s.to_bits()))
+            .collect();
+        (m.total_tokens, m.wall_s.to_bits(), latencies)
+    };
+    // packages = 0 is the fabric-off reference; a 1-package fabric must
+    // reproduce it bit for bit at every thread count.
+    let reference = serve(1, 0);
+    for threads in [1usize, 2, 8] {
+        assert_eq!(
+            reference,
+            serve(threads, 1),
+            "1-package fabric at {threads} workers diverged from the fabric-off reference"
+        );
+    }
+    // More packages legitimately reschedule (replica round-robin), but
+    // the thread count must never be a semantics knob.
+    for packages in [2usize, 4] {
+        let pkg_reference = serve(1, packages);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                pkg_reference,
+                serve(threads, packages),
+                "{packages}-package serving at {threads} workers diverged \
+                 from its 1-worker reference"
+            );
+        }
     }
 }

@@ -1,0 +1,330 @@
+//! Multi-package scale-out properties (hand-rolled quickcheck-style
+//! loops over the seeded in-tree PRNG — no proptest crate in the
+//! offline build).
+//!
+//! Invariants (ARCHITECTURE.md §Scale-out):
+//!  * packed layouts map every layer onto pairwise-disjoint tile ranges
+//!    and never let a stage straddle a package boundary;
+//!  * `remap_excluding` after tile kills keeps every stage inside its
+//!    home package unless that package has no live tile left in the
+//!    span — a remap never silently turns a NoC hop into a fabric hop;
+//!  * request conservation (`enqueued == completed + shed + failed`)
+//!    holds under the PR-7 fault matrix on a 2-package fabric;
+//!  * differential identity: a 1-package fabric is byte-identical to
+//!    the pre-fabric topology, on both simulator backends.
+
+use picnic::config::{FabricConfig, FaultConfig, KillSpec, PicnicConfig};
+use picnic::coordinator::{BatchPolicy, Server, ServerConfig, SubmitSpec};
+use picnic::mapper::{LayerPlan, ScheduleBuilder, StageMap, TileSet};
+use picnic::models::LlamaConfig;
+use picnic::sim::{EngineBackend, SimBackend};
+use picnic::util::{Pool, Rng};
+
+/// Real tiny-model plans with their `tiles_needed` overridden, so packed
+/// layouts can be exercised at exact multi-tile stage sizes.
+fn plans_with_needs(needs: &[usize]) -> Vec<LayerPlan> {
+    let cfg = PicnicConfig::default();
+    let model = LlamaConfig::tiny();
+    let base = ScheduleBuilder::new(&cfg, &model)
+        .plan_all(1, 1)
+        .expect("plan");
+    needs
+        .iter()
+        .map(|&n| {
+            let mut p = base[0].clone();
+            p.tiles_needed = n;
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn prop_packed_spans_are_disjoint_and_cover_every_layer() {
+    for case in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(4200 + case);
+        let n_stages = rng.range_usize(1, 12);
+        let max_need = rng.range_usize(1, 5);
+        let needs: Vec<usize> = (0..n_stages)
+            .map(|_| rng.range_usize(1, max_need))
+            .collect();
+        let package_tiles = rng.range_usize(max_need, 2 * max_need + 3) as u32;
+        let offset = (rng.below(4) as u32) * package_tiles;
+        let plans = plans_with_needs(&needs);
+        let m = StageMap::from_plans_packed(&plans, offset, package_tiles)
+            .expect("every stage fits a package");
+
+        // covers every mapped layer
+        assert_eq!(m.n_stages(), needs.len(), "case {case}: layer dropped");
+        let mut prev_end = offset;
+        for (i, (&need, &t)) in needs.iter().zip(m.stage_tiles.iter()).enumerate() {
+            let last = t + need as u32 - 1;
+            // pairwise-disjoint, monotone tile ranges
+            assert!(
+                t >= prev_end,
+                "case {case}: stage {i} overlaps its predecessor"
+            );
+            // no stage straddles a package boundary
+            assert_eq!(
+                m.package_of(t),
+                m.package_of(last),
+                "case {case}: stage {i} at {t}..={last} straddles a package"
+            );
+            assert!(m.contains_tile(t) && m.contains_tile(last));
+            prev_end = t + need as u32;
+        }
+        assert_eq!(m.end_tile(), prev_end, "span ends at the last stage");
+    }
+}
+
+#[test]
+fn prop_packed_remap_never_crosses_while_home_package_lives() {
+    for case in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(7700 + case);
+        let n_stages = rng.range_usize(2, 10);
+        let needs: Vec<usize> = (0..n_stages).map(|_| rng.range_usize(1, 3)).collect();
+        let package_tiles = rng.range_usize(3, 6) as u32;
+        let plans = plans_with_needs(&needs);
+        let m = StageMap::from_plans_packed(&plans, 0, package_tiles).expect("fits");
+
+        // kill a random subset of the span's tiles
+        let dead: TileSet = (m.tile_offset..m.end_tile())
+            .filter(|_| rng.below(3) == 0)
+            .collect();
+        let live_in = |pkg: u32| {
+            (m.tile_offset..m.end_tile())
+                .any(|t| m.package_of(t) == pkg && !dead.contains(&t))
+        };
+        match m.remap_excluding(&dead) {
+            None => {
+                assert!(
+                    (m.tile_offset..m.end_tile()).all(|t| dead.contains(&t)),
+                    "case {case}: remap bailed with survivors left"
+                );
+            }
+            Some(r) => {
+                assert_eq!(r.n_stages(), m.n_stages());
+                assert_eq!(r.span_tiles, m.span_tiles, "span bounds unchanged");
+                for (i, (&home, &now)) in
+                    m.stage_tiles.iter().zip(r.stage_tiles.iter()).enumerate()
+                {
+                    assert!(!dead.contains(&now), "case {case}: stage {i} on a dead tile");
+                    let home_pkg = m.package_of(home);
+                    if live_in(home_pkg) {
+                        assert_eq!(
+                            r.package_of(now),
+                            home_pkg,
+                            "case {case}: stage {i} migrated across packages \
+                             while its home package lives"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn fabric_cfg(packages: usize, tiles: usize) -> FabricConfig {
+    let mut f = FabricConfig {
+        enabled: true,
+        packages,
+        ..FabricConfig::default()
+    };
+    if tiles > 0 {
+        f.package.tiles = tiles;
+    }
+    f
+}
+
+fn build_server(fabric: Option<FabricConfig>, faults: Option<FaultConfig>) -> Server {
+    let mut picnic = PicnicConfig::default();
+    if let Some(f) = fabric {
+        picnic.fabric = f;
+    }
+    if let Some(f) = faults {
+        picnic.faults = f;
+    }
+    Server::new(ServerConfig {
+        picnic,
+        model: LlamaConfig::tiny(),
+        policy: BatchPolicy {
+            max_batch: 4,
+            kv_budget: 4096,
+            ..BatchPolicy::default()
+        },
+        threads: 0,
+    })
+}
+
+/// Submit `n` requests with shapes drawn from `rng` (same rng state ⇒
+/// same workload, so paired servers see identical streams).
+fn load(server: &mut Server, rng: &mut Rng, n: usize) {
+    for _ in 0..n {
+        let prompt = rng.range_usize(8, 64);
+        let gen = rng.range_usize(2, 10);
+        server
+            .enqueue(SubmitSpec::new(prompt, gen))
+            .expect("enqueue");
+    }
+}
+
+/// Everything observable that two byte-identical runs must agree on.
+fn fingerprint<B: SimBackend>(s: &Server<B>) -> (u64, u64, u64, Vec<(u64, u64, u64)>) {
+    let reqs = s
+        .metrics
+        .requests
+        .iter()
+        .map(|r| (r.id, r.ttft_s.to_bits(), r.total_s.to_bits()))
+        .collect();
+    (
+        s.now_cycle(),
+        s.horizon_cycle(),
+        s.ledger.total_j().to_bits(),
+        reqs,
+    )
+}
+
+/// The PR-7 fault matrix (bit errors × retry budgets × tile-kill fans)
+/// on a 2-package fabric: tiny's 4-tile pipeline is forced across two
+/// 2-tile packages, so every run pays real fabric hops, and kills can
+/// land on either side of the switch. Every request must still reach
+/// exactly one terminal state.
+#[test]
+fn prop_two_package_fault_matrix_conserves_requests() {
+    let freq = PicnicConfig::default().system.frequency_hz;
+    let bers = [0.0, 1e-4, 1e-3];
+    for case in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(3100 + case);
+        let n = rng.range_usize(3, 10);
+
+        // A clean 2-package run with the same workload gives a horizon
+        // to place kills inside the busy window.
+        let mut clean = build_server(Some(fabric_cfg(2, 2)), None);
+        load(&mut clean, &mut Rng::seed_from_u64(3100 + case), n);
+        clean.run_to_completion().expect("clean run");
+        assert_eq!(clean.pipeline_stats().packages, 2);
+        assert!(
+            clean.pipeline_stats().fabric_hops > 0,
+            "case {case}: a 2-package span must pay fabric hops"
+        );
+        let horizon = clean.horizon_cycle().max(4);
+
+        let n_kills = rng.range_usize(0, 3);
+        let kills = (0..n_kills)
+            .map(|_| KillSpec {
+                tile: rng.below(4) as u32,
+                at_s: (horizon * (1 + rng.below(3)) / 4) as f64 / freq,
+            })
+            .collect();
+        let faults = FaultConfig {
+            enabled: true,
+            seed: 300 + case,
+            link_ber: bers[rng.below(bers.len() as u64) as usize],
+            max_retries: 1 + rng.below(3) as u32,
+            kills,
+            ..FaultConfig::default()
+        };
+        let mut server = build_server(Some(fabric_cfg(2, 2)), Some(faults));
+        load(&mut server, &mut Rng::seed_from_u64(3100 + case), n);
+        server.run_to_completion().expect("faulty run");
+
+        let m = &server.metrics;
+        assert_eq!(
+            m.requests.len() + m.shed_count() + m.failed_count(),
+            n,
+            "case {case}: every request must reach exactly one terminal state"
+        );
+        for t in 0..server.n_tenants() {
+            assert_eq!(
+                server.tenant_reserved_kv(t),
+                0,
+                "case {case}: tenant {t} leaked KV reservations"
+            );
+        }
+    }
+}
+
+/// Differential identity, analytic backend: a 1-package fabric must be
+/// byte-identical to the pre-fabric topology on the same seeded
+/// workload — and report itself as exactly one package with zero hops.
+#[test]
+fn one_package_is_byte_identical_to_no_fabric_analytic() {
+    for case in 0..5u64 {
+        let n = 4;
+        let mut plain = build_server(None, None);
+        load(&mut plain, &mut Rng::seed_from_u64(6400 + case), n);
+        plain.run_to_completion().expect("plain run");
+
+        let mut fab = build_server(Some(fabric_cfg(1, 0)), None);
+        load(&mut fab, &mut Rng::seed_from_u64(6400 + case), n);
+        fab.run_to_completion().expect("fabric run");
+
+        assert_eq!(
+            fingerprint(&plain),
+            fingerprint(&fab),
+            "case {case}: packages=1 diverged from the pre-fabric topology"
+        );
+        let p = fab.pipeline_stats();
+        assert_eq!(p.packages, 1);
+        assert_eq!(p.fabric_hops, 0, "one package never crosses the switch");
+        assert_eq!(p.fabric_hop_cycles, 0);
+    }
+}
+
+/// The same identity on the engine backend (cycle-level tiles under the
+/// calibrated cost model).
+#[test]
+fn one_package_is_byte_identical_to_no_fabric_engine() {
+    let serve = |fabric: Option<FabricConfig>| {
+        let mut picnic = PicnicConfig::default();
+        if let Some(f) = fabric {
+            picnic.fabric = f;
+        }
+        let cfg = ServerConfig {
+            picnic,
+            model: LlamaConfig::tiny(),
+            policy: BatchPolicy::default(),
+            threads: 1,
+        };
+        let backend = EngineBackend::calibrated_with(cfg.picnic.clone(), Pool::new(1));
+        let mut s = Server::with_backend(cfg, backend);
+        load(&mut s, &mut Rng::seed_from_u64(88), 3);
+        s.run_to_completion().expect("run");
+        fingerprint(&s)
+    };
+    assert_eq!(
+        serve(None),
+        serve(Some(fabric_cfg(1, 0))),
+        "packages=1 diverged from the pre-fabric topology on the engine backend"
+    );
+}
+
+/// The 70B preset outgrows one default package and must say so; on two
+/// packages it serves, spanning the switch.
+#[test]
+fn seventy_b_fits_at_two_packages_not_one() {
+    let mk = |packages: usize| {
+        Server::new(ServerConfig {
+            picnic: PicnicConfig {
+                fabric: fabric_cfg(packages, 0),
+                ..PicnicConfig::default()
+            },
+            model: LlamaConfig::llama3_70b(),
+            policy: BatchPolicy::default(),
+            threads: 0,
+        })
+    };
+    let mut one = mk(1);
+    one.enqueue(SubmitSpec::new(8, 2)).expect("enqueue");
+    let err = one.run_to_completion().expect_err("70B cannot fit 1 package");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("raise --packages"), "got: {msg}");
+
+    let mut two = mk(2);
+    two.enqueue(SubmitSpec::new(8, 2)).expect("enqueue");
+    two.run_to_completion().expect("70B serves on 2 packages");
+    let p = two.pipeline_stats();
+    assert_eq!(p.packages, 2);
+    assert_eq!(two.metrics.requests.len(), 1);
+    assert!(p.fabric_hops > 0, "the 70B pipeline crosses the switch");
+    assert!(p.fabric_hop_cycles > 0);
+}
